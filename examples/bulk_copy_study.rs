@@ -1,0 +1,54 @@
+//! Bulk-copy mechanism study: regenerates Table 1 / Fig. 2 of the
+//! paper — 8 KB copy latency and DRAM energy for memcpy, the three
+//! RowClone variants and LISA-RISC at 1..15 hops — plus a hop sweep
+//! showing LISA's linear scaling.
+//!
+//! ```sh
+//! cargo run --release --example bulk_copy_study
+//! ```
+
+use lisa::config::{Calibration, CopyMechanism};
+use lisa::copy::isolated_copy;
+use lisa::dram::timing::SpeedBin;
+use lisa::energy::EnergyModel;
+use lisa::sim::experiments::table1;
+use lisa::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cal = Calibration::default();
+
+    println!("== Table 1: 8 KB copy latency and DRAM energy ==\n");
+    let mut t = Table::new(&["mechanism", "paper ns", "ours ns", "paper uJ", "ours uJ"]);
+    for r in table1(&cal)? {
+        t.row(&[
+            r.label,
+            format!("{:.2}", r.paper_latency_ns),
+            format!("{:.2}", r.latency_ns),
+            format!("{:.3}", r.paper_energy_uj),
+            format!("{:.3}", r.energy_uj),
+        ]);
+    }
+    t.print();
+
+    println!("\n== LISA-RISC hop sweep (linear scaling, paper §3.1.1) ==\n");
+    let em = EnergyModel::from_calibration(&cal);
+    let mut t = Table::new(&["hops", "latency ns", "energy uJ", "vs RC-InterSA"]);
+    let rc = isolated_copy(
+        CopyMechanism::RowCloneInterSa,
+        7,
+        SpeedBin::Ddr3_1600,
+        &cal,
+    )?;
+    for hops in [1, 2, 4, 7, 10, 12, 15] {
+        let r = isolated_copy(CopyMechanism::LisaRisc, hops, SpeedBin::Ddr3_1600, &cal)?;
+        let e = em.breakdown_uj(&r.stats, 0, 1.25).total;
+        t.row(&[
+            format!("{hops}"),
+            format!("{:.2}", r.latency_ns),
+            format!("{:.3}", e),
+            format!("{:.1}x faster", rc.latency_ns / r.latency_ns),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Quickstart: simulate a small four-core workload on the baseline
+//! system and on full LISA, and print the comparison.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lisa::config::{CopyMechanism, SimConfig};
+use lisa::sim::engine::run_workload;
+use lisa::workloads::mixes;
+
+fn main() -> anyhow::Result<()> {
+    let mut base = SimConfig::default();
+    base.requests_per_core = 5_000;
+
+    let lisa_cfg = base.clone().with_all_lisa();
+
+    let wl = mixes::workload_by_name("fork4", &base)?;
+    println!("workload: {} (4 cores, bulk-copy heavy)", wl.name);
+
+    let r_base = run_workload(&base, &wl);
+    let r_lisa = run_workload(&lisa_cfg, &wl);
+
+    println!("\n{:<22} {:>12} {:>12}", "", "baseline", "LISA (all)");
+    println!(
+        "{:<22} {:>12} {:>12}",
+        "copy mechanism",
+        CopyMechanism::MemcpyChannel.name(),
+        CopyMechanism::LisaRisc.name()
+    );
+    println!("{:<22} {:>12.3} {:>12.3}", "IPC (sum)", r_base.ipc_sum(), r_lisa.ipc_sum());
+    println!("{:<22} {:>12} {:>12}", "DRAM cycles", r_base.dram_cycles, r_lisa.dram_cycles);
+    println!("{:<22} {:>12} {:>12}", "copies", r_base.copies, r_lisa.copies);
+    println!(
+        "{:<22} {:>12.1} {:>12.1}",
+        "energy (uJ)", r_base.energy.total, r_lisa.energy.total
+    );
+    println!(
+        "\nLISA speedup: {:.2}x   energy reduction: {:.1}%",
+        r_base.dram_cycles as f64 / r_lisa.dram_cycles as f64,
+        (1.0 - r_lisa.energy.total / r_base.energy.total) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,71 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts for the rust runtime.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the `xla` crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Also writes `manifest.txt` (one line per artifact: name, n_lanes,
+n_steps, operand count) which the rust loader sanity-checks against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True, so the
+    rust side unwraps with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+STEPS = {
+    "activate_sense": model.STEPS_ACTIVATE,
+    "rbm_hop": model.STEPS_RBM,
+    "precharge_single": model.STEPS_PRECHARGE,
+    "precharge_linked": model.STEPS_PRECHARGE,
+    "copy_energy": model.STEPS_RBM,  # per-hop steps; MAX_HOPS hops inside
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--lanes", type=int, default=model.N_LANES)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, specs) in model.example_args(args.lanes).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name} lanes={args.lanes} steps={STEPS[name]} "
+                        f"operands={len(specs)}")
+        print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

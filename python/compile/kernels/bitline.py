@@ -1,0 +1,189 @@
+"""Layer-1 Pallas kernel: DRAM bitline analog dynamics.
+
+This is the SPICE-substitute circuit model for the LISA reproduction
+(DESIGN.md, substitution map row 1). Every analog quantity the paper
+obtains from SPICE — activation/sense latency (tRCD/tRAS), precharge
+latency (tRP), linked-precharge latency (LISA-LIP), row-buffer-movement
+latency (tRBM, LISA's new operation), and per-operation energy — comes
+out of one explicit-Euler integration of a two-node RC network per
+bitline:
+
+    node a : the bitline under observation (destination bitline for RBM,
+             the bitline being precharged for LIP, the sensing bitline
+             for activation)
+    node b : the coupled node (the DRAM cell for activation, the
+             neighboring subarray's bitline / latched row buffer for
+             RBM and LIP)
+
+    dVa/dt = [ g_ext_a (Vext_a - Va) + g_link (Vb - Va) + gm_a (Va - Vmid) ] / Ca
+    dVb/dt = [ g_ext_b (Vext_b - Vb) + g_link (Va - Vb) + gm_b (Vb - Vmid) ] / Cb
+
+with both voltages clamped to [0, VDD] after every step. The `gm`
+terms model the regenerative sense amplifier (positive feedback away
+from VDD/2); `g_ext` models precharge units or supply rails; `g_link`
+models the access transistor (activation) or LISA's isolation
+transistor (RBM / LIP).
+
+The kernel is vectorized over all bitlines of a subarray (the paper's
+8K-bit row buffer) with per-bitline multiplicative process variation on
+conductance and capacitance. Outputs, per bitline:
+
+    v_a, v_b     final voltages
+    t_sense      first time |Va - Vmid| >= sense threshold (ns)
+    t_settle     last time Va was outside the settle tolerance (ns)
+    energy       integral of driver + sense-amp current * VDD (fJ)
+
+Units: time ns, capacitance fF, conductance uS  (tau = C/g is then in
+ns directly), voltage V, energy fJ.
+
+TPU shape (DESIGN.md §Hardware-Adaptation): the model is embarrassingly
+parallel across bitlines — a VPU-friendly elementwise time-scan. The
+BlockSpec tiles bitlines into VMEM-resident blocks; the time loop runs
+entirely in-block and only O(lanes) results are written back, never the
+time series. MXU is not used (no matmul in the physics).
+
+The kernel MUST run with interpret=True: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Layout of the scalar parameter vector (f32[NSCALARS]). Shared with
+# ref.py, model.py and the rust calibration driver
+# (rust/src/runtime/calibrate.rs) — keep all four in sync.
+S_DT = 0          # integration step (ns)
+S_VDD = 1         # rail voltage (V)
+S_SENSE_THR = 2   # |Va - Vmid| threshold for t_sense (V)
+S_SETTLE_TOL = 3  # |Va - settle target| tolerance for t_settle (V)
+S_GM_A = 4        # sense-amp transconductance on node a (uS)
+S_GM_B = 5        # sense-amp transconductance on node b (uS)
+S_G_EXT_A = 6     # external driver conductance on node a (uS)
+S_G_EXT_B = 7     # external driver conductance on node b (uS)
+S_V_EXT_A = 8     # external driver voltage on node a (V)
+S_V_EXT_B = 9     # external driver voltage on node b (V)
+S_G_LINK = 10     # coupling conductance a<->b (uS)
+S_C_A = 11        # node a capacitance (fF)
+S_C_B = 12        # node b capacitance (fF)
+S_SETTLE_TGT = 13 # settle target voltage for node a (V)
+S_SETTLE_B = 14   # if > 0.5: t_settle also requires node b within tol of its target
+S_SETTLE_TGT_B = 15  # settle target voltage for node b (V)
+NSCALARS = 16
+
+DEFAULT_BLOCK = 1024
+
+
+def _phase_kernel(n_steps: int,
+                  va_ref, vb_ref, gmul_ref, cmul_ref, s_ref,
+                  va_out, vb_out, ts_out, tt_out, en_out):
+    """Pallas kernel body: integrate one analog phase for one bitline block."""
+    s = s_ref[...]
+    dt = s[S_DT]
+    vdd = s[S_VDD]
+    vmid = vdd * 0.5
+    thr = s[S_SENSE_THR]
+    tol = s[S_SETTLE_TOL]
+    tgt_a = s[S_SETTLE_TGT]
+    tgt_b = s[S_SETTLE_TGT_B]
+    settle_b = s[S_SETTLE_B] > 0.5
+
+    gmul = gmul_ref[...]
+    cmul = cmul_ref[...]
+    # Per-bitline parameters: process variation scales every conductance
+    # and capacitance multiplicatively (the paper's 60% guard band is
+    # applied downstream, over the worst bitline of the population).
+    ga = s[S_G_EXT_A] * gmul
+    gb = s[S_G_EXT_B] * gmul
+    gl = s[S_G_LINK] * gmul
+    gma = s[S_GM_A] * gmul
+    gmb = s[S_GM_B] * gmul
+    inv_ca = 1.0 / (s[S_C_A] * cmul)
+    inv_cb = 1.0 / (s[S_C_B] * cmul)
+
+    va0 = va_ref[...]
+    vb0 = vb_ref[...]
+    zeros = jnp.zeros_like(va0)
+    neg = zeros - 1.0
+
+    def body(i, carry):
+        va, vb, ts, tt, en = carry
+        t = (i.astype(jnp.float32) + 1.0) * dt
+        # Currents into each node (uA = uS * V).
+        i_a = (ga * (s[S_V_EXT_A] - va)
+               + gl * (vb - va)
+               + gma * (va - vmid))
+        i_b = (gb * (s[S_V_EXT_B] - vb)
+               + gl * (va - vb)
+               + gmb * (vb - vmid))
+        # Sense amps source current only while the node is between the
+        # rails — a CMOS latch clamped at a rail is in cutoff and draws
+        # no static current (matters for energy accounting of the held
+        # source row buffer during RBM).
+        act_a = ((va > 0.0) & (va < vdd)).astype(va.dtype)
+        act_b = ((vb > 0.0) & (vb < vdd)).astype(vb.dtype)
+        # Energy drawn from the rails by drivers and sense amps
+        # (fJ = uS * V * V * ns), evaluated pre-update.
+        p = (ga * jnp.abs(s[S_V_EXT_A] - va)
+             + gb * jnp.abs(s[S_V_EXT_B] - vb)
+             + gma * jnp.abs(va - vmid) * act_a
+             + gmb * jnp.abs(vb - vmid) * act_b) * vdd
+        en = en + p * dt
+        va = jnp.clip(va + dt * i_a * inv_ca, 0.0, vdd)
+        vb = jnp.clip(vb + dt * i_b * inv_cb, 0.0, vdd)
+        # First crossing of the sense threshold.
+        crossed = jnp.abs(va - vmid) >= thr
+        ts = jnp.where((ts < 0.0) & crossed, t, ts)
+        # Last instant outside the settle tolerance.
+        out_a = jnp.abs(va - tgt_a) > tol
+        out_b = jnp.abs(vb - tgt_b) > tol
+        outside = jnp.where(settle_b, out_a | out_b, out_a)
+        tt = jnp.where(outside, t, tt)
+        return va, vb, ts, tt, en
+
+    va, vb, ts, tt, en = jax.lax.fori_loop(
+        0, n_steps, body, (va0, vb0, neg, zeros, zeros))
+    horizon = n_steps * dt
+    ts = jnp.where(ts < 0.0, horizon, ts)
+    va_out[...] = va
+    vb_out[...] = vb
+    ts_out[...] = ts
+    tt_out[...] = tt
+    en_out[...] = en
+
+
+def phase(va0, vb0, gmul, cmul, scalars, *, n_steps: int,
+          block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Integrate one analog phase over a population of bitlines.
+
+    Args:
+      va0, vb0: initial node voltages, shape (n,) float32.
+      gmul, cmul: per-bitline variation multipliers, shape (n,) float32.
+      scalars: phase parameter vector, shape (NSCALARS,) float32.
+      n_steps: number of Euler steps (static; horizon = n_steps * dt).
+      block: bitlines per Pallas block (must divide n).
+      interpret: keep True — CPU PJRT cannot run Mosaic custom-calls.
+
+    Returns:
+      (v_a, v_b, t_sense, t_settle, energy), each shape (n,) float32.
+    """
+    n = va0.shape[0]
+    if n % block != 0:
+        block = n  # small test populations: single block
+    grid = (n // block,)
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar_spec = pl.BlockSpec((NSCALARS,), lambda i: (0,))
+    out = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_phase_kernel, n_steps),
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, vec_spec, vec_spec, scalar_spec],
+        out_specs=[vec_spec] * 5,
+        out_shape=[out] * 5,
+        interpret=interpret,
+    )(va0, vb0, gmul, cmul, scalars)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the bitline phase kernel.
+
+Implements exactly the same two-node Euler integration as
+kernels/bitline.py, with no Pallas — this is the correctness reference
+the pytest / hypothesis suite compares the kernel against
+(python/tests/test_kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bitline as bl
+
+
+def phase_ref(va0, vb0, gmul, cmul, scalars, *, n_steps: int):
+    """Reference implementation of kernels.bitline.phase (same signature,
+    minus the Pallas tiling knobs)."""
+    s = scalars
+    dt = s[bl.S_DT]
+    vdd = s[bl.S_VDD]
+    vmid = vdd * 0.5
+    thr = s[bl.S_SENSE_THR]
+    tol = s[bl.S_SETTLE_TOL]
+    tgt_a = s[bl.S_SETTLE_TGT]
+    tgt_b = s[bl.S_SETTLE_TGT_B]
+    settle_b = s[bl.S_SETTLE_B] > 0.5
+
+    ga = s[bl.S_G_EXT_A] * gmul
+    gb = s[bl.S_G_EXT_B] * gmul
+    gl = s[bl.S_G_LINK] * gmul
+    gma = s[bl.S_GM_A] * gmul
+    gmb = s[bl.S_GM_B] * gmul
+    inv_ca = 1.0 / (s[bl.S_C_A] * cmul)
+    inv_cb = 1.0 / (s[bl.S_C_B] * cmul)
+
+    zeros = jnp.zeros_like(va0)
+
+    def body(i, carry):
+        va, vb, ts, tt, en = carry
+        t = (i.astype(jnp.float32) + 1.0) * dt
+        i_a = ga * (s[bl.S_V_EXT_A] - va) + gl * (vb - va) + gma * (va - vmid)
+        i_b = gb * (s[bl.S_V_EXT_B] - vb) + gl * (va - vb) + gmb * (vb - vmid)
+        act_a = ((va > 0.0) & (va < vdd)).astype(va.dtype)
+        act_b = ((vb > 0.0) & (vb < vdd)).astype(vb.dtype)
+        p = (ga * jnp.abs(s[bl.S_V_EXT_A] - va)
+             + gb * jnp.abs(s[bl.S_V_EXT_B] - vb)
+             + gma * jnp.abs(va - vmid) * act_a
+             + gmb * jnp.abs(vb - vmid) * act_b) * vdd
+        en = en + p * dt
+        va = jnp.clip(va + dt * i_a * inv_ca, 0.0, vdd)
+        vb = jnp.clip(vb + dt * i_b * inv_cb, 0.0, vdd)
+        crossed = jnp.abs(va - vmid) >= thr
+        ts = jnp.where((ts < 0.0) & crossed, t, ts)
+        out_a = jnp.abs(va - tgt_a) > tol
+        out_b = jnp.abs(vb - tgt_b) > tol
+        outside = jnp.where(settle_b, out_a | out_b, out_a)
+        tt = jnp.where(outside, t, tt)
+        return va, vb, ts, tt, en
+
+    va, vb, ts, tt, en = jax.lax.fori_loop(
+        0, n_steps, body, (va0, vb0, zeros - 1.0, zeros, zeros))
+    ts = jnp.where(ts < 0.0, n_steps * dt, ts)
+    return va, vb, ts, tt, en

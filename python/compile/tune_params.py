@@ -1,0 +1,79 @@
+"""Offline tuning utility: checks / tunes PhysParams against the paper's
+SPICE anchor points. Not part of the AOT path — run manually:
+
+    cd python && python -m compile.tune_params
+
+Targets (paper values):
+  precharge_single  t_settle ~ 13   ns   (§3.3 baseline tRP)
+  precharge_linked  t_settle ~  5   ns   (§3.3 LISA-LIP, 2.6x)
+  rbm_hop           t_sense  ~  5   ns   (§2: ~8 ns/hop after 60% margin)
+  activate_sense    t_sense  ~  9   ns   and t_settle ~ 30 ns
+                    (tRCD 13.75 / tRAS 35 on the worst bitline once the
+                     population worst case + margin methodology applies)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import model as m
+from .kernels import bitline as bl
+from .kernels.ref import phase_ref
+
+
+def nominal(n=8):
+    ones = jnp.ones((n,), jnp.float32)
+    return ones
+
+
+def run(name, scalars, va0, vb0, steps):
+    n = va0.shape[0]
+    ones = jnp.ones((n,), jnp.float32)
+    va, vb, ts, tt, en = phase_ref(va0, vb0, ones, ones, scalars,
+                                   n_steps=steps)
+    return (float(ts[0]), float(tt[0]), float(en[0]),
+            float(va[0]), float(vb[0]))
+
+
+def report(p: m.PhysParams = m.DEFAULT_PARAMS):
+    n = 8
+    vdd = p.vdd
+    mid = vdd / 2
+
+    # Both halves of the bitline start at the rail (row was open, storing 1).
+    s = m.scalars_precharge(p, linked=False)
+    ts, tt, en, va, vb = run("pre", s, jnp.full((n,), vdd, jnp.float32),
+                             jnp.full((n,), vdd, jnp.float32),
+                             m.STEPS_PRECHARGE)
+    print(f"precharge_single: t_settle={tt:7.2f} ns  E={en:8.1f} fJ  va={va:.3f}")
+
+    s = m.scalars_precharge(p, linked=True)
+    ts, tt2, en, va, vb = run("lip", s, jnp.full((n,), vdd, jnp.float32),
+                              jnp.full((n,), vdd, jnp.float32),
+                              m.STEPS_PRECHARGE)
+    print(f"precharge_linked: t_settle={tt2:7.2f} ns  E={en:8.1f} fJ  "
+          f"speedup={tt/max(tt2,1e-9):.2f}x")
+
+    s = m.scalars_rbm(p)
+    ts3, tt3, en, va, vb = run("rbm", s, jnp.full((n,), mid, jnp.float32),
+                               jnp.full((n,), vdd, jnp.float32),
+                               m.STEPS_RBM)
+    print(f"rbm_hop:          t_settle={tt3:7.2f} ns  E={en:8.1f} fJ  va={va:.3f}")
+
+    s = m.scalars_activate(p)
+    ts4, tt4, en, va, vb = run("act", s, jnp.full((n,), mid, jnp.float32),
+                               jnp.full((n,), vdd, jnp.float32),
+                               m.STEPS_ACTIVATE)
+    print(f"activate_sense:   t_sense ={ts4:7.2f} ns  t_settle={tt4:7.2f} ns  "
+          f"E={en:8.1f} fJ  va={va:.3f} vb={vb:.3f}")
+
+    s = m.scalars_activate(p, fast=True)
+    ts5, tt5, en, va, vb = run("actf", s, jnp.full((n,), mid, jnp.float32),
+                               jnp.full((n,), vdd, jnp.float32),
+                               m.STEPS_ACTIVATE)
+    print(f"activate (fast):  t_sense ={ts5:7.2f} ns  t_settle={tt5:7.2f} ns")
+
+
+if __name__ == "__main__":
+    report()

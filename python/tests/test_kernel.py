@@ -1,0 +1,264 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Compares the Pallas bitline kernel (interpret=True) against the pure-jnp
+reference for every phase configuration the calibration uses, plus
+hypothesis sweeps over shapes, initial conditions and scalar parameters.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+from compile.kernels import bitline as bl
+from compile.kernels.ref import phase_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Small populations / short horizons keep interpret-mode runtime sane.
+N_FAST = 64
+STEPS_FAST = 300
+
+
+def _mk_inputs(n, seed=0, va=0.6, vb=1.2, sigma=0.05):
+    rng = np.random.default_rng(seed)
+    va0 = jnp.full((n,), va, jnp.float32)
+    vb0 = jnp.full((n,), vb, jnp.float32)
+    gmul = jnp.asarray(np.exp(rng.normal(0.0, sigma, n)), jnp.float32)
+    cmul = jnp.asarray(np.exp(rng.normal(0.0, sigma, n)), jnp.float32)
+    return va0, vb0, gmul, cmul
+
+
+def _assert_matches(scalars, va=0.6, vb=1.2, n=N_FAST, steps=STEPS_FAST,
+                    seed=0, block=32):
+    va0, vb0, gmul, cmul = _mk_inputs(n, seed=seed, va=va, vb=vb)
+    got = bl.phase(va0, vb0, gmul, cmul, scalars, n_steps=steps, block=block)
+    want = phase_ref(va0, vb0, gmul, cmul, scalars, n_steps=steps)
+    names = ["v_a", "v_b", "t_sense", "t_settle", "energy"]
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+    return got
+
+
+class TestPhaseConfigs:
+    """Kernel == oracle for each calibration phase."""
+
+    def test_activate(self):
+        _assert_matches(m.scalars_activate(), va=0.6, vb=1.2)
+
+    def test_activate_fast_subarray(self):
+        _assert_matches(m.scalars_activate(fast=True), va=0.6, vb=1.2)
+
+    def test_activate_low_cell(self):
+        # Cell stores a 0: bitline must swing DOWN and latch at 0.
+        got = _assert_matches(m.scalars_activate(), va=0.6, vb=0.0,
+                              steps=1500)
+        assert float(np.asarray(got[0])[0]) < 0.1
+
+    def test_rbm(self):
+        _assert_matches(m.scalars_rbm(), va=0.6, vb=1.2)
+
+    def test_rbm_fast(self):
+        _assert_matches(m.scalars_rbm(fast=True), va=0.6, vb=1.2)
+
+    def test_precharge_single(self):
+        _assert_matches(m.scalars_precharge(), va=1.2, vb=1.2, steps=1500)
+
+    def test_precharge_linked(self):
+        _assert_matches(m.scalars_precharge(linked=True), va=1.2, vb=1.2,
+                        steps=800)
+
+    def test_precharge_from_zero(self):
+        _assert_matches(m.scalars_precharge(), va=0.0, vb=0.0, steps=1500)
+
+
+class TestBlockingInvariance:
+    """Pallas tiling must not change the numbers."""
+
+    @pytest.mark.parametrize("block", [8, 16, 32, 64])
+    def test_block_sizes(self, block):
+        s = m.scalars_rbm()
+        va0, vb0, gmul, cmul = _mk_inputs(64, seed=3)
+        ref_out = bl.phase(va0, vb0, gmul, cmul, s, n_steps=200, block=64)
+        out = bl.phase(va0, vb0, gmul, cmul, s, n_steps=200, block=block)
+        for a, b in zip(ref_out, out):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_non_divisible_block_falls_back(self):
+        s = m.scalars_rbm()
+        va0, vb0, gmul, cmul = _mk_inputs(48, seed=4)
+        out = bl.phase(va0, vb0, gmul, cmul, s, n_steps=100, block=32)
+        assert out[0].shape == (48,)
+
+
+class TestPhysicsInvariants:
+    """Sanity of the circuit model itself (on the oracle)."""
+
+    def test_precharge_monotone_in_drive(self):
+        # Stronger precharge unit => never slower settle.
+        base = m.PhysParams()
+        prev = None
+        for g in [15.0, 20.0, 25.0, 35.0]:
+            p = m.PhysParams(g_precharge=g)
+            s = m.scalars_precharge(p)
+            va0, vb0, gmul, cmul = _mk_inputs(8, va=1.2, vb=1.2, sigma=0.0)
+            _, _, _, tt, _ = phase_ref(va0, vb0, gmul, cmul, s, n_steps=2500)
+            t = float(np.asarray(tt)[0])
+            if prev is not None:
+                assert t <= prev + 1e-6
+            prev = t
+
+    def test_linked_precharge_strictly_faster(self):
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=1.2, vb=1.2, sigma=0.0)
+        _, _, _, t1, _ = phase_ref(va0, vb0, gmul, cmul,
+                                   m.scalars_precharge(), n_steps=2500)
+        _, _, _, t2, _ = phase_ref(va0, vb0, gmul, cmul,
+                                   m.scalars_precharge(linked=True),
+                                   n_steps=2500)
+        assert float(np.asarray(t2)[0]) < float(np.asarray(t1)[0])
+        # Paper §3.3: ~2.6x
+        ratio = float(np.asarray(t1)[0]) / float(np.asarray(t2)[0])
+        assert 2.0 < ratio < 3.5
+
+    def test_paper_anchor_points(self):
+        """SPICE anchors from the paper: tRP ~ 13 ns, tRP_LIP ~ 5 ns."""
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=1.2, vb=1.2, sigma=0.0)
+        _, _, _, t1, _ = phase_ref(va0, vb0, gmul, cmul,
+                                   m.scalars_precharge(), n_steps=2500)
+        _, _, _, t2, _ = phase_ref(va0, vb0, gmul, cmul,
+                                   m.scalars_precharge(linked=True),
+                                   n_steps=2500)
+        assert 11.0 < float(np.asarray(t1)[0]) < 15.0
+        assert 4.0 < float(np.asarray(t2)[0]) < 6.5
+
+    def test_rbm_settles_at_rail(self):
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=0.6, vb=1.2, sigma=0.0)
+        va, vb, ts, tt, en = phase_ref(va0, vb0, gmul, cmul,
+                                       m.scalars_rbm(), n_steps=1500)
+        assert float(np.asarray(va)[0]) > 1.15   # dst latched high
+        assert 3.0 < float(np.asarray(tt)[0]) < 8.0  # ~5 ns raw
+
+    def test_rbm_symmetric_for_zero(self):
+        # Moving a 0 must be as fast as moving a 1 (within tolerance).
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=0.6, vb=0.0, sigma=0.0)
+        va, _, _, tt0, _ = phase_ref(
+            va0, vb0, gmul, cmul,
+            # settle target = 0 for data value 0
+            m.scalars_rbm().at[bl.S_SETTLE_TGT].set(0.0), n_steps=1500)
+        assert float(np.asarray(va)[0]) < 0.05
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=0.6, vb=1.2, sigma=0.0)
+        _, _, _, tt1, _ = phase_ref(va0, vb0, gmul, cmul, m.scalars_rbm(),
+                                    n_steps=1500)
+        assert abs(float(np.asarray(tt0)[0]) -
+                   float(np.asarray(tt1)[0])) < 1.0
+
+    def test_fast_subarray_faster(self):
+        """VILLA premise: shorter bitlines => faster sense AND restore."""
+        va0, vb0, gmul, cmul = _mk_inputs(8, va=0.6, vb=1.2, sigma=0.0)
+        _, _, s_slow, t_slow, _ = phase_ref(
+            va0, vb0, gmul, cmul, m.scalars_activate(), n_steps=4000)
+        _, _, s_fast, t_fast, _ = phase_ref(
+            va0, vb0, gmul, cmul, m.scalars_activate(fast=True),
+            n_steps=4000)
+        assert float(np.asarray(s_fast)[0]) < float(np.asarray(s_slow)[0])
+        assert float(np.asarray(t_fast)[0]) < float(np.asarray(t_slow)[0])
+
+    def test_energy_nonnegative_and_finite(self):
+        for s in [m.scalars_activate(), m.scalars_rbm(),
+                  m.scalars_precharge(), m.scalars_precharge(linked=True)]:
+            va0, vb0, gmul, cmul = _mk_inputs(16, seed=7, va=0.9, vb=1.1)
+            _, _, _, _, en = phase_ref(va0, vb0, gmul, cmul, s, n_steps=400)
+            e = np.asarray(en)
+            assert np.all(e >= 0) and np.all(np.isfinite(e))
+
+    def test_variation_spreads_settle_times(self):
+        """Process variation must produce a worst bitline strictly slower
+        than the median — the basis of the paper's guard-band method."""
+        va0, vb0, gmul, cmul = _mk_inputs(256, seed=9, va=1.2, vb=1.2,
+                                          sigma=0.08)
+        _, _, _, tt, _ = phase_ref(va0, vb0, gmul, cmul,
+                                   m.scalars_precharge(), n_steps=2500)
+        t = np.asarray(tt)
+        assert t.max() > np.median(t) * 1.02
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: kernel == oracle over random shapes/params/initials.
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    n=st.sampled_from([16, 32, 48, 64, 96]),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    va=st.floats(0.0, 1.2),
+    vb=st.floats(0.0, 1.2),
+)
+def test_hypothesis_kernel_matches_ref(n, block, seed, va, vb):
+    s = m.scalars_rbm()
+    va0, vb0, gmul, cmul = _mk_inputs(n, seed=seed, va=va, vb=vb)
+    got = bl.phase(va0, vb0, gmul, cmul, s, n_steps=120, block=block)
+    want = phase_ref(va0, vb0, gmul, cmul, s, n_steps=120)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    g_ext=st.floats(1.0, 80.0),
+    g_link=st.floats(0.0, 80.0),
+    gm=st.floats(0.0, 60.0),
+    ca=st.floats(10.0, 200.0),
+    cb=st.floats(10.0, 200.0),
+)
+def test_hypothesis_random_circuits(g_ext, g_link, gm, ca, cb):
+    """Arbitrary (stable) circuit parameters: kernel == oracle, voltages
+    stay inside the rails, energy is finite."""
+    p = m.DEFAULT_PARAMS
+    s = m._scalars(p, {bl.S_G_EXT_A: g_ext, bl.S_V_EXT_A: 0.6,
+                       bl.S_G_LINK: g_link, bl.S_GM_A: gm,
+                       bl.S_C_A: ca, bl.S_C_B: cb})
+    va0, vb0, gmul, cmul = _mk_inputs(32, seed=1, va=1.0, vb=0.2)
+    got = bl.phase(va0, vb0, gmul, cmul, s, n_steps=150, block=16)
+    want = phase_ref(va0, vb0, gmul, cmul, s, n_steps=150)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+    v = np.asarray(got[0])
+    assert np.all(v >= 0.0) and np.all(v <= 1.2 + 1e-6)
+
+
+class TestCopyEnergy:
+    def test_copy_energy_composition(self):
+        """copy_energy == 2*activation + hops * one-hop RBM energy."""
+        n = 32
+        va0, vb0, gmul, cmul = _mk_inputs(n, seed=5, va=1.0, vb=1.2,
+                                          sigma=0.0)
+        s_act = m.scalars_activate()
+        s_rbm = m.scalars_rbm()
+        for hops in [1.0, 7.0, 15.0]:
+            e_tot, e_act, e_hop, t_act, t_rbm = m.copy_energy(
+                va0, vb0, gmul, cmul, s_act, s_rbm,
+                jnp.asarray([hops], jnp.float32))
+            want = 2.0 * np.asarray(e_act) + hops * np.asarray(e_hop)
+            np.testing.assert_allclose(np.asarray(e_tot), want,
+                                       rtol=1e-4)
+
+    def test_copy_energy_monotone_in_hops(self):
+        n = 16
+        va0, vb0, gmul, cmul = _mk_inputs(n, seed=6, va=1.0, vb=1.2)
+        s_act, s_rbm = m.scalars_activate(), m.scalars_rbm()
+        prev = None
+        for hops in [1.0, 4.0, 8.0, 15.0]:
+            e_tot, *_ = m.copy_energy(va0, vb0, gmul, cmul, s_act, s_rbm,
+                                      jnp.asarray([hops], jnp.float32))
+            e = float(np.asarray(e_tot).sum())
+            if prev is not None:
+                assert e > prev
+            prev = e

@@ -1,0 +1,26 @@
+//! Bench E8 (paper §2): LISA die-area overhead (paper: 0.8% in 28 nm)
+//! with a sensitivity sweep over subarray count.
+
+use lisa::config::DramConfig;
+use lisa::dram::area::AreaModel;
+use lisa::util::bench::Table;
+
+fn main() {
+    println!("=== E8: die-area overhead ===\n");
+    let model = AreaModel::default();
+    let mut t = Table::new(&["subarrays/bank", "iso %", "control %", "total %"]);
+    for sas in [8usize, 16, 32, 64] {
+        let mut cfg = DramConfig::default();
+        cfg.subarrays_per_bank = sas;
+        cfg.rows_per_subarray = 8192 / sas; // constant capacity
+        let r = model.overhead(&cfg);
+        t.row(&[
+            format!("{sas}"),
+            format!("{:.3}", r.iso_fraction * 100.0),
+            format!("{:.3}", r.control_fraction * 100.0),
+            format!("{:.3}", r.total_fraction * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\npaper: 0.8% total at 16 subarrays/bank (row-buffer decoupling figures)");
+}

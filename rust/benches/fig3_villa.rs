@@ -1,0 +1,43 @@
+//! Bench E4 (Fig. 3): LISA-VILLA performance improvement + hit rate
+//! across hot-region workloads, and the VILLA-with-RC-InterSA
+//! comparison (paper: up to +16.1%, geomean +5.1%; RC variant -52.3%).
+//!
+//! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 8).
+
+use lisa::sim::experiments::fig3;
+use lisa::util::bench::Table;
+use lisa::util::stats::geomean;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let requests = env_u64("LISA_REQUESTS", 2_000);
+    let mixes = env_u64("LISA_MIXES", 8) as usize;
+    println!("=== E4 / Fig. 3: LISA-VILLA ({requests} reqs/core, {mixes} mixes) ===\n");
+    let rows = fig3(requests, mixes);
+    let mut t = Table::new(&["workload", "VILLA +%", "hit rate %", "VILLA w/ RC-InterSA +%"]);
+    for r in &rows {
+        t.row(&[
+            r.workload.clone(),
+            format!("{:+.1}", r.villa_improvement * 100.0),
+            format!("{:.1}", r.villa_hit_rate * 100.0),
+            format!("{:+.1}", r.rc_inter_improvement * 100.0),
+        ]);
+    }
+    t.print();
+
+    let geo = geomean(&rows.iter().map(|r| 1.0 + r.villa_improvement).collect::<Vec<_>>());
+    let max = rows.iter().map(|r| r.villa_improvement).fold(f64::MIN, f64::max);
+    let rc_mean = rows.iter().map(|r| r.rc_inter_improvement).sum::<f64>() / rows.len() as f64;
+    println!(
+        "\nVILLA: geomean {:+.1}% (paper +5.1%), max {:+.1}% (paper +16.1%)",
+        (geo - 1.0) * 100.0,
+        max * 100.0
+    );
+    println!(
+        "VILLA w/ RC-InterSA movement: mean {:+.1}% (paper -52.3%)",
+        rc_mean * 100.0
+    );
+}

@@ -1,0 +1,34 @@
+//! Bench E6 (Fig. 4): combined weighted-speedup improvement of
+//! LISA-RISC / +VILLA / +LIP over the memcpy baseline across the copy
+//! mixes (paper: +59.6% / +76.1% cumulative / +94.8%; energy -49%).
+//!
+//! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15;
+//! set 50 for the paper's full sweep).
+
+use lisa::sim::experiments::fig4;
+use lisa::util::bench::Table;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let requests = env_u64("LISA_REQUESTS", 2_000);
+    let n = env_u64("LISA_MIXES", 15) as usize;
+    println!("=== E6 / Fig. 4: combined LISA ({requests} reqs/core, {n} mixes) ===\n");
+    let cmps = fig4(requests, n);
+    let mut t = Table::new(&["config", "mean WS +%", "geomean x", "max +%", "energy -%", "paper WS"]);
+    let paper = ["+59.6%", "+76.1% cum", "+94.8%"];
+    for (c, p) in cmps.iter().zip(paper) {
+        t.row(&[
+            c.name.clone(),
+            format!("{:+.1}", c.mean_ws_improvement() * 100.0),
+            format!("{:.3}", c.geomean_speedup()),
+            format!("{:+.1}", c.max_ws_improvement() * 100.0),
+            format!("{:.1}", c.mean_energy_reduction() * 100.0),
+            p.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nshape checks: each row adds benefit; All > RISC+VILLA > RISC > 0.");
+}

@@ -1,0 +1,27 @@
+//! Bench E3 (paper §3.3): linked-precharge circuit latency
+//! (paper SPICE: 5 ns vs 13 ns = 2.6x), from the calibrated circuit
+//! model, plus the cycle-level tRP values the simulator uses.
+
+use lisa::config::Calibration;
+use lisa::dram::timing::SpeedBin;
+use lisa::lisa::lip::lip_report;
+use lisa::util::bench::Table;
+
+fn main() {
+    println!("=== E3: LISA-LIP linked precharge ===\n");
+    let cal = Calibration::default();
+    let mut t = Table::new(&["speed bin", "tRP circuit ns", "tRP LIP ns", "speedup", "tRP cyc", "tRP_LIP cyc"]);
+    for bin in [SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400] {
+        let r = lip_report(bin, &cal);
+        t.row(&[
+            bin.name().to_string(),
+            format!("{:.2}", r.t_rp_circuit_ns),
+            format!("{:.2}", r.t_rp_lip_ns),
+            format!("{:.2}x", r.speedup),
+            format!("{}", r.t_rp_cycles),
+            format!("{}", r.t_rp_lip_cycles),
+        ]);
+    }
+    t.print();
+    println!("\npaper: 5 ns vs 13 ns = 2.6x");
+}

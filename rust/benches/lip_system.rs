@@ -1,0 +1,24 @@
+//! Bench E7 (paper §3.3): LISA-LIP alone at the system level
+//! (paper: +10.3% average across 50 four-core workloads).
+//!
+//! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15).
+
+use lisa::sim::experiments::lip_system;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let requests = env_u64("LISA_REQUESTS", 2_000);
+    let n = env_u64("LISA_MIXES", 15) as usize;
+    println!("=== E7: LISA-LIP system-level ({requests} reqs/core, {n} mixes) ===\n");
+    let c = lip_system(requests, n);
+    for (wl, imp) in c.ws_improvements.iter().enumerate() {
+        println!("copy-mix-{wl:02}: {:+.1}%", imp * 100.0);
+    }
+    println!(
+        "\nmean WS improvement: {:+.1}% (paper: +10.3%)",
+        c.mean_ws_improvement() * 100.0
+    );
+}

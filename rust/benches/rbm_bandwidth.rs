@@ -1,0 +1,36 @@
+//! Bench E2 (paper §2): RBM bandwidth vs the DDR4-2400 channel
+//! (paper: 500 GB/s vs 19.2 GB/s = 26x, with the 60% guard band).
+
+use lisa::config::Calibration;
+use lisa::dram::timing::SpeedBin;
+use lisa::lisa::rbm::rbm_bandwidth;
+use lisa::util::bench::Table;
+
+fn main() {
+    println!("=== E2: RBM bandwidth vs memory channel ===\n");
+    let cal = Calibration::default();
+    let mut t = Table::new(&[
+        "granularity",
+        "speed bin",
+        "hop ns",
+        "RBM GB/s",
+        "channel GB/s",
+        "speedup",
+    ]);
+    for (label, bytes) in [("rank row (8 KB)", 8192usize), ("chip row (1 KB)", 1024)] {
+        for bin in [SpeedBin::Ddr4_2400, SpeedBin::Ddr3_1600] {
+            let r = rbm_bandwidth(bin, &cal, bytes);
+            t.row(&[
+                label.to_string(),
+                bin.name().to_string(),
+                format!("{:.2}", r.hop_ns),
+                format!("{:.0}", r.gbps),
+                format!("{:.1}", r.channel_gbps),
+                format!("{:.1}x", r.speedup),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper: 500 GB/s vs 19.2 GB/s = 26x (rank row, DDR4-2400)");
+    println!("shape check: RBM exceeds the channel by >= an order of magnitude.");
+}

@@ -1,0 +1,48 @@
+//! Bench E5 (paper §3.1.2): LISA-RISC on the quad-core copy mixes —
+//! average performance improvement and memory energy reduction over
+//! the memcpy baseline (paper: +66.2% perf, -55.4% energy across 50
+//! workloads).
+//!
+//! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15).
+
+use lisa::sim::engine::alone_ipcs;
+use lisa::sim::experiments::{cfg_baseline, cfg_risc, improvement, ws_point_with};
+use lisa::util::bench::Table;
+use lisa::workloads::mixes::copy_mixes;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|s| s.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let requests = env_u64("LISA_REQUESTS", 2_000);
+    let n = env_u64("LISA_MIXES", 15) as usize;
+    println!("=== E5: LISA-RISC quad-core ({requests} reqs/core, {n} mixes) ===\n");
+
+    let base = cfg_baseline(requests);
+    let risc = cfg_risc(requests);
+    let mixes = copy_mixes(base.cpu.cores);
+
+    let mut t = Table::new(&["workload", "WS +%", "energy -%"]);
+    let (mut imps, mut ens) = (vec![], vec![]);
+    for wl in mixes.iter().take(n) {
+        // Paper methodology: alone runs measured once on the baseline.
+        let alone = alone_ipcs(&base, wl);
+        let b = ws_point_with(&base, wl, &alone);
+        let c = ws_point_with(&risc, wl, &alone);
+        let (imp, en) = improvement(&b, &c);
+        imps.push(imp);
+        ens.push(en);
+        t.row(&[
+            wl.name.clone(),
+            format!("{:+.1}", imp * 100.0),
+            format!("{:.1}", en * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmean: WS {:+.1}% (paper +66.2%), energy -{:.1}% (paper -55.4%)",
+        imps.iter().sum::<f64>() / imps.len() as f64 * 100.0,
+        ens.iter().sum::<f64>() / ens.len() as f64 * 100.0
+    );
+}

@@ -1,0 +1,36 @@
+//! Perf bench: the simulator's own hot path (EXPERIMENTS.md §Perf).
+//! Measures controller tick throughput and end-to-end simulated
+//! DRAM-cycles/second on representative workloads.
+
+use std::time::Instant;
+
+use lisa::config::SimConfig;
+use lisa::sim::engine::Simulation;
+use lisa::util::bench::Table;
+use lisa::workloads::mixes;
+
+fn bench_workload(name: &str, requests: u64) -> (f64, u64) {
+    let mut cfg = SimConfig::default().with_all_lisa();
+    cfg.requests_per_core = requests;
+    let wl = mixes::workload_by_name(name, &cfg).unwrap();
+    let mut sim = Simulation::new(cfg, wl);
+    let t0 = Instant::now();
+    let r = sim.run();
+    let dt = t0.elapsed().as_secs_f64();
+    (r.dram_cycles as f64 / dt, r.dram_cycles)
+}
+
+fn main() {
+    println!("=== Simulator hot-path throughput ===\n");
+    let mut t = Table::new(&["workload", "sim cycles", "Mcycles/s"]);
+    for name in ["stream4", "random4", "hotspot4", "fork4"] {
+        let (rate, cycles) = bench_workload(name, 5_000);
+        t.row(&[
+            name.to_string(),
+            format!("{cycles}"),
+            format!("{:.2}", rate / 1e6),
+        ]);
+    }
+    t.print();
+    println!("\ntarget (DESIGN.md §Perf): > 10 Mcycles/s single channel");
+}

@@ -1,0 +1,51 @@
+//! Bench E1 (Table 1 / Fig. 2): 8 KB copy latency + DRAM energy for
+//! every mechanism, with wall-clock timing of the simulator itself.
+
+use lisa::config::Calibration;
+use lisa::sim::experiments::table1;
+use lisa::util::bench::{fmt_ns, time_it, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== E1 / Table 1: 8 KB copy latency and energy ===\n");
+    let cal = Calibration::default();
+    let rows = table1(&cal)?;
+    let mut t = Table::new(&[
+        "mechanism",
+        "paper ns",
+        "ours ns",
+        "ratio",
+        "paper uJ",
+        "ours uJ",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.2}", r.paper_latency_ns),
+            format!("{:.2}", r.latency_ns),
+            format!("{:.2}", r.latency_ns / r.paper_latency_ns),
+            format!("{:.3}", r.paper_energy_uj),
+            format!("{:.3}", r.energy_uj),
+        ]);
+    }
+    t.print();
+
+    // Key claims.
+    let get = |p: &str| rows.iter().find(|r| r.label.starts_with(p)).unwrap();
+    let rc_inter = get("RC-InterSA");
+    let lisa1 = get("LISA-RISC (1 hop)");
+    println!(
+        "\nLISA vs RC-InterSA: {:.1}x latency, {:.1}x energy (paper: 9x, 48x)",
+        rc_inter.latency_ns / lisa1.latency_ns,
+        rc_inter.energy_uj / lisa1.energy_uj
+    );
+
+    let s = time_it(2, 10, || {
+        table1(&cal).unwrap();
+    });
+    println!(
+        "\n[harness] table1 regeneration: {} ± {} per run",
+        fmt_ns(s.mean()),
+        fmt_ns(s.stddev())
+    );
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Command-line argument parsing (no clap offline): subcommand +
+//! `--key value` / `--flag` options + positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token is the
+    /// subcommand; `--key value` pairs become options; a `--key`
+    /// followed by another `--` token or end-of-line is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let tokens: Vec<String> = argv.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                // `--key=value` form
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse()?)),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        Ok(self.opt_u64(key)?.map(|v| v as usize))
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => Ok(Some(s.parse()?)),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("run --workload stream4 --seed 7 trailing");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("workload"), Some("stream4"));
+        assert_eq!(a.opt_u64("seed").unwrap(), Some(7));
+        assert_eq!(a.positional, vec!["trailing".to_string()]);
+    }
+
+    #[test]
+    fn eq_form_and_flags() {
+        let a = parse("bench --mech=lisa-risc --verbose");
+        assert_eq!(a.opt("mech"), Some("lisa-risc"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("x --flag --k v");
+        assert!(a.has_flag("flag"));
+        assert_eq!(a.opt("k"), Some("v"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --n abc");
+        assert!(a.opt_u64("n").is_err());
+    }
+}

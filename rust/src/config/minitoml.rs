@@ -1,0 +1,330 @@
+//! `minitoml`: a small TOML-subset parser sufficient for simulator
+//! configuration files (sections, key = value with string / integer /
+//! float / boolean values, `#` comments). Built in-tree because the
+//! offline registry carries no serde/toml.
+//!
+//! Supported grammar:
+//!
+//! ```toml
+//! # comment
+//! top_level_key = 1
+//! [section]          # or [a.b] nested names (stored as "a.b")
+//! name = "string"    # double-quoted, \" \\ \n \t escapes
+//! count = 42         # i64, optional +/-, 0x hex allowed
+//! ratio = 0.5        # f64 (also 1e-3 forms)
+//! flag = true        # or false
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+        }
+    }
+}
+
+/// A parsed document: (section, key) -> value. The top level is the
+/// empty section "".
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                let name = name.trim();
+                if name.is_empty()
+                    || !name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+                {
+                    bail!("line {}: bad section name '{name}'", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                bail!("line {}: bad key '{key}'", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let prev = doc
+                .entries
+                .insert((section.clone(), key.to_string()), value);
+            if prev.is_some() {
+                bail!("line {}: duplicate key '{key}' in [{section}]", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s.clone())),
+            Some(v) => bail!("[{section}].{key}: expected string, got {}", v.type_name()),
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Result<Option<i64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Int(i)) => Ok(Some(*i)),
+            Some(v) => bail!("[{section}].{key}: expected integer, got {}", v.type_name()),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
+        match self.get_i64(section, key)? {
+            None => Ok(None),
+            Some(i) if i >= 0 => Ok(Some(i as u64)),
+            Some(i) => bail!("[{section}].{key}: expected non-negative, got {i}"),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        Ok(self.get_u64(section, key)?.map(|v| v as usize))
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => bail!("[{section}].{key}: expected float, got {}", v.type_name()),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("[{section}].{key}: expected boolean, got {}", v.type_name()),
+        }
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.entries.keys().map(|(s, _)| s.as_str()).collect();
+        out.dedup();
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => escaped = true,
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(body) = rest.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(Value::Str(unescape(body)?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Hex integers.
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        return Ok(Value::Int(i64::from_str_radix(hex, 16)?));
+    }
+    // Underscore separators allowed in numbers, TOML-style.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    } else if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape \\{:?}", other),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            "top = 1\n\
+             [a]\n\
+             s = \"hi # not a comment\"  # real comment\n\
+             i = -42\n\
+             h = 0xff\n\
+             f = 2.5\n\
+             e = 1e-3\n\
+             b = true\n\
+             [a.b]\n\
+             nested = 7\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "top").unwrap(), Some(1));
+        assert_eq!(doc.get_str("a", "s").unwrap().unwrap(), "hi # not a comment");
+        assert_eq!(doc.get_i64("a", "i").unwrap(), Some(-42));
+        assert_eq!(doc.get_i64("a", "h").unwrap(), Some(255));
+        assert_eq!(doc.get_f64("a", "f").unwrap(), Some(2.5));
+        assert_eq!(doc.get_f64("a", "e").unwrap(), Some(1e-3));
+        assert_eq!(doc.get_bool("a", "b").unwrap(), Some(true));
+        assert_eq!(doc.get_i64("a.b", "nested").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = Document::parse("n = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_i64("", "n").unwrap(), Some(1_000_000));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Document::parse("s = \"a\\nb\\\"c\\\\d\"\n").unwrap();
+        assert_eq!(doc.get_str("", "s").unwrap().unwrap(), "a\nb\"c\\d");
+    }
+
+    #[test]
+    fn type_mismatch_is_error_not_none() {
+        let doc = Document::parse("x = 5\n").unwrap();
+        assert!(doc.get_str("", "x").is_err());
+        assert!(doc.get_bool("", "x").is_err());
+        // int -> float widening is allowed
+        assert_eq!(doc.get_f64("", "x").unwrap(), Some(5.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Document::parse("[unclosed\n").is_err());
+        assert!(Document::parse("novalue\n").is_err());
+        assert!(Document::parse("k = \n").is_err());
+        assert!(Document::parse("k = zzz\n").is_err());
+        assert!(Document::parse("k = 1\nk = 2\n").is_err());
+        assert!(Document::parse("bad key = 1\n").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = Document::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.get_i64("a", "y").unwrap(), None);
+        assert_eq!(doc.get_i64("b", "x").unwrap(), None);
+    }
+
+    #[test]
+    fn prop_int_round_trip() {
+        check("minitoml int round trip", 200, |g| {
+            let v = g.u64(1 << 62) as i64 - (1 << 61);
+            let text = format!("[s]\nk = {v}\n");
+            let doc = Document::parse(&text).unwrap();
+            assert_eq!(doc.get_i64("s", "k").unwrap(), Some(v));
+        });
+    }
+
+    #[test]
+    fn prop_string_round_trip() {
+        check("minitoml string round trip", 200, |g| {
+            let n = g.usize(24);
+            let s: String = (0..n)
+                .map(|_| {
+                    let c = *g.pick(&[
+                        'a', 'b', 'z', ' ', '#', '=', '[', ']', '\\', '"', '\n', '\t',
+                    ]);
+                    c
+                })
+                .collect();
+            let escaped = s
+                .replace('\\', "\\\\")
+                .replace('"', "\\\"")
+                .replace('\n', "\\n")
+                .replace('\t', "\\t");
+            let text = format!("k = \"{escaped}\"\n");
+            let doc = Document::parse(&text).unwrap();
+            assert_eq!(doc.get_str("", "k").unwrap().unwrap(), s);
+        });
+    }
+}

@@ -1,0 +1,470 @@
+//! Configuration: a TOML-subset parser (`minitoml`, built in-tree —
+//! no serde offline) plus the typed simulator configuration tree.
+
+pub mod minitoml;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dram::timing::SpeedBin;
+use minitoml::Document;
+
+/// Which bulk-copy mechanism the system uses for copy requests.
+/// These are the rows of Table 1 / Fig. 2 of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CopyMechanism {
+    /// Baseline: data crosses the memory channel through the CPU.
+    MemcpyChannel,
+    /// RowClone, source and destination rows in the same subarray.
+    RowCloneIntraSa,
+    /// RowClone pipelined serial mode across banks (internal 64-bit bus).
+    RowCloneInterBank,
+    /// RowClone between subarrays of the same bank (two inter-bank
+    /// transfers via a temporary bank).
+    RowCloneInterSa,
+    /// LISA-RISC: row buffer movement across linked subarrays.
+    LisaRisc,
+}
+
+impl CopyMechanism {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "memcpy" => Self::MemcpyChannel,
+            "rc-intra" => Self::RowCloneIntraSa,
+            "rc-bank" => Self::RowCloneInterBank,
+            "rc-inter" => Self::RowCloneInterSa,
+            "lisa-risc" => Self::LisaRisc,
+            _ => bail!(
+                "unknown copy mechanism '{s}' (memcpy|rc-intra|rc-bank|rc-inter|lisa-risc)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::MemcpyChannel => "memcpy",
+            Self::RowCloneIntraSa => "rc-intra",
+            Self::RowCloneInterBank => "rc-bank",
+            Self::RowCloneInterSa => "rc-inter",
+            Self::LisaRisc => "lisa-risc",
+        }
+    }
+}
+
+/// DRAM organization. Defaults mirror the paper's configuration:
+/// DDR3-1600, 1 channel, 1 rank, 8 banks, 16 subarrays/bank,
+/// 512 rows/subarray, 8 KB rows (128 cache lines of 64 B).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub channels: usize,
+    pub ranks: usize,
+    pub banks: usize,
+    pub subarrays_per_bank: usize,
+    pub rows_per_subarray: usize,
+    /// Cache lines (64 B) per row; 8 KB row => 128.
+    pub columns: usize,
+    pub speed: SpeedBin,
+    /// Subarray-level parallelism (SALP) — the paper's baseline has it
+    /// off; LISA configurations keep per-subarray row-buffer state.
+    pub salp: bool,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self {
+            channels: 1,
+            ranks: 1,
+            banks: 8,
+            subarrays_per_bank: 16,
+            rows_per_subarray: 512,
+            columns: 128,
+            speed: SpeedBin::Ddr3_1600,
+            salp: false,
+        }
+    }
+}
+
+impl DramConfig {
+    pub fn rows_per_bank(&self) -> usize {
+        self.subarrays_per_bank * self.rows_per_subarray
+    }
+
+    /// Row size in bytes (columns * 64 B cache lines).
+    pub fn row_bytes(&self) -> usize {
+        self.columns * 64
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.channels * self.ranks * self.banks * self.rows_per_bank() * self.row_bytes()
+    }
+}
+
+/// LISA feature switches (the paper's three applications).
+#[derive(Debug, Clone)]
+pub struct LisaConfig {
+    /// LISA-RISC: inter-subarray copies use RBM.
+    pub risc: bool,
+    /// LISA-VILLA: heterogeneous subarrays + hot-row caching.
+    pub villa: bool,
+    /// LISA-LIP: linked precharge.
+    pub lip: bool,
+    /// Number of fast subarrays per bank for VILLA (paper: 1 fast
+    /// subarray of 32 rows per bank class designs; we default 1).
+    pub fast_subarrays_per_bank: usize,
+    /// Rows per fast subarray (short bitlines => fewer rows).
+    pub fast_rows_per_subarray: usize,
+    /// VILLA epoch length in DRAM cycles.
+    pub villa_epoch_cycles: u64,
+    /// Hot-row counters per bank (paper: 1024 saturating counters).
+    pub villa_counters: usize,
+    /// Rows marked hot per epoch (paper: 16).
+    pub villa_hot_per_epoch: usize,
+}
+
+impl Default for LisaConfig {
+    fn default() -> Self {
+        Self {
+            risc: false,
+            villa: false,
+            lip: false,
+            fast_subarrays_per_bank: 1,
+            fast_rows_per_subarray: 32,
+            villa_epoch_cycles: 100_000,
+            villa_counters: 1024,
+            villa_hot_per_epoch: 16,
+        }
+    }
+}
+
+/// CPU / cache hierarchy configuration (quad-core, paper §9 setup).
+#[derive(Debug, Clone)]
+pub struct CpuConfig {
+    pub cores: usize,
+    /// CPU clock as a multiple of the DRAM bus clock (3.2 GHz / 800 MHz).
+    pub clock_ratio: u64,
+    /// Reorder-buffer (instruction window) entries per core.
+    pub rob_size: usize,
+    /// Maximum outstanding L1 misses per core.
+    pub mshrs: usize,
+    /// Retire width (instructions per CPU cycle).
+    pub issue_width: u64,
+    pub l1_kb: usize,
+    pub l1_ways: usize,
+    pub l1_latency: u64,
+    pub l2_kb: usize,
+    pub l2_ways: usize,
+    pub l2_latency: u64,
+    pub llc_kb: usize,
+    pub llc_ways: usize,
+    pub llc_latency: u64,
+}
+
+impl Default for CpuConfig {
+    fn default() -> Self {
+        Self {
+            cores: 4,
+            clock_ratio: 4,
+            rob_size: 128,
+            mshrs: 16,
+            issue_width: 4,
+            l1_kb: 32,
+            l1_ways: 8,
+            l1_latency: 4,
+            l2_kb: 256,
+            l2_ways: 8,
+            l2_latency: 12,
+            llc_kb: 8192,
+            llc_ways: 16,
+            llc_latency: 38,
+        }
+    }
+}
+
+/// Calibrated LISA timing/energy parameters. Normally produced by
+/// `lisa calibrate` (rust/src/runtime/calibrate.rs) executing the
+/// JAX/Pallas circuit artifacts through PJRT; the defaults below are
+/// the same values the checked-in circuit model yields, so the
+/// simulator is usable (and the test suite hermetic) without artifacts.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Row buffer movement latency per hop, ns (raw circuit time x the
+    /// paper's 60% process/temperature guard band).
+    pub t_rbm_ns: f64,
+    /// Precharge latency with linked precharge units, ns.
+    pub t_rp_lip_ns: f64,
+    /// Baseline precharge latency from the same circuit model, ns
+    /// (used to scale JEDEC tRP for LIP rather than absolute ns).
+    pub t_rp_circuit_ns: f64,
+    /// Fast-subarray latency ratios (fast/slow) for ACT / restore / PRE.
+    pub fast_act_ratio: f64,
+    pub fast_ras_ratio: f64,
+    pub fast_rp_ratio: f64,
+    /// Per-bitline op energies from the circuit model, fJ.
+    pub e_act_fj: f64,
+    pub e_pre_fj: f64,
+    pub e_rbm_fj: f64,
+    /// True when values came from executing the artifacts (vs. the
+    /// built-in analytic fallback).
+    pub from_artifacts: bool,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        // Matches python/compile/tune_params.py on the checked-in
+        // PhysParams (see EXPERIMENTS.md §Calibration).
+        Self {
+            t_rbm_ns: 5.21 * 1.6,
+            t_rp_lip_ns: 5.07 * 1.6,
+            t_rp_circuit_ns: 13.32 * 1.6,
+            fast_act_ratio: 0.40,
+            fast_ras_ratio: 0.62,
+            fast_rp_ratio: 0.45,
+            e_act_fj: 55.2,
+            e_pre_fj: 61.0,
+            e_rbm_fj: 35.9,
+            from_artifacts: false,
+        }
+    }
+}
+
+/// Top-level simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub dram: DramConfig,
+    pub lisa: LisaConfig,
+    pub cpu: CpuConfig,
+    pub calibration: Calibration,
+    pub copy_mechanism: CopyMechanism,
+    /// Memory requests simulated per core before the run ends.
+    pub requests_per_core: u64,
+    /// Warmup fraction excluded from stats.
+    pub warmup_frac: f64,
+    /// Hard cap on simulated DRAM cycles (safety).
+    pub max_cycles: u64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            dram: DramConfig::default(),
+            lisa: LisaConfig::default(),
+            cpu: CpuConfig::default(),
+            calibration: Calibration::default(),
+            copy_mechanism: CopyMechanism::MemcpyChannel,
+            requests_per_core: 50_000,
+            warmup_frac: 0.1,
+            max_cycles: 200_000_000,
+            seed: 1,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Enable all three LISA applications (paper Fig. 4 "All").
+    pub fn with_all_lisa(mut self) -> Self {
+        self.lisa.risc = true;
+        self.lisa.villa = true;
+        self.lisa.lip = true;
+        self.copy_mechanism = CopyMechanism::LisaRisc;
+        self
+    }
+
+    /// Load overrides from a TOML file on top of the defaults.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Apply a TOML document on top of the defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = Document::parse(text)?;
+        let mut cfg = Self::default();
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed document's overrides in place.
+    pub fn apply(&mut self, doc: &Document) -> Result<()> {
+        macro_rules! set {
+            ($field:expr, $get:ident, $sec:expr, $key:expr) => {
+                if let Some(v) = doc.$get($sec, $key)? {
+                    $field = v;
+                }
+            };
+        }
+        set!(self.dram.channels, get_usize, "dram", "channels");
+        set!(self.dram.ranks, get_usize, "dram", "ranks");
+        set!(self.dram.banks, get_usize, "dram", "banks");
+        set!(self.dram.subarrays_per_bank, get_usize, "dram", "subarrays_per_bank");
+        set!(self.dram.rows_per_subarray, get_usize, "dram", "rows_per_subarray");
+        set!(self.dram.columns, get_usize, "dram", "columns");
+        set!(self.dram.salp, get_bool, "dram", "salp");
+        if let Some(s) = doc.get_str("dram", "speed")? {
+            self.dram.speed = SpeedBin::parse(&s)?;
+        }
+
+        set!(self.lisa.risc, get_bool, "lisa", "risc");
+        set!(self.lisa.villa, get_bool, "lisa", "villa");
+        set!(self.lisa.lip, get_bool, "lisa", "lip");
+        set!(self.lisa.fast_subarrays_per_bank, get_usize, "lisa", "fast_subarrays_per_bank");
+        set!(self.lisa.fast_rows_per_subarray, get_usize, "lisa", "fast_rows_per_subarray");
+        set!(self.lisa.villa_epoch_cycles, get_u64, "lisa", "villa_epoch_cycles");
+        set!(self.lisa.villa_counters, get_usize, "lisa", "villa_counters");
+        set!(self.lisa.villa_hot_per_epoch, get_usize, "lisa", "villa_hot_per_epoch");
+
+        set!(self.cpu.cores, get_usize, "cpu", "cores");
+        set!(self.cpu.clock_ratio, get_u64, "cpu", "clock_ratio");
+        set!(self.cpu.rob_size, get_usize, "cpu", "rob_size");
+        set!(self.cpu.mshrs, get_usize, "cpu", "mshrs");
+        set!(self.cpu.issue_width, get_u64, "cpu", "issue_width");
+        set!(self.cpu.l1_kb, get_usize, "cpu", "l1_kb");
+        set!(self.cpu.l2_kb, get_usize, "cpu", "l2_kb");
+        set!(self.cpu.llc_kb, get_usize, "cpu", "llc_kb");
+
+        set!(self.calibration.t_rbm_ns, get_f64, "calibration", "t_rbm_ns");
+        set!(self.calibration.t_rp_lip_ns, get_f64, "calibration", "t_rp_lip_ns");
+        set!(self.calibration.t_rp_circuit_ns, get_f64, "calibration", "t_rp_circuit_ns");
+        set!(self.calibration.fast_act_ratio, get_f64, "calibration", "fast_act_ratio");
+        set!(self.calibration.fast_ras_ratio, get_f64, "calibration", "fast_ras_ratio");
+        set!(self.calibration.fast_rp_ratio, get_f64, "calibration", "fast_rp_ratio");
+        set!(self.calibration.e_act_fj, get_f64, "calibration", "e_act_fj");
+        set!(self.calibration.e_pre_fj, get_f64, "calibration", "e_pre_fj");
+        set!(self.calibration.e_rbm_fj, get_f64, "calibration", "e_rbm_fj");
+        set!(self.calibration.from_artifacts, get_bool, "calibration", "from_artifacts");
+
+        if let Some(s) = doc.get_str("sim", "copy_mechanism")? {
+            self.copy_mechanism = CopyMechanism::parse(&s)?;
+        }
+        set!(self.requests_per_core, get_u64, "sim", "requests_per_core");
+        set!(self.warmup_frac, get_f64, "sim", "warmup_frac");
+        set!(self.max_cycles, get_u64, "sim", "max_cycles");
+        set!(self.seed, get_u64, "sim", "seed");
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.dram.banks == 0 || self.dram.subarrays_per_bank == 0 {
+            bail!("dram geometry must be non-zero");
+        }
+        if !self.dram.banks.is_power_of_two()
+            || !self.dram.subarrays_per_bank.is_power_of_two()
+            || !self.dram.rows_per_subarray.is_power_of_two()
+            || !self.dram.columns.is_power_of_two()
+        {
+            bail!("dram geometry fields must be powers of two (address mapping)");
+        }
+        if self.cpu.cores == 0 {
+            bail!("need at least one core");
+        }
+        if self.lisa.villa
+            && self.lisa.fast_subarrays_per_bank >= self.dram.subarrays_per_bank
+        {
+            bail!("fast subarrays must be a strict subset of subarrays");
+        }
+        if !(0.0..1.0).contains(&self.warmup_frac) {
+            bail!("warmup_frac must be in [0,1)");
+        }
+        Ok(())
+    }
+
+    /// Serialize the calibration section (written by `lisa calibrate`).
+    pub fn calibration_toml(c: &Calibration) -> String {
+        format!(
+            "# Generated by `lisa calibrate` from the JAX/Pallas circuit artifacts.\n\
+             [calibration]\n\
+             t_rbm_ns = {}\n\
+             t_rp_lip_ns = {}\n\
+             t_rp_circuit_ns = {}\n\
+             fast_act_ratio = {}\n\
+             fast_ras_ratio = {}\n\
+             fast_rp_ratio = {}\n\
+             e_act_fj = {}\n\
+             e_pre_fj = {}\n\
+             e_rbm_fj = {}\n\
+             from_artifacts = {}\n",
+            c.t_rbm_ns,
+            c.t_rp_lip_ns,
+            c.t_rp_circuit_ns,
+            c.fast_act_ratio,
+            c.fast_ras_ratio,
+            c.fast_rp_ratio,
+            c.e_act_fj,
+            c.e_pre_fj,
+            c.e_rbm_fj,
+            c.from_artifacts,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let cfg = SimConfig::from_toml(
+            "[dram]\nbanks = 16\nspeed = \"ddr4-2400\"\nsalp = true\n\
+             [lisa]\nrisc = true\nvilla = true\n\
+             [cpu]\ncores = 8\n\
+             [sim]\ncopy_mechanism = \"lisa-risc\"\nseed = 99\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dram.banks, 16);
+        assert_eq!(cfg.dram.speed, SpeedBin::Ddr4_2400);
+        assert!(cfg.dram.salp);
+        assert!(cfg.lisa.risc && cfg.lisa.villa && !cfg.lisa.lip);
+        assert_eq!(cfg.cpu.cores, 8);
+        assert_eq!(cfg.copy_mechanism, CopyMechanism::LisaRisc);
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        assert!(SimConfig::from_toml("[dram]\nbanks = 7\n").is_err());
+        assert!(SimConfig::from_toml("[cpu]\ncores = 0\n").is_err());
+    }
+
+    #[test]
+    fn calibration_round_trip() {
+        let c = Calibration {
+            t_rbm_ns: 8.5,
+            from_artifacts: true,
+            ..Calibration::default()
+        };
+        let toml = SimConfig::calibration_toml(&c);
+        let cfg = SimConfig::from_toml(&toml).unwrap();
+        assert!((cfg.calibration.t_rbm_ns - 8.5).abs() < 1e-9);
+        assert!(cfg.calibration.from_artifacts);
+    }
+
+    #[test]
+    fn copy_mechanism_parse_round_trip() {
+        for m in [
+            CopyMechanism::MemcpyChannel,
+            CopyMechanism::RowCloneIntraSa,
+            CopyMechanism::RowCloneInterBank,
+            CopyMechanism::RowCloneInterSa,
+            CopyMechanism::LisaRisc,
+        ] {
+            assert_eq!(CopyMechanism::parse(m.name()).unwrap(), m);
+        }
+        assert!(CopyMechanism::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn capacity_math() {
+        let d = DramConfig::default();
+        // 1ch * 1rk * 8 banks * 16 SA * 512 rows * 8 KB = 512 MiB.
+        assert_eq!(d.capacity_bytes(), 512 << 20);
+        assert_eq!(d.row_bytes(), 8192);
+    }
+}

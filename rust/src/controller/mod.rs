@@ -1,0 +1,914 @@
+//! The memory controller: request queues, FR-FCFS scheduling, write
+//! drain, refresh management, in-DRAM copy sequencing (RowClone /
+//! LISA-RISC), memcpy-over-channel expansion, and the LISA-VILLA hooks
+//! (access counting, address redirection, cache-fill copies).
+
+pub mod mapping;
+pub mod request;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::{CopyMechanism, SimConfig};
+use crate::copy::CopyOp;
+use crate::dram::bank::DramDevice;
+use crate::dram::command::Command;
+use crate::dram::geometry::Address;
+use crate::dram::timing::Timing;
+use crate::lisa::villa::VillaManager;
+use crate::util::stats::Histogram;
+use mapping::{Mapper, MappingScheme};
+use request::{Completion, CopyRequest, MemRequest};
+
+/// Queue capacities (per channel), Ramulator-like defaults.
+const READ_Q_CAP: usize = 32;
+const WRITE_Q_CAP: usize = 32;
+const DRAIN_HI: usize = 24;
+const DRAIN_LO: usize = 8;
+
+/// Controller statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CtrlStats {
+    pub reads_done: u64,
+    pub writes_done: u64,
+    pub copies_done: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub sum_read_latency: u64,
+    pub read_latency: Histogram,
+    pub sum_copy_latency: u64,
+    pub villa_copies: u64,
+}
+
+impl CtrlStats {
+    pub fn avg_read_latency(&self) -> f64 {
+        if self.reads_done == 0 {
+            0.0
+        } else {
+            self.sum_read_latency as f64 / self.reads_done as f64
+        }
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Completion-side events waiting for their cycle.
+#[derive(Debug, Clone)]
+enum Event {
+    ReadDone(Completion),
+    WriteDone { copy_id: Option<u64>, ch: usize },
+    MemcpyReadDone { ch: usize, col: usize, row_idx: usize },
+    CopyDone(Completion),
+}
+
+/// In-flight memcpy-over-channel copy (expanded into RD/WR traffic).
+#[derive(Debug, Clone)]
+struct MemcpyState {
+    req: CopyRequest,
+    row_idx: usize,
+    reads_issued: usize,
+    writes_done: usize,
+}
+
+/// Per-channel controller state.
+#[derive(Debug)]
+struct ChannelState {
+    read_q: VecDeque<MemRequest>,
+    write_q: VecDeque<MemRequest>,
+    copy_q: VecDeque<CopyRequest>,
+    active_copy: Option<CopyOp>,
+    pending_cmd: Option<Command>,
+    active_memcpy: Option<MemcpyState>,
+    drain_mode: bool,
+    /// Per-rank next refresh due times + pending flags.
+    next_refresh: Vec<u64>,
+    refresh_pending: Vec<bool>,
+}
+
+/// The memory controller.
+pub struct Controller {
+    pub cfg: SimConfig,
+    pub dev: DramDevice,
+    pub mapper: Mapper,
+    pub villa: Option<VillaManager>,
+    chans: Vec<ChannelState>,
+    inflight: Vec<(u64, Event)>,
+    completions: Vec<Completion>,
+    pub stats: CtrlStats,
+    pub now: u64,
+}
+
+impl Controller {
+    pub fn new(cfg: SimConfig) -> Self {
+        let timing = Timing::new(cfg.dram.speed, &cfg.calibration);
+        let dev = DramDevice::new(cfg.dram.clone(), cfg.lisa.clone(), timing.clone());
+        let reserved = VillaManager::reserved_rows(&cfg);
+        let mapper =
+            Mapper::with_reserved(&cfg.dram, MappingScheme::RowRankBankColCh, reserved);
+        let villa = if cfg.lisa.villa {
+            // Fig. 3's comparison point: when RISC is off but VILLA is
+            // on, fills use RowClone inter-subarray (slow movement).
+            let mech = if cfg.lisa.risc {
+                CopyMechanism::LisaRisc
+            } else {
+                CopyMechanism::RowCloneInterSa
+            };
+            Some(VillaManager::new(&cfg, mech))
+        } else {
+            None
+        };
+        let chans = (0..cfg.dram.channels)
+            .map(|_| ChannelState {
+                read_q: VecDeque::with_capacity(READ_Q_CAP),
+                write_q: VecDeque::with_capacity(WRITE_Q_CAP),
+                copy_q: VecDeque::new(),
+                active_copy: None,
+                pending_cmd: None,
+                active_memcpy: None,
+                drain_mode: false,
+                next_refresh: (0..cfg.dram.ranks)
+                    .map(|r| timing.t_refi + (r as u64 * 64))
+                    .collect(),
+                refresh_pending: vec![false; cfg.dram.ranks],
+            })
+            .collect();
+        Self {
+            cfg,
+            dev,
+            mapper,
+            villa,
+            chans,
+            inflight: Vec::new(),
+            completions: Vec::new(),
+            stats: CtrlStats::default(),
+            now: 0,
+        }
+    }
+
+    /// Room for another read/write on `ch`?
+    pub fn can_accept(&self, ch: usize, is_write: bool) -> bool {
+        let c = &self.chans[ch];
+        if is_write {
+            c.write_q.len() < WRITE_Q_CAP
+        } else {
+            c.read_q.len() < READ_Q_CAP
+        }
+    }
+
+    /// Enqueue a cache-line request by physical byte address. Returns
+    /// false (rejecting the request) when the target queue is full.
+    pub fn enqueue_mem(&mut self, id: u64, core: usize, byte_addr: u64, is_write: bool) -> bool {
+        let addr = self.mapper.map(byte_addr);
+        self.enqueue_mem_mapped(id, core, addr, is_write)
+    }
+
+    /// Enqueue a pre-mapped request (VILLA translation still applies).
+    pub fn enqueue_mem_mapped(
+        &mut self,
+        id: u64,
+        core: usize,
+        mut addr: Address,
+        is_write: bool,
+    ) -> bool {
+        if !self.can_accept(addr.channel, is_write) {
+            return false;
+        }
+        if let Some(v) = self.villa.as_mut() {
+            // Backpressure: only start new fills when the copy engine
+            // on this channel is idle.
+            let allow_fill = {
+                let c = &self.chans[addr.channel];
+                c.copy_q.is_empty() && c.active_copy.is_none() && c.active_memcpy.is_none()
+            };
+            let (redirected, copies) =
+                v.on_access(&addr, is_write, self.now, core, allow_fill);
+            addr = redirected;
+            for c in copies {
+                self.stats.villa_copies += 1;
+                self.chans[c.src.channel].copy_q.push_back(c);
+            }
+        }
+        let ch = addr.channel;
+        let req = MemRequest {
+            id,
+            core,
+            addr,
+            is_write,
+            arrive: self.now,
+            done: None,
+            copy_id: None,
+        };
+        if is_write {
+            self.chans[ch].write_q.push_back(req);
+        } else {
+            self.chans[ch].read_q.push_back(req);
+        }
+        true
+    }
+
+    /// Enqueue a bulk copy. The destination row is invalidated in the
+    /// VILLA cache (its cached copy would go stale).
+    pub fn enqueue_copy(&mut self, req: CopyRequest) {
+        if let Some(v) = self.villa.as_mut() {
+            for r in 0..req.rows {
+                let mut a = req.dst;
+                a.row += r;
+                v.invalidate(&a);
+            }
+        }
+        self.chans[req.src.channel].copy_q.push_back(req);
+    }
+
+    /// Take completed requests (reads and copies).
+    pub fn drain_completions(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.completions)
+    }
+
+    /// Advance one DRAM cycle: deliver due events, then let every
+    /// channel issue at most one command.
+    pub fn tick(&mut self) -> Result<()> {
+        let now = self.now;
+        // Deliver due events. swap_remove keeps this O(n) per tick.
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].0 <= now {
+                let (_, ev) = self.inflight.swap_remove(i);
+                self.handle_event(ev)?;
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(v) = self.villa.as_mut() {
+            v.tick(now);
+        }
+        for ch in 0..self.chans.len() {
+            self.tick_channel(ch)?;
+        }
+        self.now += 1;
+        Ok(())
+    }
+
+    fn handle_event(&mut self, ev: Event) -> Result<()> {
+        match ev {
+            Event::ReadDone(c) => {
+                // Latency stats were recorded at issue time.
+                self.completions.push(c);
+            }
+            Event::WriteDone { copy_id, ch } => {
+                self.stats.writes_done += 1;
+                if let Some(id) = copy_id {
+                    self.memcpy_write_done(ch, id)?;
+                }
+            }
+            Event::MemcpyReadDone { ch, col, row_idx } => {
+                // The CPU turns the line around and writes it to dst.
+                let (dst, copy_id) = {
+                    let m = self.chans[ch].active_memcpy.as_ref().expect("memcpy live");
+                    let mut d = m.req.dst;
+                    d.row += row_idx;
+                    d.col = col;
+                    (d, m.req.id)
+                };
+                let req = MemRequest {
+                    id: copy_id,
+                    core: 0,
+                    addr: dst,
+                    is_write: true,
+                    arrive: self.now,
+                    done: None,
+                    copy_id: Some(copy_id),
+                };
+                self.chans[ch].write_q.push_back(req);
+            }
+            Event::CopyDone(c) => {
+                self.finish_copy(c);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_copy(&mut self, c: Completion) {
+        self.stats.copies_done += 1;
+        if let Some(v) = self.villa.as_mut() {
+            if v.owns_copy(c.id) {
+                v.on_copy_done(c.id);
+                return; // villa-internal; no core completion
+            }
+        }
+        self.completions.push(c);
+    }
+
+    fn memcpy_write_done(&mut self, ch: usize, copy_id: u64) -> Result<()> {
+        let finished = {
+            let Some(m) = self.chans[ch].active_memcpy.as_mut() else {
+                return Ok(());
+            };
+            if m.req.id != copy_id {
+                return Ok(());
+            }
+            m.writes_done += 1;
+            if m.writes_done == self.cfg.dram.columns {
+                // Row complete: move the content tag.
+                let (src, dst) = {
+                    let mut s = m.req.src;
+                    s.row += m.row_idx;
+                    let mut d = m.req.dst;
+                    d.row += m.row_idx;
+                    (s, d)
+                };
+                let tag = self.dev.row_tag(src.channel, src.rank, src.bank, src.row);
+                self.dev.set_row_tag(dst.channel, dst.rank, dst.bank, dst.row, tag);
+                let m = self.chans[ch].active_memcpy.as_mut().unwrap();
+                m.row_idx += 1;
+                m.writes_done = 0;
+                m.reads_issued = 0;
+                m.row_idx >= m.req.rows
+            } else {
+                false
+            }
+        };
+        if finished {
+            let m = self.chans[ch].active_memcpy.take().unwrap();
+            self.stats
+                .sum_copy_latency
+                .checked_add(self.now - m.req.arrive)
+                .map(|v| self.stats.sum_copy_latency = v);
+            self.finish_copy(Completion {
+                id: m.req.id,
+                core: m.req.core,
+                at: self.now,
+                was_copy: true,
+            });
+        }
+        Ok(())
+    }
+
+    /// Issue at most one command on channel `ch` this cycle.
+    fn tick_channel(&mut self, ch: usize) -> Result<()> {
+        let now = self.now;
+
+        // 1. Refresh has absolute priority once due.
+        for rank in 0..self.cfg.dram.ranks {
+            if now >= self.chans[ch].next_refresh[rank] {
+                self.chans[ch].refresh_pending[rank] = true;
+            }
+            if self.chans[ch].refresh_pending[rank] {
+                let cmd = Command::Ref { rank };
+                if let Ok(e) = self.dev.earliest(ch, cmd, now) {
+                    if e <= now {
+                        self.dev.issue(ch, cmd, now)?;
+                        self.chans[ch].refresh_pending[rank] = false;
+                        self.chans[ch].next_refresh[rank] += self.dev.timing.t_refi;
+                        return Ok(());
+                    }
+                } else {
+                    // Some bank open: close banks first.
+                    for bank in 0..self.cfg.dram.banks {
+                        if !self.dev.bank(ch, rank, bank).all_precharged() {
+                            let pre = Command::Pre { rank, bank };
+                            if let Ok(e) = self.dev.earliest(ch, pre, now) {
+                                if e <= now {
+                                    self.dev.issue(ch, pre, now)?;
+                                    return Ok(());
+                                }
+                            }
+                        }
+                    }
+                }
+                // Refresh pending but cannot progress: stall new ACTs
+                // on this rank by simply not scheduling ACTs below.
+            }
+        }
+
+        // 2. Copy engine. Pause it entirely while a refresh is pending
+        // on its rank: the copy sequence keeps re-opening banks, which
+        // would otherwise livelock against refresh's all-banks-
+        // precharged requirement (REF then never issues and demand
+        // traffic starves behind the pending refresh).
+        let copy_paused = {
+            let c = &self.chans[ch];
+            let rank_of = |r: usize| c.refresh_pending.get(r).copied().unwrap_or(false);
+            c.active_copy.as_ref().map(|op| rank_of(op.req.src.rank)).unwrap_or(false)
+                || c.pending_cmd.map(|cmd| rank_of(cmd.rank())).unwrap_or(false)
+        };
+        self.activate_next_copy(ch);
+        if !copy_paused && self.chans[ch].pending_cmd.is_none() {
+            if let Some(mut op) = self.chans[ch].active_copy.take() {
+                match op.next_command(&self.dev) {
+                    Some(cmd) => {
+                        self.chans[ch].pending_cmd = Some(cmd);
+                        self.chans[ch].active_copy = Some(op);
+                    }
+                    None => {
+                        // Sequence complete; completion at last step end.
+                        let done_at = op.last_done.max(now);
+                        self.stats.sum_copy_latency += done_at - op.req.arrive;
+                        self.inflight.push((
+                            done_at,
+                            Event::CopyDone(Completion {
+                                id: op.req.id,
+                                core: op.req.core,
+                                at: done_at,
+                                was_copy: true,
+                            }),
+                        ));
+                    }
+                }
+            }
+        }
+        if copy_paused {
+            // Let the refresh machinery close the copy's banks; the
+            // copy's (idempotent) row sequence restarts afterwards.
+            self.generate_memcpy_reads(ch);
+            return self.schedule_requests(ch);
+        }
+        if let Some(cmd) = self.chans[ch].pending_cmd {
+            match self.dev.earliest(ch, cmd, now) {
+                Ok(e) if e <= now => {
+                    let issued = self.dev.issue(ch, cmd, now)?;
+                    if let Some(op) = self.chans[ch].active_copy.as_mut() {
+                        op.on_issued(issued.done_at);
+                    }
+                    self.chans[ch].pending_cmd = None;
+                    return Ok(());
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    // Structurally blocked. Two causes:
+                    // (a) normal traffic re-opened the bank after the
+                    //     copy's precharge phase -> close it;
+                    // (b) a refresh-forced precharge wiped the latched
+                    //     state a later step depended on -> restart the
+                    //     row's (idempotent) sequence.
+                    let mut recovered = false;
+                    if let Some(bank) = cmd.bank() {
+                        let rank = cmd.rank();
+                        if !self.dev.bank(ch, rank, bank).all_precharged() {
+                            recovered = true;
+                            let pre = Command::Pre { rank, bank };
+                            if let Ok(e) = self.dev.earliest(ch, pre, now) {
+                                if e <= now {
+                                    self.dev.issue(ch, pre, now)?;
+                                    return Ok(());
+                                }
+                            }
+                        }
+                    }
+                    if !recovered {
+                        if let Some(op) = self.chans[ch].active_copy.as_mut() {
+                            op.restart_row();
+                        }
+                        self.chans[ch].pending_cmd = None;
+                    }
+                }
+            }
+            // Copy command not ready; fall through so other banks can
+            // still be served (LISA keeps the channel free!).
+        }
+
+        // 3. Memcpy read generation (reads go through the normal queue).
+        self.generate_memcpy_reads(ch);
+
+        // 4. Normal FR-FCFS scheduling.
+        self.schedule_requests(ch)
+    }
+
+    fn activate_next_copy(&mut self, ch: usize) {
+        let c = &mut self.chans[ch];
+        if c.active_copy.is_some() || c.active_memcpy.is_some() {
+            return;
+        }
+        let Some(req) = c.copy_q.pop_front() else {
+            return;
+        };
+        if req.mechanism == CopyMechanism::MemcpyChannel {
+            c.active_memcpy = Some(MemcpyState {
+                req,
+                row_idx: 0,
+                reads_issued: 0,
+                writes_done: 0,
+            });
+        } else {
+            c.active_copy = Some(CopyOp::new(req, &self.cfg.dram));
+        }
+    }
+
+    fn generate_memcpy_reads(&mut self, ch: usize) {
+        let cols = self.cfg.dram.columns;
+        let c = &mut self.chans[ch];
+        let Some(m) = c.active_memcpy.as_mut() else {
+            return;
+        };
+        while m.reads_issued < cols && c.read_q.len() < READ_Q_CAP {
+            let mut a = m.req.src;
+            a.row += m.row_idx;
+            a.col = m.reads_issued;
+            c.read_q.push_back(MemRequest {
+                id: m.req.id,
+                core: m.req.core,
+                addr: a,
+                is_write: false,
+                arrive: self.now,
+                done: None,
+                copy_id: Some(m.req.id),
+            });
+            m.reads_issued += 1;
+        }
+    }
+
+    /// FR-FCFS: row hits first, then oldest-first; writes drain in
+    /// batches between read bursts.
+    fn schedule_requests(&mut self, ch: usize) -> Result<()> {
+        let now = self.now;
+        // Hysteretic write drain.
+        {
+            let c = &mut self.chans[ch];
+            if c.write_q.len() >= DRAIN_HI {
+                c.drain_mode = true;
+            }
+            if c.write_q.len() <= DRAIN_LO {
+                c.drain_mode = false;
+            }
+            if c.read_q.is_empty() && !c.write_q.is_empty() {
+                c.drain_mode = true;
+            }
+        }
+        let serve_writes = self.chans[ch].drain_mode;
+
+        if let Some((qi, cmd)) = self.pick_request(ch, serve_writes, now) {
+            self.issue_for_request(ch, serve_writes, qi, cmd)?;
+            return Ok(());
+        }
+        // Nothing issuable in the preferred queue: try the other one.
+        if let Some((qi, cmd)) = self.pick_request(ch, !serve_writes, now) {
+            self.issue_for_request(ch, !serve_writes, qi, cmd)?;
+        }
+        Ok(())
+    }
+
+    /// Find the first schedulable (queue index, command) pair under
+    /// FR-FCFS: pass 1 row hits, pass 2 oldest-first preparation.
+    fn pick_request(&self, ch: usize, writes: bool, now: u64) -> Option<(usize, Command)> {
+        let c = &self.chans[ch];
+        let q: &VecDeque<MemRequest> = if writes { &c.write_q } else { &c.read_q };
+        if q.is_empty() {
+            return None;
+        }
+        // Cheap per-pass gating (hot path): the channel data bus is a
+        // global constraint — if it is not ready, no RD/WR can issue
+        // this cycle and pass 1 can be skipped entirely.
+        let chan_dev = &self.dev.channels[ch];
+        let bus_ready_rd = chan_dev.next_rd <= now;
+        let bus_ready_wr = chan_dev.next_wr <= now;
+
+        // Pass 1: row hits ready to go.
+        if bus_ready_rd || bus_ready_wr {
+            for (qi, req) in q.iter().enumerate() {
+                let a = &req.addr;
+                let bank = self.dev.bank(ch, a.rank, a.bank);
+                // Fast rejects before the full timing check.
+                if bank.next_rdwr > now || bank.busy_until > now {
+                    continue;
+                }
+                let w = writes || req.is_write;
+                if (w && !bus_ready_wr) || (!w && !bus_ready_rd) {
+                    continue;
+                }
+                if bank.open_row() == Some(a.row) {
+                    let cmd = if w {
+                        Command::Wr { rank: a.rank, bank: a.bank, col: a.col }
+                    } else {
+                        Command::Rd { rank: a.rank, bank: a.bank, col: a.col }
+                    };
+                    if let Ok(e) = self.dev.earliest(ch, cmd, now) {
+                        if e <= now {
+                            return Some((qi, cmd));
+                        }
+                    }
+                }
+            }
+        }
+        // Banks owned by the active copy: don't open new rows there,
+        // or the copy never makes progress (livelock). Other banks
+        // keep serving — LISA's bank-level parallelism is preserved.
+        let copy_rank = c.active_copy.as_ref().map(|op| op.req.src.rank);
+        let copy_banks: [Option<usize>; 3] = c
+            .active_copy
+            .as_ref()
+            .map(|op| op.banks(&self.cfg.dram))
+            .unwrap_or([None; 3]);
+        // Pass 2: oldest-first, prepare the row (PRE or ACT).
+        for (qi, req) in q.iter().enumerate() {
+            let a = &req.addr;
+            // Don't prepare rows for ranks with refresh pending.
+            if c.refresh_pending[a.rank] {
+                continue;
+            }
+            if copy_rank == Some(a.rank) && copy_banks.contains(&Some(a.bank)) {
+                continue;
+            }
+            let bank = self.dev.bank(ch, a.rank, a.bank);
+            // Fast reject: a busy bank can take neither ACT nor PRE.
+            if bank.busy_until > now {
+                continue;
+            }
+            if bank.open_row() == Some(a.row) {
+                continue; // hit not ready yet (bus or tRCD); keep order
+            }
+            let cmd = if bank.all_precharged() {
+                if bank.next_act > now {
+                    continue;
+                }
+                Command::Act { rank: a.rank, bank: a.bank, row: a.row }
+            } else {
+                if bank.next_pre > now {
+                    continue;
+                }
+                Command::Pre { rank: a.rank, bank: a.bank }
+            };
+            if let Ok(e) = self.dev.earliest(ch, cmd, now) {
+                if e <= now {
+                    return Some((qi, cmd));
+                }
+            }
+        }
+        None
+    }
+
+    fn issue_for_request(
+        &mut self,
+        ch: usize,
+        writes: bool,
+        qi: usize,
+        cmd: Command,
+    ) -> Result<()> {
+        let now = self.now;
+        let issued = self.dev.issue(ch, cmd, now)?;
+        match cmd {
+            Command::Rd { .. } => {
+                self.stats.row_hits += 1;
+                let req = self.chans[ch].read_q.remove(qi).expect("read present");
+                let lat = issued.done_at - req.arrive;
+                if let Some(copy_id) = req.copy_id {
+                    let m = self.chans[ch].active_memcpy.as_ref().expect("memcpy");
+                    let _ = copy_id;
+                    self.inflight.push((
+                        issued.done_at,
+                        Event::MemcpyReadDone {
+                            ch,
+                            col: req.addr.col,
+                            row_idx: m.row_idx,
+                        },
+                    ));
+                } else {
+                    self.stats.sum_read_latency += lat;
+                    self.stats.read_latency.add(lat);
+                    self.stats.reads_done += 1;
+                    self.inflight.push((
+                        issued.done_at,
+                        Event::ReadDone(Completion {
+                            id: req.id,
+                            core: req.core,
+                            at: issued.done_at,
+                            was_copy: false,
+                        }),
+                    ));
+                }
+            }
+            Command::Wr { .. } => {
+                self.stats.row_hits += 1;
+                let q = if writes {
+                    &mut self.chans[ch].write_q
+                } else {
+                    &mut self.chans[ch].read_q
+                };
+                let req = q.remove(qi).expect("write present");
+                debug_assert!(req.is_write);
+                self.inflight.push((
+                    issued.done_at,
+                    Event::WriteDone { copy_id: req.copy_id, ch },
+                ));
+            }
+            Command::Act { .. } | Command::Pre { .. } => {
+                self.stats.row_misses += 1;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// All queues empty and nothing in flight?
+    pub fn idle(&self) -> bool {
+        self.inflight.is_empty()
+            && self.chans.iter().all(|c| {
+                c.read_q.is_empty()
+                    && c.write_q.is_empty()
+                    && c.copy_q.is_empty()
+                    && c.active_copy.is_none()
+                    && c.active_memcpy.is_none()
+                    && c.pending_cmd.is_none()
+            })
+    }
+
+    /// Total queued + inflight copies (for backpressure decisions).
+    pub fn copies_pending(&self, ch: usize) -> usize {
+        let c = &self.chans[ch];
+        c.copy_q.len()
+            + c.active_copy.is_some() as usize
+            + c.active_memcpy.is_some() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn ctrl(mut f: impl FnMut(&mut SimConfig)) -> Controller {
+        let mut cfg = SimConfig::default();
+        f(&mut cfg);
+        Controller::new(cfg)
+    }
+
+    fn run_until_idle(c: &mut Controller, max: u64) -> Vec<Completion> {
+        let mut out = vec![];
+        for _ in 0..max {
+            c.tick().unwrap();
+            out.extend(c.drain_completions());
+            if c.idle() {
+                break;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn single_read_completes_with_act_latency() {
+        let mut c = ctrl(|_| {});
+        assert!(c.enqueue_mem(1, 0, 0x10000, false));
+        let done = run_until_idle(&mut c, 10_000);
+        assert_eq!(done.len(), 1);
+        let t = &c.dev.timing;
+        // ACT + tRCD + tCL + tBL (plus a cycle or two of scheduling).
+        let expect = t.t_rcd + t.t_cl + t.t_bl;
+        assert!(done[0].at >= expect && done[0].at <= expect + 4,
+                "at={} expect~{}", done[0].at, expect);
+        assert_eq!(c.stats.reads_done, 1);
+    }
+
+    #[test]
+    fn row_hits_are_prioritized() {
+        let mut c = ctrl(|_| {});
+        // Two requests to the same row + one to a different row of the
+        // same bank, arriving together: the same-row pair must both be
+        // served before the conflicting one forces a PRE.
+        assert!(c.enqueue_mem(1, 0, 0x0, false)); // row R col 0
+        assert!(c.enqueue_mem(2, 0, 0x40000, false)); // same bank, diff row
+        assert!(c.enqueue_mem(3, 0, 0x40, false)); // row R col 1
+        let done = run_until_idle(&mut c, 100_000);
+        assert_eq!(done.len(), 3);
+        let pos =
+            |id: u64| done.iter().position(|c| c.id == id).unwrap();
+        assert!(pos(3) < pos(2), "row hit must bypass the row conflict");
+        assert!(c.stats.row_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn writes_drain_and_complete() {
+        let mut c = ctrl(|_| {});
+        for i in 0..30 {
+            assert!(c.enqueue_mem(i, 0, i * 64, true));
+        }
+        run_until_idle(&mut c, 100_000);
+        assert_eq!(c.stats.writes_done, 30);
+    }
+
+    #[test]
+    fn refresh_happens_periodically() {
+        let mut c = ctrl(|_| {});
+        let trefi = c.dev.timing.t_refi;
+        for _ in 0..(trefi * 3 + 100) {
+            c.tick().unwrap();
+        }
+        assert!(c.dev.stats.n_ref >= 2, "refreshes: {}", c.dev.stats.n_ref);
+    }
+
+    #[test]
+    fn lisa_risc_copy_through_controller_moves_tag() {
+        let mut c = ctrl(|cfg| {
+            cfg.lisa.risc = true;
+            cfg.copy_mechanism = CopyMechanism::LisaRisc;
+        });
+        let src = Address { channel: 0, rank: 0, bank: 0, row: 100, col: 0 };
+        let dst = Address { channel: 0, rank: 0, bank: 0, row: 5 * 512 + 7, col: 0 };
+        c.dev.set_row_tag(0, 0, 0, 100, 0xABCD);
+        c.enqueue_copy(CopyRequest {
+            id: 77,
+            core: 1,
+            src,
+            dst,
+            rows: 1,
+            mechanism: CopyMechanism::LisaRisc,
+            arrive: 0,
+        });
+        let done = run_until_idle(&mut c, 100_000);
+        assert_eq!(done.len(), 1);
+        assert!(done[0].was_copy);
+        assert_eq!(done[0].id, 77);
+        assert_eq!(c.dev.row_tag(0, 0, 0, dst.row), 0xABCD);
+        assert!(c.dev.stats.n_rbm_hops >= 5);
+    }
+
+    #[test]
+    fn memcpy_copy_through_controller_moves_tag() {
+        let mut c = ctrl(|_| {});
+        let src = Address { channel: 0, rank: 0, bank: 0, row: 100, col: 0 };
+        let dst = Address { channel: 0, rank: 0, bank: 1, row: 200, col: 0 };
+        c.dev.set_row_tag(0, 0, 0, 100, 0x1234);
+        c.enqueue_copy(CopyRequest {
+            id: 9,
+            core: 0,
+            src,
+            dst,
+            rows: 1,
+            mechanism: CopyMechanism::MemcpyChannel,
+            arrive: 0,
+        });
+        let done = run_until_idle(&mut c, 200_000);
+        assert_eq!(done.len(), 1, "copy should complete");
+        assert_eq!(c.dev.row_tag(0, 0, 1, 200), 0x1234);
+        // 128 reads + 128 writes crossed the channel.
+        assert_eq!(c.dev.stats.n_rd, 128);
+        assert_eq!(c.dev.stats.n_wr, 128);
+    }
+
+    #[test]
+    fn reads_proceed_during_lisa_copy_on_other_bank() {
+        // LISA's bank-level parallelism claim: a LISA-RISC copy in bank
+        // 0 must not block reads to bank 1 (unlike RC-InterSA, whose
+        // Transfer occupies the internal/IO bus).
+        let mut c = ctrl(|cfg| {
+            cfg.lisa.risc = true;
+        });
+        let src = Address { channel: 0, rank: 0, bank: 0, row: 100, col: 0 };
+        let dst = Address { channel: 0, rank: 0, bank: 0, row: 15 * 512, col: 0 };
+        c.enqueue_copy(CopyRequest {
+            id: 1,
+            core: 0,
+            src,
+            dst,
+            rows: 1,
+            mechanism: CopyMechanism::LisaRisc,
+            arrive: 0,
+        });
+        // Read to bank 1 (address 0x2000 has bank bits -> bank 1).
+        assert!(c.enqueue_mem_mapped(
+            2,
+            0,
+            Address { channel: 0, rank: 0, bank: 1, row: 40, col: 0 },
+            false
+        ));
+        let done = run_until_idle(&mut c, 100_000);
+        let read_done = done.iter().find(|c| c.id == 2).unwrap().at;
+        let copy_done = done.iter().find(|c| c.id == 1).unwrap().at;
+        assert!(
+            read_done < copy_done,
+            "read {read_done} should finish before copy {copy_done}"
+        );
+        let t = &c.dev.timing;
+        assert!(read_done <= t.t_rcd + t.t_cl + t.t_bl + 8);
+    }
+
+    #[test]
+    fn villa_caches_hot_row_and_serves_fast() {
+        let mut c = ctrl(|cfg| {
+            cfg.lisa.villa = true;
+            cfg.lisa.risc = true;
+            cfg.lisa.villa_epoch_cycles = 2000;
+        });
+        // Hammer one row; after an epoch it should be cached.
+        let addr = Address { channel: 0, rank: 0, bank: 0, row: 1000, col: 0 };
+        let mut id = 0;
+        for round in 0..60 {
+            id += 1;
+            c.enqueue_mem_mapped(id, 0, addr, false);
+            for _ in 0..100 {
+                c.tick().unwrap();
+            }
+            c.drain_completions();
+            let _ = round;
+        }
+        let v = c.villa.as_ref().unwrap();
+        assert!(v.stats.fills >= 1, "hot row never cached");
+        assert!(v.stats.hits >= 1, "cached row never hit");
+        assert!(c.dev.stats.n_act_fast >= 1, "no fast-subarray activation");
+    }
+}

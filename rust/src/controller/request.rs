@@ -1,0 +1,64 @@
+//! Memory controller request types.
+
+use crate::config::CopyMechanism;
+use crate::dram::geometry::Address;
+
+/// A single cache-line read or write.
+#[derive(Debug, Clone)]
+pub struct MemRequest {
+    pub id: u64,
+    pub core: usize,
+    pub addr: Address,
+    pub is_write: bool,
+    /// DRAM cycle the request entered the controller.
+    pub arrive: u64,
+    /// Set when the data burst completes.
+    pub done: Option<u64>,
+    /// When this request is internal traffic of a memcpy-over-channel
+    /// copy operation, the id of that copy.
+    pub copy_id: Option<u64>,
+}
+
+/// A bulk row-to-row copy (memcpy/memmove of one or more 8 KB rows).
+#[derive(Debug, Clone)]
+pub struct CopyRequest {
+    pub id: u64,
+    pub core: usize,
+    /// Source row (col field ignored).
+    pub src: Address,
+    /// Destination row.
+    pub dst: Address,
+    /// Number of consecutive rows to copy.
+    pub rows: usize,
+    pub mechanism: CopyMechanism,
+    pub arrive: u64,
+}
+
+/// Completion record handed back to the CPU model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    pub id: u64,
+    pub core: usize,
+    pub at: u64,
+    pub was_copy: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = MemRequest {
+            id: 1,
+            core: 0,
+            addr: Address { channel: 0, rank: 0, bank: 2, row: 77, col: 3 },
+            is_write: false,
+            arrive: 100,
+            done: None,
+            copy_id: None,
+        };
+        assert!(r.done.is_none());
+        assert_eq!(r.addr.bank, 2);
+    }
+}

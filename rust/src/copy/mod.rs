@@ -1,0 +1,589 @@
+//! Bulk-copy engines: every mechanism in Table 1 / Fig. 2 of the paper.
+//!
+//! * `memcpy` — baseline: lines cross the channel twice (RD burst into
+//!   the CPU, WR burst back). Expanded by the controller into real
+//!   RD/WR requests; modeled here only for isolated-latency studies.
+//! * RowClone intra-subarray (`rc-intra`) — ACT, ACT_COPY, PRE.
+//! * RowClone inter-bank (`rc-bank`) — pipelined serial mode over the
+//!   internal 64-bit bus.
+//! * RowClone inter-subarray (`rc-inter`) — two inter-bank legs via a
+//!   temporary bank (the state of the art the paper improves on).
+//! * LISA-RISC (`lisa-risc`) — ACT(src), RBM across hops, ACT_STORE,
+//!   PRE; latency grows linearly with hop count (paper §3.1.1).
+//!
+//! `CopyOp` is the controller-side state machine that emits the
+//! command sequence; `isolated_copy` drives a fresh device directly to
+//! measure a mechanism's intrinsic latency/energy (Table 1 numbers).
+
+use anyhow::Result;
+
+use crate::config::{Calibration, CopyMechanism, DramConfig, LisaConfig};
+use crate::controller::request::CopyRequest;
+use crate::dram::bank::DramDevice;
+use crate::dram::command::Command;
+use crate::dram::geometry::Address;
+use crate::dram::timing::{SpeedBin, Timing};
+
+/// Reserved row used as the bounce buffer for RC-InterSA two-leg
+/// copies (last row of the temp bank).
+fn temp_row(cfg: &DramConfig) -> usize {
+    cfg.rows_per_bank() - 1
+}
+
+/// The per-row command sequence progress for one in-DRAM copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Ensure the involved banks are precharged.
+    PreSrcBank,
+    PreDstBank,
+    ActSrc,
+    // RC-intra
+    ActCopyDst,
+    // LISA-RISC
+    Rbm,
+    ActStoreDst,
+    // Inter-bank legs
+    ActTmp,
+    TransferToTmp,
+    PreSrcForLeg2,
+    ActDstLeg2,
+    TransferToDst,
+    ActDstDirect,
+    TransferDirect,
+    // Closing
+    PreFinal,
+    PreFinalDst,
+    Done,
+}
+
+/// State machine for one (possibly multi-row) in-DRAM copy request.
+/// The controller asks for `next_command` whenever it can schedule,
+/// and reports issues back via `on_issued`.
+#[derive(Debug, Clone)]
+pub struct CopyOp {
+    pub req: CopyRequest,
+    /// Effective mechanism for this src/dst pair (falls back when the
+    /// requested mechanism cannot serve the pair's geometry).
+    pub mechanism: CopyMechanism,
+    row_idx: usize,
+    phase: Phase,
+    /// Completion cycle of the last issued step.
+    pub last_done: u64,
+    pub done: bool,
+}
+
+/// Pick the mechanism actually usable for a src/dst pair: LISA-RISC
+/// only links subarrays within a bank; RowClone intra needs the same
+/// subarray, etc. (The paper's controller does the same dispatch.)
+pub fn effective_mechanism(
+    req_mech: CopyMechanism,
+    src: &Address,
+    dst: &Address,
+    cfg: &DramConfig,
+) -> CopyMechanism {
+    use CopyMechanism::*;
+    if req_mech == MemcpyChannel {
+        return MemcpyChannel;
+    }
+    if src.same_subarray(dst, cfg) {
+        // Same subarray: every in-DRAM mechanism degenerates to
+        // RowClone intra-subarray (it is also the fastest).
+        return RowCloneIntraSa;
+    }
+    if src.same_bank(dst) {
+        return match req_mech {
+            LisaRisc => LisaRisc,
+            RowCloneIntraSa | RowCloneInterSa => RowCloneInterSa,
+            RowCloneInterBank => RowCloneInterSa,
+            MemcpyChannel => unreachable!(),
+        };
+    }
+    // Different banks: direct inter-bank transfer (one leg).
+    RowCloneInterBank
+}
+
+impl CopyOp {
+    pub fn new(req: CopyRequest, cfg: &DramConfig) -> Self {
+        let mechanism = effective_mechanism(req.mechanism, &req.src, &req.dst, cfg);
+        Self {
+            req,
+            mechanism,
+            row_idx: 0,
+            phase: Phase::PreSrcBank,
+            last_done: 0,
+            done: false,
+        }
+    }
+
+    fn src(&self) -> Address {
+        let mut a = self.req.src;
+        a.row += self.row_idx;
+        a
+    }
+
+    fn dst(&self) -> Address {
+        let mut a = self.req.dst;
+        a.row += self.row_idx;
+        a
+    }
+
+    fn tmp_bank(&self, cfg: &DramConfig) -> usize {
+        (self.src().bank + 1) % cfg.banks
+    }
+
+    /// The next command to issue, or None when this row's sequence is
+    /// complete / the op is done. Pure function of current phase +
+    /// device state (skips unnecessary precharges).
+    pub fn next_command(&mut self, dev: &DramDevice) -> Option<Command> {
+        use CopyMechanism::*;
+        if self.done {
+            return None;
+        }
+        let cfg = &dev.cfg;
+        let mut src = self.src();
+        let mut dst = self.dst();
+        let (ch, rank) = (src.channel, src.rank);
+        debug_assert!(self.mechanism != MemcpyChannel,
+                      "memcpy is expanded by the controller");
+        let _ = ch;
+        loop {
+            match self.phase {
+                Phase::PreSrcBank => {
+                    if !dev.bank(ch, rank, src.bank).all_precharged() {
+                        return Some(Command::Pre { rank, bank: src.bank });
+                    }
+                    self.phase = Phase::PreDstBank;
+                }
+                Phase::PreDstBank => {
+                    let needs = !src.same_bank(&dst)
+                        || self.mechanism == RowCloneInterSa;
+                    let dst_bank = if self.mechanism == RowCloneInterSa {
+                        self.tmp_bank(cfg)
+                    } else {
+                        dst.bank
+                    };
+                    if needs && !dev.bank(ch, rank, dst_bank).all_precharged() {
+                        return Some(Command::Pre { rank, bank: dst_bank });
+                    }
+                    self.phase = Phase::ActSrc;
+                }
+                Phase::ActSrc => {
+                    self.phase = match self.mechanism {
+                        RowCloneIntraSa => Phase::ActCopyDst,
+                        LisaRisc => Phase::Rbm,
+                        RowCloneInterSa => Phase::ActTmp,
+                        RowCloneInterBank => Phase::ActDstDirect,
+                        MemcpyChannel => unreachable!(),
+                    };
+                    return Some(Command::Act { rank, bank: src.bank, row: src.row });
+                }
+                Phase::ActCopyDst => {
+                    self.phase = Phase::PreFinal;
+                    return Some(Command::ActCopy { rank, bank: dst.bank, row: dst.row });
+                }
+                Phase::Rbm => {
+                    self.phase = Phase::ActStoreDst;
+                    return Some(Command::Rbm {
+                        rank,
+                        bank: src.bank,
+                        from_sa: src.subarray(cfg),
+                        to_sa: dst.subarray(cfg),
+                    });
+                }
+                Phase::ActStoreDst => {
+                    self.phase = Phase::PreFinal;
+                    return Some(Command::ActStore { rank, bank: dst.bank, row: dst.row });
+                }
+                Phase::ActTmp => {
+                    self.phase = Phase::TransferToTmp;
+                    return Some(Command::Act {
+                        rank,
+                        bank: self.tmp_bank(cfg),
+                        row: temp_row(cfg),
+                    });
+                }
+                Phase::TransferToTmp => {
+                    self.phase = Phase::PreSrcForLeg2;
+                    return Some(Command::Transfer {
+                        rank,
+                        src_bank: src.bank,
+                        dst_bank: self.tmp_bank(cfg),
+                        cols: cfg.columns,
+                    });
+                }
+                Phase::PreSrcForLeg2 => {
+                    self.phase = Phase::ActDstLeg2;
+                    return Some(Command::Pre { rank, bank: src.bank });
+                }
+                Phase::ActDstLeg2 => {
+                    self.phase = Phase::TransferToDst;
+                    return Some(Command::Act { rank, bank: dst.bank, row: dst.row });
+                }
+                Phase::TransferToDst => {
+                    self.phase = Phase::PreFinal;
+                    return Some(Command::Transfer {
+                        rank,
+                        src_bank: self.tmp_bank(cfg),
+                        dst_bank: dst.bank,
+                        cols: cfg.columns,
+                    });
+                }
+                Phase::ActDstDirect => {
+                    self.phase = Phase::TransferDirect;
+                    return Some(Command::Act { rank, bank: dst.bank, row: dst.row });
+                }
+                Phase::TransferDirect => {
+                    self.phase = Phase::PreFinal;
+                    return Some(Command::Transfer {
+                        rank,
+                        src_bank: src.bank,
+                        dst_bank: dst.bank,
+                        cols: cfg.columns,
+                    });
+                }
+                Phase::PreFinal => {
+                    if !dev.bank(ch, rank, src.bank).all_precharged() {
+                        self.phase = Phase::PreFinalDst;
+                        return Some(Command::Pre { rank, bank: src.bank });
+                    }
+                    self.phase = Phase::PreFinalDst;
+                }
+                Phase::PreFinalDst => {
+                    // Close whichever other banks the mechanism touched.
+                    let mut banks = vec![];
+                    if !src.same_bank(&dst) {
+                        banks.push(dst.bank);
+                    }
+                    if self.mechanism == RowCloneInterSa {
+                        banks.push(self.tmp_bank(cfg));
+                    }
+                    for b in banks {
+                        if !dev.bank(ch, rank, b).all_precharged() {
+                            return Some(Command::Pre { rank, bank: b });
+                        }
+                    }
+                    self.phase = Phase::Done;
+                }
+                Phase::Done => {
+                    self.row_idx += 1;
+                    if self.row_idx >= self.req.rows {
+                        self.done = true;
+                        return None;
+                    }
+                    self.phase = Phase::PreSrcBank;
+                    // Re-derive the per-row addresses for the next row.
+                    src = self.src();
+                    dst = self.dst();
+                }
+            }
+        }
+    }
+
+    /// Record an issued step's completion time.
+    pub fn on_issued(&mut self, done_at: u64) {
+        self.last_done = self.last_done.max(done_at);
+    }
+
+    /// Every bank this copy's sequence touches (the controller keeps
+    /// normal traffic from re-opening rows there while the copy runs;
+    /// all OTHER banks keep serving requests — LISA's bank-level
+    /// parallelism claim).
+    pub fn banks(&self, cfg: &DramConfig) -> [Option<usize>; 3] {
+        let src = self.req.src.bank;
+        let dst = self.req.dst.bank;
+        let mut out = [Some(src), None, None];
+        if dst != src {
+            out[1] = Some(dst);
+        }
+        if self.mechanism == CopyMechanism::RowCloneInterSa {
+            out[2] = Some(self.tmp_bank(cfg));
+        }
+        out
+    }
+
+    /// Restart the current row's sequence from the beginning. Used by
+    /// the controller when an external event (a refresh-forced
+    /// precharge) invalidated the in-flight analog state (e.g. wiped
+    /// the latched row buffers an ACT_STORE depended on). The sequence
+    /// is idempotent per row, so re-running it is always safe.
+    pub fn restart_row(&mut self) {
+        if !self.done {
+            self.phase = Phase::PreSrcBank;
+        }
+    }
+}
+
+/// Result of an isolated copy measurement.
+#[derive(Debug, Clone)]
+pub struct IsolatedCopy {
+    pub mechanism: CopyMechanism,
+    pub hops: usize,
+    pub latency_ns: f64,
+    /// Command counts incurred (for the energy model).
+    pub stats: crate::dram::bank::CommandStats,
+}
+
+/// Drive a fresh device through one 8 KB row copy with no competing
+/// traffic and report its intrinsic latency (the Table 1 experiment).
+/// `hops` picks the subarray distance for inter-subarray mechanisms.
+pub fn isolated_copy(
+    mechanism: CopyMechanism,
+    hops: usize,
+    speed: SpeedBin,
+    cal: &Calibration,
+) -> Result<IsolatedCopy> {
+    let cfg = DramConfig::default();
+    let mut lisa = LisaConfig::default();
+    lisa.risc = true;
+    let timing = Timing::new(speed, cal);
+    let mut dev = DramDevice::new(cfg.clone(), lisa, timing);
+
+    let src = Address { channel: 0, rank: 0, bank: 0, row: 0, col: 0 };
+    // hops == 0 means an intra-subarray copy (another row of the same
+    // subarray); the inter-bank mechanism needs a cross-bank pair.
+    let dst = if mechanism == CopyMechanism::RowCloneInterBank {
+        Address { channel: 0, rank: 0, bank: 1, row: 0, col: 0 }
+    } else {
+        Address {
+            channel: 0,
+            rank: 0,
+            bank: 0,
+            row: if hops == 0 { 1 } else { hops * cfg.rows_per_subarray },
+            col: 0,
+        }
+    };
+
+    let latency_cycles = match mechanism {
+        CopyMechanism::MemcpyChannel => isolated_memcpy(&mut dev, &src, &dst)?,
+        _ => {
+            let req = CopyRequest {
+                id: 0,
+                core: 0,
+                src,
+                dst,
+                rows: 1,
+                mechanism,
+                arrive: 0,
+            };
+            let mut op = CopyOp::new(req, &cfg);
+            let mut now = 0u64;
+            let mut last_done = 0u64;
+            while let Some(cmd) = op.next_command(&dev) {
+                let at = dev.earliest(0, cmd, now)?;
+                let issued = dev.issue(0, cmd, at)?;
+                now = at + 1;
+                last_done = last_done.max(issued.done_at);
+                op.on_issued(issued.done_at);
+            }
+            last_done
+        }
+    };
+
+    Ok(IsolatedCopy {
+        mechanism,
+        hops,
+        latency_ns: dev.timing.ns(latency_cycles),
+        stats: dev.stats.clone(),
+    })
+}
+
+/// Isolated memcpy over the channel: ACT src, stream all 128 line
+/// reads, ACT dst, stream all 128 writes (store buffer drains after
+/// the read phase), PRE. Data crosses the pin-limited channel twice.
+fn isolated_memcpy(dev: &mut DramDevice, src: &Address, dst: &Address) -> Result<u64> {
+    let cols = dev.cfg.columns;
+    let mut now = 0u64;
+
+    let act = Command::Act { rank: src.rank, bank: src.bank, row: src.row };
+    let at = dev.earliest(0, act, now)?;
+    dev.issue(0, act, at)?;
+    now = at + 1;
+
+    let mut last_rd_done = 0;
+    for col in 0..cols {
+        let rd = Command::Rd { rank: src.rank, bank: src.bank, col };
+        let at = dev.earliest(0, rd, now)?;
+        let done = dev.issue(0, rd, at)?.done_at;
+        last_rd_done = done;
+        now = at + 1;
+    }
+    // Source can close while writes stream (different row).
+    let pre = Command::Pre { rank: src.rank, bank: src.bank };
+    let at = dev.earliest(0, pre, now)?;
+    dev.issue(0, pre, at)?;
+
+    // Destination row activation (same bank must wait for the PRE).
+    let act2 = Command::Act { rank: dst.rank, bank: dst.bank, row: dst.row };
+    let at = dev.earliest(0, act2, now)?;
+    dev.issue(0, act2, at)?;
+    now = at + 1;
+
+    let mut last_done = last_rd_done;
+    for col in 0..cols {
+        let wr = Command::Wr { rank: dst.rank, bank: dst.bank, col };
+        let at = dev.earliest(0, wr, now)?;
+        let done = dev.issue(0, wr, at)?.done_at;
+        last_done = last_done.max(done);
+        now = at + 1;
+    }
+    let tag = dev.row_tag(0, src.rank, src.bank, src.row);
+    dev.set_row_tag(0, dst.rank, dst.bank, dst.row, tag);
+
+    let pre2 = Command::Pre { rank: dst.rank, bank: dst.bank };
+    let at = dev.earliest(0, pre2, now)?;
+    let done = dev.issue(0, pre2, at)?.done_at;
+    Ok(done.max(last_done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Calibration;
+
+    fn run(mech: CopyMechanism, hops: usize) -> IsolatedCopy {
+        isolated_copy(mech, hops, SpeedBin::Ddr3_1600, &Calibration::default()).unwrap()
+    }
+
+    #[test]
+    fn rc_intra_matches_paper_anchor() {
+        // Table 1: RC-IntraSA = 83.75 ns (ACT + ACT + PRE).
+        let r = run(CopyMechanism::RowCloneIntraSa, 0);
+        assert!((r.latency_ns - 83.75).abs() < 2.0, "{}", r.latency_ns);
+    }
+
+    #[test]
+    fn lisa_risc_linear_in_hops() {
+        let r1 = run(CopyMechanism::LisaRisc, 1);
+        let r7 = run(CopyMechanism::LisaRisc, 7);
+        let r15 = run(CopyMechanism::LisaRisc, 15);
+        assert!(r1.latency_ns < r7.latency_ns && r7.latency_ns < r15.latency_ns);
+        // Slope ~ tRBM per hop (paper: ~8 ns).
+        let slope = (r15.latency_ns - r1.latency_ns) / 14.0;
+        assert!((slope - 8.75).abs() < 1.5, "slope {slope}");
+        // Must beat the paper's reported 148.5 ns fixed cost.
+        assert!(r1.latency_ns < 148.5, "1-hop {}", r1.latency_ns);
+    }
+
+    #[test]
+    fn mechanism_ordering_matches_paper() {
+        // Fig. 2: memcpy ~ RC-InterSA >> RC-Bank >> LISA (9x+) > RC-Intra.
+        let memcpy = run(CopyMechanism::MemcpyChannel, 7);
+        let inter = run(CopyMechanism::RowCloneInterSa, 7);
+        let bank = run(CopyMechanism::RowCloneInterBank, 7);
+        let lisa = run(CopyMechanism::LisaRisc, 7);
+        let intra = run(CopyMechanism::RowCloneIntraSa, 0);
+        assert!(memcpy.latency_ns > 1200.0, "memcpy {}", memcpy.latency_ns);
+        assert!(inter.latency_ns > 1200.0, "rc-inter {}", inter.latency_ns);
+        assert!(bank.latency_ns > 600.0 && bank.latency_ns < 800.0,
+                "rc-bank {}", bank.latency_ns);
+        assert!(lisa.latency_ns < bank.latency_ns / 3.0);
+        assert!(intra.latency_ns < lisa.latency_ns);
+        // LISA beats RC-InterSA by ~9x (paper's headline).
+        let speedup = inter.latency_ns / lisa.latency_ns;
+        assert!(speedup > 6.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn copy_moves_data_tags() {
+        // Verified per mechanism by driving the op directly.
+        for (mech, hops) in [
+            (CopyMechanism::RowCloneIntraSa, 0usize),
+            (CopyMechanism::LisaRisc, 3),
+            (CopyMechanism::RowCloneInterSa, 5),
+        ] {
+            let cfg = DramConfig::default();
+            let mut lisa = LisaConfig::default();
+            lisa.risc = true;
+            let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+            let mut dev = DramDevice::new(cfg.clone(), lisa, timing);
+            let src = Address { channel: 0, rank: 0, bank: 0, row: 7, col: 0 };
+            let dst = Address {
+                channel: 0,
+                rank: 0,
+                bank: 0,
+                row: hops * cfg.rows_per_subarray + 9,
+                col: 0,
+            };
+            dev.set_row_tag(0, 0, 0, src.row, 0xCAFE + hops as u64);
+            let req = CopyRequest {
+                id: 0, core: 0, src, dst, rows: 1, mechanism: mech, arrive: 0,
+            };
+            let mut op = CopyOp::new(req, &cfg);
+            let mut now = 0;
+            while let Some(cmd) = op.next_command(&dev) {
+                let at = dev.earliest(0, cmd, now).unwrap();
+                dev.issue(0, cmd, at).unwrap();
+                now = at + 1;
+            }
+            assert_eq!(
+                dev.row_tag(0, 0, 0, dst.row),
+                0xCAFE + hops as u64,
+                "{mech:?} failed to move data"
+            );
+        }
+    }
+
+    #[test]
+    fn effective_mechanism_dispatch() {
+        let cfg = DramConfig::default();
+        let a = |row: usize, bank: usize| Address {
+            channel: 0, rank: 0, bank, row, col: 0,
+        };
+        use CopyMechanism::*;
+        // Same subarray: always degenerates to intra.
+        assert_eq!(
+            effective_mechanism(LisaRisc, &a(0, 0), &a(5, 0), &cfg),
+            RowCloneIntraSa
+        );
+        // Same bank, different subarray.
+        assert_eq!(
+            effective_mechanism(LisaRisc, &a(0, 0), &a(600, 0), &cfg),
+            LisaRisc
+        );
+        assert_eq!(
+            effective_mechanism(RowCloneInterSa, &a(0, 0), &a(600, 0), &cfg),
+            RowCloneInterSa
+        );
+        // Cross bank.
+        assert_eq!(
+            effective_mechanism(LisaRisc, &a(0, 0), &a(0, 3), &cfg),
+            RowCloneInterBank
+        );
+        // memcpy never transforms.
+        assert_eq!(
+            effective_mechanism(MemcpyChannel, &a(0, 0), &a(600, 0), &cfg),
+            MemcpyChannel
+        );
+    }
+
+    #[test]
+    fn multi_row_copy_repeats_sequence() {
+        let cfg = DramConfig::default();
+        let mut lisa = LisaConfig::default();
+        lisa.risc = true;
+        let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+        let mut dev = DramDevice::new(cfg.clone(), lisa, timing);
+        for r in 0..4 {
+            dev.set_row_tag(0, 0, 0, r, 0x1000 + r as u64);
+        }
+        let req = CopyRequest {
+            id: 0,
+            core: 0,
+            src: Address { channel: 0, rank: 0, bank: 0, row: 0, col: 0 },
+            dst: Address { channel: 0, rank: 0, bank: 0, row: 2 * 512, col: 0 },
+            rows: 4,
+            mechanism: CopyMechanism::LisaRisc,
+            arrive: 0,
+        };
+        let mut op = CopyOp::new(req, &cfg);
+        let mut now = 0;
+        while let Some(cmd) = op.next_command(&dev) {
+            let at = dev.earliest(0, cmd, now).unwrap();
+            dev.issue(0, cmd, at).unwrap();
+            now = at + 1;
+        }
+        for r in 0..4 {
+            assert_eq!(dev.row_tag(0, 0, 0, 2 * 512 + r), 0x1000 + r as u64);
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Set-associative writeback caches and the three-level hierarchy
+//! (private L1/L2, shared LLC) in front of the memory controller.
+
+/// Result of a single-level cache access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheResult {
+    Hit,
+    /// Miss; if a dirty victim was evicted, its line address.
+    Miss { writeback: Option<u64> },
+}
+
+/// One set-associative cache level (64 B lines, LRU, writeback +
+/// write-allocate).
+#[derive(Debug, Clone)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    latency: u64,
+    /// tag | valid | dirty | lru packed per line.
+    tags: Vec<u64>,
+    valid: Vec<bool>,
+    dirty: Vec<bool>,
+    lru: Vec<u64>,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    pub fn new(size_kb: usize, ways: usize, latency: u64) -> Self {
+        let lines = (size_kb * 1024) / 64;
+        let sets = (lines / ways).max(1);
+        assert!(sets.is_power_of_two(), "cache sets must be a power of two");
+        let n = sets * ways;
+        Self {
+            sets,
+            ways,
+            latency,
+            tags: vec![0; n],
+            valid: vec![false; n],
+            dirty: vec![false; n],
+            lru: vec![0; n],
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    pub fn latency(&self) -> u64 {
+        self.latency
+    }
+
+    #[inline]
+    fn set_of(&self, line_addr: u64) -> usize {
+        (line_addr as usize) & (self.sets - 1)
+    }
+
+    /// Access a 64 B line (address pre-shifted: `addr >> 6`).
+    pub fn access(&mut self, line_addr: u64, is_write: bool) -> CacheResult {
+        self.tick += 1;
+        let set = self.set_of(line_addr);
+        let base = set * self.ways;
+        let tag = line_addr;
+        for w in 0..self.ways {
+            let i = base + w;
+            if self.valid[i] && self.tags[i] == tag {
+                self.lru[i] = self.tick;
+                self.dirty[i] |= is_write;
+                self.hits += 1;
+                return CacheResult::Hit;
+            }
+        }
+        self.misses += 1;
+        // Victim: invalid way first, else LRU.
+        let mut victim = base;
+        let mut best = u64::MAX;
+        for w in 0..self.ways {
+            let i = base + w;
+            if !self.valid[i] {
+                victim = i;
+                best = 0;
+                break;
+            }
+            if self.lru[i] < best {
+                best = self.lru[i];
+                victim = i;
+            }
+        }
+        let writeback = if self.valid[victim] && self.dirty[victim] {
+            self.writebacks += 1;
+            Some(self.tags[victim])
+        } else {
+            None
+        };
+        self.tags[victim] = tag;
+        self.valid[victim] = true;
+        self.dirty[victim] = is_write;
+        self.lru[victim] = self.tick;
+        CacheResult::Miss { writeback }
+    }
+
+    /// Invalidate a line if present (returns true if it was dirty).
+    pub fn invalidate(&mut self, line_addr: u64) -> bool {
+        let set = self.set_of(line_addr);
+        let base = set * self.ways;
+        for w in 0..self.ways {
+            let i = base + w;
+            if self.valid[i] && self.tags[i] == line_addr {
+                self.valid[i] = false;
+                return std::mem::take(&mut self.dirty[i]);
+            }
+        }
+        false
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+/// Outcome of a hierarchy access.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HierarchyAccess {
+    /// Total lookup latency in CPU cycles until the hit level responds
+    /// (for misses: latency until the memory request would be sent).
+    pub latency: u64,
+    /// True if the access must go to memory.
+    pub goes_to_memory: bool,
+    /// Dirty lines pushed out to memory (line addresses) — become
+    /// memory writes.
+    pub writebacks: Vec<u64>,
+}
+
+/// Private L1+L2 per core, shared LLC.
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub l1: Vec<Cache>,
+    pub l2: Vec<Cache>,
+    pub llc: Cache,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &crate::config::CpuConfig) -> Self {
+        Self {
+            l1: (0..cfg.cores)
+                .map(|_| Cache::new(cfg.l1_kb, cfg.l1_ways, cfg.l1_latency))
+                .collect(),
+            l2: (0..cfg.cores)
+                .map(|_| Cache::new(cfg.l2_kb, cfg.l2_ways, cfg.l2_latency))
+                .collect(),
+            llc: Cache::new(cfg.llc_kb, cfg.llc_ways, cfg.llc_latency),
+        }
+    }
+
+    /// Look up `addr` (byte address) for `core`. Fills happen on the
+    /// way back implicitly (this model installs on access).
+    pub fn access(&mut self, core: usize, addr: u64, is_write: bool) -> HierarchyAccess {
+        let line = addr >> 6;
+        let mut writebacks = Vec::new();
+        let mut latency = self.l1[core].latency();
+        match self.l1[core].access(line, is_write) {
+            CacheResult::Hit => {
+                return HierarchyAccess { latency, goes_to_memory: false, writebacks }
+            }
+            CacheResult::Miss { writeback } => {
+                // L1 victim writes back into L2.
+                if let Some(wb) = writeback {
+                    if let CacheResult::Miss { writeback: Some(wb2) } =
+                        self.l2[core].access(wb, true)
+                    {
+                        if let CacheResult::Miss { writeback: Some(wb3) } =
+                            self.llc.access(wb2, true)
+                        {
+                            writebacks.push(wb3 << 6);
+                        }
+                    }
+                }
+            }
+        }
+        latency += self.l2[core].latency();
+        match self.l2[core].access(line, is_write) {
+            CacheResult::Hit => {
+                return HierarchyAccess { latency, goes_to_memory: false, writebacks }
+            }
+            CacheResult::Miss { writeback } => {
+                if let Some(wb) = writeback {
+                    if let CacheResult::Miss { writeback: Some(wb2) } =
+                        self.llc.access(wb, true)
+                    {
+                        writebacks.push(wb2 << 6);
+                    }
+                }
+            }
+        }
+        latency += self.llc.latency();
+        match self.llc.access(line, is_write) {
+            CacheResult::Hit => HierarchyAccess { latency, goes_to_memory: false, writebacks },
+            CacheResult::Miss { writeback } => {
+                if let Some(wb) = writeback {
+                    writebacks.push(wb << 6);
+                }
+                HierarchyAccess { latency, goes_to_memory: true, writebacks }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CpuConfig;
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = Cache::new(32, 8, 4);
+        assert!(matches!(c.access(100, false), CacheResult::Miss { .. }));
+        assert_eq!(c.access(100, false), CacheResult::Hit);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = Cache::new(1, 2, 1);
+        // 1 KB, 2 ways -> 8 sets. Use same-set addresses: stride 8.
+        assert!(matches!(c.access(0, false), CacheResult::Miss { .. }));
+        assert!(matches!(c.access(8, false), CacheResult::Miss { .. }));
+        assert_eq!(c.access(0, false), CacheResult::Hit); // refresh 0
+        assert!(matches!(c.access(16, false), CacheResult::Miss { .. })); // evicts 8
+        assert_eq!(c.access(0, false), CacheResult::Hit);
+        assert!(matches!(c.access(8, false), CacheResult::Miss { .. }));
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = Cache::new(1, 2, 1);
+        c.access(0, true); // dirty
+        c.access(8, false);
+        // Touch 0 so 8 is LRU... actually evict 0 by keeping 8 fresh:
+        c.access(8, false);
+        if let CacheResult::Miss { writeback } = c.access(16, false) {
+            assert_eq!(writeback, Some(0));
+        } else {
+            panic!("expected miss");
+        }
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn invalidate_removes_line() {
+        let mut c = Cache::new(32, 8, 4);
+        c.access(5, true);
+        assert!(c.invalidate(5));
+        assert!(matches!(c.access(5, false), CacheResult::Miss { .. }));
+        assert!(!c.invalidate(999));
+    }
+
+    #[test]
+    fn hierarchy_filters_memory_traffic() {
+        let mut h = Hierarchy::new(&CpuConfig::default());
+        let a = h.access(0, 0x1000, false);
+        assert!(a.goes_to_memory);
+        let b = h.access(0, 0x1000, false);
+        assert!(!b.goes_to_memory);
+        assert_eq!(b.latency, 4); // L1 hit
+    }
+
+    #[test]
+    fn hierarchy_latency_accumulates_down_levels() {
+        let cfg = CpuConfig::default();
+        let mut h = Hierarchy::new(&cfg);
+        let a = h.access(0, 0x2000, false);
+        assert_eq!(a.latency, cfg.l1_latency + cfg.l2_latency + cfg.llc_latency);
+    }
+
+    #[test]
+    fn dirty_llc_eviction_reaches_memory() {
+        // Tiny LLC to force evictions.
+        let mut h = Hierarchy::new(&CpuConfig {
+            l1_kb: 1,
+            l1_ways: 2,
+            l2_kb: 1,
+            l2_ways: 2,
+            llc_kb: 1,
+            llc_ways: 2,
+            ..CpuConfig::default()
+        });
+        // Write enough distinct lines to force dirty L1 evictions to
+        // cascade all the way out of the LLC.
+        let mut wbs = 0;
+        for i in 0..256u64 {
+            wbs += h.access(0, i * 64, true).writebacks.len();
+        }
+        assert!(wbs > 0, "no writebacks reached memory");
+    }
+}

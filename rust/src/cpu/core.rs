@@ -1,0 +1,446 @@
+//! The per-core instruction-window model (Ramulator-style): a ROB of
+//! `rob_size` entries retires up to `issue_width` completed
+//! instructions per CPU cycle; memory instructions occupy their slot
+//! until the cache hierarchy (or DRAM) answers, which naturally models
+//! memory-level parallelism; `dependent` loads (pointer chasing)
+//! block further issue entirely. Bulk copies are synchronous
+//! (memcpy semantics): the core stops issuing until the copy
+//! completes.
+
+use std::collections::VecDeque;
+
+use crate::config::CpuConfig;
+use crate::controller::request::CopyRequest;
+use crate::controller::Controller;
+use crate::cpu::cache::Hierarchy;
+use crate::cpu::trace::{Trace, TraceCursor, TraceOp};
+
+/// Request ids are partitioned per core; writebacks use the write id
+/// space (no completion expected).
+fn id_base(core: usize) -> u64 {
+    (core as u64 + 1) << 32
+}
+
+/// A demand access headed to memory (cache lookup already done).
+#[derive(Debug, Clone, Copy)]
+struct Demand {
+    addr: u64,
+    is_write: bool,
+    dependent: bool,
+    latency: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Slot {
+    /// Ready to retire at the given CPU cycle.
+    ReadyAt(u64),
+    /// Waiting for a memory read to complete.
+    WaitMem(u64),
+}
+
+/// Execution state of one core.
+#[derive(Debug)]
+pub struct Core {
+    pub id: usize,
+    trace: Trace,
+    cursor: TraceCursor,
+    window: VecDeque<Slot>,
+    rob_size: usize,
+    issue_width: u64,
+    mshrs: usize,
+
+    /// Non-memory instructions still to issue before the current op's
+    /// action.
+    nonmem_left: u32,
+    cur_op: Option<TraceOp>,
+    /// Demand access that passed the cache lookup but was rejected by
+    /// the controller (queue full / MSHRs) and must be re-sent. The
+    /// cache lookup itself happens exactly ONCE per op — re-running it
+    /// would install the line on the first attempt and turn the retry
+    /// into a phantom hit.
+    pending_demand: Option<Demand>,
+    /// Dirty-eviction writebacks waiting for write-queue space. These
+    /// are not program-ordered; they drain lazily.
+    wb_queue: VecDeque<u64>,
+    outstanding: usize,
+    dep_block: Option<u64>,
+    wait_copy: Option<u64>,
+    next_id: u64,
+
+    /// Ops consumed from the trace (budget accounting).
+    pub mem_ops_done: u64,
+    pub copies_done: u64,
+    pub retired: u64,
+    pub cpu_cycles: u64,
+    /// Stop fetching new trace ops once the budget is consumed.
+    pub budget: u64,
+    fetch_stopped: bool,
+}
+
+impl Core {
+    pub fn new(id: usize, trace: Trace, cfg: &CpuConfig, budget: u64) -> Self {
+        Self {
+            id,
+            trace,
+            cursor: TraceCursor::new(),
+            window: VecDeque::with_capacity(cfg.rob_size),
+            rob_size: cfg.rob_size,
+            issue_width: cfg.issue_width,
+            mshrs: cfg.mshrs,
+            nonmem_left: 0,
+            cur_op: None,
+            pending_demand: None,
+            wb_queue: VecDeque::new(),
+            outstanding: 0,
+            dep_block: None,
+            wait_copy: None,
+            next_id: id_base(id),
+            mem_ops_done: 0,
+            copies_done: 0,
+            retired: 0,
+            cpu_cycles: 0,
+            budget,
+            fetch_stopped: false,
+        }
+    }
+
+    /// All work finished (budget consumed and pipeline drained)?
+    pub fn finished(&self) -> bool {
+        self.fetch_stopped
+            && self.window.is_empty()
+            && self.wait_copy.is_none()
+            && self.pending_demand.is_none()
+            && self.wb_queue.is_empty()
+    }
+
+    pub fn ipc(&self) -> f64 {
+        if self.cpu_cycles == 0 {
+            0.0
+        } else {
+            self.retired as f64 / self.cpu_cycles as f64
+        }
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// A read completed in the memory system.
+    pub fn on_mem_complete(&mut self, req_id: u64) {
+        for s in self.window.iter_mut() {
+            if let Slot::WaitMem(id) = s {
+                if *id == req_id {
+                    *s = Slot::ReadyAt(self.cpu_cycles);
+                    break;
+                }
+            }
+        }
+        self.outstanding = self.outstanding.saturating_sub(1);
+        if self.dep_block == Some(req_id) {
+            self.dep_block = None;
+        }
+    }
+
+    /// A synchronous copy completed.
+    pub fn on_copy_complete(&mut self, copy_id: u64) {
+        if self.wait_copy == Some(copy_id) {
+            self.wait_copy = None;
+        }
+    }
+
+    /// One CPU cycle: retire, then issue.
+    pub fn cycle(&mut self, hier: &mut Hierarchy, ctrl: &mut Controller) {
+        if self.finished() {
+            return;
+        }
+        self.cpu_cycles += 1;
+        let now = self.cpu_cycles;
+
+        // Drain lazy writebacks (not program-ordered).
+        while let Some(&wb) = self.wb_queue.front() {
+            let id = self.alloc_id();
+            if ctrl.enqueue_mem(id, self.id, wb, true) {
+                self.wb_queue.pop_front();
+            } else {
+                self.next_id -= 1;
+                break;
+            }
+        }
+
+        // Retire.
+        let mut retired = 0;
+        while retired < self.issue_width {
+            match self.window.front() {
+                Some(Slot::ReadyAt(t)) if *t <= now => {
+                    self.window.pop_front();
+                    self.retired += 1;
+                    retired += 1;
+                }
+                _ => break,
+            }
+        }
+
+        if self.wait_copy.is_some() {
+            return; // blocked on a synchronous copy
+        }
+
+        // Issue.
+        let mut issued = 0;
+        while issued < self.issue_width && self.window.len() < self.rob_size {
+            if self.dep_block.is_some() {
+                break;
+            }
+            // Re-send a previously rejected demand access first (the
+            // cache lookup for it is already done).
+            if let Some(d) = self.pending_demand {
+                if !self.send_demand(d, ctrl, now) {
+                    break;
+                }
+                self.pending_demand = None;
+                issued += 1;
+                continue;
+            }
+            if self.nonmem_left > 0 {
+                self.nonmem_left -= 1;
+                self.window.push_back(Slot::ReadyAt(now + 1));
+                issued += 1;
+                continue;
+            }
+            // Current op's action is due.
+            if let Some(op) = self.cur_op.take() {
+                if !self.do_action(op, hier, ctrl, now) {
+                    break; // demand parked in pending_demand
+                }
+                issued += 1;
+                if self.wait_copy.is_some() {
+                    break;
+                }
+                continue;
+            }
+            // Fetch the next trace op.
+            if self.fetch_stopped {
+                break;
+            }
+            let op = self.cursor.next(&self.trace);
+            self.nonmem_left = op.nonmem();
+            self.cur_op = Some(op);
+            let consumed = self.mem_ops_done + self.copies_done + 1;
+            if consumed >= self.budget {
+                self.fetch_stopped = true;
+            }
+        }
+    }
+
+    /// Try to send a demand access to the controller; false if it must
+    /// be re-sent later (the caller parks it in `pending_demand`).
+    fn send_demand(&mut self, d: Demand, ctrl: &mut Controller, now: u64) -> bool {
+        if d.is_write {
+            // Stores are posted: retire once the write is accepted.
+            let id = self.alloc_id();
+            if !ctrl.enqueue_mem(id, self.id, d.addr, true) {
+                self.next_id -= 1;
+                return false;
+            }
+            self.window.push_back(Slot::ReadyAt(now + d.latency));
+            return true;
+        }
+        if self.outstanding >= self.mshrs {
+            return false;
+        }
+        let id = self.alloc_id();
+        if !ctrl.enqueue_mem(id, self.id, d.addr, false) {
+            self.next_id -= 1;
+            return false;
+        }
+        self.outstanding += 1;
+        self.window.push_back(Slot::WaitMem(id));
+        if d.dependent {
+            self.dep_block = Some(id);
+        }
+        true
+    }
+
+    /// Execute a trace op's action; false if its demand access was
+    /// parked for re-sending (cache lookups are never repeated).
+    fn do_action(
+        &mut self,
+        op: TraceOp,
+        hier: &mut Hierarchy,
+        ctrl: &mut Controller,
+        now: u64,
+    ) -> bool {
+        match op {
+            TraceOp::Mem { addr, is_write, dependent, .. } => {
+                // The cache lookup happens exactly once per op.
+                let acc = hier.access(self.id, addr, is_write);
+                self.mem_ops_done += 1;
+                // Dirty evictions that reached memory become lazy
+                // posted writes.
+                self.wb_queue.extend(acc.writebacks.iter().copied());
+                if !acc.goes_to_memory {
+                    self.window.push_back(Slot::ReadyAt(now + acc.latency));
+                    return true;
+                }
+                let d = Demand { addr, is_write, dependent, latency: acc.latency };
+                if self.send_demand(d, ctrl, now) {
+                    true
+                } else {
+                    self.pending_demand = Some(d);
+                    false
+                }
+            }
+            TraceOp::Copy { src, dst, rows, .. } => {
+                let id = self.alloc_id();
+                let src_a = {
+                    let mut a = ctrl.mapper.map(src);
+                    a.col = 0;
+                    a
+                };
+                let dst_a = {
+                    let mut a = ctrl.mapper.map(dst);
+                    a.col = 0;
+                    a
+                };
+                ctrl.enqueue_copy(CopyRequest {
+                    id,
+                    core: self.id,
+                    src: src_a,
+                    dst: dst_a,
+                    rows: rows as usize,
+                    mechanism: ctrl.cfg.copy_mechanism,
+                    arrive: ctrl.now,
+                });
+                self.window.push_back(Slot::ReadyAt(now + 1));
+                self.wait_copy = Some(id);
+                self.copies_done += 1;
+                true
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::cpu::trace::TraceOp;
+
+    fn mk(trace: Vec<TraceOp>, budget: u64) -> (Core, Hierarchy, Controller) {
+        let cfg = SimConfig::default();
+        let core = Core::new(0, Trace::new(trace), &cfg.cpu, budget);
+        let hier = Hierarchy::new(&cfg.cpu);
+        let ctrl = Controller::new(cfg);
+        (core, hier, ctrl)
+    }
+
+    fn run(core: &mut Core, hier: &mut Hierarchy, ctrl: &mut Controller, max: u64) {
+        let ratio = ctrl.cfg.cpu.clock_ratio;
+        for _ in 0..max {
+            ctrl.tick().unwrap();
+            for c in ctrl.drain_completions() {
+                if c.was_copy {
+                    core.on_copy_complete(c.id);
+                } else {
+                    core.on_mem_complete(c.id);
+                }
+            }
+            for _ in 0..ratio {
+                core.cycle(hier, ctrl);
+            }
+            if core.finished() && ctrl.idle() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn core_retires_all_instructions() {
+        let trace = vec![TraceOp::Mem {
+            nonmem: 9,
+            addr: 0x4000,
+            is_write: false,
+            dependent: false,
+        }];
+        let (mut core, mut hier, mut ctrl) = mk(trace, 5);
+        run(&mut core, &mut hier, &mut ctrl, 100_000);
+        assert!(core.finished());
+        assert_eq!(core.mem_ops_done, 5);
+        assert_eq!(core.retired, 50); // 5 ops * (9 nonmem + 1 mem)
+        assert!(core.ipc() > 0.0);
+    }
+
+    #[test]
+    fn cache_hits_do_not_reach_memory() {
+        // Same line over and over: one memory fetch, the rest L1 hits.
+        let trace = vec![TraceOp::Mem {
+            nonmem: 0,
+            addr: 0x8000,
+            is_write: false,
+            dependent: false,
+        }];
+        let (mut core, mut hier, mut ctrl) = mk(trace, 100);
+        run(&mut core, &mut hier, &mut ctrl, 200_000);
+        assert!(core.finished());
+        assert_eq!(ctrl.stats.reads_done, 1, "only the first access misses");
+    }
+
+    #[test]
+    fn dependent_loads_serialize() {
+        // Two independent-load traces vs dependent-load traces over
+        // distinct rows: the dependent one must take longer.
+        let mk_trace = |dependent| {
+            (0..8)
+                .map(|i| TraceOp::Mem {
+                    nonmem: 0,
+                    // Distinct banks (8 KB apart): independent loads
+                    // can overlap their activations across banks.
+                    addr: 0x10_0000 + i * 0x2000,
+                    is_write: false,
+                    dependent,
+                })
+                .collect::<Vec<_>>()
+        };
+        let (mut c1, mut h1, mut ctl1) = mk(mk_trace(false), 8);
+        run(&mut c1, &mut h1, &mut ctl1, 500_000);
+        let (mut c2, mut h2, mut ctl2) = mk(mk_trace(true), 8);
+        run(&mut c2, &mut h2, &mut ctl2, 500_000);
+        assert!(c1.finished() && c2.finished());
+        assert!(
+            c2.cpu_cycles > c1.cpu_cycles,
+            "dependent {} <= parallel {}",
+            c2.cpu_cycles,
+            c1.cpu_cycles
+        );
+    }
+
+    #[test]
+    fn copy_blocks_until_done() {
+        let trace = vec![
+            TraceOp::Copy { nonmem: 0, src: 0, dst: 0x40000, rows: 1 },
+            TraceOp::Mem { nonmem: 0, addr: 0x80000, is_write: false, dependent: false },
+        ];
+        let (mut core, mut hier, mut ctrl) = mk(trace, 2);
+        run(&mut core, &mut hier, &mut ctrl, 500_000);
+        assert!(core.finished());
+        assert_eq!(core.copies_done, 1);
+        assert_eq!(core.mem_ops_done, 1);
+        assert_eq!(ctrl.stats.copies_done, 1);
+    }
+
+    #[test]
+    fn stores_are_posted() {
+        let trace = vec![TraceOp::Mem {
+            nonmem: 0,
+            addr: 0x9000,
+            is_write: true,
+            dependent: false,
+        }];
+        let (mut core, mut hier, mut ctrl) = mk(trace, 4);
+        run(&mut core, &mut hier, &mut ctrl, 200_000);
+        assert!(core.finished());
+        // Store hits in L1 after the first allocation; nothing blocks.
+        assert!(core.cpu_cycles < 1000);
+    }
+}

@@ -1,0 +1,7 @@
+//! Trace-driven multi-core CPU frontend: instruction-window core model
+//! (Ramulator-style), private L1/L2 + shared LLC cache hierarchy, and
+//! the trace format the workload generators produce.
+
+pub mod cache;
+pub mod core;
+pub mod trace;

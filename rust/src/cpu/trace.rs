@@ -1,0 +1,133 @@
+//! The workload trace format: the same information Ramulator consumes
+//! from Pin traces (non-memory instruction counts between memory
+//! operations), extended with bulk-copy operations for the paper's
+//! copy workloads.
+
+/// One trace operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOp {
+    /// `nonmem` non-memory instructions, then one memory access.
+    /// `dependent` marks loads on the critical path (pointer chasing):
+    /// the window cannot issue past them until they complete.
+    Mem {
+        nonmem: u32,
+        addr: u64,
+        is_write: bool,
+        dependent: bool,
+    },
+    /// `nonmem` instructions, then a synchronous bulk copy
+    /// (memcpy/memmove): `rows` DRAM rows from `src` to `dst`.
+    Copy {
+        nonmem: u32,
+        src: u64,
+        dst: u64,
+        rows: u32,
+    },
+}
+
+impl TraceOp {
+    pub fn nonmem(&self) -> u32 {
+        match self {
+            TraceOp::Mem { nonmem, .. } | TraceOp::Copy { nonmem, .. } => *nonmem,
+        }
+    }
+
+    /// Instructions this op represents (non-memory + the op itself).
+    pub fn insts(&self) -> u64 {
+        self.nonmem() as u64 + 1
+    }
+}
+
+/// A per-core trace. Cores replay it cyclically until the simulation's
+/// request budget is reached, so traces can stay compact.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn new(ops: Vec<TraceOp>) -> Self {
+        Self { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total instructions in one pass of the trace.
+    pub fn insts_per_pass(&self) -> u64 {
+        self.ops.iter().map(|o| o.insts()).sum()
+    }
+
+    /// Memory operations in one pass.
+    pub fn mem_ops_per_pass(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Mem { .. }))
+            .count() as u64
+    }
+
+    pub fn copy_ops_per_pass(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Copy { .. }))
+            .count() as u64
+    }
+}
+
+/// Cyclic cursor over a trace.
+#[derive(Debug, Clone)]
+pub struct TraceCursor {
+    pos: usize,
+}
+
+impl TraceCursor {
+    pub fn new() -> Self {
+        Self { pos: 0 }
+    }
+
+    pub fn next(&mut self, trace: &Trace) -> TraceOp {
+        let op = trace.ops[self.pos];
+        self.pos = (self.pos + 1) % trace.ops.len();
+        op
+    }
+}
+
+impl Default for TraceCursor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_accounting() {
+        let t = Trace::new(vec![
+            TraceOp::Mem { nonmem: 3, addr: 0, is_write: false, dependent: false },
+            TraceOp::Copy { nonmem: 10, src: 0, dst: 8192, rows: 1 },
+            TraceOp::Mem { nonmem: 0, addr: 64, is_write: true, dependent: false },
+        ]);
+        assert_eq!(t.insts_per_pass(), 3 + 1 + 10 + 1 + 0 + 1);
+        assert_eq!(t.mem_ops_per_pass(), 2);
+        assert_eq!(t.copy_ops_per_pass(), 1);
+    }
+
+    #[test]
+    fn cursor_wraps() {
+        let t = Trace::new(vec![
+            TraceOp::Mem { nonmem: 1, addr: 0, is_write: false, dependent: false },
+            TraceOp::Mem { nonmem: 2, addr: 64, is_write: false, dependent: false },
+        ]);
+        let mut c = TraceCursor::new();
+        assert_eq!(c.next(&t).nonmem(), 1);
+        assert_eq!(c.next(&t).nonmem(), 2);
+        assert_eq!(c.next(&t).nonmem(), 1);
+    }
+}

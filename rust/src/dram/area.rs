@@ -1,0 +1,106 @@
+//! Die-area overhead model (paper §2 "Die Area Overhead", experiment
+//! E8): LISA adds one isolation transistor per bitline between
+//! adjacent subarrays, plus control logic outside the banks. The
+//! paper, using the row-buffer-decoupling area figures [O et al.,
+//! ISCA 2014], reports 0.8% total overhead in a 28 nm process.
+//!
+//! This module reproduces that accounting analytically so the bench
+//! target can regenerate the claim and explore sensitivity.
+
+use crate::config::DramConfig;
+
+/// Area model constants for a 28 nm DRAM process (normalized units:
+/// one DRAM cell = 6 F^2 = 1.0 area unit).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// Cell array fraction of total die area (typical commodity DRAM).
+    pub cell_array_fraction: f64,
+    /// Isolation transistor area relative to one cell. Isolation
+    /// transistors are laid out in the sense-amp stripe pitch; prior
+    /// work's 0.8% total for one transistor per bitline per subarray
+    /// boundary implies ~8 cells' worth per bitline pair boundary.
+    pub iso_transistor_cells: f64,
+    /// Control logic overhead (fraction of die), outside the banks.
+    pub control_logic_fraction: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        Self {
+            cell_array_fraction: 0.55,
+            iso_transistor_cells: 8.0,
+            control_logic_fraction: 0.0005,
+        }
+    }
+}
+
+/// Breakdown of the computed overhead.
+#[derive(Debug, Clone)]
+pub struct AreaReport {
+    /// Isolation transistors as a fraction of total die area.
+    pub iso_fraction: f64,
+    /// Control logic fraction.
+    pub control_fraction: f64,
+    /// Total overhead fraction (paper: ~0.008).
+    pub total_fraction: f64,
+    pub n_iso_transistors: u64,
+}
+
+impl AreaModel {
+    /// Compute the LISA area overhead for a given DRAM organization.
+    pub fn overhead(&self, cfg: &DramConfig) -> AreaReport {
+        let bitlines_per_subarray = (cfg.columns * 64 * 8) as u64; // row bits
+        let boundaries_per_bank = (cfg.subarrays_per_bank - 1) as u64;
+        let n_iso = bitlines_per_subarray
+            * boundaries_per_bank
+            * cfg.banks as u64
+            * cfg.ranks as u64
+            * cfg.channels as u64;
+
+        // Cells per device.
+        let n_cells = (cfg.capacity_bytes() as u64) * 8;
+
+        // Iso transistor area, expressed in cell-equivalents, relative
+        // to the full die (cell array / cell_array_fraction).
+        let cell_area_total = n_cells as f64 / self.cell_array_fraction;
+        let iso_area = n_iso as f64 * self.iso_transistor_cells;
+        let iso_fraction = iso_area / cell_area_total;
+
+        AreaReport {
+            iso_fraction,
+            control_fraction: self.control_logic_fraction,
+            total_fraction: iso_fraction + self.control_logic_fraction,
+            n_iso_transistors: n_iso,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_anchor_point_zero_point_eight_percent() {
+        // Default organization: 16 subarrays/bank, 512 rows/subarray.
+        let report = AreaModel::default().overhead(&DramConfig::default());
+        assert!(
+            report.total_fraction > 0.006 && report.total_fraction < 0.010,
+            "total overhead {:.4} outside the paper's ~0.8% band",
+            report.total_fraction
+        );
+    }
+
+    #[test]
+    fn overhead_scales_with_subarray_count() {
+        let model = AreaModel::default();
+        let base = model.overhead(&DramConfig::default());
+        let mut dense = DramConfig::default();
+        dense.subarrays_per_bank = 64;
+        dense.rows_per_subarray = 128; // same capacity
+        let more = model.overhead(&dense);
+        assert!(more.total_fraction > base.total_fraction);
+        // Same capacity => proportional to boundary count (63 vs 15).
+        let ratio = more.iso_fraction / base.iso_fraction;
+        assert!((ratio - 63.0 / 15.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,823 @@
+//! The DRAM device state machine: per-bank / per-rank / per-channel
+//! timing-constraint tracking and command execution, including the
+//! RowClone and LISA command extensions.
+//!
+//! The model follows the Ramulator approach: for every command the
+//! device can compute the earliest legal issue cycle from a set of
+//! "next allowed" registers updated on every issue, plus structural
+//! state checks (row open/closed, subarray latched, rank busy).
+//!
+//! Data movement *semantics* are modeled with content tags: every row
+//! has a 64-bit tag standing in for its 8 KB of data, and every
+//! mechanism (activation, RowClone, RBM, channel copy) moves tags
+//! exactly the way it would move data. Integration tests assert that
+//! each copy mechanism produces the right tag at the destination.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::config::{DramConfig, LisaConfig};
+use crate::dram::command::Command;
+use crate::dram::subarray::{SaState, Subarray};
+use crate::dram::timing::Timing;
+
+/// Default content tag of a never-written row (derived from identity,
+/// so "uninitialized" rows are still distinguishable in tests).
+#[inline]
+pub fn default_tag(global_row: u64) -> u64 {
+    global_row.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xD1F4_5EED
+}
+
+/// Counters for the energy model and experiment reports.
+#[derive(Debug, Clone, Default)]
+pub struct CommandStats {
+    pub n_act: u64,
+    pub n_act_fast: u64,
+    pub n_pre: u64,
+    pub n_pre_lip: u64,
+    pub n_rd: u64,
+    pub n_wr: u64,
+    pub n_ref: u64,
+    pub n_rbm_hops: u64,
+    pub n_transfer_cols: u64,
+    pub n_act_copy: u64,
+    pub n_act_store: u64,
+}
+
+/// One bank: timing registers + per-subarray buffers + row tags.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub subarrays: Vec<Subarray>,
+    /// Earliest cycle an ACT may issue.
+    pub next_act: u64,
+    /// Earliest cycle a PRE may issue.
+    pub next_pre: u64,
+    /// Earliest cycle a RD/WR may issue (tRCD after ACT).
+    pub next_rdwr: u64,
+    /// When the most recent activation's restore completes (tRAS).
+    pub ras_done: u64,
+    /// When the most recent activation's sensing completes (tRCD) —
+    /// gates RBM and Transfer source readiness.
+    pub sense_done: u64,
+    /// Composite-op occupancy (RBM / Transfer).
+    pub busy_until: u64,
+    /// Content tags of written rows (absent => default_tag).
+    rows: HashMap<usize, u64>,
+}
+
+impl Bank {
+    fn new(subarrays: usize) -> Self {
+        Self {
+            subarrays: (0..subarrays).map(|_| Subarray::default()).collect(),
+            next_act: 0,
+            next_pre: 0,
+            next_rdwr: 0,
+            ras_done: 0,
+            sense_done: 0,
+            busy_until: 0,
+            rows: HashMap::new(),
+        }
+    }
+
+    /// The subarray that currently has an open row, if any.
+    pub fn open_subarray(&self) -> Option<usize> {
+        self.subarrays
+            .iter()
+            .position(|sa| matches!(sa.state, SaState::Open { .. }))
+    }
+
+    /// The open row (bank-relative), if any.
+    pub fn open_row(&self) -> Option<usize> {
+        self.subarrays.iter().find_map(|sa| sa.open_row())
+    }
+
+    /// Any subarray not precharged (open OR latched)?
+    pub fn all_precharged(&self) -> bool {
+        self.subarrays.iter().all(|sa| sa.is_precharged())
+    }
+}
+
+/// One rank: banks + rank-scope constraints (tRRD, tFAW, tRFC).
+#[derive(Debug, Clone)]
+pub struct Rank {
+    pub banks: Vec<Bank>,
+    pub next_act: u64,
+    /// Timestamps of recent ACTs for the tFAW sliding window.
+    act_times: VecDeque<u64>,
+    /// Refresh occupancy.
+    pub busy_until: u64,
+}
+
+impl Rank {
+    fn new(banks: usize, subarrays: usize) -> Self {
+        Self {
+            banks: (0..banks).map(|_| Bank::new(subarrays)).collect(),
+            next_act: 0,
+            act_times: VecDeque::with_capacity(4),
+            busy_until: 0,
+        }
+    }
+
+    fn faw_earliest(&self, t_faw: u64) -> u64 {
+        if self.act_times.len() < 4 {
+            0
+        } else {
+            self.act_times[self.act_times.len() - 4] + t_faw
+        }
+    }
+
+    fn record_act(&mut self, t: u64) {
+        self.act_times.push_back(t);
+        while self.act_times.len() > 4 {
+            self.act_times.pop_front();
+        }
+    }
+}
+
+/// One channel: ranks + the shared data-bus constraints. RowClone
+/// inter-bank transfers also occupy the internal global bus, which
+/// shares the I/O path — so they block channel RD/WR (this is the
+/// system-level penalty the paper measures for RC-InterSA).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub ranks: Vec<Rank>,
+    pub next_rd: u64,
+    pub next_wr: u64,
+}
+
+impl Channel {
+    fn new(ranks: usize, banks: usize, subarrays: usize) -> Self {
+        Self {
+            ranks: (0..ranks).map(|_| Rank::new(banks, subarrays)).collect(),
+            next_rd: 0,
+            next_wr: 0,
+        }
+    }
+}
+
+/// The whole DRAM device behind one memory controller channel group.
+#[derive(Debug, Clone)]
+pub struct DramDevice {
+    pub cfg: DramConfig,
+    pub lisa: LisaConfig,
+    pub timing: Timing,
+    pub channels: Vec<Channel>,
+    pub stats: CommandStats,
+}
+
+/// Result of issuing a command: when its effect completes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Issued {
+    /// Cycle at which data is available / the operation's result is
+    /// usable (e.g. RD: data burst done; RBM: buffers latched).
+    pub done_at: u64,
+}
+
+impl DramDevice {
+    pub fn new(cfg: DramConfig, lisa: LisaConfig, timing: Timing) -> Self {
+        let channels = (0..cfg.channels)
+            .map(|_| Channel::new(cfg.ranks, cfg.banks, cfg.subarrays_per_bank))
+            .collect();
+        Self {
+            cfg,
+            lisa,
+            timing,
+            channels,
+            stats: CommandStats::default(),
+        }
+    }
+
+    /// Is `sa` a VILLA fast subarray? (Fast subarrays occupy the low
+    /// indices of every bank when VILLA is enabled.)
+    pub fn is_fast_sa(&self, sa: usize) -> bool {
+        self.lisa.villa && sa < self.lisa.fast_subarrays_per_bank
+    }
+
+    fn sa_of_row(&self, row: usize) -> usize {
+        row / self.cfg.rows_per_subarray
+    }
+
+    /// Read a row's content tag.
+    pub fn row_tag(&self, ch: usize, rank: usize, bank: usize, row: usize) -> u64 {
+        let b = &self.channels[ch].ranks[rank].banks[bank];
+        *b.rows.get(&row).unwrap_or(&default_tag(self.global_row(ch, rank, bank, row)))
+    }
+
+    /// Overwrite a row's content tag (used by the channel-copy engine:
+    /// data that went through the CPU is written back with WRs).
+    pub fn set_row_tag(&mut self, ch: usize, rank: usize, bank: usize, row: usize, tag: u64) {
+        self.channels[ch].ranks[rank].banks[bank].rows.insert(row, tag);
+    }
+
+    fn global_row(&self, ch: usize, rank: usize, bank: usize, row: usize) -> u64 {
+        let rows_per_bank = self.cfg.rows_per_bank() as u64;
+        (((ch as u64 * self.cfg.ranks as u64 + rank as u64) * self.cfg.banks as u64
+            + bank as u64)
+            * rows_per_bank)
+            + row as u64
+    }
+
+    pub fn bank(&self, ch: usize, rank: usize, bank: usize) -> &Bank {
+        &self.channels[ch].ranks[rank].banks[bank]
+    }
+
+    /// Earliest cycle >= `now` at which `cmd` can legally issue on
+    /// channel `ch`. Err if the command is illegal in the current
+    /// structural state (e.g. ACT on a bank with an open row).
+    pub fn earliest(&self, ch: usize, cmd: Command, now: u64) -> Result<u64> {
+        let t = &self.timing;
+        let chan = &self.channels[ch];
+        let rank = &chan.ranks[cmd.rank()];
+        let mut earliest = now.max(rank.busy_until);
+
+        match cmd {
+            Command::Act { bank, row, .. } => {
+                let b = &rank.banks[bank];
+                let sa = self.sa_of_row(row);
+                if sa >= b.subarrays.len() {
+                    bail!("row {row} out of range");
+                }
+                if !b.subarrays[sa].is_precharged() {
+                    bail!("ACT: target subarray {sa} not precharged");
+                }
+                if !self.cfg.salp && !b.all_precharged() {
+                    bail!("ACT: bank has open/latched subarray (no SALP)");
+                }
+                earliest = earliest
+                    .max(b.next_act)
+                    .max(b.busy_until)
+                    .max(rank.next_act)
+                    .max(rank.faw_earliest(t.t_faw));
+                Ok(earliest)
+            }
+            Command::ActCopy { bank, row, .. } => {
+                let b = &rank.banks[bank];
+                let sa = self.sa_of_row(row);
+                match b.subarrays[sa].state {
+                    SaState::Open { row: open } if open != row => {}
+                    SaState::Open { .. } => bail!("ACT_COPY: source == destination row"),
+                    _ => bail!("ACT_COPY: subarray {sa} has no open row"),
+                }
+                // The buffer must be fully restored into the source row
+                // before it can be reused to write another row.
+                Ok(earliest.max(b.ras_done).max(b.busy_until))
+            }
+            Command::ActStore { bank, row, .. } => {
+                let b = &rank.banks[bank];
+                let sa = self.sa_of_row(row);
+                if b.subarrays[sa].state != SaState::LatchedOnly {
+                    bail!("ACT_STORE: subarray {sa} has no latched buffer");
+                }
+                Ok(earliest.max(b.busy_until))
+            }
+            Command::Pre { bank, .. } => {
+                let b = &rank.banks[bank];
+                if b.all_precharged() {
+                    bail!("PRE: bank already precharged");
+                }
+                Ok(earliest.max(b.next_pre).max(b.busy_until))
+            }
+            Command::PreAll { .. } => {
+                let mut e = earliest;
+                for b in &rank.banks {
+                    if !b.all_precharged() {
+                        e = e.max(b.next_pre).max(b.busy_until);
+                    }
+                }
+                Ok(e)
+            }
+            Command::Rd { bank, .. } | Command::Wr { bank, .. } => {
+                let b = &rank.banks[bank];
+                if b.open_row().is_none() {
+                    bail!("RD/WR: no open row");
+                }
+                let bus = match cmd {
+                    Command::Rd { .. } => chan.next_rd,
+                    _ => chan.next_wr,
+                };
+                Ok(earliest.max(b.next_rdwr).max(b.busy_until).max(bus))
+            }
+            Command::Ref { .. } => {
+                for b in &rank.banks {
+                    if !b.all_precharged() {
+                        bail!("REF: bank not precharged");
+                    }
+                }
+                let mut e = earliest;
+                for b in &rank.banks {
+                    e = e.max(b.next_act.min(u64::MAX)).max(b.busy_until);
+                }
+                Ok(e)
+            }
+            Command::Rbm { bank, from_sa, to_sa, .. } => {
+                let b = &rank.banks[bank];
+                if from_sa == to_sa {
+                    bail!("RBM: source == destination subarray");
+                }
+                match b.subarrays[from_sa].state {
+                    SaState::Open { .. } | SaState::LatchedOnly => {}
+                    SaState::Precharged => bail!("RBM: source buffer not latched"),
+                }
+                // Every subarray along the path (excluding source) must
+                // be precharged so its buffer can sense the moved data.
+                let (lo, hi) = (from_sa.min(to_sa), from_sa.max(to_sa));
+                for sa in lo..=hi {
+                    if sa != from_sa && !b.subarrays[sa].is_precharged() {
+                        bail!("RBM: subarray {sa} on path not precharged");
+                    }
+                }
+                // Source must be fully restored if a wordline is up
+                // (conservative: RBM perturbs the buffer while cells
+                // are still connected).
+                let ready = match b.subarrays[from_sa].state {
+                    SaState::Open { .. } => b.ras_done,
+                    _ => b.sense_done,
+                };
+                Ok(earliest.max(ready).max(b.busy_until))
+            }
+            Command::Transfer { src_bank, dst_bank, .. } => {
+                if src_bank == dst_bank {
+                    bail!("TRANSFER: source == destination bank");
+                }
+                let sb = &rank.banks[src_bank];
+                let db = &rank.banks[dst_bank];
+                if sb.open_row().is_none() || db.open_row().is_none() {
+                    bail!("TRANSFER: both banks need an open row");
+                }
+                // Both banks' sensing must be complete; the internal
+                // bus shares the I/O path, so outstanding RD/WR bursts
+                // must drain (approximated by the channel registers).
+                Ok(earliest
+                    .max(sb.sense_done)
+                    .max(db.sense_done)
+                    .max(sb.busy_until)
+                    .max(db.busy_until)
+                    .max(chan.next_rd)
+                    .max(chan.next_wr))
+            }
+        }
+    }
+
+    /// Issue `cmd` at cycle `at` (must be >= earliest). Returns the
+    /// completion information. Panics in debug builds if timing is
+    /// violated — the scheduler must only issue legal commands.
+    pub fn issue(&mut self, ch: usize, cmd: Command, at: u64) -> Result<Issued> {
+        let earliest = self.earliest(ch, cmd, at)?;
+        if at < earliest {
+            bail!(
+                "timing violation: {} at {at} < earliest {earliest}",
+                cmd.name()
+            );
+        }
+        let t = self.timing.clone();
+        let salp = self.cfg.salp;
+        let lip_enabled = self.lisa.lip;
+        let rows_per_sa = self.cfg.rows_per_subarray;
+        let fast_k = if self.lisa.villa {
+            self.lisa.fast_subarrays_per_bank
+        } else {
+            0
+        };
+        let is_fast = |sa: usize| sa < fast_k;
+
+        let rank_idx = cmd.rank();
+        let global_of = |dev: &Self, bank: usize, row: usize| {
+            dev.global_row(ch, rank_idx, bank, row)
+        };
+
+        match cmd {
+            Command::Act { bank, row, .. } => {
+                let sa = row / rows_per_sa;
+                let fast = is_fast(sa);
+                let (t_rcd, t_ras) = if fast {
+                    (t.t_rcd_fast, t.t_ras_fast)
+                } else {
+                    (t.t_rcd, t.t_ras)
+                };
+                let global = global_of(self, bank, row);
+                let chan = &mut self.channels[ch];
+                let rank = &mut chan.ranks[rank_idx];
+                rank.record_act(at);
+                rank.next_act = rank.next_act.max(at + t.t_rrd);
+                let b = &mut rank.banks[bank];
+                b.next_rdwr = at + t_rcd;
+                b.sense_done = at + t_rcd;
+                b.ras_done = at + t_ras;
+                b.next_pre = b.next_pre.max(at + t_ras);
+                // ACT-to-ACT in the same bank always requires an
+                // intervening PRE (state machine), which enforces
+                // tRAS + tRP = tRC in the standard case and the
+                // shorter LIP path when linked precharge applies.
+                if salp {
+                    b.next_act = b.next_act.max(at + t.t_rrd);
+                }
+                let tag = *b.rows.get(&row).unwrap_or(&default_tag(global));
+                b.subarrays[sa].state = SaState::Open { row };
+                b.subarrays[sa].buffer_tag = Some(tag);
+                self.stats.n_act += 1;
+                if fast {
+                    self.stats.n_act_fast += 1;
+                }
+                Ok(Issued { done_at: at + t_rcd })
+            }
+            Command::ActCopy { bank, row, .. } => {
+                let sa = row / rows_per_sa;
+                let fast = is_fast(sa);
+                let t_ras = if fast { t.t_ras_fast } else { t.t_ras };
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                let tag = b.subarrays[sa].buffer_tag.expect("latched buffer");
+                b.rows.insert(row, tag);
+                b.subarrays[sa].state = SaState::Open { row };
+                b.ras_done = at + t_ras;
+                b.sense_done = at; // buffer already full-swing
+                b.next_rdwr = b.next_rdwr.max(at);
+                b.next_pre = b.next_pre.max(at + t_ras);
+                self.stats.n_act_copy += 1;
+                Ok(Issued { done_at: at + t_ras })
+            }
+            Command::ActStore { bank, row, .. } => {
+                let sa = row / rows_per_sa;
+                let fast = is_fast(sa);
+                let t_ras = if fast { t.t_ras_fast } else { t.t_ras };
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                let tag = b.subarrays[sa].buffer_tag.expect("latched buffer");
+                b.rows.insert(row, tag);
+                b.subarrays[sa].state = SaState::Open { row };
+                b.ras_done = at + t_ras;
+                b.sense_done = at;
+                b.next_rdwr = b.next_rdwr.max(at);
+                b.next_pre = b.next_pre.max(at + t_ras);
+                self.stats.n_act_store += 1;
+                Ok(Issued { done_at: at + t_ras })
+            }
+            Command::Pre { bank, .. } => {
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                // LIP: a neighbor subarray's idle precharge unit can be
+                // linked if it is itself precharged.
+                let mut any_fast = false;
+                let mut lip_ok = false;
+                let n_sa = b.subarrays.len();
+                for sa in 0..n_sa {
+                    if !b.subarrays[sa].is_precharged() {
+                        any_fast |= is_fast(sa);
+                        let left_ok = sa > 0 && b.subarrays[sa - 1].is_precharged();
+                        let right_ok =
+                            sa + 1 < n_sa && b.subarrays[sa + 1].is_precharged();
+                        lip_ok |= left_ok || right_ok;
+                    }
+                }
+                let use_lip = lip_enabled && lip_ok;
+                let t_rp = match (any_fast, use_lip) {
+                    (true, true) => t.t_rp_fast_lip,
+                    (true, false) => t.t_rp_fast,
+                    (false, true) => t.t_rp_lip,
+                    (false, false) => t.t_rp,
+                };
+                for sa in b.subarrays.iter_mut() {
+                    sa.precharge();
+                }
+                b.next_act = b.next_act.max(at + t_rp);
+                self.stats.n_pre += 1;
+                if use_lip {
+                    self.stats.n_pre_lip += 1;
+                }
+                Ok(Issued { done_at: at + t_rp })
+            }
+            Command::PreAll { .. } => {
+                let chan = &mut self.channels[ch];
+                let rank = &mut chan.ranks[rank_idx];
+                let mut done = at;
+                let mut issued_any = false;
+                for b in rank.banks.iter_mut() {
+                    if !b.all_precharged() {
+                        for sa in b.subarrays.iter_mut() {
+                            sa.precharge();
+                        }
+                        b.next_act = b.next_act.max(at + t.t_rp);
+                        done = done.max(at + t.t_rp);
+                        issued_any = true;
+                        self.stats.n_pre += 1;
+                    }
+                }
+                let _ = issued_any;
+                Ok(Issued { done_at: done })
+            }
+            Command::Rd { bank, .. } => {
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                b.next_pre = b.next_pre.max(at + t.t_rtp);
+                chan.next_rd = chan.next_rd.max(at + t.t_ccd);
+                chan.next_wr = chan.next_wr.max(at + t.t_rtw);
+                self.stats.n_rd += 1;
+                Ok(Issued { done_at: at + t.t_cl + t.t_bl })
+            }
+            Command::Wr { bank, .. } => {
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                b.next_pre = b.next_pre.max(at + t.t_cwl + t.t_bl + t.t_wr);
+                chan.next_wr = chan.next_wr.max(at + t.t_ccd);
+                chan.next_rd = chan.next_rd.max(at + t.t_cwl + t.t_bl + t.t_wtr);
+                self.stats.n_wr += 1;
+                Ok(Issued { done_at: at + t.t_cwl + t.t_bl })
+            }
+            Command::Ref { .. } => {
+                let chan = &mut self.channels[ch];
+                let rank = &mut chan.ranks[rank_idx];
+                rank.busy_until = rank.busy_until.max(at + t.t_rfc);
+                for b in rank.banks.iter_mut() {
+                    b.next_act = b.next_act.max(at + t.t_rfc);
+                }
+                self.stats.n_ref += 1;
+                Ok(Issued { done_at: at + t.t_rfc })
+            }
+            Command::Rbm { bank, from_sa, to_sa, .. } => {
+                let hops = from_sa.abs_diff(to_sa) as u64;
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                let tag = b.subarrays[from_sa].buffer_tag.expect("latched source");
+                let end = at + hops * t.t_rbm;
+                // Data latches into every row buffer along the path
+                // (the property behind the paper's 1-to-N extension).
+                let (lo, hi) = (from_sa.min(to_sa), from_sa.max(to_sa));
+                for sa in lo..=hi {
+                    if sa != from_sa {
+                        b.subarrays[sa].state = SaState::LatchedOnly;
+                        b.subarrays[sa].buffer_tag = Some(tag);
+                    }
+                }
+                b.busy_until = b.busy_until.max(end);
+                b.next_pre = b.next_pre.max(end);
+                self.stats.n_rbm_hops += hops;
+                Ok(Issued { done_at: end })
+            }
+            Command::Transfer { src_bank, dst_bank, cols, .. } => {
+                let end = at + cols as u64 * t.t_ccd;
+                let chan = &mut self.channels[ch];
+                let rank = &mut chan.ranks[rank_idx];
+                let tag = {
+                    let sb = &rank.banks[src_bank];
+                    let sa = sb.open_subarray().expect("open src row");
+                    sb.subarrays[sa].buffer_tag.expect("latched src")
+                };
+                {
+                    let db = &mut rank.banks[dst_bank];
+                    let dst_row = db.open_row().expect("open dst row");
+                    let dst_sa = db.open_subarray().unwrap();
+                    db.rows.insert(dst_row, tag);
+                    db.subarrays[dst_sa].buffer_tag = Some(tag);
+                    db.busy_until = db.busy_until.max(end);
+                    db.next_pre = db.next_pre.max(end);
+                }
+                {
+                    let sb = &mut rank.banks[src_bank];
+                    sb.busy_until = sb.busy_until.max(end);
+                    sb.next_pre = sb.next_pre.max(end);
+                }
+                // The internal global bus shares the chip I/O path:
+                // block channel RD/WR for the duration (RC-InterSA's
+                // key system cost, paper §4.1 / Fig. 3).
+                chan.next_rd = chan.next_rd.max(end);
+                chan.next_wr = chan.next_wr.max(end);
+                self.stats.n_transfer_cols += cols as u64;
+                Ok(Issued { done_at: end })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Calibration;
+    use crate::dram::timing::SpeedBin;
+
+    fn dev() -> DramDevice {
+        let cfg = DramConfig::default();
+        let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+        DramDevice::new(cfg, LisaConfig::default(), timing)
+    }
+
+    fn dev_lisa() -> DramDevice {
+        let cfg = DramConfig::default();
+        let mut lisa = LisaConfig::default();
+        lisa.risc = true;
+        lisa.lip = true;
+        let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+        DramDevice::new(cfg, lisa, timing)
+    }
+
+    const ACT0: Command = Command::Act { rank: 0, bank: 0, row: 10 };
+
+    #[test]
+    fn act_then_rd_respects_trcd() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        let rd = Command::Rd { rank: 0, bank: 0, col: 3 };
+        let e = d.earliest(0, rd, 0).unwrap();
+        assert_eq!(e, d.timing.t_rcd);
+        // Issuing early must fail.
+        assert!(d.issue(0, rd, e - 1).is_err());
+        let done = d.issue(0, rd, e).unwrap().done_at;
+        assert_eq!(done, e + d.timing.t_cl + d.timing.t_bl);
+    }
+
+    #[test]
+    fn act_on_open_bank_illegal_without_salp() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        let act2 = Command::Act { rank: 0, bank: 0, row: 700 };
+        assert!(d.earliest(0, act2, 100).is_err());
+        // Other bank is fine.
+        let act_other = Command::Act { rank: 0, bank: 1, row: 700 };
+        assert!(d.earliest(0, act_other, 100).is_ok());
+    }
+
+    #[test]
+    fn salp_allows_two_open_subarrays() {
+        let mut d = dev();
+        d.cfg.salp = true;
+        d.issue(0, ACT0, 0).unwrap();
+        let act2 = Command::Act { rank: 0, bank: 0, row: 700 }; // different SA
+        let e = d.earliest(0, act2, 0).unwrap();
+        assert!(e >= d.timing.t_rrd);
+        d.issue(0, act2, e).unwrap();
+        assert_eq!(d.bank(0, 0, 0).subarrays[0].open_row(), Some(10));
+        assert_eq!(d.bank(0, 0, 0).subarrays[1].open_row(), Some(700));
+    }
+
+    #[test]
+    fn pre_then_act_respects_trp() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        let pre = Command::Pre { rank: 0, bank: 0 };
+        let e_pre = d.earliest(0, pre, 0).unwrap();
+        assert_eq!(e_pre, d.timing.t_ras); // tRAS before PRE
+        d.issue(0, pre, e_pre).unwrap();
+        let e_act = d.earliest(0, ACT0, e_pre).unwrap();
+        assert_eq!(e_act, e_pre + d.timing.t_rp);
+    }
+
+    #[test]
+    fn lip_shortens_precharge() {
+        let mut d = dev_lisa();
+        d.issue(0, ACT0, 0).unwrap();
+        let pre = Command::Pre { rank: 0, bank: 0 };
+        let e = d.earliest(0, pre, 0).unwrap();
+        d.issue(0, pre, e).unwrap();
+        assert_eq!(d.stats.n_pre_lip, 1);
+        let e_act = d.earliest(0, ACT0, e).unwrap();
+        assert_eq!(e_act, e + d.timing.t_rp_lip);
+        assert!(d.timing.t_rp_lip < d.timing.t_rp);
+    }
+
+    #[test]
+    fn faw_limits_act_burst() {
+        let mut d = dev();
+        let mut at = 0;
+        for bank in 0..4 {
+            let act = Command::Act { rank: 0, bank, row: 0 };
+            let e = d.earliest(0, act, at).unwrap();
+            d.issue(0, act, e).unwrap();
+            at = e;
+        }
+        // Fifth ACT must wait for the tFAW window.
+        let act5 = Command::Act { rank: 0, bank: 4, row: 0 };
+        let e5 = d.earliest(0, act5, at).unwrap();
+        assert!(e5 >= d.timing.t_faw, "e5={e5} < tFAW={}", d.timing.t_faw);
+    }
+
+    #[test]
+    fn rowclone_intra_subarray_copies_tag() {
+        let mut d = dev();
+        d.set_row_tag(0, 0, 0, 10, 0xDEAD);
+        d.issue(0, ACT0, 0).unwrap();
+        let copy = Command::ActCopy { rank: 0, bank: 0, row: 20 };
+        let e = d.earliest(0, copy, 0).unwrap();
+        assert_eq!(e, d.timing.t_ras); // restore before reuse
+        d.issue(0, copy, e).unwrap();
+        assert_eq!(d.row_tag(0, 0, 0, 20), 0xDEAD);
+        // Total latency anchor (Table 1): ACT + ACT + PRE = 83.75 ns.
+        let pre = Command::Pre { rank: 0, bank: 0 };
+        let e_pre = d.earliest(0, pre, e).unwrap();
+        let done = d.issue(0, pre, e_pre).unwrap().done_at;
+        assert!((d.timing.ns(done) - 83.75).abs() < 1.3, "got {}", d.timing.ns(done));
+    }
+
+    #[test]
+    fn act_copy_rejects_cross_subarray_row() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        // Row 700 is in subarray 1; buffer is latched in subarray 0.
+        let copy = Command::ActCopy { rank: 0, bank: 0, row: 700 };
+        assert!(d.earliest(0, copy, 100).is_err());
+    }
+
+    #[test]
+    fn rbm_moves_tag_across_subarrays() {
+        let mut d = dev_lisa();
+        d.set_row_tag(0, 0, 0, 10, 0xBEEF);
+        d.issue(0, ACT0, 0).unwrap();
+        let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 0, to_sa: 7 };
+        let e = d.earliest(0, rbm, 0).unwrap();
+        assert_eq!(e, d.timing.t_ras); // source restored first
+        let done = d.issue(0, rbm, e).unwrap().done_at;
+        assert_eq!(done, e + 7 * d.timing.t_rbm);
+        // Destination and every intermediate buffer latched the data.
+        for sa in 1..=7 {
+            assert_eq!(d.bank(0, 0, 0).subarrays[sa].state, SaState::LatchedOnly);
+            assert_eq!(d.bank(0, 0, 0).subarrays[sa].buffer_tag, Some(0xBEEF));
+        }
+        // ACT_STORE writes it into a destination row.
+        let store = Command::ActStore { rank: 0, bank: 0, row: 7 * 512 + 33 };
+        let e2 = d.earliest(0, store, done).unwrap();
+        d.issue(0, store, e2).unwrap();
+        assert_eq!(d.row_tag(0, 0, 0, 7 * 512 + 33), 0xBEEF);
+    }
+
+    #[test]
+    fn rbm_requires_precharged_path() {
+        let mut d = dev_lisa();
+        d.cfg.salp = true;
+        d.issue(0, ACT0, 0).unwrap();
+        // Open a row in subarray 3 (on the path 0 -> 7).
+        let mid = Command::Act { rank: 0, bank: 0, row: 3 * 512 };
+        let e = d.earliest(0, mid, 0).unwrap();
+        d.issue(0, mid, e).unwrap();
+        let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 0, to_sa: 7 };
+        assert!(d.earliest(0, rbm, 1000).is_err());
+    }
+
+    #[test]
+    fn transfer_moves_tag_and_blocks_channel() {
+        let mut d = dev();
+        d.set_row_tag(0, 0, 0, 10, 0xF00D);
+        d.issue(0, ACT0, 0).unwrap();
+        let act_dst = Command::Act { rank: 0, bank: 1, row: 99 };
+        let e = d.earliest(0, act_dst, 0).unwrap();
+        d.issue(0, act_dst, e).unwrap();
+        let tr = Command::Transfer { rank: 0, src_bank: 0, dst_bank: 1, cols: 128 };
+        let e_tr = d.earliest(0, tr, 0).unwrap();
+        let done = d.issue(0, tr, e_tr).unwrap().done_at;
+        assert_eq!(done, e_tr + 128 * d.timing.t_ccd);
+        assert_eq!(d.row_tag(0, 0, 0 + 0, 10), 0xF00D); // src intact
+        assert_eq!(d.row_tag(0, 0, 1, 99), 0xF00D); // dst copied
+        // Channel reads blocked until the transfer drains.
+        assert!(d.channels[0].next_rd >= done);
+    }
+
+    #[test]
+    fn refresh_requires_precharged_and_blocks_rank() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        assert!(d.earliest(0, Command::Ref { rank: 0 }, 0).is_err());
+        let pre = Command::Pre { rank: 0, bank: 0 };
+        let e = d.earliest(0, pre, 0).unwrap();
+        d.issue(0, pre, e).unwrap();
+        let e_ref = d.earliest(0, Command::Ref { rank: 0 }, e).unwrap();
+        let done = d.issue(0, Command::Ref { rank: 0 }, e_ref).unwrap().done_at;
+        assert_eq!(done, e_ref + d.timing.t_rfc);
+        // Nothing can activate during tRFC.
+        let e_act = d.earliest(0, ACT0, e_ref).unwrap();
+        assert!(e_act >= done);
+    }
+
+    #[test]
+    fn wr_to_rd_turnaround() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        let t_rcd = d.timing.t_rcd;
+        let wr = Command::Wr { rank: 0, bank: 0, col: 0 };
+        d.issue(0, wr, t_rcd).unwrap();
+        let rd = Command::Rd { rank: 0, bank: 0, col: 1 };
+        let e = d.earliest(0, rd, t_rcd).unwrap();
+        let t = &d.timing;
+        assert_eq!(e, t_rcd + t.t_cwl + t.t_bl + t.t_wtr);
+    }
+
+    #[test]
+    fn villa_fast_subarray_uses_fast_timing() {
+        let mut d = dev_lisa();
+        d.lisa.villa = true;
+        // Subarray 0 is fast; activate a row there.
+        let act_fast = Command::Act { rank: 0, bank: 0, row: 5 };
+        d.issue(0, act_fast, 0).unwrap();
+        let rd = Command::Rd { rank: 0, bank: 0, col: 0 };
+        let e = d.earliest(0, rd, 0).unwrap();
+        assert_eq!(e, d.timing.t_rcd_fast);
+        assert_eq!(d.stats.n_act_fast, 1);
+    }
+
+    #[test]
+    fn default_tags_are_stable_and_distinct() {
+        let d = dev();
+        let t1 = d.row_tag(0, 0, 0, 1);
+        let t2 = d.row_tag(0, 0, 0, 2);
+        let t1b = d.row_tag(0, 0, 0, 1);
+        assert_eq!(t1, t1b);
+        assert_ne!(t1, t2);
+    }
+}

@@ -1,0 +1,124 @@
+//! The DRAM command set: standard DDR commands plus the RowClone and
+//! LISA extensions the paper builds on.
+
+/// One DRAM command as issued by the memory controller.
+///
+/// `row` is always bank-relative (subarray-major). Composite in-DRAM
+/// operations (RBM, inter-bank transfer) are modeled as single
+/// commands that occupy their resources for their full duration —
+/// matching how the paper's controller serializes them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Command {
+    /// Activate `row`: latch it into its subarray's row buffer.
+    Act { rank: usize, bank: usize, row: usize },
+    /// RowClone intra-subarray second activation: write the currently
+    /// latched row buffer into `row` (must be in the same subarray).
+    ActCopy { rank: usize, bank: usize, row: usize },
+    /// LISA: after RBM latched data into `row`'s subarray row buffer,
+    /// activate `row` so the buffer contents are restored into it
+    /// (paper §3.1: step 3 of LISA-RISC).
+    ActStore { rank: usize, bank: usize, row: usize },
+    /// Precharge the bank's open subarray (or a specific one if SALP).
+    Pre { rank: usize, bank: usize },
+    /// Precharge all banks in the rank (used before refresh).
+    PreAll { rank: usize },
+    /// Read one cache line (column) from the open row.
+    Rd { rank: usize, bank: usize, col: usize },
+    /// Write one cache line (column) into the open row.
+    Wr { rank: usize, bank: usize, col: usize },
+    /// Refresh the rank (all banks must be precharged).
+    Ref { rank: usize },
+    /// LISA row buffer movement: move the latched row buffer of
+    /// `from_sa` into the (precharged) row buffers of every subarray
+    /// up to and including `to_sa`. Latency = hops * tRBM.
+    Rbm { rank: usize, bank: usize, from_sa: usize, to_sa: usize },
+    /// RowClone pipelined-serial-mode transfer: stream `cols` cache
+    /// lines from `src_bank`'s open row buffer into `dst_bank`'s open
+    /// row buffer over the internal 64-bit bus (tCCD per line).
+    Transfer { rank: usize, src_bank: usize, dst_bank: usize, cols: usize },
+}
+
+impl Command {
+    /// The rank this command targets.
+    pub fn rank(&self) -> usize {
+        match *self {
+            Command::Act { rank, .. }
+            | Command::ActCopy { rank, .. }
+            | Command::ActStore { rank, .. }
+            | Command::Pre { rank, .. }
+            | Command::PreAll { rank }
+            | Command::Rd { rank, .. }
+            | Command::Wr { rank, .. }
+            | Command::Ref { rank }
+            | Command::Rbm { rank, .. }
+            | Command::Transfer { rank, .. } => rank,
+        }
+    }
+
+    /// The bank this command targets (None for rank-scope commands).
+    pub fn bank(&self) -> Option<usize> {
+        match *self {
+            Command::Act { bank, .. }
+            | Command::ActCopy { bank, .. }
+            | Command::ActStore { bank, .. }
+            | Command::Pre { bank, .. }
+            | Command::Rd { bank, .. }
+            | Command::Wr { bank, .. }
+            | Command::Rbm { bank, .. } => Some(bank),
+            Command::Transfer { src_bank, .. } => Some(src_bank),
+            Command::PreAll { .. } | Command::Ref { .. } => None,
+        }
+    }
+
+    /// Does this command use the off-chip data bus?
+    pub fn uses_data_bus(&self) -> bool {
+        matches!(self, Command::Rd { .. } | Command::Wr { .. })
+    }
+
+    /// Is this one of the in-DRAM bulk operations?
+    pub fn is_bulk(&self) -> bool {
+        matches!(
+            self,
+            Command::Rbm { .. } | Command::Transfer { .. } | Command::ActCopy { .. }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Command::Act { .. } => "ACT",
+            Command::ActCopy { .. } => "ACT_COPY",
+            Command::ActStore { .. } => "ACT_STORE",
+            Command::Pre { .. } => "PRE",
+            Command::PreAll { .. } => "PREA",
+            Command::Rd { .. } => "RD",
+            Command::Wr { .. } => "WR",
+            Command::Ref { .. } => "REF",
+            Command::Rbm { .. } => "RBM",
+            Command::Transfer { .. } => "TRANSFER",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_helpers() {
+        let act = Command::Act { rank: 1, bank: 3, row: 42 };
+        assert_eq!(act.rank(), 1);
+        assert_eq!(act.bank(), Some(3));
+        assert!(!act.uses_data_bus());
+        assert!(!act.is_bulk());
+
+        let rd = Command::Rd { rank: 0, bank: 0, col: 5 };
+        assert!(rd.uses_data_bus());
+
+        let rbm = Command::Rbm { rank: 0, bank: 2, from_sa: 1, to_sa: 9 };
+        assert!(rbm.is_bulk());
+        assert_eq!(rbm.bank(), Some(2));
+
+        let r = Command::Ref { rank: 0 };
+        assert_eq!(r.bank(), None);
+    }
+}

@@ -1,0 +1,127 @@
+//! DRAM geometry: the physical coordinates of a cache line and the
+//! subarray arithmetic LISA's hop counts are computed from.
+
+use crate::config::DramConfig;
+
+/// Fully decoded physical location of one cache line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Address {
+    pub channel: usize,
+    pub rank: usize,
+    pub bank: usize,
+    /// Bank-relative row index (subarray-major: row / rows_per_subarray
+    /// is the subarray id).
+    pub row: usize,
+    /// Column in cache-line units.
+    pub col: usize,
+}
+
+impl Address {
+    /// Subarray index of this row within its bank.
+    pub fn subarray(&self, cfg: &DramConfig) -> usize {
+        self.row / cfg.rows_per_subarray
+    }
+
+    /// Row index within its subarray.
+    pub fn row_in_subarray(&self, cfg: &DramConfig) -> usize {
+        self.row % cfg.rows_per_subarray
+    }
+
+    /// LISA hop count between this row's subarray and another row's
+    /// subarray in the same bank (paper §3.1.1: number of subarrays the
+    /// data is copied *across*; adjacent subarrays = 1 hop).
+    pub fn hops_to(&self, other: &Address, cfg: &DramConfig) -> usize {
+        debug_assert_eq!((self.channel, self.rank, self.bank),
+                         (other.channel, other.rank, other.bank));
+        self.subarray(cfg).abs_diff(other.subarray(cfg)).max(1)
+    }
+
+    /// True if both rows live in the same subarray of the same bank.
+    pub fn same_subarray(&self, other: &Address, cfg: &DramConfig) -> bool {
+        self.channel == other.channel
+            && self.rank == other.rank
+            && self.bank == other.bank
+            && self.subarray(cfg) == other.subarray(cfg)
+    }
+
+    /// True if both rows are in the same bank.
+    pub fn same_bank(&self, other: &Address) -> bool {
+        self.channel == other.channel
+            && self.rank == other.rank
+            && self.bank == other.bank
+    }
+
+    /// Flat row id within the whole system (for content tags).
+    pub fn global_row(&self, cfg: &DramConfig) -> u64 {
+        let rows_per_bank = cfg.rows_per_bank() as u64;
+        let banks = cfg.banks as u64;
+        let ranks = cfg.ranks as u64;
+        (((self.channel as u64 * ranks + self.rank as u64) * banks
+            + self.bank as u64)
+            * rows_per_bank)
+            + self.row as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn cfg() -> DramConfig {
+        DramConfig::default()
+    }
+
+    #[test]
+    fn subarray_decomposition() {
+        let c = cfg();
+        let a = Address { row: 0, ..Default::default() };
+        assert_eq!(a.subarray(&c), 0);
+        let a = Address { row: 511, ..Default::default() };
+        assert_eq!(a.subarray(&c), 0);
+        assert_eq!(a.row_in_subarray(&c), 511);
+        let a = Address { row: 512, ..Default::default() };
+        assert_eq!(a.subarray(&c), 1);
+        assert_eq!(a.row_in_subarray(&c), 0);
+        let a = Address { row: 512 * 15 + 3, ..Default::default() };
+        assert_eq!(a.subarray(&c), 15);
+    }
+
+    #[test]
+    fn hop_counts_match_paper_definition() {
+        let c = cfg();
+        let at = |sa: usize| Address { row: sa * 512, ..Default::default() };
+        // Adjacent subarrays: 1 hop.
+        assert_eq!(at(0).hops_to(&at(1), &c), 1);
+        // Opposite ends of a 16-subarray bank: 15 hops (paper max).
+        assert_eq!(at(0).hops_to(&at(15), &c), 15);
+        assert_eq!(at(15).hops_to(&at(0), &c), 15);
+        assert_eq!(at(4).hops_to(&at(11), &c), 7);
+    }
+
+    #[test]
+    fn global_rows_unique() {
+        let c = cfg();
+        check("global row uniqueness", 300, |g| {
+            let a = Address {
+                channel: 0,
+                rank: 0,
+                bank: g.usize(c.banks),
+                row: g.usize(c.rows_per_bank()),
+                col: 0,
+            };
+            let b = Address {
+                channel: 0,
+                rank: 0,
+                bank: g.usize(c.banks),
+                row: g.usize(c.rows_per_bank()),
+                col: 0,
+            };
+            if a != b {
+                assert_ne!(a.global_row(&c), b.global_row(&c));
+            } else {
+                assert_eq!(a.global_row(&c), b.global_row(&c));
+            }
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Cycle-accurate DRAM device model: geometry, JEDEC timing, command
+//! set (including the RowClone and LISA extensions), and the
+//! bank/subarray state machines with a full timing-constraint checker.
+//!
+//! This is the substrate the paper evaluates on (their Ramulator
+//! configuration), built from scratch — see DESIGN.md inventory S4-S7.
+
+pub mod area;
+pub mod bank;
+pub mod command;
+pub mod geometry;
+pub mod subarray;
+pub mod timing;
+
+pub use bank::{Bank, Rank};
+pub use command::Command;
+pub use geometry::Address;
+pub use timing::{SpeedBin, Timing};

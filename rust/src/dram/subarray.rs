@@ -1,0 +1,78 @@
+//! Per-subarray row-buffer state. LISA is fundamentally a subarray-
+//! level substrate, so the device model tracks each subarray's row
+//! buffer individually (the baseline non-SALP configuration simply
+//! enforces at most one non-precharged subarray per bank).
+
+/// State of one subarray's row buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaState {
+    /// Bitlines precharged to VDD/2; buffer holds nothing.
+    Precharged,
+    /// A row is open (activated) in this subarray.
+    Open { row: usize },
+    /// The row buffer holds latched data but no wordline is raised —
+    /// the state RBM leaves destination/intermediate subarrays in.
+    LatchedOnly,
+}
+
+/// One subarray: buffer state plus the content tag used to verify
+/// data-movement semantics (tags stand in for 8 KB of row data).
+#[derive(Debug, Clone)]
+pub struct Subarray {
+    pub state: SaState,
+    /// Content tag of whatever the row buffer currently holds.
+    pub buffer_tag: Option<u64>,
+}
+
+impl Default for Subarray {
+    fn default() -> Self {
+        Self {
+            state: SaState::Precharged,
+            buffer_tag: None,
+        }
+    }
+}
+
+impl Subarray {
+    pub fn is_precharged(&self) -> bool {
+        self.state == SaState::Precharged
+    }
+
+    pub fn open_row(&self) -> Option<usize> {
+        match self.state {
+            SaState::Open { row } => Some(row),
+            _ => None,
+        }
+    }
+
+    /// Precharge: closes the wordline and clears the buffer.
+    pub fn precharge(&mut self) {
+        self.state = SaState::Precharged;
+        self.buffer_tag = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut sa = Subarray::default();
+        assert!(sa.is_precharged());
+        assert_eq!(sa.open_row(), None);
+
+        sa.state = SaState::Open { row: 7 };
+        sa.buffer_tag = Some(0xAB);
+        assert_eq!(sa.open_row(), Some(7));
+        assert!(!sa.is_precharged());
+
+        sa.state = SaState::LatchedOnly;
+        assert_eq!(sa.open_row(), None);
+        assert!(!sa.is_precharged());
+
+        sa.precharge();
+        assert!(sa.is_precharged());
+        assert_eq!(sa.buffer_tag, None);
+    }
+}

@@ -1,0 +1,206 @@
+//! JEDEC timing parameters (DDR3-1600 / DDR4-2400 speed bins) plus the
+//! LISA extensions derived from the calibrated circuit model.
+//!
+//! All parameters are stored in DRAM bus clock cycles (ceil'd from
+//! nanoseconds, as JEDEC does). Table-1-critical values at DDR3-1600
+//! (tCK = 1.25 ns): tRCD 11, tRP 11, tRAS 28, tCL 11, tBL 4, tCCD 4.
+
+use anyhow::{bail, Result};
+
+use crate::config::Calibration;
+use crate::util::ns_to_cycles;
+
+/// Supported speed bins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpeedBin {
+    Ddr3_1600,
+    Ddr4_2400,
+}
+
+impl SpeedBin {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ddr3-1600" => Self::Ddr3_1600,
+            "ddr4-2400" => Self::Ddr4_2400,
+            _ => bail!("unknown speed bin '{s}' (ddr3-1600|ddr4-2400)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Ddr3_1600 => "ddr3-1600",
+            Self::Ddr4_2400 => "ddr4-2400",
+        }
+    }
+
+    pub fn tck_ns(&self) -> f64 {
+        match self {
+            Self::Ddr3_1600 => 1.25,  // 800 MHz bus, 1600 MT/s
+            Self::Ddr4_2400 => 0.833, // 1200 MHz bus, 2400 MT/s
+        }
+    }
+
+    /// Peak channel bandwidth in GB/s (64-bit channel, DDR).
+    pub fn channel_gbps(&self) -> f64 {
+        match self {
+            Self::Ddr3_1600 => 12.8,
+            Self::Ddr4_2400 => 19.2,
+        }
+    }
+}
+
+/// The full timing parameter set, in cycles.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub tck_ns: f64,
+    pub t_rcd: u64,
+    pub t_rp: u64,
+    pub t_ras: u64,
+    pub t_rc: u64,
+    pub t_cl: u64,
+    pub t_cwl: u64,
+    pub t_bl: u64,
+    pub t_ccd: u64,
+    pub t_rtp: u64,
+    pub t_wr: u64,
+    pub t_wtr: u64,
+    pub t_rtw: u64,
+    pub t_rrd: u64,
+    pub t_faw: u64,
+    pub t_refi: u64,
+    pub t_rfc: u64,
+    // --- LISA extensions (from the calibrated circuit model) ---
+    /// Row buffer movement, per hop.
+    pub t_rbm: u64,
+    /// Precharge with linked precharge units (LISA-LIP).
+    pub t_rp_lip: u64,
+    /// Fast (VILLA) subarray variants.
+    pub t_rcd_fast: u64,
+    pub t_ras_fast: u64,
+    pub t_rp_fast: u64,
+    pub t_rp_fast_lip: u64,
+}
+
+impl Timing {
+    /// Build the timing set for a speed bin, with LISA parameters
+    /// derived from the circuit-model calibration:
+    /// * `t_rbm` is the calibrated (margined) hop latency;
+    /// * `t_rp_lip` scales JEDEC tRP by the circuit-model ratio
+    ///   (linked/single), matching the paper's methodology of applying
+    ///   SPICE-derived deltas to standard timings;
+    /// * fast-subarray timings scale tRCD/tRAS/tRP by the calibrated
+    ///   short-bitline ratios (VILLA-DRAM heterogeneity).
+    pub fn new(bin: SpeedBin, cal: &Calibration) -> Self {
+        let tck = bin.tck_ns();
+        let c = |ns: f64| ns_to_cycles(ns, tck);
+        let (t_rcd_ns, t_rp_ns, t_ras_ns, t_cl_ns, t_cwl_ns) = match bin {
+            SpeedBin::Ddr3_1600 => (13.75, 13.75, 35.0, 13.75, 10.0),
+            SpeedBin::Ddr4_2400 => (14.16, 14.16, 32.0, 14.16, 12.5),
+        };
+        let t_rcd = c(t_rcd_ns);
+        let t_rp = c(t_rp_ns);
+        let t_ras = c(t_ras_ns);
+
+        let lip_ratio = (cal.t_rp_lip_ns / cal.t_rp_circuit_ns).clamp(0.05, 1.0);
+        let t_rp_lip = ((t_rp as f64) * lip_ratio).ceil().max(1.0) as u64;
+        let t_rp_fast = ((t_rp as f64) * cal.fast_rp_ratio).ceil().max(1.0) as u64;
+
+        Self {
+            tck_ns: tck,
+            t_rcd,
+            t_rp,
+            t_ras,
+            t_rc: t_ras + t_rp,
+            t_cl: c(t_cl_ns),
+            t_cwl: c(t_cwl_ns),
+            t_bl: 4,
+            t_ccd: 4,
+            t_rtp: c(7.5),
+            t_wr: c(15.0),
+            t_wtr: c(7.5),
+            t_rtw: c(2.5) + 4, // read-to-write turnaround: tCL - tCWL + tBL + 2
+            t_rrd: c(6.0),
+            t_faw: c(40.0),
+            t_refi: c(7800.0),
+            t_rfc: c(260.0),
+            t_rbm: c(cal.t_rbm_ns).max(1),
+            t_rp_lip,
+            t_rcd_fast: ((t_rcd as f64) * cal.fast_act_ratio).ceil().max(1.0) as u64,
+            t_ras_fast: ((t_ras as f64) * cal.fast_ras_ratio).ceil().max(1.0) as u64,
+            t_rp_fast,
+            t_rp_fast_lip: ((t_rp_fast as f64) * lip_ratio).ceil().max(1.0) as u64,
+        }
+    }
+
+    /// Convert cycles to nanoseconds.
+    pub fn ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.tck_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Timing {
+        Timing::new(SpeedBin::Ddr3_1600, &Calibration::default())
+    }
+
+    #[test]
+    fn ddr3_1600_jedec_values() {
+        let t = t();
+        assert_eq!(t.t_rcd, 11);
+        assert_eq!(t.t_rp, 11);
+        assert_eq!(t.t_ras, 28);
+        assert_eq!(t.t_rc, 39);
+        assert_eq!(t.t_cl, 11);
+        assert_eq!(t.t_bl, 4);
+        assert_eq!(t.t_ccd, 4);
+        assert_eq!(t.t_faw, 32);
+        assert_eq!(t.t_rrd, 5);
+    }
+
+    #[test]
+    fn lisa_timings_from_calibration() {
+        let t = t();
+        // Calibrated tRBM = 5.21 * 1.6 = 8.34 ns -> 7 cycles at 1.25 ns.
+        assert_eq!(t.t_rbm, 7);
+        // LIP ratio = 5.07/13.32 ~ 0.38; tRP 11 -> ceil(4.19) = 5 cycles.
+        assert_eq!(t.t_rp_lip, 5);
+        assert!(t.t_rp_lip < t.t_rp);
+        // Fast subarray strictly faster everywhere.
+        assert!(t.t_rcd_fast < t.t_rcd);
+        assert!(t.t_ras_fast < t.t_ras);
+        assert!(t.t_rp_fast < t.t_rp);
+    }
+
+    #[test]
+    fn paper_anchor_rc_intra_latency() {
+        // RowClone intra-subarray copy = ACT + ACT + PRE
+        // = tRAS + tRAS + tRP = 35 + 35 + 13.75 = 83.75 ns (Table 1).
+        let t = t();
+        let total = t.ns(t.t_ras + t.t_ras + t.t_rp);
+        assert!((total - 83.75).abs() < 0.01, "got {total}");
+    }
+
+    #[test]
+    fn ddr4_bin_parses_and_is_faster_bus() {
+        let t4 = Timing::new(SpeedBin::Ddr4_2400, &Calibration::default());
+        assert!(t4.tck_ns < 1.25);
+        assert_eq!(SpeedBin::parse("ddr4-2400").unwrap(), SpeedBin::Ddr4_2400);
+        assert!(SpeedBin::parse("ddr5-9999").is_err());
+    }
+
+    #[test]
+    fn rbm_beats_channel_bandwidth() {
+        // Paper §2: one RBM moves an 8 KB chip-row's worth per rank at
+        // 26x the DDR4-2400 channel. Check the shape: row_bytes / tRBM
+        // >> channel bandwidth.
+        let t = Timing::new(SpeedBin::Ddr4_2400, &Calibration::default());
+        let rbm_gbps = 8192.0 / t.ns(t.t_rbm); // GB/s = bytes/ns
+        assert!(
+            rbm_gbps > 10.0 * SpeedBin::Ddr4_2400.channel_gbps(),
+            "RBM bandwidth {rbm_gbps} GB/s not >> channel"
+        );
+    }
+}

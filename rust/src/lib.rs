@@ -1,0 +1,50 @@
+//! # LISA: Low-Cost Inter-Linked Subarrays — full-system reproduction
+//!
+//! This crate reproduces the system described in *"LISA: Increasing
+//! Internal Connectivity in DRAM for Fast Data Movement and Low
+//! Latency"* (Chang et al., HPCA 2016 / CS.AR 2018 retrospective) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — a cycle-accurate DRAM + memory
+//!   controller + multi-core simulator (the paper's Ramulator-based
+//!   methodology, built from scratch), with the LISA substrate
+//!   (row-buffer movement), LISA-RISC bulk copy, LISA-VILLA in-DRAM
+//!   caching and LISA-LIP linked precharge as first-class features.
+//! * **Layer 2/1 (python, build-time only)** — a JAX/Pallas circuit
+//!   model of the DRAM bitline analog dynamics (the paper's SPICE
+//!   substitute), AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads those artifacts through PJRT (the `xla`
+//!   crate) and *calibrates* the simulator's LISA timing and energy
+//!   parameters from them. Python never runs on the simulation path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment
+//! index mapping every table/figure of the paper to modules and bench
+//! targets, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lisa::config::SimConfig;
+//! use lisa::sim::engine::Simulation;
+//! use lisa::workloads::mixes;
+//!
+//! let cfg = SimConfig::default();
+//! let wl = mixes::workload_by_name("stream4", &cfg).unwrap();
+//! let mut sim = Simulation::new(cfg, wl);
+//! let report = sim.run();
+//! println!("weighted speedup: {:.3}", report.weighted_speedup_sum());
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod copy;
+pub mod cpu;
+pub mod dram;
+pub mod energy;
+pub mod lisa;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

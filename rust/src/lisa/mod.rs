@@ -1,0 +1,14 @@
+//! The three LISA applications (paper §3):
+//!
+//! * `rbm` — row buffer movement analytics (bandwidth model, §2);
+//! * `villa` — LISA-VILLA in-DRAM caching with heterogeneous
+//!   subarrays (§3.2): hot-row tracking, benefit-based replacement,
+//!   cache-fill copies through LISA-RISC (or RC-InterSA for the
+//!   paper's comparison point);
+//! * `lip` — LISA-LIP linked precharge analytics (§3.3); the timing
+//!   substitution itself lives in the device model
+//!   (`dram::bank`, PRE path).
+
+pub mod lip;
+pub mod rbm;
+pub mod villa;

@@ -1,0 +1,67 @@
+//! Row buffer movement (RBM) bandwidth analytics — experiment E2
+//! (paper §2: RBM moves a row's worth of data at 26x the bandwidth of
+//! a DDR4-2400 channel, 500 GB/s vs 19.2 GB/s).
+
+use crate::config::Calibration;
+use crate::dram::timing::{SpeedBin, Timing};
+
+/// RBM effective bandwidth for moving one rank-level row.
+#[derive(Debug, Clone)]
+pub struct RbmBandwidth {
+    /// Row size moved per hop, bytes (rank-level row: all chips in
+    /// parallel).
+    pub row_bytes: usize,
+    /// One margined hop, nanoseconds (ceil'd to the bus clock).
+    pub hop_ns: f64,
+    /// Effective GB/s (bytes/ns).
+    pub gbps: f64,
+    /// Channel peak bandwidth for comparison.
+    pub channel_gbps: f64,
+    /// The headline ratio.
+    pub speedup: f64,
+}
+
+/// Compute the RBM bandwidth claim for a speed bin.
+pub fn rbm_bandwidth(speed: SpeedBin, cal: &Calibration, row_bytes: usize) -> RbmBandwidth {
+    let t = Timing::new(speed, cal);
+    let hop_ns = t.ns(t.t_rbm);
+    let gbps = row_bytes as f64 / hop_ns; // bytes per ns == GB/s
+    let channel_gbps = speed.channel_gbps();
+    RbmBandwidth {
+        row_bytes,
+        hop_ns,
+        gbps,
+        channel_gbps,
+        speedup: gbps / channel_gbps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbm_bandwidth_far_exceeds_channel() {
+        let r = rbm_bandwidth(SpeedBin::Ddr4_2400, &Calibration::default(), 8192);
+        // Paper: 26x. Our calibrated hop is slightly faster, so we land
+        // higher; the claim's shape is ">= an order of magnitude".
+        assert!(r.speedup > 10.0, "speedup {}", r.speedup);
+        assert!(r.gbps > 400.0, "gbps {}", r.gbps);
+    }
+
+    #[test]
+    fn per_chip_row_is_still_faster_than_channel() {
+        // Even counting only a single chip's 1 KB row slice (no rank
+        // parallelism), RBM beats the channel.
+        let r = rbm_bandwidth(SpeedBin::Ddr4_2400, &Calibration::default(), 1024);
+        assert!(r.speedup > 1.0, "speedup {}", r.speedup);
+    }
+
+    #[test]
+    fn hop_time_uses_margined_calibration() {
+        let cal = Calibration::default();
+        let r = rbm_bandwidth(SpeedBin::Ddr3_1600, &cal, 8192);
+        // hop >= the raw calibrated value (ceil to clock can only add).
+        assert!(r.hop_ns >= cal.t_rbm_ns - 1e-9, "{} < {}", r.hop_ns, cal.t_rbm_ns);
+    }
+}

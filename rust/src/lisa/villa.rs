@@ -1,0 +1,529 @@
+//! LISA-VILLA: in-DRAM caching using heterogeneous (fast) subarrays
+//! (paper §3.2).
+//!
+//! Per bank: `villa_counters` saturating access counters (paper: 1024,
+//! 6 KB of controller storage), halved every epoch to prevent
+//! staleness. At each epoch boundary the `villa_hot_per_epoch` most
+//! frequently accessed row groups are marked hot (paper: 16); a hot
+//! row is cached into a fast-subarray slot *the next time it is
+//! accessed*, by issuing an in-DRAM copy (LISA-RISC — or RC-InterSA
+//! for the paper's Fig. 3 comparison, which shows RowClone's slow
+//! movement makes the whole scheme lose 52.3%).
+//!
+//! Replacement is the benefit-based policy of Lee et al. [TL-DRAM,
+//! HPCA 2013]: each slot counts hits since insertion (halved each
+//! epoch); the minimum-benefit slot is evicted. Dirty slots are
+//! written back (another in-DRAM copy) before the slot is reused.
+//!
+//! Fast-subarray rows are reserved out of the OS-visible address space
+//! (see `controller::mapping::Mapper::with_reserved`), so cache fills
+//! never clobber application data.
+
+use std::collections::HashMap;
+
+use crate::config::{CopyMechanism, SimConfig};
+use crate::controller::request::CopyRequest;
+use crate::dram::geometry::Address;
+
+/// Villa copy ids live in a reserved high range so they never collide
+/// with application request ids.
+pub const VILLA_ID_BASE: u64 = 1 << 62;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Empty,
+    /// Fill copy in flight; translation not active yet.
+    Filling,
+    Valid,
+    /// Dirty eviction writeback in flight.
+    WritingBack,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    app_row: Option<usize>,
+    state: SlotState,
+    benefit: u32,
+    dirty: bool,
+}
+
+#[derive(Debug, Clone)]
+struct VillaBank {
+    counters: Vec<u16>,
+    hot: Vec<bool>,
+    slots: Vec<Slot>,
+    /// app row -> slot index (present for Filling and Valid slots).
+    cached: HashMap<usize, usize>,
+}
+
+/// Aggregate statistics (Fig. 3's hit rate series).
+#[derive(Debug, Clone, Default)]
+pub struct VillaStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub fills: u64,
+    pub writebacks: u64,
+    pub evictions: u64,
+    pub epochs: u64,
+}
+
+impl VillaStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// The LISA-VILLA cache manager (one per memory controller).
+#[derive(Debug, Clone)]
+pub struct VillaManager {
+    mech: CopyMechanism,
+    counters_len: usize,
+    hot_per_epoch: usize,
+    epoch_cycles: u64,
+    fast_rows_per_subarray: usize,
+    rows_per_subarray: usize,
+    slots_per_bank: usize,
+    ranks: usize,
+    banks_per_rank: usize,
+    banks: Vec<VillaBank>,
+    next_epoch: u64,
+    next_copy_id: u64,
+    /// Copy id -> (bank index, slot, what completes).
+    inflight: HashMap<u64, (usize, usize, SlotState)>,
+    pub stats: VillaStats,
+}
+
+impl VillaManager {
+    /// `mech` is the movement mechanism for fills/writebacks: LISA-RISC
+    /// normally, RC-InterSA for the paper's comparison configuration.
+    pub fn new(cfg: &SimConfig, mech: CopyMechanism) -> Self {
+        let slots_per_bank =
+            cfg.lisa.fast_subarrays_per_bank * cfg.lisa.fast_rows_per_subarray;
+        let n_banks = cfg.dram.channels * cfg.dram.ranks * cfg.dram.banks;
+        let bank = VillaBank {
+            counters: vec![0; cfg.lisa.villa_counters],
+            hot: vec![false; cfg.lisa.villa_counters],
+            slots: vec![
+                Slot { app_row: None, state: SlotState::Empty, benefit: 0, dirty: false };
+                slots_per_bank
+            ],
+            cached: HashMap::new(),
+        };
+        Self {
+            mech,
+            counters_len: cfg.lisa.villa_counters,
+            hot_per_epoch: cfg.lisa.villa_hot_per_epoch,
+            epoch_cycles: cfg.lisa.villa_epoch_cycles,
+            fast_rows_per_subarray: cfg.lisa.fast_rows_per_subarray,
+            rows_per_subarray: cfg.dram.rows_per_subarray,
+            slots_per_bank,
+            ranks: cfg.dram.ranks,
+            banks_per_rank: cfg.dram.banks,
+            banks: vec![bank; n_banks],
+            next_epoch: cfg.lisa.villa_epoch_cycles,
+            next_copy_id: VILLA_ID_BASE,
+            inflight: HashMap::new(),
+            stats: VillaStats::default(),
+        }
+    }
+
+    /// Number of rows per bank that must be reserved from the address
+    /// map (the whole fast subarrays).
+    pub fn reserved_rows(cfg: &SimConfig) -> usize {
+        if cfg.lisa.villa {
+            cfg.lisa.fast_subarrays_per_bank * cfg.dram.rows_per_subarray
+        } else {
+            0
+        }
+    }
+
+    fn bank_idx(&self, a: &Address) -> usize {
+        (a.channel * self.ranks + a.rank) * self.banks_per_rank + a.bank
+    }
+
+    /// Physical row of slot `i` (slots fill the usable rows of each
+    /// fast subarray; fast subarrays sit at the low subarray indices).
+    fn slot_row(&self, i: usize) -> usize {
+        (i / self.fast_rows_per_subarray) * self.rows_per_subarray
+            + (i % self.fast_rows_per_subarray)
+    }
+
+    /// Observe an access; returns the (possibly redirected) address
+    /// plus any cache-management copies to enqueue.
+    ///
+    /// `allow_fill` is the controller's backpressure signal: cache
+    /// fills are best-effort background work and are skipped (to be
+    /// retried on a later access) while the copy engine is busy —
+    /// otherwise a slow movement mechanism (RC-InterSA) accumulates an
+    /// unbounded fill queue and starves demand traffic entirely.
+    pub fn on_access(
+        &mut self,
+        addr: &Address,
+        is_write: bool,
+        now: u64,
+        core: usize,
+        allow_fill: bool,
+    ) -> (Address, Vec<CopyRequest>) {
+        self.stats.accesses += 1;
+        let bi = self.bank_idx(addr);
+        let cidx = addr.row % self.counters_len;
+        let counters_len = self.counters_len;
+        let _ = counters_len;
+        {
+            let b = &mut self.banks[bi];
+            b.counters[cidx] = b.counters[cidx].saturating_add(1);
+        }
+
+        // Served from the cache?
+        if let Some(&slot_idx) = self.banks[bi].cached.get(&addr.row) {
+            if self.banks[bi].slots[slot_idx].state == SlotState::Valid {
+                let slot_row = self.slot_row(slot_idx);
+                let b = &mut self.banks[bi];
+                let s = &mut b.slots[slot_idx];
+                s.benefit = s.benefit.saturating_add(1);
+                s.dirty |= is_write;
+                self.stats.hits += 1;
+                let mut redirected = *addr;
+                redirected.row = slot_row;
+                return (redirected, vec![]);
+            }
+            // Fill still in flight: serve from the original location.
+            return (*addr, vec![]);
+        }
+
+        // Hot and uncached: insert on this access (paper: "cache them
+        // when they are accessed the next time").
+        let mut copies = vec![];
+        if allow_fill && self.banks[bi].hot[cidx] {
+            copies = self.try_insert(addr, now, core);
+        }
+        (*addr, copies)
+    }
+
+    fn try_insert(&mut self, addr: &Address, now: u64, core: usize) -> Vec<CopyRequest> {
+        // Pick a victim: an empty slot, else the min-benefit Valid one.
+        let bi = self.bank_idx(addr);
+        let slot_idx = {
+            let b = &self.banks[bi];
+            match b.slots.iter().position(|s| s.state == SlotState::Empty) {
+                Some(i) => Some(i),
+                None => b
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| s.state == SlotState::Valid)
+                    .min_by_key(|(_, s)| s.benefit)
+                    .map(|(i, _)| i),
+            }
+        };
+        let Some(slot_idx) = slot_idx else {
+            return vec![]; // everything in transition; retry later
+        };
+        let slot_row = self.slot_row(slot_idx);
+        let mk_addr = |row: usize| Address { row, col: 0, ..*addr };
+
+        let b = &mut self.banks[bi];
+        let victim = &mut b.slots[slot_idx];
+        match victim.state {
+            SlotState::Valid if victim.dirty => {
+                // Write the dirty slot back first; the insert will be
+                // retried on a later access.
+                let old_row = victim.app_row.expect("valid slot has a row");
+                victim.state = SlotState::WritingBack;
+                let id = self.next_copy_id;
+                self.next_copy_id += 1;
+                self.inflight.insert(id, (bi, slot_idx, SlotState::WritingBack));
+                self.stats.writebacks += 1;
+                vec![CopyRequest {
+                    id,
+                    core,
+                    src: mk_addr(slot_row),
+                    dst: mk_addr(old_row),
+                    rows: 1,
+                    mechanism: self.mech,
+                    arrive: now,
+                }]
+            }
+            SlotState::Valid | SlotState::Empty => {
+                if let Some(old) = victim.app_row.take() {
+                    b.cached.remove(&old);
+                    self.stats.evictions += 1;
+                }
+                let b = &mut self.banks[bi];
+                b.slots[slot_idx] = Slot {
+                    app_row: Some(addr.row),
+                    state: SlotState::Filling,
+                    benefit: 0,
+                    dirty: false,
+                };
+                b.cached.insert(addr.row, slot_idx);
+                let id = self.next_copy_id;
+                self.next_copy_id += 1;
+                self.inflight.insert(id, (bi, slot_idx, SlotState::Filling));
+                self.stats.fills += 1;
+                vec![CopyRequest {
+                    id,
+                    core,
+                    src: mk_addr(addr.row),
+                    dst: mk_addr(slot_row),
+                    rows: 1,
+                    mechanism: self.mech,
+                    arrive: now,
+                }]
+            }
+            _ => vec![],
+        }
+    }
+
+    /// A villa-issued copy completed.
+    pub fn on_copy_done(&mut self, copy_id: u64) {
+        let Some((bi, slot_idx, kind)) = self.inflight.remove(&copy_id) else {
+            return;
+        };
+        let b = &mut self.banks[bi];
+        let s = &mut b.slots[slot_idx];
+        match kind {
+            SlotState::Filling => {
+                if s.state == SlotState::Filling {
+                    s.state = SlotState::Valid;
+                }
+            }
+            SlotState::WritingBack => {
+                if let Some(old) = s.app_row.take() {
+                    b.cached.remove(&old);
+                    self.stats.evictions += 1;
+                }
+                *s = Slot {
+                    app_row: None,
+                    state: SlotState::Empty,
+                    benefit: 0,
+                    dirty: false,
+                };
+            }
+            _ => {}
+        }
+    }
+
+    /// Is a villa copy id?
+    pub fn owns_copy(&self, id: u64) -> bool {
+        id >= VILLA_ID_BASE
+    }
+
+    /// Drop a row's cached copy without writeback (used when a bulk
+    /// copy overwrites the row: the cached data would go stale).
+    pub fn invalidate(&mut self, addr: &Address) {
+        let bi = self.bank_idx(addr);
+        let b = &mut self.banks[bi];
+        if let Some(slot_idx) = b.cached.remove(&addr.row) {
+            b.slots[slot_idx] = Slot {
+                app_row: None,
+                state: SlotState::Empty,
+                benefit: 0,
+                dirty: false,
+            };
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Epoch maintenance; call every cycle (cheap when not due).
+    pub fn tick(&mut self, now: u64) {
+        if now < self.next_epoch {
+            return;
+        }
+        self.next_epoch = now + self.epoch_cycles;
+        self.stats.epochs += 1;
+        for b in self.banks.iter_mut() {
+            // Mark the top-N counters hot, then halve everything.
+            let mut idx: Vec<usize> = (0..b.counters.len()).collect();
+            idx.sort_unstable_by_key(|&i| std::cmp::Reverse(b.counters[i]));
+            for h in b.hot.iter_mut() {
+                *h = false;
+            }
+            for &i in idx.iter().take(self.hot_per_epoch) {
+                if b.counters[i] > 0 {
+                    b.hot[i] = true;
+                }
+            }
+            for c in b.counters.iter_mut() {
+                *c >>= 1;
+            }
+            for s in b.slots.iter_mut() {
+                s.benefit >>= 1;
+            }
+        }
+    }
+
+    /// Slots per bank (for reports).
+    pub fn slots_per_bank(&self) -> usize {
+        self.slots_per_bank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn villa() -> (VillaManager, SimConfig) {
+        let mut cfg = SimConfig::default();
+        cfg.lisa.villa = true;
+        cfg.lisa.risc = true;
+        cfg.lisa.villa_epoch_cycles = 1000;
+        // Fewer slots than hot-rows-per-epoch so replacement tests can
+        // fill the cache within one epoch.
+        cfg.lisa.fast_rows_per_subarray = 4;
+        (VillaManager::new(&cfg, CopyMechanism::LisaRisc), cfg)
+    }
+
+    fn addr(row: usize) -> Address {
+        Address { channel: 0, rank: 0, bank: 0, row, col: 0 }
+    }
+
+    #[test]
+    fn cold_rows_are_not_cached() {
+        let (mut v, _) = villa();
+        let (a, copies) = v.on_access(&addr(600), false, 0, 0, true);
+        assert_eq!(a.row, 600);
+        assert!(copies.is_empty());
+        assert_eq!(v.stats.hits, 0);
+    }
+
+    #[test]
+    fn hot_row_cached_after_epoch_and_hits_redirect() {
+        let (mut v, _) = villa();
+        // Make row 600 hot during epoch 0.
+        for _ in 0..50 {
+            v.on_access(&addr(600), false, 10, 0, true);
+        }
+        v.tick(1000); // epoch boundary: row 600's counter marked hot
+        // Next access triggers the fill copy.
+        let (_, copies) = v.on_access(&addr(600), false, 1001, 0, true);
+        assert_eq!(copies.len(), 1);
+        let c = &copies[0];
+        assert_eq!(c.src.row, 600);
+        assert!(c.dst.row < 32, "slot must be in the fast subarray");
+        assert_eq!(c.mechanism, CopyMechanism::LisaRisc);
+        // Until the copy completes, accesses still go to the slow row.
+        let (a, _) = v.on_access(&addr(600), false, 1002, 0, true);
+        assert_eq!(a.row, 600);
+        // Completion activates the translation.
+        v.on_copy_done(c.id);
+        let (a, _) = v.on_access(&addr(600), false, 1003, 0, true);
+        assert_eq!(a.row, c.dst.row);
+        assert_eq!(v.stats.hits, 1);
+        assert!(v.stats.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back_first() {
+        let (mut v, cfg) = villa();
+        let slots = v.slots_per_bank();
+        // Fill every slot with a distinct hot row, dirty them.
+        for s in 0..slots {
+            let row = 600 + s * 7;
+            for _ in 0..50 {
+                v.on_access(&addr(row), false, 10, 0, true);
+            }
+        }
+        v.tick(1000);
+        let mut ids = vec![];
+        for s in 0..slots {
+            let row = 600 + s * 7;
+            let (_, copies) = v.on_access(&addr(row), false, 1001, 0, true);
+            assert_eq!(copies.len(), 1, "slot {s}");
+            ids.push(copies[0].id);
+        }
+        for id in ids {
+            v.on_copy_done(id);
+        }
+        // Dirty them via writes (now redirected).
+        for s in 0..slots {
+            let row = 600 + s * 7;
+            let (a, _) = v.on_access(&addr(row), true, 1100, 0, true);
+            assert!(a.row < VillaManager::reserved_rows(&cfg));
+        }
+        // Make a NEW row hot; inserting it must evict -> writeback.
+        for _ in 0..200 {
+            v.on_access(&addr(5000), false, 1200, 0, true);
+        }
+        v.tick(2000);
+        let (_, copies) = v.on_access(&addr(5000), false, 2001, 0, true);
+        assert_eq!(copies.len(), 1);
+        let wb = &copies[0];
+        // Writeback goes fast-slot -> app row.
+        assert!(wb.src.row < 32);
+        assert!(wb.dst.row >= 512);
+        assert_eq!(v.stats.writebacks, 1);
+        // After the writeback completes, the next access inserts.
+        v.on_copy_done(wb.id);
+        let (_, copies) = v.on_access(&addr(5000), false, 2002, 0, true);
+        assert_eq!(copies.len(), 1);
+        assert_eq!(copies[0].src.row, 5000);
+    }
+
+    #[test]
+    fn benefit_based_replacement_picks_least_useful() {
+        let (mut v, _) = villa();
+        let slots = v.slots_per_bank();
+        // Insert `slots` rows, give them different hit counts.
+        for s in 0..slots {
+            let row = 600 + s;
+            for _ in 0..50 {
+                v.on_access(&addr(row), false, 10, 0, true);
+            }
+        }
+        v.tick(1000);
+        let mut ids = vec![];
+        for s in 0..slots {
+            let (_, c) = v.on_access(&addr(600 + s), false, 1001, 0, true);
+            ids.push(c[0].id);
+        }
+        for id in ids {
+            v.on_copy_done(id);
+        }
+        // Row 600 gets many hits; 601 gets none.
+        for _ in 0..20 {
+            v.on_access(&addr(600), false, 1100, 0, true);
+        }
+        // New hot row must evict the zero-benefit victim (clean).
+        for _ in 0..200 {
+            v.on_access(&addr(9000), false, 1200, 0, true);
+        }
+        v.tick(2000);
+        let (_, copies) = v.on_access(&addr(9000), false, 2001, 0, true);
+        assert_eq!(copies.len(), 1);
+        v.on_copy_done(copies[0].id);
+        // 600 must still hit; 601 must miss.
+        let (a600, _) = v.on_access(&addr(600), false, 2100, 0, true);
+        assert!(a600.row < 32, "high-benefit row evicted");
+        let (a601, _) = v.on_access(&addr(601), false, 2100, 0, true);
+        assert_eq!(a601.row, 601, "zero-benefit row should have been evicted");
+    }
+
+    #[test]
+    fn counters_halve_each_epoch() {
+        let (mut v, _) = villa();
+        for _ in 0..40 {
+            v.on_access(&addr(600), false, 1, 0, true);
+        }
+        let bi = 0;
+        let cidx = 600 % 1024;
+        assert_eq!(v.banks[bi].counters[cidx], 40);
+        v.tick(1000);
+        assert_eq!(v.banks[bi].counters[cidx], 20);
+        assert_eq!(v.stats.epochs, 1);
+    }
+
+    #[test]
+    fn reserved_rows_matches_fast_geometry() {
+        let (_, cfg) = villa();
+        assert_eq!(VillaManager::reserved_rows(&cfg), 512);
+        let mut off = cfg.clone();
+        off.lisa.villa = false;
+        assert_eq!(VillaManager::reserved_rows(&off), 0);
+    }
+}

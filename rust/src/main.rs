@@ -1,0 +1,243 @@
+//! `lisa` — CLI for the LISA reproduction: calibration, single
+//! workload runs, and the paper's experiments (E1-E8).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use lisa::cli::Args;
+use lisa::config::SimConfig;
+use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
+use lisa::sim::engine::{run_workload, weighted_speedup};
+use lisa::sim::experiments as exp;
+use lisa::util::bench::Table;
+use lisa::workloads::mixes;
+
+const USAGE: &str = "\
+lisa — LISA (Low-Cost Inter-Linked Subarrays) full-system reproduction
+
+USAGE: lisa <command> [options]
+
+COMMANDS
+  calibrate   --artifacts DIR [--out FILE]   run the circuit model via PJRT,
+                                             write calibration.toml
+  run         --workload NAME [--config F] [--requests N] [--ws]
+  list-workloads
+  table1      [--config F]                   E1: 8 KB copy latency/energy
+  rbm         E2: RBM bandwidth vs channel
+  lip         E3: linked precharge latency
+  fig3        [--requests N] [--mixes N]     E4: LISA-VILLA
+  fig4        [--requests N] [--mixes N]     E5/E6: combined speedups
+  lip-system  [--requests N] [--mixes N]     E7: LIP system-level
+  area        E8: die area overhead
+";
+
+fn load_config(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => SimConfig::from_file(Path::new(path))?,
+        None => SimConfig::default(),
+    };
+    // Overlay calibration.toml if present (produced by `lisa calibrate`).
+    let cal_path = Path::new(args.opt_or("calibration", "artifacts/calibration.toml"));
+    if cal_path.exists() {
+        let doc = lisa::config::minitoml::Document::parse(&std::fs::read_to_string(
+            cal_path,
+        )?)?;
+        cfg.apply(&doc)?;
+    }
+    if let Some(n) = args.opt_u64("requests")? {
+        cfg.requests_per_core = n;
+    }
+    if let Some(s) = args.opt_u64("seed")? {
+        cfg.seed = s;
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let Some(cmd) = args.subcommand.clone() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "calibrate" => cmd_calibrate(&args),
+        "run" => cmd_run(&args),
+        "list-workloads" => {
+            let cfg = SimConfig::default();
+            for w in mixes::all_mixes(&cfg) {
+                println!("{}", w.name);
+            }
+            Ok(())
+        }
+        "table1" => cmd_table1(&args),
+        "rbm" => {
+            let cfg = load_config(&args)?;
+            let r = exp::rbm_report(&cfg.calibration);
+            println!(
+                "RBM: {} B/hop in {:.2} ns = {:.0} GB/s vs channel {:.1} GB/s -> {:.1}x \
+                 (paper: 500 GB/s vs 19.2 GB/s, 26x)",
+                r.row_bytes, r.hop_ns, r.gbps, r.channel_gbps, r.speedup
+            );
+            Ok(())
+        }
+        "lip" => {
+            let cfg = load_config(&args)?;
+            let r = exp::lip_circuit_report(&cfg.calibration);
+            println!(
+                "LIP precharge: {:.2} ns vs baseline {:.2} ns = {:.2}x \
+                 (paper: 5 ns vs 13 ns, 2.6x); tRP {} -> {} cycles",
+                r.t_rp_lip_ns, r.t_rp_circuit_ns, r.speedup, r.t_rp_cycles, r.t_rp_lip_cycles
+            );
+            Ok(())
+        }
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "lip-system" => cmd_lip_system(&args),
+        "area" => {
+            let cfg = load_config(&args)?;
+            let r = exp::area_report(&cfg);
+            println!(
+                "LISA area overhead: {:.3}% iso transistors ({} devices) + {:.3}% control \
+                 = {:.3}% total (paper: 0.8%)",
+                r.iso_fraction * 100.0,
+                r.n_iso_transistors,
+                r.control_fraction * 100.0,
+                r.total_fraction * 100.0
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let dir = Path::new(args.opt_or("artifacts", "artifacts"));
+    let out = args.opt_or("out", "artifacts/calibration.toml");
+    let runtime = Runtime::new(dir)?;
+    eprintln!("PJRT platform: {}", runtime.platform());
+    let cal = calibrate(&runtime, &CalibrationInputs::default())?;
+    println!(
+        "calibrated: tRBM={:.2} ns  tRP(lip)={:.2} ns  tRP(circuit)={:.2} ns  \
+         fast ratios act/ras/rp = {:.2}/{:.2}/{:.2}",
+        cal.t_rbm_ns,
+        cal.t_rp_lip_ns,
+        cal.t_rp_circuit_ns,
+        cal.fast_act_ratio,
+        cal.fast_ras_ratio,
+        cal.fast_rp_ratio
+    );
+    std::fs::write(out, SimConfig::calibration_toml(&cal))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.opt_or("workload", "stream4");
+    let wl = mixes::workload_by_name(name, &cfg)?;
+    if args.has_flag("ws") {
+        let (ws, report) = weighted_speedup(&cfg, &wl);
+        println!("workload={name} config={} WS={ws:.3}", report.config_name);
+        print_report(&report);
+    } else {
+        let report = run_workload(&cfg, &wl);
+        print_report(&report);
+    }
+    Ok(())
+}
+
+fn print_report(r: &lisa::metrics::RunReport) {
+    println!(
+        "workload={} config={} cycles={} reads={} writes={} copies={}",
+        r.workload, r.config_name, r.dram_cycles, r.reads, r.writes, r.copies
+    );
+    println!(
+        "  IPC={:?} (sum {:.3})  read-lat={:.1} cyc  row-hit={:.1}%  villa-hit={:.1}%  \
+         lip-cov={:.1}%",
+        r.ipc.iter().map(|i| (i * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+        r.ipc_sum(),
+        r.avg_read_latency_cycles,
+        r.row_hit_rate * 100.0,
+        r.villa_hit_rate * 100.0,
+        r.lip_coverage * 100.0
+    );
+    println!(
+        "  energy: total {:.1} uJ (dynamic {:.1}, background {:.1}, rbm {:.3})",
+        r.energy.total,
+        r.energy.dynamic_uj(),
+        r.energy.background_uj,
+        r.energy.rbm_uj
+    );
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rows = exp::table1(&cfg.calibration)?;
+    let mut t = Table::new(&[
+        "mechanism",
+        "paper ns",
+        "ours ns",
+        "paper uJ",
+        "ours uJ",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.label,
+            format!("{:.2}", r.paper_latency_ns),
+            format!("{:.2}", r.latency_ns),
+            format!("{:.3}", r.paper_energy_uj),
+            format!("{:.3}", r.energy_uj),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
+    let mixes_n = args.opt_usize("mixes")?.unwrap_or(8);
+    let rows = exp::fig3(requests, mixes_n);
+    let mut t = Table::new(&["workload", "villa +%", "hit rate %", "rc-inter +%"]);
+    for r in &rows {
+        t.row(&[
+            r.workload.clone(),
+            format!("{:+.1}", r.villa_improvement * 100.0),
+            format!("{:.1}", r.villa_hit_rate * 100.0),
+            format!("{:+.1}", r.rc_inter_improvement * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
+    let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
+    let cmps = exp::fig4(requests, mixes_n);
+    let mut t = Table::new(&["config", "mean WS +%", "geomean x", "max +%", "energy -%"]);
+    for c in &cmps {
+        t.row(&[
+            c.name.clone(),
+            format!("{:+.1}", c.mean_ws_improvement() * 100.0),
+            format!("{:.3}", c.geomean_speedup()),
+            format!("{:+.1}", c.max_ws_improvement() * 100.0),
+            format!("{:.1}", c.mean_energy_reduction() * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(paper Fig. 4: RISC +59.6%, +VILLA +16.5% over RISC, +LIP +8.8% over RISC+VILLA, all +94.8%, energy -49%)");
+    Ok(())
+}
+
+fn cmd_lip_system(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
+    let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
+    let c = exp::lip_system(requests, mixes_n);
+    println!(
+        "LISA-LIP: mean WS improvement {:+.1}% across {} mixes (paper: +10.3%)",
+        c.mean_ws_improvement() * 100.0,
+        c.ws_improvements.len()
+    );
+    Ok(())
+}

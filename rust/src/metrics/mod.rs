@@ -1,0 +1,110 @@
+//! System-level metrics: IPC, weighted speedup (the paper's
+//! multi-programmed metric [Snavely & Tullsen, Eyerman & Eeckhout]),
+//! and the experiment report structures.
+
+use crate::energy::EnergyBreakdown;
+use crate::util::stats::geomean;
+
+/// Result of simulating one workload on one configuration.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub workload: String,
+    pub config_name: String,
+    /// Per-core instructions-per-cycle (CPU cycles).
+    pub ipc: Vec<f64>,
+    /// DRAM cycles simulated.
+    pub dram_cycles: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub copies: u64,
+    pub avg_read_latency_cycles: f64,
+    pub row_hit_rate: f64,
+    pub villa_hit_rate: f64,
+    pub lip_coverage: f64,
+    pub energy: EnergyBreakdown,
+}
+
+impl RunReport {
+    /// Weighted speedup against per-core alone-run IPCs:
+    /// WS = sum_i IPC_shared,i / IPC_alone,i.
+    pub fn weighted_speedup(&self, alone_ipc: &[f64]) -> f64 {
+        self.ipc
+            .iter()
+            .zip(alone_ipc)
+            .map(|(s, a)| if *a > 0.0 { s / a } else { 0.0 })
+            .sum()
+    }
+
+    pub fn ipc_sum(&self) -> f64 {
+        self.ipc.iter().sum()
+    }
+
+    /// Convenience for single-config summaries where WS is taken
+    /// against itself (== number of cores when alone == shared).
+    pub fn weighted_speedup_sum(&self) -> f64 {
+        self.ipc_sum()
+    }
+}
+
+/// Comparison of a mechanism against a baseline across workloads.
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    pub name: String,
+    /// Per-workload WS improvement fractions (e.g. 0.25 = +25%).
+    pub ws_improvements: Vec<f64>,
+    /// Per-workload energy reduction fractions.
+    pub energy_reductions: Vec<f64>,
+}
+
+impl Comparison {
+    pub fn mean_ws_improvement(&self) -> f64 {
+        if self.ws_improvements.is_empty() {
+            return 0.0;
+        }
+        self.ws_improvements.iter().sum::<f64>() / self.ws_improvements.len() as f64
+    }
+
+    pub fn geomean_speedup(&self) -> f64 {
+        let ratios: Vec<f64> = self.ws_improvements.iter().map(|i| 1.0 + i).collect();
+        geomean(&ratios)
+    }
+
+    pub fn max_ws_improvement(&self) -> f64 {
+        self.ws_improvements.iter().cloned().fold(f64::MIN, f64::max)
+    }
+
+    pub fn mean_energy_reduction(&self) -> f64 {
+        if self.energy_reductions.is_empty() {
+            return 0.0;
+        }
+        self.energy_reductions.iter().sum::<f64>() / self.energy_reductions.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_speedup_math() {
+        let r = RunReport { ipc: vec![1.0, 2.0], ..Default::default() };
+        let ws = r.weighted_speedup(&[2.0, 2.0]);
+        assert!((ws - 1.5).abs() < 1e-12);
+        // Degenerate alone IPC contributes zero, not a panic.
+        let ws = r.weighted_speedup(&[0.0, 2.0]);
+        assert!((ws - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comparison_aggregates() {
+        let c = Comparison {
+            name: "x".into(),
+            ws_improvements: vec![0.10, 0.30],
+            energy_reductions: vec![0.5, 0.3],
+        };
+        assert!((c.mean_ws_improvement() - 0.20).abs() < 1e-12);
+        assert!((c.mean_energy_reduction() - 0.40).abs() < 1e-12);
+        assert!((c.geomean_speedup() - (1.1f64 * 1.3).sqrt()).abs() < 1e-12);
+        assert!((c.max_ws_improvement() - 0.30).abs() < 1e-12);
+    }
+}

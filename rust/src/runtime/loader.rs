@@ -1,0 +1,138 @@
+//! HLO artifact loading and execution via the PJRT CPU client.
+//!
+//! Interchange format is HLO *text*, never serialized protos: jax
+//! >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+/// Scalar-vector length shared with python/compile/kernels/bitline.py.
+pub const NSCALARS: usize = 16;
+/// Bitline lanes baked into the artifacts (python model.N_LANES).
+pub const N_LANES: usize = 4096;
+
+/// Outputs of one circuit phase over the lane population.
+#[derive(Debug, Clone)]
+pub struct PhaseOutputs {
+    pub v_a: Vec<f32>,
+    pub v_b: Vec<f32>,
+    /// First sense-threshold crossing per lane, ns.
+    pub t_sense: Vec<f32>,
+    /// Last time outside the settle tolerance per lane, ns.
+    pub t_settle: Vec<f32>,
+    /// Energy per lane, fJ.
+    pub energy: Vec<f32>,
+}
+
+impl PhaseOutputs {
+    pub fn worst_settle_ns(&self) -> f64 {
+        self.t_settle.iter().cloned().fold(0.0f32, f32::max) as f64
+    }
+
+    pub fn worst_sense_ns(&self) -> f64 {
+        self.t_sense.iter().cloned().fold(0.0f32, f32::max) as f64
+    }
+
+    pub fn mean_energy_fj(&self) -> f64 {
+        if self.energy.is_empty() {
+            return 0.0;
+        }
+        self.energy.iter().map(|&e| e as f64).sum::<f64>() / self.energy.len() as f64
+    }
+}
+
+/// One compiled phase entry point.
+pub struct PhaseExecutable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PhaseExecutable {
+    /// Execute with the uniform signature
+    /// (va0[n], vb0[n], gmul[n], cmul[n], scalars[16]) -> 5 x f32[n].
+    pub fn run(
+        &self,
+        va0: &[f32],
+        vb0: &[f32],
+        gmul: &[f32],
+        cmul: &[f32],
+        scalars: &[f32; NSCALARS],
+    ) -> Result<PhaseOutputs> {
+        let args = [
+            xla::Literal::vec1(va0),
+            xla::Literal::vec1(vb0),
+            xla::Literal::vec1(gmul),
+            xla::Literal::vec1(cmul),
+            xla::Literal::vec1(&scalars[..]),
+        ];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 5 {
+            bail!("{}: expected 5 outputs, got {}", self.name, parts.len());
+        }
+        let mut it = parts.into_iter();
+        Ok(PhaseOutputs {
+            v_a: it.next().unwrap().to_vec::<f32>()?,
+            v_b: it.next().unwrap().to_vec::<f32>()?,
+            t_sense: it.next().unwrap().to_vec::<f32>()?,
+            t_settle: it.next().unwrap().to_vec::<f32>()?,
+            energy: it.next().unwrap().to_vec::<f32>()?,
+        })
+    }
+}
+
+/// The PJRT runtime: one CPU client + compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        if !artifacts_dir.is_dir() {
+            bail!(
+                "artifacts directory {} not found — run `make artifacts`",
+                artifacts_dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one phase artifact (`<name>.hlo.txt`).
+    pub fn load(&self, name: &str) -> Result<PhaseExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        Ok(PhaseExecutable { name: name.to_string(), exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration with real artifacts lives in rust/tests/; here we
+    /// only check the error path (missing directory).
+    #[test]
+    fn missing_artifacts_dir_is_a_clear_error() {
+        match Runtime::new(Path::new("/nonexistent/artifacts")) {
+            Ok(_) => panic!("expected an error"),
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+        }
+    }
+}

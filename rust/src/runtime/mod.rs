@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by the
+//! JAX/Pallas circuit model (`python/compile/aot.py`) and executes
+//! them through the `xla` crate to calibrate the simulator's LISA
+//! timing and energy parameters.
+//!
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt`.
+
+pub mod calibrate;
+pub mod loader;
+
+pub use calibrate::{calibrate, CalibrationInputs};
+pub use loader::{PhaseExecutable, PhaseOutputs, Runtime};

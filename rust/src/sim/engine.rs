@@ -1,0 +1,240 @@
+//! The end-to-end simulation loop: trace-driven cores with their cache
+//! hierarchy in front of the memory controller and DRAM device, run to
+//! a per-core request budget.
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::controller::Controller;
+use crate::cpu::cache::Hierarchy;
+use crate::cpu::core::Core;
+use crate::energy::EnergyModel;
+use crate::lisa::lip::lip_coverage;
+use crate::metrics::RunReport;
+use crate::workloads::Workload;
+
+/// One simulation instance (one workload on one configuration).
+pub struct Simulation {
+    pub cfg: SimConfig,
+    pub ctrl: Controller,
+    pub hier: Hierarchy,
+    pub cores: Vec<Core>,
+    workload_name: String,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig, workload: Workload) -> Self {
+        // Trace length: enough distinct ops before cycling to defeat
+        // trivial trace-level caching, bounded to keep memory sane.
+        let n_ops = (cfg.requests_per_core as usize).clamp(1_000, 200_000);
+        let traces = workload.traces(&cfg, n_ops);
+        let ctrl = Controller::new(cfg.clone());
+        let hier = Hierarchy::new(&cfg.cpu);
+        let cores = traces
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| Core::new(i, t, &cfg.cpu, cfg.requests_per_core))
+            .collect();
+        Self {
+            cfg,
+            ctrl,
+            hier,
+            cores,
+            workload_name: workload.name,
+        }
+    }
+
+    /// Build a simulation where only `active_core` executes its trace
+    /// (the paper's "alone" runs for weighted speedup).
+    pub fn new_alone(cfg: SimConfig, workload: &Workload, active_core: usize) -> Self {
+        let solo = Workload {
+            name: format!("{}@core{active_core}", workload.name),
+            cores: vec![workload.cores[active_core]],
+        };
+        Self::new(cfg, solo)
+    }
+
+    /// Run to completion (all cores drained their budget) or the
+    /// configured cycle cap; returns the report.
+    pub fn run(&mut self) -> RunReport {
+        self.try_run().expect("simulation failed")
+    }
+
+    pub fn try_run(&mut self) -> Result<RunReport> {
+        let ratio = self.cfg.cpu.clock_ratio;
+        let mut cycles: u64 = 0;
+        while cycles < self.cfg.max_cycles {
+            self.ctrl.tick()?;
+            cycles += 1;
+            for c in self.ctrl.drain_completions() {
+                let core = &mut self.cores[c.core];
+                if c.was_copy {
+                    core.on_copy_complete(c.id);
+                } else {
+                    core.on_mem_complete(c.id);
+                }
+            }
+            let mut all_done = true;
+            for core in self.cores.iter_mut() {
+                for _ in 0..ratio {
+                    core.cycle(&mut self.hier, &mut self.ctrl);
+                }
+                all_done &= core.finished();
+            }
+            if all_done {
+                break;
+            }
+        }
+        Ok(self.report(cycles))
+    }
+
+    fn report(&self, cycles: u64) -> RunReport {
+        let energy_model = EnergyModel::from_calibration(&self.cfg.calibration);
+        let tck = self.ctrl.dev.timing.tck_ns;
+        RunReport {
+            workload: self.workload_name.clone(),
+            config_name: config_name(&self.cfg),
+            ipc: self.cores.iter().map(|c| c.ipc()).collect(),
+            dram_cycles: cycles,
+            reads: self.ctrl.stats.reads_done,
+            writes: self.ctrl.stats.writes_done,
+            copies: self.ctrl.stats.copies_done,
+            avg_read_latency_cycles: self.ctrl.stats.avg_read_latency(),
+            row_hit_rate: self.ctrl.stats.row_hit_rate(),
+            villa_hit_rate: self
+                .ctrl
+                .villa
+                .as_ref()
+                .map(|v| v.stats.hit_rate())
+                .unwrap_or(0.0),
+            lip_coverage: lip_coverage(&self.ctrl.dev.stats),
+            energy: energy_model.breakdown_uj(&self.ctrl.dev.stats, cycles, tck),
+        }
+    }
+}
+
+/// Human-readable configuration label for reports.
+pub fn config_name(cfg: &SimConfig) -> String {
+    let mut parts = vec![cfg.copy_mechanism.name().to_string()];
+    if cfg.lisa.villa {
+        parts.push("villa".into());
+    }
+    if cfg.lisa.lip {
+        parts.push("lip".into());
+    }
+    parts.join("+")
+}
+
+/// Run a workload on a config.
+pub fn run_workload(cfg: &SimConfig, workload: &Workload) -> RunReport {
+    Simulation::new(cfg.clone(), workload.clone()).run()
+}
+
+/// Alone-run IPCs for every core of a workload on a config (the
+/// denominator of weighted speedup).
+pub fn alone_ipcs(cfg: &SimConfig, workload: &Workload) -> Vec<f64> {
+    (0..workload.cores.len())
+        .map(|i| {
+            let mut sim = Simulation::new_alone(cfg.clone(), workload, i);
+            sim.run().ipc[0]
+        })
+        .collect()
+}
+
+/// Weighted speedup of a workload on a config (shared run over alone
+/// runs on the same config).
+pub fn weighted_speedup(cfg: &SimConfig, workload: &Workload) -> (f64, RunReport) {
+    let alone = alone_ipcs(cfg, workload);
+    let shared = run_workload(cfg, workload);
+    (shared.weighted_speedup(&alone), shared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CopyMechanism;
+    use crate::workloads::mixes;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.requests_per_core = 2_000;
+        cfg.max_cycles = 20_000_000;
+        cfg
+    }
+
+    #[test]
+    fn stream_workload_runs_to_completion() {
+        let cfg = small_cfg();
+        let wl = mixes::workload_by_name("stream4", &cfg).unwrap();
+        let mut sim = Simulation::new(cfg, wl);
+        let r = sim.run();
+        assert_eq!(r.ipc.len(), 4);
+        assert!(r.ipc.iter().all(|&i| i > 0.0), "{:?}", r.ipc);
+        assert!(r.reads > 0);
+        assert!(r.dram_cycles > 0);
+        assert!(r.energy.total > 0.0);
+        // Streams are row-buffer friendly.
+        assert!(r.row_hit_rate > 0.5, "row hit rate {}", r.row_hit_rate);
+    }
+
+    #[test]
+    fn alone_ipc_at_least_shared() {
+        let cfg = small_cfg();
+        let wl = mixes::workload_by_name("random4", &cfg).unwrap();
+        let alone = alone_ipcs(&cfg, &wl);
+        let shared = run_workload(&cfg, &wl);
+        // Interference can only hurt.
+        for (a, s) in alone.iter().zip(&shared.ipc) {
+            assert!(s <= &(a * 1.05), "shared {s} > alone {a}");
+        }
+        let ws = shared.weighted_speedup(&alone);
+        assert!(ws > 0.0 && ws <= 4.2, "ws {ws}");
+    }
+
+    #[test]
+    fn lisa_risc_beats_memcpy_on_copy_workload() {
+        let mut base = small_cfg();
+        base.copy_mechanism = CopyMechanism::MemcpyChannel;
+        let mut lisa = small_cfg();
+        lisa.lisa.risc = true;
+        lisa.copy_mechanism = CopyMechanism::LisaRisc;
+
+        let wl = mixes::workload_by_name("fork4", &base).unwrap();
+        let r_base = run_workload(&base, &wl);
+        let r_lisa = run_workload(&lisa, &wl);
+        assert!(r_base.copies > 0 && r_lisa.copies > 0);
+        let ipc_base = r_base.ipc_sum();
+        let ipc_lisa = r_lisa.ipc_sum();
+        assert!(
+            ipc_lisa > ipc_base,
+            "LISA {ipc_lisa} should beat memcpy {ipc_base} on copy workloads"
+        );
+        // And finish in fewer DRAM cycles.
+        assert!(r_lisa.dram_cycles < r_base.dram_cycles);
+    }
+
+    #[test]
+    fn villa_gets_hits_on_hotspot_workload() {
+        let mut cfg = small_cfg();
+        cfg.lisa.villa = true;
+        cfg.lisa.risc = true;
+        cfg.lisa.villa_epoch_cycles = 20_000;
+        cfg.copy_mechanism = CopyMechanism::LisaRisc;
+        let wl = mixes::workload_by_name("hotspot4", &cfg).unwrap();
+        let r = run_workload(&cfg, &wl);
+        assert!(
+            r.villa_hit_rate > 0.0,
+            "villa hit rate {}",
+            r.villa_hit_rate
+        );
+    }
+
+    #[test]
+    fn lip_covers_most_precharges() {
+        let mut cfg = small_cfg();
+        cfg.lisa.lip = true;
+        let wl = mixes::workload_by_name("random4", &cfg).unwrap();
+        let r = run_workload(&cfg, &wl);
+        assert!(r.lip_coverage > 0.9, "lip coverage {}", r.lip_coverage);
+    }
+}

@@ -1,0 +1,7 @@
+//! Simulation engine (CPU ⇄ controller ⇄ DRAM binding) and the
+//! experiment drivers that regenerate the paper's tables and figures.
+
+pub mod engine;
+pub mod experiments;
+
+pub use engine::Simulation;

@@ -1,0 +1,47 @@
+//! Utility substrates built in-tree (the offline registry only carries
+//! the `xla` closure — no `rand`, `serde`, `clap`, `criterion` or
+//! `proptest`; see DESIGN.md §Deviations).
+
+pub mod bench;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Integer ceiling division for timing parameter conversion.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Convert a latency in nanoseconds to DRAM clock cycles (round up —
+/// JEDEC timing parameters are always ceil'd to the clock).
+#[inline]
+pub fn ns_to_cycles(ns: f64, tck_ns: f64) -> u64 {
+    debug_assert!(tck_ns > 0.0);
+    (ns / tck_ns).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn ns_to_cycles_jedec_rounding() {
+        // DDR3-1600: tCK = 1.25 ns, tRCD = 13.75 ns -> 11 cycles exact.
+        assert_eq!(ns_to_cycles(13.75, 1.25), 11);
+        // tRAS = 35 ns -> 28 cycles exact.
+        assert_eq!(ns_to_cycles(35.0, 1.25), 28);
+        // 8 ns RBM -> ceil(6.4) = 7 cycles.
+        assert_eq!(ns_to_cycles(8.0, 1.25), 7);
+    }
+}

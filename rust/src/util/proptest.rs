@@ -1,0 +1,142 @@
+//! Tiny property-testing harness (the offline registry has no
+//! `proptest`). Runs a property over many seeded random cases; on
+//! failure it re-runs a bounded "shrink" pass that retries the property
+//! with simpler draws (smaller integers) from the failing seed
+//! neighborhood, and always reports the failing seed so the case can be
+//! replayed deterministically.
+//!
+//! ```
+//! use lisa::util::proptest::{check, Gen};
+//! check("addition commutes", 256, |g| {
+//!     let a = g.u64(1000);
+//!     let b = g.u64(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Per-case generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink factor in (0, 1]: draws scale down as it decreases.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, scale: f64) -> Self {
+        Self {
+            rng: Pcg32::new(seed, case),
+            scale,
+        }
+    }
+
+    /// Uniform u64 in [0, bound), scaled down during shrinking.
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        let eff = ((bound as f64 * self.scale).ceil() as u64).max(1);
+        self.rng.below(eff.min(bound))
+    }
+
+    /// Uniform usize in [0, bound).
+    pub fn usize(&mut self, bound: usize) -> usize {
+        self.u64(bound as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.u64(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(xs.len());
+        &xs[i]
+    }
+
+    /// A vector of `len` draws from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Environment-overridable base seed so CI can replay failures:
+/// `LISA_PROPTEST_SEED=12345 cargo test`.
+fn base_seed() -> u64 {
+    std::env::var("LISA_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FF_EE00_5EED_1234)
+}
+
+/// Run `prop` over `cases` random cases. Panics (with the failing seed
+/// and case index) if any case fails; attempts shrunk re-runs first so
+/// the reported failure is as small as the harness can find.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case, 1.0);
+            prop(&mut g);
+        });
+        if result.is_err() {
+            // Shrink: retry with progressively smaller draw scales and
+            // report the smallest still-failing configuration.
+            let mut failing_scale = 1.0;
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let shrunk = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, case, scale);
+                    prop(&mut g);
+                });
+                if shrunk.is_err() {
+                    failing_scale = scale;
+                }
+            }
+            panic!(
+                "property '{name}' failed: seed={seed:#x} case={case} \
+                 scale={failing_scale} (replay with LISA_PROPTEST_SEED={seed})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 below bound", 200, |g| {
+            let b = g.range(1, 1_000_000);
+            assert!(g.u64(b) < b);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |g| {
+            let x = g.u64(10);
+            assert!(x > 100, "x={x} is small");
+        });
+    }
+
+    #[test]
+    fn vec_has_requested_len() {
+        check("vec len", 50, |g| {
+            let n = g.usize(64);
+            let v = g.vec(n, |g| g.u64(5));
+            assert_eq!(v.len(), n);
+        });
+    }
+}

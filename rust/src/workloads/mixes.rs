@@ -1,0 +1,245 @@
+//! The evaluation workload suite: 50 four-core copy mixes (experiments
+//! E5/E6/E7), hot-region mixes for LISA-VILLA (E4), and a handful of
+//! microbenchmark workloads for the examples.
+//!
+//! Mix construction mirrors the paper's methodology: each mix pairs
+//! copy-intensive cores (fork / bootup / compile / memcached-class
+//! behaviour with varying copy sizes, periods and hop distances) with
+//! memory-intensive background cores drawn from the stream / random /
+//! pointer-chase / hotspot classes. Everything is deterministic in the
+//! mix index.
+
+use anyhow::{bail, Result};
+
+use crate::config::SimConfig;
+use crate::cpu::trace::Trace;
+use crate::util::rng::Pcg32;
+use crate::workloads::generators::{CoreSpec, WorkloadKind};
+
+/// A named multi-core workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub cores: Vec<CoreSpec>,
+}
+
+impl Workload {
+    /// Generate per-core traces (n_ops each).
+    pub fn traces(&self, cfg: &SimConfig, n_ops: usize) -> Vec<Trace> {
+        self.cores
+            .iter()
+            .enumerate()
+            .map(|(core, spec)| spec.generate(cfg, core, n_ops, hash_name(&self.name)))
+            .collect()
+    }
+}
+
+fn hash_name(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The copy-workload background classes.
+fn background(rng: &mut Pcg32) -> CoreSpec {
+    let kinds = [
+        WorkloadKind::Stream { stride: 1 },
+        WorkloadKind::Stream { stride: 4 },
+        WorkloadKind::Random,
+        WorkloadKind::PointerChase,
+        WorkloadKind::HotSpot { hot_bytes: 12 << 20, hot_frac: 0.85, dep_frac: 0.3 },
+    ];
+    let kind = *rng.pick(&kinds);
+    CoreSpec {
+        kind,
+        wss: (10u64 + rng.below(22)) << 20,
+        nonmem: 2 + rng.below(14) as u32,
+        write_frac: 0.1 + rng.f64() * 0.3,
+    }
+}
+
+/// Copy-intensive core classes (fork / bootup / compile / memcached).
+fn copy_core(rng: &mut Pcg32) -> CoreSpec {
+    // Copy intensity tuned so bulk copies consume roughly half of the
+    // baseline's runtime (the regime the paper's 50 mixes sit in:
+    // LISA-RISC alone buys ~+60%).
+    let rows = *rng.pick(&[1u32, 2, 4]);
+    let period = *rng.pick(&[150u32, 300, 600, 1200]);
+    // Hop distance class: near (1-2 hops), mid (4-8), far (8-15).
+    let hop_rows = *rng.pick(&[512u64, 1024, 2048, 4096, 7680]);
+    CoreSpec {
+        kind: WorkloadKind::BulkCopy { rows, period, hop_rows },
+        wss: (16u64 + rng.below(48)) << 20,
+        nonmem: 2 + rng.below(8) as u32,
+        write_frac: 0.2,
+    }
+}
+
+/// The 50 four-core copy mixes of §3.1.2 / Fig. 4: mix i has
+/// 1 + (i mod 3) copy-intensive cores, rest background.
+pub fn copy_mixes(cores: usize) -> Vec<Workload> {
+    (0..50)
+        .map(|i| {
+            let mut rng = Pcg32::new(0x50_C0DE, i as u64);
+            let n_copy = 1 + (i % 3).min(cores - 1);
+            let mut specs: Vec<CoreSpec> =
+                (0..n_copy).map(|_| copy_core(&mut rng)).collect();
+            while specs.len() < cores {
+                specs.push(background(&mut rng));
+            }
+            Workload { name: format!("copy-mix-{i:02}"), cores: specs }
+        })
+        .collect()
+}
+
+/// Hot-region mixes for LISA-VILLA (Fig. 3): varying skew and hot-set
+/// sizes; higher skew => higher VILLA hit rate => more benefit.
+pub fn villa_mixes(cores: usize) -> Vec<Workload> {
+    // Hot regions must exceed the 8 MB LLC so the row heat reaches
+    // DRAM (where VILLA operates); skew varies the achievable hit rate
+    // (Fig. 3's x-axis spread).
+    let params = [
+        (12u64 << 20, 0.95, "tiny-hot"),
+        (16 << 20, 0.90, "small-hot"),
+        (20 << 20, 0.85, "med-hot"),
+        (24 << 20, 0.80, "large-hot"),
+        (32 << 20, 0.70, "xl-hot"),
+        (16 << 20, 0.95, "sharp-hot"),
+        (40 << 20, 0.60, "flat-hot"),
+        (12 << 20, 0.99, "needle-hot"),
+    ];
+    params
+        .iter()
+        .enumerate()
+        .map(|(i, &(hot_bytes, hot_frac, name))| {
+            let mut rng = Pcg32::new(0x7111A, i as u64);
+            let specs: Vec<CoreSpec> = (0..cores)
+                .map(|_| CoreSpec {
+                    kind: WorkloadKind::HotSpot { hot_bytes, hot_frac, dep_frac: 0.6 },
+                    wss: hot_bytes + ((8u64 + rng.below(16)) << 20),
+                    nonmem: 8 + rng.below(10) as u32,
+                    write_frac: 0.15,
+                })
+                .collect();
+            Workload { name: format!("villa-{name}"), cores: specs }
+        })
+        .collect()
+}
+
+/// Simple single-class workloads for the examples and smoke tests.
+pub fn micro_workloads(cores: usize) -> Vec<Workload> {
+    let mk = |name: &str, kind: WorkloadKind, nonmem: u32| Workload {
+        name: name.to_string(),
+        cores: (0..cores)
+            .map(|_| CoreSpec { kind, wss: 24 << 20, nonmem, write_frac: 0.2 })
+            .collect(),
+    };
+    vec![
+        mk("stream4", WorkloadKind::Stream { stride: 1 }, 4),
+        mk("random4", WorkloadKind::Random, 4),
+        mk("chase4", WorkloadKind::PointerChase, 8),
+        mk(
+            "hotspot4",
+            WorkloadKind::HotSpot { hot_bytes: 16 << 20, hot_frac: 0.9, dep_frac: 0.6 },
+            8,
+        ),
+        mk(
+            "fork4",
+            WorkloadKind::BulkCopy { rows: 4, period: 60, hop_rows: 2048 },
+            4,
+        ),
+    ]
+}
+
+/// Every named workload in the suite.
+pub fn all_mixes(cfg: &SimConfig) -> Vec<Workload> {
+    let cores = cfg.cpu.cores;
+    let mut out = micro_workloads(cores);
+    out.extend(villa_mixes(cores));
+    out.extend(copy_mixes(cores));
+    out
+}
+
+/// Look up a workload by name.
+pub fn workload_by_name(name: &str, cfg: &SimConfig) -> Result<Workload> {
+    all_mixes(cfg)
+        .into_iter()
+        .find(|w| w.name == name)
+        .map_or_else(|| bail!("unknown workload '{name}'"), Ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::trace::TraceOp;
+
+    #[test]
+    fn suite_has_50_copy_mixes() {
+        let mixes = copy_mixes(4);
+        assert_eq!(mixes.len(), 50);
+        for m in &mixes {
+            assert_eq!(m.cores.len(), 4);
+            // Every copy mix has at least one copy-intensive core.
+            assert!(m
+                .cores
+                .iter()
+                .any(|c| matches!(c.kind, WorkloadKind::BulkCopy { .. })));
+        }
+        // Mixes differ from each other.
+        assert_ne!(
+            format!("{:?}", mixes[0].cores),
+            format!("{:?}", mixes[1].cores)
+        );
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_name() {
+        let cfg = SimConfig::default();
+        let w = workload_by_name("copy-mix-00", &cfg).unwrap();
+        let a = w.traces(&cfg, 200);
+        let b = w.traces(&cfg, 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ops, y.ops);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let cfg = SimConfig::default();
+        assert!(workload_by_name("stream4", &cfg).is_ok());
+        assert!(workload_by_name("villa-med-hot", &cfg).is_ok());
+        assert!(workload_by_name("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn copy_mixes_emit_copies() {
+        let cfg = SimConfig::default();
+        let w = workload_by_name("copy-mix-03", &cfg).unwrap();
+        // Periods can be up to 1200 background ops per copy.
+        let traces = w.traces(&cfg, 3000);
+        let total_copies: usize = traces
+            .iter()
+            .map(|t| {
+                t.ops
+                    .iter()
+                    .filter(|o| matches!(o, TraceOp::Copy { .. }))
+                    .count()
+            })
+            .sum();
+        assert!(total_copies > 0);
+    }
+
+    #[test]
+    fn villa_mixes_are_hot_skewed() {
+        let mixes = villa_mixes(4);
+        assert_eq!(mixes.len(), 8);
+        for m in &mixes {
+            for c in &m.cores {
+                assert!(matches!(c.kind, WorkloadKind::HotSpot { .. }));
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workload substrate: trace generators reproducing the
+//! memory-behaviour classes of the paper's Pin-based SPEC/TBB/copy
+//! workloads (DESIGN.md substitution map row 3), and the 50 four-core
+//! mixes the evaluation sweeps over.
+
+pub mod generators;
+pub mod mixes;
+
+pub use generators::{CoreSpec, WorkloadKind};
+pub use mixes::{all_mixes, workload_by_name, Workload};

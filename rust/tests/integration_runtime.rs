@@ -1,0 +1,89 @@
+//! Integration tests for the PJRT runtime + calibration path. These
+//! need `make artifacts` to have run; they are skipped (with a notice)
+//! when artifacts are absent so `cargo test` stays hermetic.
+
+use std::path::Path;
+
+use lisa::config::Calibration;
+use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
+use lisa::runtime::loader::{N_LANES, NSCALARS};
+use lisa::runtime::calibrate::{scalars_precharge, scalars_rbm, PhysParams};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("precharge_single.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn artifacts_load_and_execute() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("precharge_single").unwrap();
+    let p = PhysParams::default();
+    let ones = vec![1.0f32; N_LANES];
+    let vdd = vec![p.vdd; N_LANES];
+    let out = exe
+        .run(&vdd, &vdd, &ones, &ones, &scalars_precharge(&p, false, false))
+        .unwrap();
+    assert_eq!(out.v_a.len(), N_LANES);
+    // Every bitline must settle at VDD/2.
+    for &v in &out.v_a {
+        assert!((v - p.vdd / 2.0).abs() < 0.05, "v_a = {v}");
+    }
+    // Nominal settle time ~ 13 ns (tuned circuit).
+    let t = out.t_settle[0];
+    assert!(t > 11.0 && t < 16.0, "t_settle = {t}");
+}
+
+#[test]
+fn calibration_matches_checked_in_defaults() {
+    // The Calibration::default() values are documented as "what the
+    // checked-in circuit model yields". Verify that promise through
+    // the full PJRT path.
+    let Some(rt) = runtime() else { return };
+    let cal = calibrate(&rt, &CalibrationInputs::default()).unwrap();
+    let d = Calibration::default();
+    assert!(cal.from_artifacts);
+    assert!(
+        (cal.t_rbm_ns - d.t_rbm_ns).abs() < 0.5,
+        "tRBM {} vs default {}",
+        cal.t_rbm_ns,
+        d.t_rbm_ns
+    );
+    assert!((cal.t_rp_lip_ns - d.t_rp_lip_ns).abs() < 0.5);
+    assert!((cal.t_rp_circuit_ns - d.t_rp_circuit_ns).abs() < 1.0);
+    assert!((cal.fast_act_ratio - d.fast_act_ratio).abs() < 0.1);
+    // Paper anchor: linked precharge ~2.6x faster.
+    let ratio = cal.t_rp_circuit_ns / cal.t_rp_lip_ns;
+    assert!(ratio > 2.0 && ratio < 3.2, "LIP ratio {ratio}");
+}
+
+#[test]
+fn rbm_worst_lane_within_guard_band() {
+    // The 60% guard band must cover the Monte-Carlo variation
+    // population (calibrate() enforces this; double-check the margin
+    // isn't razor-thin either).
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("rbm_hop").unwrap();
+    let p = PhysParams::default();
+    let mut rng = lisa::util::rng::Pcg32::new(1234, 5);
+    let gmul: Vec<f32> = (0..N_LANES).map(|_| rng.lognormal_mul(0.05) as f32).collect();
+    let cmul: Vec<f32> = (0..N_LANES).map(|_| rng.lognormal_mul(0.05) as f32).collect();
+    let mid = vec![p.vdd / 2.0; N_LANES];
+    let vdd = vec![p.vdd; N_LANES];
+    let out = exe.run(&mid, &vdd, &gmul, &cmul, &scalars_rbm(&p, false)).unwrap();
+    let mut t: Vec<f32> = out.t_settle.clone();
+    t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = t[t.len() / 2] as f64;
+    let worst = *t.last().unwrap() as f64;
+    assert!(worst < median * 1.6, "worst {worst} vs margined {}", median * 1.6);
+    assert!(worst > median * 1.05, "variation should spread the population");
+}
+
+#[test]
+fn scalar_layout_constant_matches() {
+    assert_eq!(NSCALARS, 16);
+}

@@ -1,0 +1,206 @@
+//! Property-based tests over the DRAM device, controller and copy
+//! engines (using the in-tree proptest harness; replay failures with
+//! LISA_PROPTEST_SEED=<seed> cargo test).
+
+use lisa::config::{Calibration, CopyMechanism, DramConfig, LisaConfig, SimConfig};
+use lisa::controller::request::CopyRequest;
+use lisa::controller::Controller;
+use lisa::copy::CopyOp;
+use lisa::dram::bank::DramDevice;
+use lisa::dram::command::Command;
+use lisa::dram::geometry::Address;
+use lisa::dram::timing::{SpeedBin, Timing};
+use lisa::util::proptest::check;
+
+fn device(salp: bool, lip: bool) -> DramDevice {
+    let mut cfg = DramConfig::default();
+    cfg.salp = salp;
+    let mut lisa_cfg = LisaConfig::default();
+    lisa_cfg.risc = true;
+    lisa_cfg.lip = lip;
+    let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+    DramDevice::new(cfg, lisa_cfg, timing)
+}
+
+#[test]
+fn prop_earliest_is_idempotent_and_issue_at_earliest_succeeds() {
+    // For random legal command sequences: earliest() twice gives the
+    // same answer, and issuing exactly at earliest never fails.
+    check("earliest/issue consistency", 60, |g| {
+        let mut dev = device(false, g.bool());
+        let mut now = 0u64;
+        let mut last_row: Option<(usize, usize)> = None; // (bank, row)
+        for _ in 0..40 {
+            let bank = g.usize(8);
+            let cmd = match (last_row, g.u64(4)) {
+                (None, _) | (_, 0) => {
+                    // Activate somewhere precharged if possible.
+                    let row = g.usize(8192);
+                    let c = Command::Act { rank: 0, bank, row };
+                    if dev.earliest(0, c, now).is_err() {
+                        // Bank open: precharge instead.
+                        Command::Pre { rank: 0, bank }
+                    } else {
+                        last_row = Some((bank, row));
+                        c
+                    }
+                }
+                (Some((b, _)), 1) => Command::Rd { rank: 0, bank: b, col: g.usize(128) },
+                (Some((b, _)), 2) => Command::Wr { rank: 0, bank: b, col: g.usize(128) },
+                (Some((b, _)), _) => {
+                    last_row = None;
+                    Command::Pre { rank: 0, bank: b }
+                }
+            };
+            let Ok(e1) = dev.earliest(0, cmd, now) else {
+                continue;
+            };
+            let e2 = dev.earliest(0, cmd, now).unwrap();
+            assert_eq!(e1, e2, "earliest not idempotent for {cmd:?}");
+            dev.issue(0, cmd, e1).unwrap_or_else(|err| {
+                panic!("issue at earliest failed for {cmd:?}: {err}")
+            });
+            now = e1;
+        }
+    });
+}
+
+#[test]
+fn prop_issue_before_earliest_always_rejected() {
+    check("early issue rejected", 40, |g| {
+        let mut dev = device(false, false);
+        let row = g.usize(8192);
+        dev.issue(0, Command::Act { rank: 0, bank: 0, row }, 0).unwrap();
+        let rd = Command::Rd { rank: 0, bank: 0, col: g.usize(128) };
+        let e = dev.earliest(0, rd, 0).unwrap();
+        if e > 0 {
+            let early = g.u64(e);
+            assert!(dev.issue(0, rd, early).is_err(), "issued at {early} < {e}");
+        }
+    });
+}
+
+#[test]
+fn prop_copy_engine_always_moves_the_tag() {
+    // Any (mechanism, src, dst) pair: driving the CopyOp to completion
+    // on an idle device moves the source tag to the destination.
+    check("copy moves tag", 50, |g| {
+        let cfg = DramConfig::default();
+        let mut dev = device(false, false);
+        let mech = *g.pick(&[
+            CopyMechanism::LisaRisc,
+            CopyMechanism::RowCloneIntraSa,
+            CopyMechanism::RowCloneInterSa,
+            CopyMechanism::RowCloneInterBank,
+        ]);
+        let src_bank = g.usize(8);
+        let src_row = g.usize(8190);
+        let (dst_bank, dst_row) = if mech == CopyMechanism::RowCloneInterBank {
+            ((src_bank + 1 + g.usize(6)) % 8, g.usize(8190))
+        } else {
+            let d = g.usize(8190);
+            // Avoid the reserved temp row and identical src/dst.
+            (src_bank, if d == src_row { d + 1 } else { d })
+        };
+        let tag = 0xAB00 + g.u64(1000);
+        dev.set_row_tag(0, 0, src_bank, src_row, tag);
+        let req = CopyRequest {
+            id: 1,
+            core: 0,
+            src: Address { channel: 0, rank: 0, bank: src_bank, row: src_row, col: 0 },
+            dst: Address { channel: 0, rank: 0, bank: dst_bank, row: dst_row, col: 0 },
+            rows: 1,
+            mechanism: mech,
+            arrive: 0,
+        };
+        let mut op = CopyOp::new(req, &cfg);
+        let mut now = 0u64;
+        let mut steps = 0;
+        while let Some(cmd) = op.next_command(&dev) {
+            let at = dev.earliest(0, cmd, now).expect("legal step");
+            dev.issue(0, cmd, at).expect("issue");
+            now = at + 1;
+            steps += 1;
+            assert!(steps < 64, "copy sequence does not terminate");
+        }
+        assert_eq!(
+            dev.row_tag(0, 0, dst_bank, dst_row),
+            tag,
+            "{mech:?} src=({src_bank},{src_row}) dst=({dst_bank},{dst_row})"
+        );
+        // Source unharmed.
+        assert_eq!(dev.row_tag(0, 0, src_bank, src_row), tag);
+    });
+}
+
+#[test]
+fn prop_controller_never_stalls_forever() {
+    // Random small request soups must always drain (bounded cycles).
+    check("controller liveness", 12, |g| {
+        let mut cfg = SimConfig::default();
+        cfg.lisa.risc = g.bool();
+        cfg.lisa.lip = g.bool();
+        cfg.copy_mechanism = if cfg.lisa.risc {
+            CopyMechanism::LisaRisc
+        } else {
+            CopyMechanism::MemcpyChannel
+        };
+        let mut ctrl = Controller::new(cfg);
+        let n_req = 1 + g.usize(24);
+        let mut expected = 0;
+        for i in 0..n_req {
+            let addr = g.u64(64 << 20) & !63;
+            let is_write = g.chance(0.3);
+            if ctrl.enqueue_mem(i as u64 + 1, 0, addr, is_write) && !is_write {
+                expected += 1;
+            }
+        }
+        if g.chance(0.7) {
+            let src_row = g.usize(4000);
+            let dst_row = 4000 + g.usize(3000);
+            ctrl.enqueue_copy(CopyRequest {
+                id: 0x9000,
+                core: 0,
+                src: Address { channel: 0, rank: 0, bank: 0, row: src_row, col: 0 },
+                dst: Address { channel: 0, rank: 0, bank: 0, row: dst_row, col: 0 },
+                rows: 1 + g.usize(3),
+                mechanism: ctrl.cfg.copy_mechanism,
+                arrive: 0,
+            });
+            expected += 1;
+        }
+        let mut done = 0;
+        for _ in 0..2_000_000u64 {
+            ctrl.tick().unwrap();
+            done += ctrl.drain_completions().len();
+            if ctrl.idle() {
+                break;
+            }
+        }
+        assert!(ctrl.idle(), "controller failed to drain ({done}/{expected} done)");
+        assert_eq!(done, expected, "lost or duplicated completions");
+    });
+}
+
+#[test]
+fn prop_timing_invariants_from_stats() {
+    // After any run: #ACTs >= #row-misses implied, every RBM hop count
+    // consistent, LIP count <= PRE count.
+    check("stats invariants", 10, |g| {
+        let mut cfg = SimConfig::default();
+        cfg.lisa.lip = true;
+        cfg.lisa.risc = true;
+        cfg.copy_mechanism = CopyMechanism::LisaRisc;
+        cfg.requests_per_core = 300 + g.u64(500);
+        let wl = lisa::workloads::mixes::copy_mixes(4)[g.usize(50)].clone();
+        let mut sim = lisa::sim::engine::Simulation::new(cfg, wl);
+        let r = sim.run();
+        let s = &sim.ctrl.dev.stats;
+        assert!(s.n_pre_lip <= s.n_pre);
+        assert!(s.n_act >= 1);
+        assert!(r.dram_cycles > 0);
+        // Row buffer hygiene: every ACT eventually paired with a PRE
+        // (within one outstanding open row per bank).
+        assert!(s.n_pre + 8 * 2 >= s.n_act, "ACT {} vs PRE {}", s.n_act, s.n_pre);
+    });
+}
