@@ -10,9 +10,6 @@
 //! # knobs: LISA_REQUESTS=3000 LISA_MIXES=10
 //! ```
 
-use std::path::Path;
-
-use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
 use lisa::sim::experiments::{fig4, lip_system};
 use lisa::util::bench::Table;
 
@@ -29,21 +26,29 @@ fn main() -> anyhow::Result<()> {
     // Stage 1: calibrate the LISA timing parameters from the AOT
     // JAX/Pallas circuit artifacts (PJRT execution; python not
     // involved). Falls back to the checked-in analytic values if
-    // artifacts are missing so the example always runs.
-    let artifacts = Path::new("artifacts");
-    match Runtime::new(artifacts).and_then(|rt| calibrate(&rt, &CalibrationInputs::default()))
+    // artifacts are missing (or the PJRT runtime is not compiled in)
+    // so the example always runs.
+    #[cfg(feature = "runtime")]
     {
-        Ok(cal) => {
-            println!(
-                "calibrated from artifacts: tRBM={:.2} ns, tRP_LIP={:.2} ns, \
-                 tRP={:.2} ns (x{:.1} guard band applied)",
-                cal.t_rbm_ns, cal.t_rp_lip_ns, cal.t_rp_circuit_ns, 1.6
-            );
-        }
-        Err(e) => {
-            println!("(no artifacts: {e}; using built-in calibration)");
+        use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
+        let artifacts = std::path::Path::new("artifacts");
+        match Runtime::new(artifacts)
+            .and_then(|rt| calibrate(&rt, &CalibrationInputs::default()))
+        {
+            Ok(cal) => {
+                println!(
+                    "calibrated from artifacts: tRBM={:.2} ns, tRP_LIP={:.2} ns, \
+                     tRP={:.2} ns (x{:.1} guard band applied)",
+                    cal.t_rbm_ns, cal.t_rp_lip_ns, cal.t_rp_circuit_ns, 1.6
+                );
+            }
+            Err(e) => {
+                println!("(no artifacts: {e}; using built-in calibration)");
+            }
         }
     }
+    #[cfg(not(feature = "runtime"))]
+    println!("(runtime feature off: using built-in calibration)");
 
     // Stage 2: the system experiment.
     println!(

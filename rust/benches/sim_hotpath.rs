@@ -1,6 +1,11 @@
 //! Perf bench: the simulator's own hot path (EXPERIMENTS.md §Perf).
-//! Measures controller tick throughput and end-to-end simulated
-//! DRAM-cycles/second on representative workloads.
+//! Measures end-to-end simulated DRAM-cycles/second on representative
+//! workloads, for both the event-driven fast-forward engine (the
+//! default `run()`) and the per-cycle reference loop — the ratio is
+//! the repo's headline engine-speed metric.
+//!
+//! Usage: `cargo bench --bench sim_hotpath [-- REQUESTS]`
+//! (REQUESTS defaults to 5000; CI smoke mode passes a small value.)
 
 use std::time::Instant;
 
@@ -9,28 +14,66 @@ use lisa::sim::engine::Simulation;
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
 
-fn bench_workload(name: &str, requests: u64) -> (f64, u64) {
+struct Measurement {
+    cycles: u64,
+    ff_rate: f64,
+    ref_rate: f64,
+}
+
+fn bench_workload(name: &str, requests: u64) -> Measurement {
     let mut cfg = SimConfig::default().with_all_lisa();
     cfg.requests_per_core = requests;
     let wl = mixes::workload_by_name(name, &cfg).unwrap();
-    let mut sim = Simulation::new(cfg, wl);
+
+    let mut ff = Simulation::new(cfg.clone(), wl.clone());
     let t0 = Instant::now();
-    let r = sim.run();
-    let dt = t0.elapsed().as_secs_f64();
-    (r.dram_cycles as f64 / dt, r.dram_cycles)
+    let r_ff = ff.run();
+    let ff_dt = t0.elapsed().as_secs_f64();
+
+    let mut reference = Simulation::new(cfg, wl);
+    let t0 = Instant::now();
+    let r_ref = reference.reference_run();
+    let ref_dt = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        r_ff, r_ref,
+        "{name}: fast-forward must be cycle-exact vs the reference loop"
+    );
+    Measurement {
+        cycles: r_ff.dram_cycles,
+        ff_rate: r_ff.dram_cycles as f64 / ff_dt,
+        ref_rate: r_ref.dram_cycles as f64 / ref_dt,
+    }
 }
 
 fn main() {
-    println!("=== Simulator hot-path throughput ===\n");
-    let mut t = Table::new(&["workload", "sim cycles", "Mcycles/s"]);
+    // First numeric argument wins (cargo bench may inject `--bench`).
+    let requests: u64 = std::env::args()
+        .skip(1)
+        .find_map(|s| s.parse().ok())
+        .unwrap_or(5_000);
+    println!("=== Simulator hot-path throughput ({requests} requests/core) ===\n");
+    let mut t = Table::new(&[
+        "workload",
+        "sim cycles",
+        "ff Mcyc/s",
+        "ref Mcyc/s",
+        "speedup",
+    ]);
+    let mut worst = f64::INFINITY;
     for name in ["stream4", "random4", "hotspot4", "fork4"] {
-        let (rate, cycles) = bench_workload(name, 5_000);
+        let m = bench_workload(name, requests);
+        let speedup = m.ff_rate / m.ref_rate;
+        worst = worst.min(speedup);
         t.row(&[
             name.to_string(),
-            format!("{cycles}"),
-            format!("{:.2}", rate / 1e6),
+            format!("{}", m.cycles),
+            format!("{:.2}", m.ff_rate / 1e6),
+            format!("{:.2}", m.ref_rate / 1e6),
+            format!("{:.2}x", speedup),
         ]);
     }
     t.print();
-    println!("\ntarget (DESIGN.md §Perf): > 10 Mcycles/s single channel");
+    println!("\nworst-case fast-forward speedup: {worst:.2}x");
+    println!("target (EXPERIMENTS.md §Perf): >= 3x vs the per-cycle reference loop");
 }

@@ -16,20 +16,29 @@ pub struct Args {
 
 impl Args {
     /// Parse `argv[1..]`. The first non-option token is the
-    /// subcommand; `--key value` pairs become options; a `--key`
-    /// followed by another `--` token or end-of-line is a flag.
+    /// subcommand; `--key value` and `--key=value` pairs become
+    /// options; a `--key` followed by another `--` token or
+    /// end-of-line is a flag. Values may be negative numbers (`--shift
+    /// -3`); a bare `--` ends option parsing, so negative-number
+    /// *positionals* can be passed after it.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let tokens: Vec<String> = argv.into_iter().collect();
         let mut out = Args::default();
         let mut i = 0;
+        let mut options_done = false;
         while i < tokens.len() {
             let t = &tokens[i];
-            if let Some(key) = t.strip_prefix("--") {
-                if key.is_empty() {
-                    bail!("bare '--' is not supported");
-                }
-                // `--key=value` form
+            if !options_done && t == "--" {
+                // Conventional end-of-options separator.
+                options_done = true;
+            } else if !options_done && t.starts_with("--") {
+                let key = &t[2..];
+                // `--key=value` form (also the unambiguous way to pass
+                // a value that itself starts with `--`).
                 if let Some((k, v)) = key.split_once('=') {
+                    if k.is_empty() {
+                        bail!("option '{t}' has an empty key");
+                    }
                     out.options.insert(k.to_string(), v.to_string());
                 } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
                     out.options.insert(key.to_string(), tokens[i + 1].clone());
@@ -37,7 +46,7 @@ impl Args {
                 } else {
                     out.flags.push(key.to_string());
                 }
-            } else if out.subcommand.is_none() {
+            } else if out.subcommand.is_none() && !options_done {
                 out.subcommand = Some(t.clone());
             } else {
                 out.positional.push(t.clone());
@@ -45,6 +54,16 @@ impl Args {
             i += 1;
         }
         Ok(out)
+    }
+
+    /// Validate the subcommand against the known set; `Ok(None)` when
+    /// no subcommand was given (callers print usage).
+    pub fn check_subcommand<'a>(&'a self, known: &[&str]) -> Result<Option<&'a str>> {
+        match self.subcommand.as_deref() {
+            None => Ok(None),
+            Some(s) if known.contains(&s) => Ok(Some(s)),
+            Some(s) => bail!("unknown command '{s}' (expected one of: {})", known.join(", ")),
+        }
     }
 
     pub fn opt(&self, key: &str) -> Option<&str> {
@@ -114,5 +133,63 @@ mod tests {
     fn bad_number_errors() {
         let a = parse("x --n abc");
         assert!(a.opt_u64("n").is_err());
+    }
+
+    #[test]
+    fn eq_form_negative_numbers() {
+        let a = parse("sweep --shift=-3 --scale=-2.5");
+        assert_eq!(a.opt("shift"), Some("-3"));
+        assert_eq!(a.opt_f64("scale").unwrap(), Some(-2.5));
+    }
+
+    #[test]
+    fn space_form_negative_numbers() {
+        // `-3` does not start with `--`, so it is the option's value,
+        // not a flag boundary.
+        let a = parse("sweep --shift -3");
+        assert_eq!(a.opt_f64("shift").unwrap(), Some(-3.0));
+        assert!(!a.has_flag("shift"));
+    }
+
+    #[test]
+    fn flag_vs_option_disambiguation() {
+        // A key followed by another `--` token is a flag; a key
+        // followed by anything else is an option. `--key=value` is
+        // always an option, even if the value starts with dashes.
+        let a = parse("run --ws --threads 8 --label=--weird --verbose");
+        assert!(a.has_flag("ws"));
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("threads"));
+        assert_eq!(a.opt_usize("threads").unwrap(), Some(8));
+        assert_eq!(a.opt("label"), Some("--weird"));
+    }
+
+    #[test]
+    fn double_dash_ends_option_parsing() {
+        let a = parse("run --ws -- --not-a-flag -5");
+        assert!(a.has_flag("ws"));
+        assert!(!a.has_flag("not-a-flag"));
+        assert_eq!(
+            a.positional,
+            vec!["--not-a-flag".to_string(), "-5".to_string()]
+        );
+    }
+
+    #[test]
+    fn empty_key_is_an_error() {
+        assert!(Args::parse(["--=v".to_string()]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_is_rejected() {
+        let known = ["run", "sweep", "table1"];
+        let a = parse("sweep --threads 2");
+        assert_eq!(a.check_subcommand(&known).unwrap(), Some("sweep"));
+        let none = parse("--verbose");
+        assert_eq!(none.check_subcommand(&known).unwrap(), None);
+        let bad = parse("swep");
+        let err = bad.check_subcommand(&known).unwrap_err().to_string();
+        assert!(err.contains("unknown command 'swep'"), "{err}");
+        assert!(err.contains("sweep"), "{err}");
     }
 }

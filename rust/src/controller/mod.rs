@@ -705,6 +705,140 @@ impl Controller {
         Ok(())
     }
 
+    /// Advance the controller clock across a provably idle gap (the
+    /// fast-forward engine established — via `next_event_cycle` — that
+    /// no event, state transition or command issue can happen in it).
+    pub fn fast_forward(&mut self, cycles: u64) {
+        self.now += cycles;
+    }
+
+    /// Earliest cycle >= `self.now` at which this controller could do
+    /// *anything* — deliver an in-flight event, cross a refresh or
+    /// VILLA epoch deadline, advance a copy sequence, or issue any
+    /// command for the currently queued requests — assuming no new
+    /// requests arrive in the meantime.
+    ///
+    /// This is a cycle-exact **lower bound**: the per-cycle reference
+    /// loop performs no state change at any cycle strictly before the
+    /// returned one, so the engine may jump `now` straight to it.
+    /// Returning `self.now` means "possibly active right now; do not
+    /// skip". `u64::MAX` means nothing will ever happen again.
+    pub fn next_event_cycle(&self) -> u64 {
+        let now = self.now;
+        let mut h = u64::MAX;
+        for (t, _) in &self.inflight {
+            h = h.min((*t).max(now));
+        }
+        if let Some(v) = self.villa.as_ref() {
+            // Epoch maintenance re-arms relative to the observed cycle;
+            // jumping past the boundary would shift every later epoch.
+            h = h.min(v.next_epoch_cycle().max(now));
+        }
+        if h <= now {
+            return now;
+        }
+        for (ch, c) in self.chans.iter().enumerate() {
+            // Refresh deadlines and pending-refresh progress.
+            for rank in 0..self.cfg.dram.ranks {
+                if c.refresh_pending[rank] {
+                    match self.dev.earliest(ch, Command::Ref { rank }, now) {
+                        Ok(e) => h = h.min(e),
+                        Err(_) => {
+                            // REF blocked on open banks: the tick loop
+                            // closes them one PRE at a time.
+                            for bank in 0..self.cfg.dram.banks {
+                                if !self.dev.bank(ch, rank, bank).all_precharged() {
+                                    let pre = Command::Pre { rank, bank };
+                                    if let Ok(e) = self.dev.earliest(ch, pre, now) {
+                                        h = h.min(e);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    h = h.min(c.next_refresh[rank].max(now));
+                }
+            }
+            // Copy engine: activation and sequence advancement mutate
+            // state on the very next tick — never skip across them.
+            if c.active_copy.is_none() && c.active_memcpy.is_none() && !c.copy_q.is_empty()
+            {
+                return now;
+            }
+            if let Some(cmd) = c.pending_cmd {
+                match self.dev.earliest(ch, cmd, now) {
+                    Ok(e) => h = h.min(e),
+                    // Structurally blocked: the tick loop's recovery
+                    // path (close bank / restart row) mutates state.
+                    Err(_) => return now,
+                }
+            } else if c.active_copy.is_some() {
+                return now; // next_command() advances the sequence
+            }
+            if let Some(m) = c.active_memcpy.as_ref() {
+                if m.reads_issued < self.cfg.dram.columns && c.read_q.len() < READ_Q_CAP {
+                    return now; // read generation runs this tick
+                }
+            }
+            // FR-FCFS candidates: per-bank earliest() for every queued
+            // request (both queues are consulted every tick regardless
+            // of drain mode, so both bound the horizon).
+            let copy_rank = c.active_copy.as_ref().map(|op| op.req.src.rank);
+            let copy_banks: [Option<usize>; 3] = c
+                .active_copy
+                .as_ref()
+                .map(|op| op.banks(&self.cfg.dram))
+                .unwrap_or([None; 3]);
+            for req in c.read_q.iter().chain(c.write_q.iter()) {
+                h = h.min(self.request_ready_cycle(ch, c, req, copy_rank, &copy_banks, now));
+                if h <= now {
+                    return now;
+                }
+            }
+        }
+        h.max(now)
+    }
+
+    /// Earliest cycle the scheduler could legally serve `req`,
+    /// mirroring `pick_request`'s command selection against the
+    /// current (frozen) bank state — including pass 2's exclusions:
+    /// row preparation (ACT/PRE) is parked for ranks with a refresh
+    /// pending and for banks owned by the active copy. Those parked
+    /// requests stay parked until a refresh / copy state change, which
+    /// is itself a horizon event, so they never bound the horizon.
+    fn request_ready_cycle(
+        &self,
+        ch: usize,
+        c: &ChannelState,
+        req: &MemRequest,
+        copy_rank: Option<usize>,
+        copy_banks: &[Option<usize>; 3],
+        now: u64,
+    ) -> u64 {
+        let a = &req.addr;
+        let bank = self.dev.bank(ch, a.rank, a.bank);
+        let cmd = if bank.open_row() == Some(a.row) {
+            // Pass 1 (row hits) has no rank/bank exclusions.
+            if req.is_write {
+                Command::Wr { rank: a.rank, bank: a.bank, col: a.col }
+            } else {
+                Command::Rd { rank: a.rank, bank: a.bank, col: a.col }
+            }
+        } else if c.refresh_pending[a.rank]
+            || (copy_rank == Some(a.rank) && copy_banks.contains(&Some(a.bank)))
+        {
+            return u64::MAX;
+        } else if bank.all_precharged() {
+            Command::Act { rank: a.rank, bank: a.bank, row: a.row }
+        } else {
+            Command::Pre { rank: a.rank, bank: a.bank }
+        };
+        // A structural Err is stable until some other command issues
+        // (which is itself a horizon event), so it never bounds h.
+        self.dev.earliest(ch, cmd, now).unwrap_or(u64::MAX)
+    }
+
     /// All queues empty and nothing in flight?
     pub fn idle(&self) -> bool {
         self.inflight.is_empty()

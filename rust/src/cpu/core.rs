@@ -38,6 +38,21 @@ enum Slot {
     WaitMem(u64),
 }
 
+/// When a core next needs its `cycle()` to run (fast-forward support).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreWake {
+    /// Would act on its very next CPU cycle — the engine must not
+    /// skip anything.
+    Active,
+    /// Provably inert until the given absolute CPU cycle (a pipelined
+    /// instruction becomes retirable then); only `cpu_cycles`
+    /// bookkeeping happens before it.
+    At(u64),
+    /// Provably inert until an external completion (memory read or
+    /// bulk copy) is delivered by the controller.
+    Blocked,
+}
+
 /// Execution state of one core.
 #[derive(Debug)]
 pub struct Core {
@@ -230,6 +245,73 @@ impl Core {
             if consumed >= self.budget {
                 self.fetch_stopped = true;
             }
+        }
+    }
+
+    /// When does this core next need to run? Mirrors `cycle()`'s
+    /// decision order exactly: any path that would mutate core, cache
+    /// or controller state on the next CPU cycle reports `Active`;
+    /// otherwise the core is inert until either a wall-clock wake
+    /// (`At`: the front ROB slot's ready time) or an external
+    /// completion (`Blocked`). While inert, `cycle()` is a pure
+    /// `cpu_cycles += 1`, which `advance_idle` replays in bulk.
+    pub fn next_wake(&self, ctrl: &Controller) -> CoreWake {
+        if self.finished() {
+            return CoreWake::Blocked; // never runs again (drive loop exits)
+        }
+        // The CPU cycle the next `cycle()` call will execute as.
+        let next = self.cpu_cycles + 1;
+        // Lazy writebacks: an acceptable head would be enqueued. A
+        // rejected head is retried (and re-rejected) with no net state
+        // change until the controller's write queue drains — a
+        // controller-side event.
+        if let Some(&wb) = self.wb_queue.front() {
+            if ctrl.can_accept(ctrl.mapper.map(wb).channel, true) {
+                return CoreWake::Active;
+            }
+        }
+        // Retirement: the front slot gates everything.
+        let mut wake: Option<u64> = None;
+        if let Some(Slot::ReadyAt(t)) = self.window.front() {
+            if *t <= next {
+                return CoreWake::Active;
+            }
+            wake = Some(*t);
+        }
+        let wake_or_blocked = |w: Option<u64>| w.map_or(CoreWake::Blocked, CoreWake::At);
+        if self.wait_copy.is_some() {
+            return wake_or_blocked(wake);
+        }
+        // Issue stage, in `cycle()`'s check order.
+        if self.window.len() >= self.rob_size || self.dep_block.is_some() {
+            return wake_or_blocked(wake);
+        }
+        if let Some(d) = self.pending_demand {
+            let ch = ctrl.mapper.map(d.addr).channel;
+            let sendable = if d.is_write {
+                ctrl.can_accept(ch, true)
+            } else {
+                self.outstanding < self.mshrs && ctrl.can_accept(ch, false)
+            };
+            return if sendable {
+                CoreWake::Active
+            } else {
+                wake_or_blocked(wake)
+            };
+        }
+        if self.nonmem_left > 0 || self.cur_op.is_some() || !self.fetch_stopped {
+            return CoreWake::Active;
+        }
+        wake_or_blocked(wake)
+    }
+
+    /// Account for `cpu_cycles` provably inert CPU cycles in one step
+    /// (the engine established inertness via `next_wake`). Finished
+    /// cores stop their clock, exactly as `cycle()`'s early return
+    /// does.
+    pub fn advance_idle(&mut self, cpu_cycles: u64) {
+        if !self.finished() {
+            self.cpu_cycles += cpu_cycles;
         }
     }
 

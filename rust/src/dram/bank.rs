@@ -96,6 +96,23 @@ impl Bank {
     pub fn all_precharged(&self) -> bool {
         self.subarrays.iter().all(|sa| sa.is_precharged())
     }
+
+    /// Earliest cycle an ACT may issue, from bank-local registers only
+    /// (rank-scope tRRD/tFAW constraints are the caller's job).
+    pub fn act_earliest(&self) -> u64 {
+        self.next_act.max(self.busy_until)
+    }
+
+    /// Earliest cycle a PRE may issue, from bank-local registers.
+    pub fn pre_earliest(&self) -> u64 {
+        self.next_pre.max(self.busy_until)
+    }
+
+    /// Earliest cycle a RD/WR may issue, from bank-local registers
+    /// (the shared data-bus constraint is the caller's job).
+    pub fn rdwr_earliest(&self) -> u64 {
+        self.next_rdwr.max(self.busy_until)
+    }
 }
 
 /// One rank: banks + rank-scope constraints (tRRD, tFAW, tRFC).
@@ -245,8 +262,7 @@ impl DramDevice {
                     bail!("ACT: bank has open/latched subarray (no SALP)");
                 }
                 earliest = earliest
-                    .max(b.next_act)
-                    .max(b.busy_until)
+                    .max(b.act_earliest())
                     .max(rank.next_act)
                     .max(rank.faw_earliest(t.t_faw));
                 Ok(earliest)
@@ -276,7 +292,7 @@ impl DramDevice {
                 if b.all_precharged() {
                     bail!("PRE: bank already precharged");
                 }
-                Ok(earliest.max(b.next_pre).max(b.busy_until))
+                Ok(earliest.max(b.pre_earliest()))
             }
             Command::PreAll { .. } => {
                 let mut e = earliest;
@@ -296,7 +312,7 @@ impl DramDevice {
                     Command::Rd { .. } => chan.next_rd,
                     _ => chan.next_wr,
                 };
-                Ok(earliest.max(b.next_rdwr).max(b.busy_until).max(bus))
+                Ok(earliest.max(b.rdwr_earliest()).max(bus))
             }
             Command::Ref { .. } => {
                 for b in &rank.banks {
@@ -306,7 +322,7 @@ impl DramDevice {
                 }
                 let mut e = earliest;
                 for b in &rank.banks {
-                    e = e.max(b.next_act.min(u64::MAX)).max(b.busy_until);
+                    e = e.max(b.act_earliest());
                 }
                 Ok(e)
             }

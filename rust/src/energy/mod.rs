@@ -83,8 +83,10 @@ impl EnergyModel {
     }
 }
 
-/// Energy breakdown in microjoules.
-#[derive(Debug, Clone, Default)]
+/// Energy breakdown in microjoules. `PartialEq` is exact (bitwise)
+/// float equality: two runs over the same command stream produce
+/// identical breakdowns, which the engine-equivalence tests assert.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EnergyBreakdown {
     pub act_uj: f64,
     pub pre_uj: f64,

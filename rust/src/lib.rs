@@ -23,16 +23,18 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use lisa::config::SimConfig;
 //! use lisa::sim::engine::Simulation;
 //! use lisa::workloads::mixes;
 //!
-//! let cfg = SimConfig::default();
+//! let mut cfg = SimConfig::default().with_all_lisa();
+//! cfg.requests_per_core = 500; // keep the demo quick
 //! let wl = mixes::workload_by_name("stream4", &cfg).unwrap();
 //! let mut sim = Simulation::new(cfg, wl);
 //! let report = sim.run();
-//! println!("weighted speedup: {:.3}", report.weighted_speedup_sum());
+//! assert_eq!(report.ipc.len(), 4);
+//! println!("IPC sum: {:.3} over {} DRAM cycles", report.ipc_sum(), report.dram_cycles);
 //! ```
 
 pub mod cli;
@@ -44,6 +46,7 @@ pub mod dram;
 pub mod energy;
 pub mod lisa;
 pub mod metrics;
+#[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

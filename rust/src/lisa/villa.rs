@@ -361,6 +361,13 @@ impl VillaManager {
     pub fn slots_per_bank(&self) -> usize {
         self.slots_per_bank
     }
+
+    /// Next cycle at which `tick` will run epoch maintenance (the
+    /// fast-forward engine must not jump past it: `next_epoch` is
+    /// re-armed relative to the cycle the boundary is observed at).
+    pub fn next_epoch_cycle(&self) -> u64 {
+        self.next_epoch
+    }
 }
 
 #[cfg(test)]

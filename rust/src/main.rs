@@ -6,9 +6,10 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use lisa::cli::Args;
-use lisa::config::SimConfig;
-use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
-use lisa::sim::engine::{run_workload, weighted_speedup};
+use lisa::config::{CopyMechanism, SimConfig};
+use lisa::dram::timing::SpeedBin;
+use lisa::sim::campaign;
+use lisa::sim::engine::run_workload;
 use lisa::sim::experiments as exp;
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
@@ -21,7 +22,12 @@ USAGE: lisa <command> [options]
 COMMANDS
   calibrate   --artifacts DIR [--out FILE]   run the circuit model via PJRT,
                                              write calibration.toml
-  run         --workload NAME [--config F] [--requests N] [--ws]
+                                             (needs the `runtime` feature)
+  run         --workload NAME [--config F] [--requests N] [--threads N] [--ws]
+  sweep       [--mechs A,B] [--speeds A,B] [--workloads A,B | --mixes N]
+              [--requests N] [--threads N] [--out FILE]
+              parallel {mechanism x workload x speed-bin} campaign,
+              JSON report to --out (or stdout)
   list-workloads
   table1      [--config F]                   E1: 8 KB copy latency/energy
   rbm         E2: RBM bandwidth vs channel
@@ -31,6 +37,20 @@ COMMANDS
   lip-system  [--requests N] [--mixes N]     E7: LIP system-level
   area        E8: die area overhead
 ";
+
+const COMMANDS: &[&str] = &[
+    "calibrate",
+    "run",
+    "sweep",
+    "list-workloads",
+    "table1",
+    "rbm",
+    "lip",
+    "fig3",
+    "fig4",
+    "lip-system",
+    "area",
+];
 
 fn load_config(args: &Args) -> Result<SimConfig> {
     let mut cfg = match args.opt("config") {
@@ -56,13 +76,14 @@ fn load_config(args: &Args) -> Result<SimConfig> {
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let Some(cmd) = args.subcommand.clone() else {
+    let Some(cmd) = args.check_subcommand(COMMANDS)?.map(str::to_string) else {
         print!("{USAGE}");
         return Ok(());
     };
     match cmd.as_str() {
         "calibrate" => cmd_calibrate(&args),
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "list-workloads" => {
             let cfg = SimConfig::default();
             for w in mixes::all_mixes(&cfg) {
@@ -111,7 +132,9 @@ fn main() -> Result<()> {
     }
 }
 
+#[cfg(feature = "runtime")]
 fn cmd_calibrate(args: &Args) -> Result<()> {
+    use lisa::runtime::{calibrate, CalibrationInputs, Runtime};
     let dir = Path::new(args.opt_or("artifacts", "artifacts"));
     let out = args.opt_or("out", "artifacts/calibration.toml");
     let runtime = Runtime::new(dir)?;
@@ -132,17 +155,98 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "runtime"))]
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    bail!(
+        "the PJRT calibration path is not compiled in; rebuild with \
+         `cargo build --features runtime` (the simulator ships with the \
+         same values as checked-in defaults, so calibration is optional)"
+    );
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let name = args.opt_or("workload", "stream4");
+    let threads = args
+        .opt_usize("threads")?
+        .unwrap_or_else(campaign::default_threads);
     let wl = mixes::workload_by_name(name, &cfg)?;
     if args.has_flag("ws") {
-        let (ws, report) = weighted_speedup(&cfg, &wl);
+        // The N alone runs + the shared run go through the campaign
+        // runner (deterministic regardless of --threads).
+        let (ws, report) = campaign::weighted_speedup(&cfg, &wl, threads);
         println!("workload={name} config={} WS={ws:.3}", report.config_name);
         print_report(&report);
     } else {
         let report = run_workload(&cfg, &wl);
         print_report(&report);
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated list through an item parser.
+fn parse_list<T>(s: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(parse)
+        .collect()
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = load_config(args)?;
+    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
+    let threads = args
+        .opt_usize("threads")?
+        .unwrap_or_else(campaign::default_threads);
+    let mechanisms =
+        parse_list(args.opt_or("mechs", "memcpy,lisa-risc"), CopyMechanism::parse)?;
+    let speeds = parse_list(args.opt_or("speeds", "ddr3-1600"), SpeedBin::parse)?;
+    let workloads: Vec<String> = match args.opt("workloads") {
+        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+        None => {
+            // Default grid: the micro suite plus the first N copy mixes.
+            let n_mixes = args.opt_usize("mixes")?.unwrap_or(4);
+            let mut w: Vec<String> =
+                vec!["stream4".into(), "random4".into(), "hotspot4".into(), "fork4".into()];
+            w.extend((0..n_mixes).map(|i| format!("copy-mix-{i:02}")));
+            w
+        }
+    };
+    let spec = campaign::SweepSpec { base, mechanisms, speeds, workloads, requests, threads };
+    let n_points = spec.points().len();
+    eprintln!("sweep: {n_points} points on {threads} threads");
+    let t0 = std::time::Instant::now();
+    let rows = campaign::run_sweep(&spec)?;
+    eprintln!("sweep: done in {:.2} s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "workload", "speed", "mechanism", "cycles", "IPC sum", "copies", "energy uJ",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.workload.clone(),
+            r.speed.to_string(),
+            r.mechanism.to_string(),
+            format!("{}", r.report.dram_cycles),
+            format!("{:.3}", r.report.ipc_sum()),
+            format!("{}", r.report.copies),
+            format!("{:.1}", r.report.energy.total),
+        ]);
+    }
+    let json = campaign::sweep_json(&rows);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            table.print();
+            println!("wrote {path}");
+        }
+        None => {
+            // JSON goes to stdout (machine-parseable / pipeable); the
+            // human-readable table joins the progress lines on stderr.
+            eprintln!("{}", table.render());
+            print!("{json}");
+        }
     }
     Ok(())
 }

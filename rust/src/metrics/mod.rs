@@ -6,7 +6,10 @@ use crate::energy::EnergyBreakdown;
 use crate::util::stats::geomean;
 
 /// Result of simulating one workload on one configuration.
-#[derive(Debug, Clone, Default)]
+/// `PartialEq` is exact float equality — used by the engine
+/// equivalence tests (fast-forward vs per-cycle reference) and the
+/// campaign determinism tests (N threads vs 1).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunReport {
     pub workload: String,
     pub config_name: String,
@@ -43,6 +46,64 @@ impl RunReport {
     /// against itself (== number of cores when alone == shared).
     pub fn weighted_speedup_sum(&self) -> f64 {
         self.ipc_sum()
+    }
+
+    /// Serialize as a JSON object (hand-rolled: no serde offline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"workload\":{},\"config\":{},\"ipc\":[{}],\"dram_cycles\":{},\
+             \"reads\":{},\"writes\":{},\"copies\":{},\
+             \"avg_read_latency_cycles\":{},\"row_hit_rate\":{},\
+             \"villa_hit_rate\":{},\"lip_coverage\":{},\
+             \"energy_uj\":{{\"total\":{},\"background\":{},\"rbm\":{}}}}}",
+            json::string(&self.workload),
+            json::string(&self.config_name),
+            self.ipc.iter().map(|&x| json::number(x)).collect::<Vec<_>>().join(","),
+            self.dram_cycles,
+            self.reads,
+            self.writes,
+            self.copies,
+            json::number(self.avg_read_latency_cycles),
+            json::number(self.row_hit_rate),
+            json::number(self.villa_hit_rate),
+            json::number(self.lip_coverage),
+            json::number(self.energy.total),
+            json::number(self.energy.background_uj),
+            json::number(self.energy.rbm_uj),
+        )
+    }
+}
+
+/// Minimal JSON emission helpers (the offline registry has no serde;
+/// the campaign runner's reports only need strings and numbers).
+pub mod json {
+    /// Quote + escape a string.
+    pub fn string(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    /// Format a float as a JSON number (non-finite values, which JSON
+    /// cannot represent, become null).
+    pub fn number(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x}")
+        } else {
+            "null".to_string()
+        }
     }
 }
 
@@ -93,6 +154,25 @@ mod tests {
         // Degenerate alone IPC contributes zero, not a panic.
         let ws = r.weighted_speedup(&[0.0, 2.0]);
         assert!((ws - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_escaping_and_report_shape() {
+        assert_eq!(json::string("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json::number(1.5), "1.5");
+        assert_eq!(json::number(f64::NAN), "null");
+        let r = RunReport {
+            workload: "stream4".into(),
+            config_name: "memcpy".into(),
+            ipc: vec![1.0, 2.0],
+            dram_cycles: 10,
+            ..Default::default()
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"workload\":\"stream4\""), "{j}");
+        assert!(j.contains("\"ipc\":[1,2]"), "{j}");
+        assert!(j.contains("\"dram_cycles\":10"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Parallel experiment campaigns: shard independent `Simulation` runs
+//! across OS threads with deterministic result ordering.
+//!
+//! The paper's evaluation sweeps {mechanism × workload × config} grids
+//! through the simulator; every point is an independent, deterministic
+//! run, so the campaign layer is embarrassingly parallel. Jobs are
+//! claimed from an atomic cursor and their results written back by
+//! index, so the same campaign at 1, 2 or N threads yields identical
+//! ordered results — only wall-clock time changes. Used by the
+//! weighted-speedup helper (the N alone runs + 1 shared run), the
+//! experiment drivers (E4–E7) and the `sweep` CLI subcommand.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::config::{CopyMechanism, SimConfig};
+use crate::dram::timing::SpeedBin;
+use crate::metrics::{json, RunReport};
+use crate::sim::engine::Simulation;
+use crate::workloads::{mixes, Workload};
+
+/// Default worker count: one per available hardware thread.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `jobs` across up to `threads` workers; results come back in
+/// job order regardless of scheduling. Panics in a job propagate.
+pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return jobs.into_iter().map(|f| f()).collect();
+    }
+    let slots: Vec<Mutex<Option<F>>> =
+        jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = slots[i].lock().expect("job slot").take().expect("claimed once");
+                let result = job();
+                *out[i].lock().expect("result slot") = Some(result);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().expect("result lock").expect("job completed"))
+        .collect()
+}
+
+/// Run a batch of (config, workload) simulations in parallel,
+/// preserving input order.
+pub fn run_reports(points: Vec<(SimConfig, Workload)>, threads: usize) -> Vec<RunReport> {
+    let jobs: Vec<_> = points
+        .into_iter()
+        .map(|(cfg, wl)| move || Simulation::new(cfg, wl).run())
+        .collect();
+    run_jobs(jobs, threads)
+}
+
+/// Alone-run IPCs for every core of a workload (the denominator of
+/// weighted speedup), sharded across `threads` workers.
+pub fn alone_ipcs(cfg: &SimConfig, workload: &Workload, threads: usize) -> Vec<f64> {
+    let jobs: Vec<_> = (0..workload.cores.len())
+        .map(|i| {
+            let cfg = cfg.clone();
+            move || Simulation::new_alone(cfg, workload, i).run().ipc[0]
+        })
+        .collect();
+    run_jobs(jobs, threads)
+}
+
+/// Weighted speedup of a workload on a config: the N alone runs and
+/// the shared run are independent, so all N+1 go through the campaign
+/// runner together.
+pub fn weighted_speedup(
+    cfg: &SimConfig,
+    workload: &Workload,
+    threads: usize,
+) -> (f64, RunReport) {
+    let n = workload.cores.len();
+    let jobs: Vec<Box<dyn FnOnce() -> RunReport + Send + '_>> = (0..=n)
+        .map(|i| {
+            let cfg = cfg.clone();
+            let job: Box<dyn FnOnce() -> RunReport + Send + '_> = if i < n {
+                Box::new(move || Simulation::new_alone(cfg, workload, i).run())
+            } else {
+                Box::new(move || Simulation::new(cfg, workload.clone()).run())
+            };
+            job
+        })
+        .collect();
+    let mut reports = run_jobs(jobs, threads);
+    let shared = reports.pop().expect("shared run present");
+    let alone: Vec<f64> = reports.iter().map(|r| r.ipc[0]).collect();
+    (shared.weighted_speedup(&alone), shared)
+}
+
+// ---------------------------------------------------------------------------
+// Sweep campaigns: {mechanism × workload × speed-bin} grids.
+// ---------------------------------------------------------------------------
+
+/// One point of a sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub mechanism: CopyMechanism,
+    pub speed: SpeedBin,
+    pub workload: String,
+}
+
+/// A sweep campaign: the cross product of mechanisms, speed bins and
+/// workload names over a base configuration.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub base: SimConfig,
+    pub mechanisms: Vec<CopyMechanism>,
+    pub speeds: Vec<SpeedBin>,
+    pub workloads: Vec<String>,
+    pub requests: u64,
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    /// Grid order: workload-major, then speed, then mechanism — so all
+    /// mechanism columns for one (workload, speed) row are adjacent.
+    pub fn points(&self) -> Vec<SweepPoint> {
+        let mut out = Vec::new();
+        for workload in &self.workloads {
+            for &speed in &self.speeds {
+                for &mechanism in &self.mechanisms {
+                    out.push(SweepPoint {
+                        mechanism,
+                        speed,
+                        workload: workload.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The base configuration specialized to one grid point. LISA-RISC
+/// implies the RISC substrate is present (matching `cfg_risc`); other
+/// LISA switches follow the base configuration untouched.
+pub fn point_config(base: &SimConfig, point: &SweepPoint, requests: u64) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.requests_per_core = requests;
+    cfg.dram.speed = point.speed;
+    cfg.copy_mechanism = point.mechanism;
+    if point.mechanism == CopyMechanism::LisaRisc {
+        cfg.lisa.risc = true;
+    }
+    cfg
+}
+
+/// One finished sweep point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub mechanism: &'static str,
+    pub speed: &'static str,
+    pub workload: String,
+    pub report: RunReport,
+}
+
+/// Run the whole grid through the campaign runner. Workload names are
+/// resolved up front so a typo fails fast instead of mid-campaign.
+pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepRow>> {
+    let points = spec.points();
+    let mut jobs = Vec::with_capacity(points.len());
+    for p in &points {
+        let cfg = point_config(&spec.base, p, spec.requests);
+        let wl = mixes::workload_by_name(&p.workload, &cfg)?;
+        jobs.push(move || Simulation::new(cfg, wl).run());
+    }
+    let reports = run_jobs(jobs, spec.threads);
+    Ok(points
+        .into_iter()
+        .zip(reports)
+        .map(|(p, report)| SweepRow {
+            mechanism: p.mechanism.name(),
+            speed: p.speed.name(),
+            workload: p.workload,
+            report,
+        })
+        .collect())
+}
+
+/// JSON document for a finished sweep (`lisa sweep --out report.json`).
+pub fn sweep_json(rows: &[SweepRow]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"mechanism\":{},\"speed\":{},\"workload\":{},\"report\":{}}}",
+                json::string(r.mechanism),
+                json::string(r.speed),
+                json::string(&r.workload),
+                r.report.to_json()
+            )
+        })
+        .collect();
+    format!("{{\"sweep\":[\n{}\n]}}\n", body.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_jobs_preserves_order_across_thread_counts() {
+        // Jobs finish in scrambled wall-clock order (varying work), but
+        // results must always come back in submission order.
+        fn mk_jobs() -> Vec<impl FnOnce() -> (u64, u64) + Send> {
+            (0..32u64)
+                .map(|i| {
+                    move || {
+                        // Unequal work so threads interleave.
+                        let mut acc = i;
+                        for k in 0..((i % 7) * 1000) {
+                            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                        }
+                        (i, acc)
+                    }
+                })
+                .collect()
+        }
+        let serial = run_jobs(mk_jobs(), 1);
+        for threads in [2, 4, 8] {
+            let parallel = run_jobs(mk_jobs(), threads);
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+        assert_eq!(run_jobs(Vec::<fn() -> u8>::new(), 4), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn sweep_grid_shape_and_config() {
+        let spec = SweepSpec {
+            base: SimConfig::default(),
+            mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
+            speeds: vec![SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400],
+            workloads: vec!["stream4".into(), "fork4".into()],
+            requests: 100,
+            threads: 1,
+        };
+        let points = spec.points();
+        assert_eq!(points.len(), 8);
+        // Workload-major ordering.
+        assert!(points[..4].iter().all(|p| p.workload == "stream4"));
+        let cfg = point_config(&spec.base, &points[1], 100);
+        assert_eq!(cfg.copy_mechanism, CopyMechanism::LisaRisc);
+        assert!(cfg.lisa.risc, "LISA-RISC points enable the substrate");
+        assert_eq!(cfg.requests_per_core, 100);
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_workloads() {
+        let spec = SweepSpec {
+            base: SimConfig::default(),
+            mechanisms: vec![CopyMechanism::MemcpyChannel],
+            speeds: vec![SpeedBin::Ddr3_1600],
+            workloads: vec!["no-such-workload".into()],
+            requests: 100,
+            threads: 1,
+        };
+        assert!(run_sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn campaign_is_deterministic_across_thread_counts() {
+        let spec = SweepSpec {
+            base: SimConfig::default(),
+            mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
+            speeds: vec![SpeedBin::Ddr3_1600],
+            workloads: vec!["stream4".into(), "fork4".into()],
+            requests: 400,
+            threads: 1,
+        };
+        let serial = run_sweep(&spec).unwrap();
+        assert_eq!(serial.len(), 4);
+        for threads in [2, 8] {
+            let mut spec_n = spec.clone();
+            spec_n.threads = threads;
+            let parallel = run_sweep(&spec_n).unwrap();
+            assert_eq!(serial, parallel, "threads={threads}");
+        }
+        assert!(serial.iter().all(|r| r.report.dram_cycles > 0));
+        assert_eq!(sweep_json(&serial).matches("\"mechanism\"").count(), 4);
+    }
+
+    #[test]
+    fn parallel_weighted_speedup_matches_serial_engine() {
+        let mut cfg = SimConfig::default();
+        cfg.requests_per_core = 800;
+        let wl = mixes::workload_by_name("random4", &cfg).unwrap();
+        let (ws_serial, rep_serial) = crate::sim::engine::weighted_speedup(&cfg, &wl);
+        let (ws_par, rep_par) = weighted_speedup(&cfg, &wl, 4);
+        assert_eq!(rep_serial, rep_par);
+        assert!((ws_serial - ws_par).abs() < 1e-12, "{ws_serial} vs {ws_par}");
+        let alone = alone_ipcs(&cfg, &wl, 8);
+        assert_eq!(alone, crate::sim::engine::alone_ipcs(&cfg, &wl));
+    }
+}

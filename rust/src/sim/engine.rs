@@ -7,7 +7,7 @@ use anyhow::Result;
 use crate::config::SimConfig;
 use crate::controller::Controller;
 use crate::cpu::cache::Hierarchy;
-use crate::cpu::core::Core;
+use crate::cpu::core::{Core, CoreWake};
 use crate::energy::EnergyModel;
 use crate::lisa::lip::lip_coverage;
 use crate::metrics::RunReport;
@@ -55,14 +55,39 @@ impl Simulation {
     }
 
     /// Run to completion (all cores drained their budget) or the
-    /// configured cycle cap; returns the report.
+    /// configured cycle cap; returns the report. Uses the event-driven
+    /// fast-forward engine: whenever every core is memory-stalled and
+    /// no DRAM command is issuable, the clock jumps straight to the
+    /// next-event horizon instead of ticking idle cycles. Results are
+    /// cycle-exact — `tests/engine_equivalence.rs` asserts identical
+    /// `RunReport`s against `reference_run` across the full config
+    /// matrix.
     pub fn run(&mut self) -> RunReport {
         self.try_run().expect("simulation failed")
     }
 
     pub fn try_run(&mut self) -> Result<RunReport> {
+        self.drive(true)
+    }
+
+    /// The original per-cycle loop, kept as the golden reference for
+    /// equivalence tests and for debugging suspected engine bugs.
+    pub fn reference_run(&mut self) -> RunReport {
+        self.try_reference_run().expect("simulation failed")
+    }
+
+    pub fn try_reference_run(&mut self) -> Result<RunReport> {
+        self.drive(false)
+    }
+
+    fn drive(&mut self, fast_forward: bool) -> Result<RunReport> {
         let ratio = self.cfg.cpu.clock_ratio;
         let mut cycles: u64 = 0;
+        // Perf heuristic only (results are identical either way, since
+        // skipping less is always exact): after a failed skip attempt,
+        // busy phases pause the horizon query for a few ticks instead
+        // of paying for it every cycle.
+        let mut cooldown: u32 = 0;
         while cycles < self.cfg.max_cycles {
             self.ctrl.tick()?;
             cycles += 1;
@@ -84,8 +109,52 @@ impl Simulation {
             if all_done {
                 break;
             }
+            if fast_forward {
+                if cooldown > 0 {
+                    cooldown -= 1;
+                } else {
+                    let gap = self.idle_gap(ratio).min(self.cfg.max_cycles - cycles);
+                    if gap > 0 {
+                        self.ctrl.fast_forward(gap);
+                        for core in self.cores.iter_mut() {
+                            core.advance_idle(gap * ratio);
+                        }
+                        cycles += gap;
+                    } else {
+                        cooldown = 3;
+                    }
+                }
+            }
         }
         Ok(self.report(cycles))
+    }
+
+    /// DRAM cycles, starting at the controller's current cycle, during
+    /// which provably nothing happens anywhere in the system: the
+    /// controller neither delivers an event nor issues a command
+    /// (`Controller::next_event_cycle`), and every core only burns
+    /// clock (`Core::next_wake`). Returns 0 when anything is active.
+    fn idle_gap(&self, ratio: u64) -> u64 {
+        let now = self.ctrl.now;
+        let mut horizon = self.ctrl.next_event_cycle();
+        if horizon <= now {
+            return 0;
+        }
+        for core in &self.cores {
+            match core.next_wake(&self.ctrl) {
+                CoreWake::Active => return 0,
+                CoreWake::Blocked => {}
+                CoreWake::At(t_cpu) => {
+                    // The core runs CPU cycles (c, c + ratio] during
+                    // the next DRAM tick; find the first tick whose
+                    // batch reaches t_cpu.
+                    let ahead = t_cpu.saturating_sub(core.cpu_cycles);
+                    debug_assert!(ahead >= 2, "At(t) within the next batch is Active");
+                    horizon = horizon.min(now + (ahead - 1) / ratio.max(1));
+                }
+            }
+        }
+        horizon - now
     }
 
     fn report(&self, cycles: u64) -> RunReport {
@@ -227,6 +296,20 @@ mod tests {
             "villa hit rate {}",
             r.villa_hit_rate
         );
+    }
+
+    #[test]
+    fn fast_forward_matches_reference_loop() {
+        // Quick in-module sanity check; the full configuration matrix
+        // lives in tests/engine_equivalence.rs.
+        let mut cfg = small_cfg();
+        cfg.requests_per_core = 600;
+        cfg.lisa.risc = true;
+        cfg.copy_mechanism = CopyMechanism::LisaRisc;
+        let wl = mixes::workload_by_name("fork4", &cfg).unwrap();
+        let fast = Simulation::new(cfg.clone(), wl.clone()).run();
+        let reference = Simulation::new(cfg, wl).reference_run();
+        assert_eq!(fast, reference);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::energy::EnergyModel;
 use crate::lisa::lip::{lip_report, LipReport};
 use crate::lisa::rbm::{rbm_bandwidth, RbmBandwidth};
 use crate::metrics::Comparison;
+use crate::sim::campaign;
 use crate::sim::engine::{alone_ipcs, run_workload};
 use crate::workloads::mixes;
 use crate::workloads::Workload;
@@ -193,32 +194,40 @@ pub struct Fig3Row {
 }
 
 /// E4 (Fig. 3): LISA-VILLA improvement + hit rate per hot-region
-/// workload, plus the RC-InterSA-movement comparison.
+/// workload, plus the RC-InterSA-movement comparison. Each mix is an
+/// independent job, sharded across the campaign runner (result order
+/// is the mix order regardless of thread count).
 pub fn fig3(requests: u64, max_mixes: usize) -> Vec<Fig3Row> {
     let base = cfg_baseline(requests);
     let villa = cfg_risc_villa(requests);
     let villa_rc = cfg_villa_rc(requests);
     let mixes = mixes::villa_mixes(base.cpu.cores);
-    mixes
+    let jobs: Vec<_> = mixes
         .iter()
         .take(max_mixes)
         .map(|wl| {
-            let alone = alone_ipcs(&base, wl);
-            let b = ws_point_with(&base, wl, &alone);
-            let v = ws_point_with(&villa, wl, &alone);
-            let rc = ws_point_with(&villa_rc, wl, &alone);
-            Fig3Row {
-                workload: wl.name.clone(),
-                villa_improvement: improvement(&b, &v).0,
-                villa_hit_rate: v.villa_hit_rate,
-                rc_inter_improvement: improvement(&b, &rc).0,
+            let base = base.clone();
+            let villa = villa.clone();
+            let villa_rc = villa_rc.clone();
+            move || {
+                let alone = alone_ipcs(&base, wl);
+                let b = ws_point_with(&base, wl, &alone);
+                let v = ws_point_with(&villa, wl, &alone);
+                let rc = ws_point_with(&villa_rc, wl, &alone);
+                Fig3Row {
+                    workload: wl.name.clone(),
+                    villa_improvement: improvement(&b, &v).0,
+                    villa_hit_rate: v.villa_hit_rate,
+                    rc_inter_improvement: improvement(&b, &rc).0,
+                }
             }
         })
-        .collect()
+        .collect();
+    campaign::run_jobs(jobs, campaign::default_threads())
 }
 
 /// E5/E6 (Fig. 4): comparisons of RISC / RISC+VILLA / All over the
-/// baseline across the copy mixes.
+/// baseline across the copy mixes, one campaign job per mix.
 pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
     let base = cfg_baseline(requests);
     let configs = [
@@ -227,18 +236,31 @@ pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
         ("LISA-All", cfg_all(requests)),
     ];
     let mixes = mixes::copy_mixes(base.cpu.cores);
+    let jobs: Vec<_> = mixes
+        .iter()
+        .take(max_mixes)
+        .map(|wl| {
+            let base = base.clone();
+            let configs = configs.clone();
+            move || {
+                // One set of baseline alone runs + one baseline
+                // measurement, shared by all three configs.
+                let alone = alone_ipcs(&base, wl);
+                let b = ws_point_with(&base, wl, &alone);
+                configs
+                    .iter()
+                    .map(|(_, cfg)| improvement(&b, &ws_point_with(cfg, wl, &alone)))
+                    .collect::<Vec<_>>()
+            }
+        })
+        .collect();
+    let per_mix = campaign::run_jobs(jobs, campaign::default_threads());
     let mut cmps: Vec<Comparison> = configs
         .iter()
         .map(|(name, _)| Comparison { name: name.to_string(), ..Default::default() })
         .collect();
-    for wl in mixes.iter().take(max_mixes) {
-        // One set of baseline alone runs + one baseline measurement,
-        // shared by all three configs.
-        let alone = alone_ipcs(&base, wl);
-        let b = ws_point_with(&base, wl, &alone);
-        for (i, (_, cfg)) in configs.iter().enumerate() {
-            let c = ws_point_with(cfg, wl, &alone);
-            let (imp, en) = improvement(&b, &c);
+    for row in per_mix {
+        for (i, (imp, en)) in row.into_iter().enumerate() {
             cmps[i].ws_improvements.push(imp);
             cmps[i].energy_reductions.push(en);
         }
@@ -247,17 +269,27 @@ pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
 }
 
 /// E7: LISA-LIP alone across the copy mixes (paper: +10.3% average
-/// over 50 workloads).
+/// over 50 workloads), one campaign job per mix.
 pub fn lip_system(requests: u64, max_mixes: usize) -> Comparison {
     let base = cfg_baseline(requests);
     let lip = cfg_lip(requests);
     let mixes = mixes::copy_mixes(base.cpu.cores);
+    let jobs: Vec<_> = mixes
+        .iter()
+        .take(max_mixes)
+        .map(|wl| {
+            let base = base.clone();
+            let lip = lip.clone();
+            move || {
+                let alone = alone_ipcs(&base, wl);
+                let b = ws_point_with(&base, wl, &alone);
+                let c = ws_point_with(&lip, wl, &alone);
+                improvement(&b, &c)
+            }
+        })
+        .collect();
     let mut cmp = Comparison { name: "LISA-LIP".into(), ..Default::default() };
-    for wl in mixes.iter().take(max_mixes) {
-        let alone = alone_ipcs(&base, wl);
-        let b = ws_point_with(&base, wl, &alone);
-        let c = ws_point_with(&lip, wl, &alone);
-        let (imp, en) = improvement(&b, &c);
+    for (imp, en) in campaign::run_jobs(jobs, campaign::default_threads()) {
         cmp.ws_improvements.push(imp);
         cmp.energy_reductions.push(en);
     }

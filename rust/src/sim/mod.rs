@@ -1,6 +1,8 @@
-//! Simulation engine (CPU ⇄ controller ⇄ DRAM binding) and the
-//! experiment drivers that regenerate the paper's tables and figures.
+//! Simulation engine (CPU ⇄ controller ⇄ DRAM binding), the parallel
+//! campaign runner, and the experiment drivers that regenerate the
+//! paper's tables and figures.
 
+pub mod campaign;
 pub mod engine;
 pub mod experiments;
 

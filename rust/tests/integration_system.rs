@@ -4,6 +4,7 @@
 //! determinism, bank-parallelism).
 
 use lisa::config::{CopyMechanism, SimConfig};
+use lisa::sim::campaign;
 use lisa::sim::engine::{run_workload, Simulation};
 use lisa::sim::experiments::{
     cfg_all, cfg_baseline, cfg_risc, cfg_risc_villa, cfg_villa_rc,
@@ -37,6 +38,57 @@ fn different_seed_different_trace() {
     cfg.seed = 999;
     let b = run_workload(&cfg, &wl);
     assert_ne!(a.dram_cycles, b.dram_cycles);
+}
+
+#[test]
+fn generator_seeding_is_deterministic_end_to_end() {
+    // `cfg.seed` feeds every per-core generator (workloads/generators.rs)
+    // through `Workload::traces`; same seed => identical traces for
+    // every behaviour class, different seed => different traces.
+    let mut cfg = quick(500);
+    for name in ["stream4", "random4", "chase4", "hotspot4", "fork4", "copy-mix-05"] {
+        let wl = mixes::workload_by_name(name, &cfg).unwrap();
+        let a = wl.traces(&cfg, 400);
+        let b = wl.traces(&cfg, 400);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ops, y.ops, "{name}: same seed must reproduce the trace");
+        }
+        cfg.seed ^= 0xABCD;
+        let c = wl.traces(&cfg, 400);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.ops != y.ops),
+            "{name}: seed change must alter at least one core's trace"
+        );
+        cfg.seed ^= 0xABCD; // restore
+    }
+}
+
+#[test]
+fn campaign_thread_count_does_not_change_results() {
+    // The full campaign stack (config grid -> parallel shards ->
+    // ordered reports) is deterministic in everything but wall-clock:
+    // 1, 2 and 8 worker threads must produce identical ordered rows.
+    let spec = campaign::SweepSpec {
+        base: quick(600),
+        mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
+        speeds: vec![lisa::dram::timing::SpeedBin::Ddr3_1600],
+        workloads: vec!["fork4".into(), "copy-mix-01".into()],
+        requests: 600,
+        threads: 1,
+    };
+    let serial = campaign::run_sweep(&spec).unwrap();
+    for threads in [2, 8] {
+        let mut spec_n = spec.clone();
+        spec_n.threads = threads;
+        assert_eq!(serial, campaign::run_sweep(&spec_n).unwrap(), "threads={threads}");
+    }
+    // And the parallel weighted-speedup helper agrees with itself.
+    let cfg = quick(600);
+    let wl = mixes::workload_by_name("copy-mix-01", &cfg).unwrap();
+    let (ws1, rep1) = campaign::weighted_speedup(&cfg, &wl, 1);
+    let (ws8, rep8) = campaign::weighted_speedup(&cfg, &wl, 8);
+    assert_eq!(rep1, rep8);
+    assert!((ws1 - ws8).abs() < 1e-15, "{ws1} vs {ws8}");
 }
 
 #[test]
