@@ -10,6 +10,7 @@
 //! # knobs: LISA_REQUESTS=3000 LISA_MIXES=10
 //! ```
 
+use lisa::sim::campaign::default_threads;
 use lisa::sim::experiments::{fig4, lip_system};
 use lisa::util::bench::Table;
 
@@ -55,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         "\n== Fig. 4: combined weighted-speedup improvement \
          ({mixes} copy mixes, {requests} reqs/core) ==\n"
     );
-    let cmps = fig4(requests, mixes);
+    let cmps = fig4(requests, mixes, default_threads());
     let mut t = Table::new(&["config", "mean WS +%", "max +%", "energy -%", "paper"]);
     let paper = ["+59.6% (alone)", "+76.1% (cum.)", "+94.8% (all)"];
     for (c, p) in cmps.iter().zip(paper) {
@@ -69,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    let lip = lip_system(requests, mixes.min(10));
+    let lip = lip_system(requests, mixes.min(10), default_threads());
     println!(
         "\nLISA-LIP alone: {:+.1}% mean WS (paper: +10.3%)",
         lip.mean_ws_improvement() * 100.0

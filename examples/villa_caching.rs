@@ -7,6 +7,7 @@
 //! cargo run --release --example villa_caching
 //! ```
 
+use lisa::sim::campaign::default_threads;
 use lisa::sim::experiments::fig3;
 use lisa::util::bench::Table;
 
@@ -21,7 +22,7 @@ fn main() {
         .unwrap_or(4);
 
     println!("== LISA-VILLA (Fig. 3), {requests} requests/core, {mixes} mixes ==\n");
-    let rows = fig3(requests, mixes);
+    let rows = fig3(requests, mixes, default_threads());
     let mut t = Table::new(&["workload", "VILLA +%", "hit rate %", "VILLA w/ RC-InterSA +%"]);
     for r in &rows {
         t.row(&[

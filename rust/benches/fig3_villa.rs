@@ -4,6 +4,7 @@
 //!
 //! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 8).
 
+use lisa::sim::campaign::default_threads;
 use lisa::sim::experiments::fig3;
 use lisa::util::bench::Table;
 use lisa::util::stats::geomean;
@@ -16,7 +17,7 @@ fn main() {
     let requests = env_u64("LISA_REQUESTS", 2_000);
     let mixes = env_u64("LISA_MIXES", 8) as usize;
     println!("=== E4 / Fig. 3: LISA-VILLA ({requests} reqs/core, {mixes} mixes) ===\n");
-    let rows = fig3(requests, mixes);
+    let rows = fig3(requests, mixes, default_threads());
     let mut t = Table::new(&["workload", "VILLA +%", "hit rate %", "VILLA w/ RC-InterSA +%"]);
     for r in &rows {
         t.row(&[

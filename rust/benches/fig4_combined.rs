@@ -5,6 +5,7 @@
 //! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15;
 //! set 50 for the paper's full sweep).
 
+use lisa::sim::campaign::default_threads;
 use lisa::sim::experiments::fig4;
 use lisa::util::bench::Table;
 
@@ -16,7 +17,7 @@ fn main() {
     let requests = env_u64("LISA_REQUESTS", 2_000);
     let n = env_u64("LISA_MIXES", 15) as usize;
     println!("=== E6 / Fig. 4: combined LISA ({requests} reqs/core, {n} mixes) ===\n");
-    let cmps = fig4(requests, n);
+    let cmps = fig4(requests, n, default_threads());
     let mut t = Table::new(&["config", "mean WS +%", "geomean x", "max +%", "energy -%", "paper WS"]);
     let paper = ["+59.6%", "+76.1% cum", "+94.8%"];
     for (c, p) in cmps.iter().zip(paper) {

@@ -3,6 +3,7 @@
 //!
 //! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15).
 
+use lisa::sim::campaign::default_threads;
 use lisa::sim::experiments::lip_system;
 
 fn env_u64(k: &str, d: u64) -> u64 {
@@ -13,7 +14,7 @@ fn main() {
     let requests = env_u64("LISA_REQUESTS", 2_000);
     let n = env_u64("LISA_MIXES", 15) as usize;
     println!("=== E7: LISA-LIP system-level ({requests} reqs/core, {n} mixes) ===\n");
-    let c = lip_system(requests, n);
+    let c = lip_system(requests, n, default_threads());
     for (wl, imp) in c.ws_improvements.iter().enumerate() {
         println!("copy-mix-{wl:02}: {:+.1}%", imp * 100.0);
     }

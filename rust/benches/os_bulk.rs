@@ -1,0 +1,69 @@
+//! Perf bench for the OS-layer bulk-operation subsystem: pages/second
+//! for the fork (CoW-fault copies) and boot-zeroing scenarios across
+//! all five copy mechanisms — the per-page cost each mechanism charges
+//! the OS, end to end through page tables, frame allocation, the
+//! page-copy queue and the copy sequencer.
+//!
+//! Usage: `cargo bench --bench os_bulk [-- REQUESTS]`
+//! (REQUESTS defaults to 2000; CI smoke mode passes a small value.)
+
+use std::time::Instant;
+
+use lisa::config::{CopyMechanism, PlacementPolicy, SimConfig};
+use lisa::sim::engine::Simulation;
+use lisa::util::bench::Table;
+use lisa::workloads::mixes;
+
+const MECHANISMS: [CopyMechanism; 5] = [
+    CopyMechanism::MemcpyChannel,
+    CopyMechanism::RowCloneInterBank,
+    CopyMechanism::RowCloneInterSa,
+    CopyMechanism::RowCloneIntraSa,
+    CopyMechanism::LisaRisc,
+];
+
+fn main() {
+    let requests: u64 = std::env::args()
+        .skip(1)
+        .find_map(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    println!("=== OS bulk-operation throughput ({requests} requests/core) ===\n");
+    let mut t = Table::new(&[
+        "scenario",
+        "mechanism",
+        "pages",
+        "sim cycles",
+        "pages/s (sim)",
+        "pages/s (wall)",
+    ]);
+    for scenario in ["os-fork", "os-zero"] {
+        for mech in MECHANISMS {
+            let mut cfg = SimConfig::default();
+            cfg.requests_per_core = requests;
+            cfg.copy_mechanism = mech;
+            cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
+            cfg.os.placement = PlacementPolicy::SubarrayPacked;
+            let wl = mixes::workload_by_name(scenario, &cfg).unwrap();
+            let mut sim = Simulation::new(cfg, wl);
+            let t0 = Instant::now();
+            let r = sim.run();
+            let wall = t0.elapsed().as_secs_f64();
+            let os = r.os.as_ref().expect("OS summary");
+            assert!(os.pages_copied > 0, "{scenario}/{mech:?}: no pages copied");
+            let sim_secs = r.dram_cycles as f64 * sim.ctrl.dev.timing.tck_ns * 1e-9;
+            t.row(&[
+                scenario.to_string(),
+                mech.name().to_string(),
+                format!("{}", os.pages_copied),
+                format!("{}", r.dram_cycles),
+                format!("{:.0}", os.pages_copied as f64 / sim_secs),
+                format!("{:.0}", os.pages_copied as f64 / wall),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\n(pages/s (sim) is simulated-time throughput — the number the paper's \
+         mechanisms change; pages/s (wall) is host simulation speed)"
+    );
+}

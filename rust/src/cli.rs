@@ -165,6 +165,20 @@ mod tests {
     }
 
     #[test]
+    fn threads_option_parses_on_every_campaign_subcommand() {
+        // `--threads N` is plumbed through every campaign-backed
+        // subcommand; absence means "use available parallelism".
+        for cmd in ["fig3", "fig4", "lip-system", "sweep", "os", "run"] {
+            let a = parse(&format!("{cmd} --threads 3"));
+            assert_eq!(a.subcommand.as_deref(), Some(cmd));
+            assert_eq!(a.opt_usize("threads").unwrap(), Some(3), "{cmd}");
+            let bare = parse(cmd);
+            assert_eq!(bare.opt_usize("threads").unwrap(), None, "{cmd}");
+        }
+        assert!(parse("os --threads x").opt_usize("threads").is_err());
+    }
+
+    #[test]
     fn double_dash_ends_option_parsing() {
         let a = parse("run --ws -- --not-a-flag -5");
         assert!(a.has_flag("ws"));

@@ -52,6 +52,70 @@ impl CopyMechanism {
     }
 }
 
+/// Physical frame placement policy of the OS-layer frame allocator
+/// (`os/frame_alloc.rs`). Placement decides where bulk-copy pairs land
+/// relative to each other, which in turn decides how many page copies
+/// the in-DRAM mechanisms can serve without leaving the bank — the
+/// RISC hit rate is itself an evaluable knob of experiment E9.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementPolicy {
+    /// Uniform-random frame from the free pool (no locality).
+    Random,
+    /// Fill subarray groups in order: maximal co-location (dense
+    /// same-bank placement, minimal bank-level parallelism).
+    SubarrayPacked,
+    /// Round-robin across subarray groups: maximal bank parallelism,
+    /// minimal copy-pair locality.
+    SubarraySpread,
+    /// Level-major across banks: pack the subarrays nearest the fast
+    /// (VILLA) subarray first while round-robining banks — co-location
+    /// with bank parallelism and short promotion hops.
+    VillaAware,
+}
+
+impl PlacementPolicy {
+    pub const ALL: [PlacementPolicy; 4] = [
+        PlacementPolicy::Random,
+        PlacementPolicy::SubarrayPacked,
+        PlacementPolicy::SubarraySpread,
+        PlacementPolicy::VillaAware,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "random" => Self::Random,
+            "packed" | "subarray-packed" => Self::SubarrayPacked,
+            "spread" | "subarray-spread" => Self::SubarraySpread,
+            "villa" | "villa-aware" => Self::VillaAware,
+            _ => bail!(
+                "unknown placement policy '{s}' (random|packed|spread|villa-aware)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Random => "random",
+            Self::SubarrayPacked => "packed",
+            Self::SubarraySpread => "spread",
+            Self::VillaAware => "villa-aware",
+        }
+    }
+}
+
+/// OS-layer (virtual memory + bulk-operation subsystem) configuration.
+#[derive(Debug, Clone)]
+pub struct OsConfig {
+    /// Frame placement policy for the subarray-aware allocator.
+    pub placement: PlacementPolicy,
+}
+
+impl Default for OsConfig {
+    fn default() -> Self {
+        Self { placement: PlacementPolicy::SubarrayPacked }
+    }
+}
+
 /// DRAM organization. Defaults mirror the paper's configuration:
 /// DDR3-1600, 1 channel, 1 rank, 8 banks, 16 subarrays/bank,
 /// 512 rows/subarray, 8 KB rows (128 cache lines of 64 B).
@@ -235,6 +299,7 @@ pub struct SimConfig {
     pub dram: DramConfig,
     pub lisa: LisaConfig,
     pub cpu: CpuConfig,
+    pub os: OsConfig,
     pub calibration: Calibration,
     pub copy_mechanism: CopyMechanism,
     /// Memory requests simulated per core before the run ends.
@@ -252,6 +317,7 @@ impl Default for SimConfig {
             dram: DramConfig::default(),
             lisa: LisaConfig::default(),
             cpu: CpuConfig::default(),
+            os: OsConfig::default(),
             calibration: Calibration::default(),
             copy_mechanism: CopyMechanism::MemcpyChannel,
             requests_per_core: 50_000,
@@ -324,6 +390,10 @@ impl SimConfig {
         set!(self.cpu.l1_kb, get_usize, "cpu", "l1_kb");
         set!(self.cpu.l2_kb, get_usize, "cpu", "l2_kb");
         set!(self.cpu.llc_kb, get_usize, "cpu", "llc_kb");
+
+        if let Some(s) = doc.get_str("os", "placement")? {
+            self.os.placement = PlacementPolicy::parse(&s)?;
+        }
 
         set!(self.calibration.t_rbm_ns, get_f64, "calibration", "t_rbm_ns");
         set!(self.calibration.t_rp_lip_ns, get_f64, "calibration", "t_rp_lip_ns");
@@ -458,6 +528,20 @@ mod tests {
             assert_eq!(CopyMechanism::parse(m.name()).unwrap(), m);
         }
         assert!(CopyMechanism::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn placement_policy_parse_round_trip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(PlacementPolicy::parse("nope").is_err());
+        let cfg = SimConfig::from_toml("[os]\nplacement = \"spread\"\n").unwrap();
+        assert_eq!(cfg.os.placement, PlacementPolicy::SubarraySpread);
+        assert_eq!(
+            SimConfig::default().os.placement,
+            PlacementPolicy::SubarrayPacked
+        );
     }
 
     #[test]

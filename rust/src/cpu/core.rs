@@ -5,7 +5,10 @@
 //! memory-level parallelism; `dependent` loads (pointer chasing)
 //! block further issue entirely. Bulk copies are synchronous
 //! (memcpy semantics): the core stops issuing until the copy
-//! completes.
+//! completes. OS bulk ops (`TraceOp::Bulk`) route through the OS
+//! layer, whose outcomes reuse the same machinery: page-fault copies
+//! stall the core exactly like synchronous bulk copies, then the
+//! faulting access replays through the cache hierarchy.
 
 use std::collections::VecDeque;
 
@@ -14,6 +17,7 @@ use crate::controller::request::CopyRequest;
 use crate::controller::Controller;
 use crate::cpu::cache::Hierarchy;
 use crate::cpu::trace::{Trace, TraceCursor, TraceOp};
+use crate::os::{OsLayer, OsOutcome};
 
 /// Request ids are partitioned per core; writebacks use the write id
 /// space (no completion expected).
@@ -79,7 +83,10 @@ pub struct Core {
     wb_queue: VecDeque<u64>,
     outstanding: usize,
     dep_block: Option<u64>,
-    wait_copy: Option<u64>,
+    /// Outstanding synchronous copies (a trace-level bulk copy, or the
+    /// page copies of one OS bulk op / page fault): the core stops
+    /// issuing until every one completes.
+    wait_copies: Vec<u64>,
     next_id: u64,
 
     /// Ops consumed from the trace (budget accounting).
@@ -108,7 +115,7 @@ impl Core {
             wb_queue: VecDeque::new(),
             outstanding: 0,
             dep_block: None,
-            wait_copy: None,
+            wait_copies: Vec::new(),
             next_id: id_base(id),
             mem_ops_done: 0,
             copies_done: 0,
@@ -123,8 +130,9 @@ impl Core {
     pub fn finished(&self) -> bool {
         self.fetch_stopped
             && self.window.is_empty()
-            && self.wait_copy.is_none()
+            && self.wait_copies.is_empty()
             && self.pending_demand.is_none()
+            && self.cur_op.is_none()
             && self.wb_queue.is_empty()
     }
 
@@ -160,13 +168,17 @@ impl Core {
 
     /// A synchronous copy completed.
     pub fn on_copy_complete(&mut self, copy_id: u64) {
-        if self.wait_copy == Some(copy_id) {
-            self.wait_copy = None;
-        }
+        self.wait_copies.retain(|&id| id != copy_id);
     }
 
-    /// One CPU cycle: retire, then issue.
-    pub fn cycle(&mut self, hier: &mut Hierarchy, ctrl: &mut Controller) {
+    /// One CPU cycle: retire, then issue. `os` carries the OS layer
+    /// for workloads with `TraceOp::Bulk` records (None otherwise).
+    pub fn cycle(
+        &mut self,
+        hier: &mut Hierarchy,
+        ctrl: &mut Controller,
+        mut os: Option<&mut OsLayer>,
+    ) {
         if self.finished() {
             return;
         }
@@ -197,8 +209,8 @@ impl Core {
             }
         }
 
-        if self.wait_copy.is_some() {
-            return; // blocked on a synchronous copy
+        if !self.wait_copies.is_empty() {
+            return; // blocked on a synchronous copy / page fault
         }
 
         // Issue.
@@ -225,11 +237,11 @@ impl Core {
             }
             // Current op's action is due.
             if let Some(op) = self.cur_op.take() {
-                if !self.do_action(op, hier, ctrl, now) {
+                if !self.do_action(op, hier, ctrl, os.as_deref_mut(), now) {
                     break; // demand parked in pending_demand
                 }
                 issued += 1;
-                if self.wait_copy.is_some() {
+                if !self.wait_copies.is_empty() {
                     break;
                 }
                 continue;
@@ -279,7 +291,7 @@ impl Core {
             wake = Some(*t);
         }
         let wake_or_blocked = |w: Option<u64>| w.map_or(CoreWake::Blocked, CoreWake::At);
-        if self.wait_copy.is_some() {
+        if !self.wait_copies.is_empty() {
             return wake_or_blocked(wake);
         }
         // Issue stage, in `cycle()`'s check order.
@@ -344,6 +356,36 @@ impl Core {
         true
     }
 
+    /// Perform one memory access (cache lookup exactly once, then the
+    /// demand path); false if the demand was parked for re-sending.
+    fn mem_action(
+        &mut self,
+        addr: u64,
+        is_write: bool,
+        dependent: bool,
+        hier: &mut Hierarchy,
+        ctrl: &mut Controller,
+        now: u64,
+    ) -> bool {
+        // The cache lookup happens exactly once per op.
+        let acc = hier.access(self.id, addr, is_write);
+        self.mem_ops_done += 1;
+        // Dirty evictions that reached memory become lazy posted
+        // writes.
+        self.wb_queue.extend(acc.writebacks.iter().copied());
+        if !acc.goes_to_memory {
+            self.window.push_back(Slot::ReadyAt(now + acc.latency));
+            return true;
+        }
+        let d = Demand { addr, is_write, dependent, latency: acc.latency };
+        if self.send_demand(d, ctrl, now) {
+            true
+        } else {
+            self.pending_demand = Some(d);
+            false
+        }
+    }
+
     /// Execute a trace op's action; false if its demand access was
     /// parked for re-sending (cache lookups are never repeated).
     fn do_action(
@@ -351,26 +393,49 @@ impl Core {
         op: TraceOp,
         hier: &mut Hierarchy,
         ctrl: &mut Controller,
+        os: Option<&mut OsLayer>,
         now: u64,
     ) -> bool {
         match op {
             TraceOp::Mem { addr, is_write, dependent, .. } => {
-                // The cache lookup happens exactly once per op.
-                let acc = hier.access(self.id, addr, is_write);
-                self.mem_ops_done += 1;
-                // Dirty evictions that reached memory become lazy
-                // posted writes.
-                self.wb_queue.extend(acc.writebacks.iter().copied());
-                if !acc.goes_to_memory {
-                    self.window.push_back(Slot::ReadyAt(now + acc.latency));
-                    return true;
-                }
-                let d = Demand { addr, is_write, dependent, latency: acc.latency };
-                if self.send_demand(d, ctrl, now) {
-                    true
-                } else {
-                    self.pending_demand = Some(d);
-                    false
+                self.mem_action(addr, is_write, dependent, hier, ctrl, now)
+            }
+            TraceOp::Bulk { op, .. } => {
+                let outcome = match os {
+                    Some(os) => os.execute(self.id, op, ctrl),
+                    // No OS layer wired up: the primitive is a no-op
+                    // (non-OS harnesses replaying an OS trace).
+                    None => OsOutcome::Done,
+                };
+                match outcome {
+                    OsOutcome::Done => {
+                        self.window.push_back(Slot::ReadyAt(now + 1));
+                        self.copies_done += 1;
+                        true
+                    }
+                    OsOutcome::Stall(ids) => {
+                        self.window.push_back(Slot::ReadyAt(now + 1));
+                        self.wait_copies = ids;
+                        self.copies_done += 1;
+                        true
+                    }
+                    OsOutcome::Access { addr, is_write } => {
+                        self.mem_action(addr, is_write, false, hier, ctrl, now)
+                    }
+                    OsOutcome::FaultThenAccess { copies, addr, is_write } => {
+                        // The faulting instruction stalls on the page
+                        // copies; the translated access then replays as
+                        // a synthetic Mem op (cache lookup included).
+                        self.window.push_back(Slot::ReadyAt(now + 1));
+                        self.wait_copies = copies;
+                        self.cur_op = Some(TraceOp::Mem {
+                            nonmem: 0,
+                            addr,
+                            is_write,
+                            dependent: false,
+                        });
+                        true
+                    }
                 }
             }
             TraceOp::Copy { src, dst, rows, .. } => {
@@ -395,7 +460,7 @@ impl Core {
                     arrive: ctrl.now,
                 });
                 self.window.push_back(Slot::ReadyAt(now + 1));
-                self.wait_copy = Some(id);
+                self.wait_copies = vec![id];
                 self.copies_done += 1;
                 true
             }
@@ -429,7 +494,7 @@ mod tests {
                 }
             }
             for _ in 0..ratio {
-                core.cycle(hier, ctrl);
+                core.cycle(hier, ctrl, None);
             }
             if core.finished() && ctrl.idle() {
                 break;
@@ -509,6 +574,48 @@ mod tests {
         assert_eq!(core.copies_done, 1);
         assert_eq!(core.mem_ops_done, 1);
         assert_eq!(ctrl.stats.copies_done, 1);
+    }
+
+    #[test]
+    fn bulk_ops_fault_and_stall_through_the_os_layer() {
+        use crate::cpu::trace::BulkOp;
+        let trace = vec![
+            TraceOp::Bulk { nonmem: 0, op: BulkOp::Zero { va: 0, pages: 2 } },
+            TraceOp::Bulk { nonmem: 0, op: BulkOp::Fork },
+            TraceOp::Bulk { nonmem: 0, op: BulkOp::Touch { va: 64, is_write: true } },
+        ];
+        let cfg = SimConfig::default();
+        let mut core = Core::new(0, Trace::new(trace), &cfg.cpu, 3);
+        let mut hier = Hierarchy::new(&cfg.cpu);
+        let mut ctrl = Controller::new(cfg.clone());
+        let mut os = OsLayer::new(&cfg);
+        let ratio = ctrl.cfg.cpu.clock_ratio;
+        for _ in 0..500_000u64 {
+            ctrl.tick().unwrap();
+            for c in ctrl.drain_completions() {
+                if c.was_copy {
+                    core.on_copy_complete(c.id);
+                } else {
+                    core.on_mem_complete(c.id);
+                }
+            }
+            for _ in 0..ratio {
+                core.cycle(&mut hier, &mut ctrl, Some(&mut os));
+            }
+            if core.finished() && ctrl.idle() {
+                break;
+            }
+        }
+        assert!(core.finished());
+        // Zero (2 pages) + CoW break (1 page) all went through DRAM.
+        assert_eq!(os.stats.pages_zeroed, 2);
+        assert_eq!(os.stats.cow_faults, 1);
+        assert_eq!(ctrl.stats.copies_done, 3);
+        assert_eq!(os.stats.forks, 1);
+        // The faulting touch replayed as a real memory access.
+        assert_eq!(core.mem_ops_done, 1);
+        // Zero + fork consumed the copy-op budget slots.
+        assert_eq!(core.copies_done, 2);
     }
 
     #[test]

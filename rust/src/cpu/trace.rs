@@ -1,7 +1,32 @@
 //! The workload trace format: the same information Ramulator consumes
 //! from Pin traces (non-memory instruction counts between memory
 //! operations), extended with bulk-copy operations for the paper's
-//! copy workloads.
+//! copy workloads and OS-level bulk primitives (fork / zeroing /
+//! checkpoint / migration) for the E9 system scenarios.
+
+/// An OS-level bulk primitive, recorded in the trace at the virtual
+/// address level. The OS layer (`os/bulk.rs`) translates these to
+/// physical page-copy requests at simulation time, so the frame
+/// placement policy is a runtime knob rather than baked into traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BulkOp {
+    /// Synchronous `memcpy(dst, src, pages * page_size)`.
+    Memcpy { src_va: u64, dst_va: u64, pages: u32 },
+    /// Bulk page zeroing (boot / mmap / security clearing).
+    Zero { va: u64, pages: u32 },
+    /// `fork()`: mark the whole address space copy-on-write; copies
+    /// happen lazily at write-fault time.
+    Fork,
+    /// One load/store at a *virtual* address: page-table translation,
+    /// demand-zero fill on unmapped pages, CoW break on shared pages.
+    Touch { va: u64, is_write: bool },
+    /// Checkpoint epoch: bulk-copy every page dirtied since the last
+    /// checkpoint to its shadow frame.
+    Checkpoint,
+    /// Hot-page promotion: migrate the page into the reserved
+    /// low-subarray zone of its bank (VILLA-adjacent placement).
+    Promote { va: u64 },
+}
 
 /// One trace operation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,12 +48,18 @@ pub enum TraceOp {
         dst: u64,
         rows: u32,
     },
+    /// `nonmem` instructions, then an OS-level bulk primitive routed
+    /// through the OS layer (virtual addresses, page tables, frame
+    /// allocation, fault-triggered copies).
+    Bulk { nonmem: u32, op: BulkOp },
 }
 
 impl TraceOp {
     pub fn nonmem(&self) -> u32 {
         match self {
-            TraceOp::Mem { nonmem, .. } | TraceOp::Copy { nonmem, .. } => *nonmem,
+            TraceOp::Mem { nonmem, .. }
+            | TraceOp::Copy { nonmem, .. }
+            | TraceOp::Bulk { nonmem, .. } => *nonmem,
         }
     }
 
@@ -77,6 +108,20 @@ impl Trace {
             .filter(|o| matches!(o, TraceOp::Copy { .. }))
             .count() as u64
     }
+
+    /// OS-level bulk primitives in one pass.
+    pub fn bulk_ops_per_pass(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Bulk { .. }))
+            .count() as u64
+    }
+
+    /// Does this trace require the OS layer (page tables + frame
+    /// allocator + bulk engine) to execute?
+    pub fn needs_os(&self) -> bool {
+        self.ops.iter().any(|o| matches!(o, TraceOp::Bulk { .. }))
+    }
 }
 
 /// Cyclic cursor over a trace.
@@ -117,6 +162,19 @@ mod tests {
         assert_eq!(t.insts_per_pass(), 3 + 1 + 10 + 1 + 0 + 1);
         assert_eq!(t.mem_ops_per_pass(), 2);
         assert_eq!(t.copy_ops_per_pass(), 1);
+        assert_eq!(t.bulk_ops_per_pass(), 0);
+        assert!(!t.needs_os());
+    }
+
+    #[test]
+    fn bulk_ops_mark_the_trace_as_os() {
+        let t = Trace::new(vec![
+            TraceOp::Bulk { nonmem: 5, op: BulkOp::Fork },
+            TraceOp::Bulk { nonmem: 2, op: BulkOp::Touch { va: 8192, is_write: true } },
+        ]);
+        assert!(t.needs_os());
+        assert_eq!(t.bulk_ops_per_pass(), 2);
+        assert_eq!(t.insts_per_pass(), 5 + 1 + 2 + 1);
     }
 
     #[test]

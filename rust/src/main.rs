@@ -6,7 +6,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use lisa::cli::Args;
-use lisa::config::{CopyMechanism, SimConfig};
+use lisa::config::{CopyMechanism, PlacementPolicy, SimConfig};
 use lisa::dram::timing::SpeedBin;
 use lisa::sim::campaign;
 use lisa::sim::engine::run_workload;
@@ -32,10 +32,15 @@ COMMANDS
   table1      [--config F]                   E1: 8 KB copy latency/energy
   rbm         E2: RBM bandwidth vs channel
   lip         E3: linked precharge latency
-  fig3        [--requests N] [--mixes N]     E4: LISA-VILLA
-  fig4        [--requests N] [--mixes N]     E5/E6: combined speedups
-  lip-system  [--requests N] [--mixes N]     E7: LIP system-level
+  fig3        [--requests N] [--mixes N] [--threads N]   E4: LISA-VILLA
+  fig4        [--requests N] [--mixes N] [--threads N]   E5/E6: combined speedups
+  lip-system  [--requests N] [--mixes N] [--threads N]   E7: LIP system-level
   area        E8: die area overhead
+  os          [--requests N] [--threads N] [--mechs A,B] [--policies A,B]
+              [--scenarios A,B] [--out FILE]
+              E9: OS-level bulk ops (fork / zeroing / checkpoint /
+              promotion) across copy mechanisms x placement policies,
+              JSON report to --out (or stdout)
 ";
 
 const COMMANDS: &[&str] = &[
@@ -50,6 +55,7 @@ const COMMANDS: &[&str] = &[
     "fig4",
     "lip-system",
     "area",
+    "os",
 ];
 
 fn load_config(args: &Args) -> Result<SimConfig> {
@@ -115,6 +121,7 @@ fn main() -> Result<()> {
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
         "lip-system" => cmd_lip_system(&args),
+        "os" => cmd_os(&args),
         "area" => {
             let cfg = load_config(&args)?;
             let r = exp::area_report(&cfg);
@@ -167,9 +174,7 @@ fn cmd_calibrate(_args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let name = args.opt_or("workload", "stream4");
-    let threads = args
-        .opt_usize("threads")?
-        .unwrap_or_else(campaign::default_threads);
+    let threads = parse_threads(args)?;
     let wl = mixes::workload_by_name(name, &cfg)?;
     if args.has_flag("ws") {
         // The N alone runs + the shared run go through the campaign
@@ -196,9 +201,7 @@ fn parse_list<T>(s: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let base = load_config(args)?;
     let requests = args.opt_u64("requests")?.unwrap_or(2_000);
-    let threads = args
-        .opt_usize("threads")?
-        .unwrap_or_else(campaign::default_threads);
+    let threads = parse_threads(args)?;
     let mechanisms =
         parse_list(args.opt_or("mechs", "memcpy,lisa-risc"), CopyMechanism::parse)?;
     let speeds = parse_list(args.opt_or("speeds", "ddr3-1600"), SpeedBin::parse)?;
@@ -298,10 +301,18 @@ fn cmd_table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--threads N`, defaulting to the available hardware parallelism —
+/// shared by every campaign-backed subcommand.
+fn parse_threads(args: &Args) -> Result<usize> {
+    Ok(args
+        .opt_usize("threads")?
+        .unwrap_or_else(campaign::default_threads))
+}
+
 fn cmd_fig3(args: &Args) -> Result<()> {
     let requests = args.opt_u64("requests")?.unwrap_or(3_000);
     let mixes_n = args.opt_usize("mixes")?.unwrap_or(8);
-    let rows = exp::fig3(requests, mixes_n);
+    let rows = exp::fig3(requests, mixes_n, parse_threads(args)?);
     let mut t = Table::new(&["workload", "villa +%", "hit rate %", "rc-inter +%"]);
     for r in &rows {
         t.row(&[
@@ -318,7 +329,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 fn cmd_fig4(args: &Args) -> Result<()> {
     let requests = args.opt_u64("requests")?.unwrap_or(3_000);
     let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
-    let cmps = exp::fig4(requests, mixes_n);
+    let cmps = exp::fig4(requests, mixes_n, parse_threads(args)?);
     let mut t = Table::new(&["config", "mean WS +%", "geomean x", "max +%", "energy -%"]);
     for c in &cmps {
         t.row(&[
@@ -334,10 +345,63 @@ fn cmd_fig4(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_os(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
+    let threads = parse_threads(args)?;
+    let mechanisms = match args.opt("mechs") {
+        Some(s) => parse_list(s, CopyMechanism::parse)?,
+        None => exp::E9_MECHANISMS.to_vec(),
+    };
+    let policies = match args.opt("policies") {
+        Some(s) => parse_list(s, PlacementPolicy::parse)?,
+        None => PlacementPolicy::ALL.to_vec(),
+    };
+    let scenarios: Vec<String> = match args.opt("scenarios") {
+        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+        None => exp::E9_SCENARIOS.iter().map(|s| s.to_string()).collect(),
+    };
+    let n = scenarios.len() * mechanisms.len() * policies.len();
+    eprintln!("os: {n} points on {threads} threads");
+    let t0 = std::time::Instant::now();
+    let rows = exp::e9_os(requests, &mechanisms, &policies, &scenarios, threads)?;
+    eprintln!("os: done in {:.2} s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "scenario", "mechanism", "policy", "cycles", "IPC sum", "pages", "RISC hit %",
+        "faults",
+    ]);
+    for r in &rows {
+        let os = r.report.os.clone().unwrap_or_default();
+        table.row(&[
+            r.scenario.clone(),
+            r.mechanism.to_string(),
+            r.policy.to_string(),
+            format!("{}", r.report.dram_cycles),
+            format!("{:.3}", r.report.ipc_sum()),
+            format!("{}", os.pages_copied),
+            format!("{:.1}", os.risc_hit_rate() * 100.0),
+            format!("{}", os.cow_faults + os.demand_faults),
+        ]);
+    }
+    let json = exp::os_json(&rows);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            table.print();
+            println!("wrote {path}");
+        }
+        None => {
+            eprintln!("{}", table.render());
+            print!("{json}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_lip_system(args: &Args) -> Result<()> {
     let requests = args.opt_u64("requests")?.unwrap_or(3_000);
     let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
-    let c = exp::lip_system(requests, mixes_n);
+    let c = exp::lip_system(requests, mixes_n, parse_threads(args)?);
     println!(
         "LISA-LIP: mean WS improvement {:+.1}% across {} mixes (paper: +10.3%)",
         c.mean_ws_improvement() * 100.0,

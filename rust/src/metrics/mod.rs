@@ -5,6 +5,77 @@
 use crate::energy::EnergyBreakdown;
 use crate::util::stats::geomean;
 
+/// Aggregate statistics of the OS layer (`os/bulk.rs`) for one run.
+/// Attached to `RunReport` when the workload carried OS bulk ops.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OsSummary {
+    /// Page copies dispatched (including zero fills).
+    pub pages_copied: u64,
+    /// Subset of `pages_copied` that were page-zeroing copies.
+    pub pages_zeroed: u64,
+    /// Copy-on-write breaks (fork's lazy copies).
+    pub cow_faults: u64,
+    /// Demand-zero fills of unmapped pages.
+    pub demand_faults: u64,
+    pub forks: u64,
+    pub checkpoints: u64,
+    pub promotions: u64,
+    /// Page copies whose src/dst shared a bank — i.e. serviceable by
+    /// LISA-RISC (or RowClone intra-SA) without leaving the bank. The
+    /// placement policy's figure of merit.
+    pub risc_hits: u64,
+    /// Pages per effective copy mechanism, indexed by `mech_index`:
+    /// [memcpy, rc-intra, rc-bank, rc-inter, lisa-risc].
+    pub mech_pages: [u64; 5],
+}
+
+impl OsSummary {
+    /// Index into `mech_pages` for a `CopyMechanism::name()`.
+    pub fn mech_index(name: &str) -> usize {
+        match name {
+            "memcpy" => 0,
+            "rc-intra" => 1,
+            "rc-bank" => 2,
+            "rc-inter" => 3,
+            "lisa-risc" => 4,
+            other => panic!("unknown mechanism name '{other}'"),
+        }
+    }
+
+    /// Fraction of page copies the placement kept within RISC reach.
+    pub fn risc_hit_rate(&self) -> f64 {
+        if self.pages_copied == 0 {
+            0.0
+        } else {
+            self.risc_hits as f64 / self.pages_copied as f64
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"pages_copied\":{},\"pages_zeroed\":{},\"cow_faults\":{},\
+             \"demand_faults\":{},\"forks\":{},\"checkpoints\":{},\
+             \"promotions\":{},\"risc_hits\":{},\"risc_hit_rate\":{},\
+             \"mech_pages\":{{\"memcpy\":{},\"rc_intra\":{},\"rc_bank\":{},\
+             \"rc_inter\":{},\"lisa_risc\":{}}}}}",
+            self.pages_copied,
+            self.pages_zeroed,
+            self.cow_faults,
+            self.demand_faults,
+            self.forks,
+            self.checkpoints,
+            self.promotions,
+            self.risc_hits,
+            json::number(self.risc_hit_rate()),
+            self.mech_pages[0],
+            self.mech_pages[1],
+            self.mech_pages[2],
+            self.mech_pages[3],
+            self.mech_pages[4],
+        )
+    }
+}
+
 /// Result of simulating one workload on one configuration.
 /// `PartialEq` is exact float equality — used by the engine
 /// equivalence tests (fast-forward vs per-cycle reference) and the
@@ -25,6 +96,8 @@ pub struct RunReport {
     pub villa_hit_rate: f64,
     pub lip_coverage: f64,
     pub energy: EnergyBreakdown,
+    /// OS-layer statistics; `None` for workloads without bulk ops.
+    pub os: Option<OsSummary>,
 }
 
 impl RunReport {
@@ -55,7 +128,8 @@ impl RunReport {
              \"reads\":{},\"writes\":{},\"copies\":{},\
              \"avg_read_latency_cycles\":{},\"row_hit_rate\":{},\
              \"villa_hit_rate\":{},\"lip_coverage\":{},\
-             \"energy_uj\":{{\"total\":{},\"background\":{},\"rbm\":{}}}}}",
+             \"energy_uj\":{{\"total\":{},\"background\":{},\"rbm\":{}}},\
+             \"os\":{}}}",
             json::string(&self.workload),
             json::string(&self.config_name),
             self.ipc.iter().map(|&x| json::number(x)).collect::<Vec<_>>().join(","),
@@ -70,6 +144,9 @@ impl RunReport {
             json::number(self.energy.total),
             json::number(self.energy.background_uj),
             json::number(self.energy.rbm_uj),
+            self.os
+                .as_ref()
+                .map_or_else(|| "null".to_string(), |o| o.to_json()),
         )
     }
 }
@@ -173,6 +250,64 @@ mod tests {
         assert!(j.contains("\"workload\":\"stream4\""), "{j}");
         assert!(j.contains("\"ipc\":[1,2]"), "{j}");
         assert!(j.contains("\"dram_cycles\":10"), "{j}");
+    }
+
+    #[test]
+    fn json_number_rejects_all_nonfinite_values() {
+        // JSON has no NaN/Infinity tokens; all three must become null
+        // so reports from empty/degenerate runs stay parseable.
+        assert_eq!(json::number(f64::NAN), "null");
+        assert_eq!(json::number(f64::INFINITY), "null");
+        assert_eq!(json::number(f64::NEG_INFINITY), "null");
+        assert_eq!(json::number(0.0), "0");
+        assert_eq!(json::number(-2.5e-3), "-0.0025");
+    }
+
+    #[test]
+    fn json_string_escapes_control_and_meta_characters() {
+        // Quotes, backslashes, the named escapes, and every other
+        // C0 control character (as \u00xx).
+        assert_eq!(json::string("\"\\"), "\"\\\"\\\\\"");
+        assert_eq!(json::string("\n\r\t"), "\"\\n\\r\\t\"");
+        assert_eq!(json::string("\u{1}\u{1f}"), "\"\\u0001\\u001f\"");
+        // Non-ASCII passes through unescaped (JSON is UTF-8).
+        assert_eq!(json::string("héllo"), "\"héllo\"");
+    }
+
+    #[test]
+    fn degenerate_report_serializes_without_nonfinite_tokens() {
+        // An "empty run" report: zero cores, NaN/inf statistics.
+        let r = RunReport {
+            workload: "weird \"name\"\n".into(),
+            avg_read_latency_cycles: f64::NAN,
+            row_hit_rate: f64::INFINITY,
+            villa_hit_rate: f64::NEG_INFINITY,
+            ..Default::default()
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"avg_read_latency_cycles\":null"), "{j}");
+        assert!(j.contains("\"row_hit_rate\":null"), "{j}");
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        assert!(j.contains("\"ipc\":[]"), "{j}");
+        assert!(j.contains("weird \\\"name\\\"\\n"), "{j}");
+        assert!(j.contains("\"os\":null"), "{j}");
+    }
+
+    #[test]
+    fn os_summary_serializes_and_rates() {
+        let mut o = OsSummary::default();
+        assert_eq!(o.risc_hit_rate(), 0.0, "empty summary must not NaN");
+        assert!(o.to_json().contains("\"risc_hit_rate\":0"));
+        o.pages_copied = 8;
+        o.risc_hits = 6;
+        o.mech_pages[OsSummary::mech_index("lisa-risc")] = 6;
+        o.mech_pages[OsSummary::mech_index("memcpy")] = 2;
+        assert!((o.risc_hit_rate() - 0.75).abs() < 1e-12);
+        let j = o.to_json();
+        assert!(j.contains("\"pages_copied\":8"), "{j}");
+        assert!(j.contains("\"lisa_risc\":6"), "{j}");
+        let r = RunReport { os: Some(o), ..Default::default() };
+        assert!(r.to_json().contains("\"os\":{\"pages_copied\":8"));
     }
 
     #[test]

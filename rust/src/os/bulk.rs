@@ -1,0 +1,549 @@
+//! The OS bulk-operation engine: translates OS-level primitives —
+//! `memcpy`, bulk page zeroing, `fork` (lazy CoW with fault-triggered
+//! copies), checkpointing and hot-page migration — into page-granular
+//! copy requests dispatched through the controller's page-copy queue,
+//! choosing the best in-DRAM mechanism each page pair's geometry
+//! allows (RowClone intra-SA / LISA-RISC / RowClone-PSM) and falling
+//! back to memcpy-over-channel when none applies.
+//!
+//! This is the system-software half the paper's applications need
+//! (RowClone's fork/zeroing consumers; the PIM-survey's OS-interface
+//! barrier): the simulator's cores execute `TraceOp::Bulk` records at
+//! *virtual* addresses, and everything physical — frames, placement,
+//! mechanism dispatch, fault-triggered copies — happens here at run
+//! time, so frame placement is a simulation knob, not a trace artifact.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::{CopyMechanism, SimConfig};
+use crate::controller::mapping::{Mapper, MappingScheme};
+use crate::controller::request::CopyRequest;
+use crate::controller::Controller;
+use crate::copy::effective_mechanism;
+use crate::cpu::trace::BulkOp;
+use crate::lisa::villa::VillaManager;
+use crate::metrics::OsSummary;
+use crate::os::frame_alloc::FrameAlloc;
+use crate::os::page_table::PageTable;
+
+/// OS copy ids live in their own high range: below VILLA's (1 << 62)
+/// and far above the per-core id spaces ((core + 1) << 32).
+pub const OS_ID_BASE: u64 = 1 << 61;
+
+/// What a bulk primitive resolved to; the core model acts on this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OsOutcome {
+    /// Pure bookkeeping (fork, no-op promote): the instruction retires.
+    Done,
+    /// Page copies were enqueued; the core stalls until every listed
+    /// copy completes (synchronous bulk-op semantics).
+    Stall(Vec<u64>),
+    /// The primitive is a translated memory access: issue it at the
+    /// returned physical address.
+    Access { addr: u64, is_write: bool },
+    /// A fault (CoW break / demand-zero fill): stall on the copies,
+    /// then perform the access at the returned physical address.
+    FaultThenAccess { copies: Vec<u64>, addr: u64, is_write: bool },
+}
+
+/// Per-process (= per-core) OS state.
+#[derive(Debug, Clone, Default)]
+struct Proc {
+    pt: PageTable,
+    /// Frames referenced by the (implicit) forked child; replaced —
+    /// and released — wholesale by the next fork.
+    child: Vec<u32>,
+    /// Pages dirtied since the last checkpoint (vpn order).
+    dirty: BTreeSet<u64>,
+    /// Checkpoint shadow frames per vpn.
+    shadow: BTreeMap<u64, u32>,
+}
+
+/// The OS layer: one flat page table per core, the subarray-aware
+/// frame allocator, per-bank zero rows, and the bulk engine.
+#[derive(Debug, Clone)]
+pub struct OsLayer {
+    frames: FrameAlloc,
+    procs: Vec<Proc>,
+    /// One pre-zeroed row per (channel, rank, bank): the in-DRAM
+    /// zeroing source (RowClone-style), always a same-bank copy.
+    zero_frames: Vec<u32>,
+    mech: CopyMechanism,
+    mapper: Mapper,
+    dram: crate::config::DramConfig,
+    page_bytes: u64,
+    next_copy_id: u64,
+    /// Frames whose last reference is dropped only when the listed
+    /// copy completes (migration sources: freeing at dispatch would
+    /// let the frame be reallocated while the copy still reads it).
+    pending_free: Vec<(u64, u32)>,
+    pub stats: OsSummary,
+}
+
+impl OsLayer {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let reserved = VillaManager::reserved_rows(cfg);
+        let mapper =
+            Mapper::with_reserved(&cfg.dram, MappingScheme::RowRankBankColCh, reserved);
+        let mut frames =
+            FrameAlloc::new(&cfg.dram, reserved, cfg.os.placement, cfg.seed);
+        let banks_total = cfg.dram.channels * cfg.dram.ranks * cfg.dram.banks;
+        let zero_frames = (0..banks_total)
+            .map(|gb| frames.alloc_top(gb).expect("zero row per bank"))
+            .collect();
+        Self {
+            frames,
+            procs: vec![Proc::default(); cfg.cpu.cores],
+            zero_frames,
+            mech: cfg.copy_mechanism,
+            mapper,
+            dram: cfg.dram.clone(),
+            page_bytes: cfg.dram.row_bytes() as u64,
+            next_copy_id: OS_ID_BASE,
+            pending_free: Vec::new(),
+            stats: OsSummary::default(),
+        }
+    }
+
+    /// A page copy completed: drop any frame reference that was kept
+    /// alive for it (the engine calls this for every copy completion).
+    pub fn on_copy_complete(&mut self, copy_id: u64) {
+        if let Some(i) = self.pending_free.iter().position(|&(id, _)| id == copy_id) {
+            let (_, frame) = self.pending_free.swap_remove(i);
+            self.frames.release(frame);
+        }
+    }
+
+    /// Snapshot of the aggregate statistics for the run report.
+    pub fn summary(&self) -> OsSummary {
+        self.stats.clone()
+    }
+
+    /// Physical byte address of `va` through `frame` (same cache line
+    /// offset within the 8 KB page/row).
+    fn phys(&self, frame: u32, va: u64) -> u64 {
+        let off = va % self.page_bytes;
+        let mut a = self.frames.addr_of(frame);
+        a.col = (off / 64) as usize;
+        self.mapper.unmap(&a) + (off % 64)
+    }
+
+    /// Enqueue one page copy `src_frame -> dst_frame` on the
+    /// controller's page-copy queue, dispatched with the system copy
+    /// mechanism (the controller's sequencer picks the effective
+    /// in-DRAM mechanism the pair's geometry allows). Returns the copy
+    /// id the core must wait on.
+    fn dispatch(
+        &mut self,
+        core: usize,
+        src_frame: u32,
+        dst_frame: u32,
+        zero: bool,
+        ctrl: &mut Controller,
+    ) -> u64 {
+        let src = self.frames.addr_of(src_frame);
+        let dst = self.frames.addr_of(dst_frame);
+        // No in-DRAM mechanism can cross a channel or rank boundary
+        // (the inter-bank bus is per-rank): such pairs degrade to
+        // memcpy over the channel regardless of the system mechanism.
+        let req_mech = if src.channel != dst.channel || src.rank != dst.rank {
+            CopyMechanism::MemcpyChannel
+        } else {
+            self.mech
+        };
+        let eff = effective_mechanism(req_mech, &src, &dst, &self.dram);
+        self.stats.pages_copied += 1;
+        if zero {
+            self.stats.pages_zeroed += 1;
+        }
+        self.stats.mech_pages[OsSummary::mech_index(eff.name())] += 1;
+        if src.same_bank(&dst) {
+            self.stats.risc_hits += 1;
+        }
+        let id = self.next_copy_id;
+        self.next_copy_id += 1;
+        ctrl.enqueue_page_copy(CopyRequest {
+            id,
+            core,
+            src,
+            dst,
+            rows: 1,
+            mechanism: req_mech,
+            arrive: ctrl.now,
+        });
+        id
+    }
+
+    /// Copy the bank-local zero row into `frame` (in-DRAM zeroing).
+    fn dispatch_zero(&mut self, core: usize, frame: u32, ctrl: &mut Controller) -> u64 {
+        let z = self.zero_frames[self.frames.bank_of(frame)];
+        self.dispatch(core, z, frame, true, ctrl)
+    }
+
+    /// Execute one bulk primitive for `core`. Deterministic in the
+    /// (config, op-sequence) pair: every data structure walks in vpn
+    /// order and the allocator RNG is seeded from the config.
+    pub fn execute(&mut self, core: usize, op: BulkOp, ctrl: &mut Controller) -> OsOutcome {
+        match op {
+            BulkOp::Touch { va, is_write } => self.touch(core, va, is_write, ctrl),
+            BulkOp::Zero { va, pages } => self.zero(core, va, pages, ctrl),
+            BulkOp::Memcpy { src_va, dst_va, pages } => {
+                self.memcpy(core, src_va, dst_va, pages, ctrl)
+            }
+            BulkOp::Fork => self.fork(core),
+            BulkOp::Checkpoint => self.checkpoint(core, ctrl),
+            BulkOp::Promote { va } => self.promote(core, va, ctrl),
+        }
+    }
+
+    fn touch(&mut self, core: usize, va: u64, is_write: bool, ctrl: &mut Controller) -> OsOutcome {
+        let vpn = va / self.page_bytes;
+        match self.procs[core].pt.translate(vpn) {
+            Some(e) if !(is_write && e.cow) => {
+                if is_write {
+                    self.procs[core].dirty.insert(vpn);
+                }
+                OsOutcome::Access { addr: self.phys(e.frame, va), is_write }
+            }
+            Some(e) => {
+                // Write to a CoW page: break the sharing with a page
+                // copy into a frame placed near the shared one.
+                self.stats.cow_faults += 1;
+                let new = match self.frames.alloc_near(e.frame) {
+                    Some(f) => f,
+                    None => {
+                        // Physical memory exhausted: degrade to writing
+                        // the shared frame in place, clearing the CoW
+                        // bit so the fault is charged exactly once.
+                        self.procs[core].pt.remap(vpn, e.frame);
+                        self.procs[core].dirty.insert(vpn);
+                        return OsOutcome::Access {
+                            addr: self.phys(e.frame, va),
+                            is_write,
+                        };
+                    }
+                };
+                let id = self.dispatch(core, e.frame, new, false, ctrl);
+                self.frames.release(e.frame);
+                self.procs[core].pt.remap(vpn, new);
+                self.procs[core].dirty.insert(vpn);
+                OsOutcome::FaultThenAccess {
+                    copies: vec![id],
+                    addr: self.phys(new, va),
+                    is_write,
+                }
+            }
+            None => {
+                // Demand-zero fill: allocate + in-DRAM zero.
+                self.stats.demand_faults += 1;
+                let Some(f) = self.frames.alloc() else {
+                    return OsOutcome::Done; // out of memory: drop the access
+                };
+                let id = self.dispatch_zero(core, f, ctrl);
+                self.procs[core].pt.map(vpn, f, false);
+                if is_write {
+                    self.procs[core].dirty.insert(vpn);
+                }
+                OsOutcome::FaultThenAccess {
+                    copies: vec![id],
+                    addr: self.phys(f, va),
+                    is_write,
+                }
+            }
+        }
+    }
+
+    fn zero(&mut self, core: usize, va: u64, pages: u32, ctrl: &mut Controller) -> OsOutcome {
+        let base = va / self.page_bytes;
+        let mut ids = Vec::with_capacity(pages as usize);
+        for i in 0..pages as u64 {
+            let vpn = base + i;
+            let frame = match self.procs[core].pt.translate(vpn) {
+                Some(e) if e.cow => {
+                    // Zeroing a shared page: give the process a fresh
+                    // private frame (content is all-zero anyway).
+                    let Some(f) = self.frames.alloc() else { continue };
+                    self.frames.release(e.frame);
+                    self.procs[core].pt.remap(vpn, f);
+                    f
+                }
+                Some(e) => e.frame,
+                None => {
+                    let Some(f) = self.frames.alloc() else { continue };
+                    self.procs[core].pt.map(vpn, f, false);
+                    f
+                }
+            };
+            ids.push(self.dispatch_zero(core, frame, ctrl));
+            self.procs[core].dirty.insert(vpn);
+        }
+        if ids.is_empty() {
+            OsOutcome::Done
+        } else {
+            OsOutcome::Stall(ids)
+        }
+    }
+
+    fn memcpy(
+        &mut self,
+        core: usize,
+        src_va: u64,
+        dst_va: u64,
+        pages: u32,
+        ctrl: &mut Controller,
+    ) -> OsOutcome {
+        let src_base = src_va / self.page_bytes;
+        let dst_base = dst_va / self.page_bytes;
+        let mut ids = Vec::with_capacity(pages as usize);
+        for i in 0..pages as u64 {
+            let Some(src_e) = self.procs[core].pt.translate(src_base + i) else {
+                continue; // unmapped source page: nothing to copy
+            };
+            let dst_vpn = dst_base + i;
+            let dst_frame = match self.procs[core].pt.translate(dst_vpn) {
+                Some(e) if !e.cow => e.frame,
+                Some(e) => {
+                    let Some(f) = self.frames.alloc_near(src_e.frame) else { continue };
+                    self.frames.release(e.frame);
+                    self.procs[core].pt.remap(dst_vpn, f);
+                    f
+                }
+                None => {
+                    let Some(f) = self.frames.alloc_near(src_e.frame) else { continue };
+                    self.procs[core].pt.map(dst_vpn, f, false);
+                    f
+                }
+            };
+            ids.push(self.dispatch(core, src_e.frame, dst_frame, false, ctrl));
+            self.procs[core].dirty.insert(dst_vpn);
+        }
+        if ids.is_empty() {
+            OsOutcome::Done
+        } else {
+            OsOutcome::Stall(ids)
+        }
+    }
+
+    fn fork(&mut self, core: usize) -> OsOutcome {
+        // Retire the previous child first (fork-server steady state:
+        // one live child per server process).
+        let old = std::mem::take(&mut self.procs[core].child);
+        for f in old {
+            self.frames.release(f);
+        }
+        let shared = self.procs[core].pt.mark_all_cow();
+        for &f in &shared {
+            self.frames.retain(f);
+        }
+        self.procs[core].child = shared;
+        self.stats.forks += 1;
+        OsOutcome::Done
+    }
+
+    fn checkpoint(&mut self, core: usize, ctrl: &mut Controller) -> OsOutcome {
+        self.stats.checkpoints += 1;
+        let dirty: Vec<u64> = std::mem::take(&mut self.procs[core].dirty)
+            .into_iter()
+            .collect();
+        let mut ids = Vec::with_capacity(dirty.len());
+        for vpn in dirty {
+            let Some(e) = self.procs[core].pt.translate(vpn) else { continue };
+            let Some(shadow) = self.frames.alloc_near(e.frame) else { continue };
+            if let Some(old) = self.procs[core].shadow.insert(vpn, shadow) {
+                self.frames.release(old);
+            }
+            ids.push(self.dispatch(core, e.frame, shadow, false, ctrl));
+        }
+        if ids.is_empty() {
+            OsOutcome::Done
+        } else {
+            OsOutcome::Stall(ids)
+        }
+    }
+
+    fn promote(&mut self, core: usize, va: u64, ctrl: &mut Controller) -> OsOutcome {
+        let vpn = va / self.page_bytes;
+        let Some(e) = self.procs[core].pt.translate(vpn) else {
+            return OsOutcome::Done; // nothing mapped to promote
+        };
+        if self.frames.level_of(e.frame) < crate::os::frame_alloc::ZONE_LEVELS {
+            return OsOutcome::Done; // already in the promotion zone
+        }
+        let Some(zone) = self.frames.alloc_zone(e.frame) else {
+            return OsOutcome::Done; // zone full: skip
+        };
+        let id = self.dispatch(core, e.frame, zone, false, ctrl);
+        // The old frame stays allocated until the copy has read it.
+        self.pending_free.push((id, e.frame));
+        self.procs[core].pt.remap(vpn, zone);
+        self.stats.promotions += 1;
+        OsOutcome::Stall(vec![id])
+    }
+
+    /// Mapped pages of one process (test/diagnostic hook).
+    pub fn mapped_pages(&self, core: usize) -> usize {
+        self.procs[core].pt.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PlacementPolicy;
+
+    fn setup(mech: CopyMechanism, placement: PlacementPolicy) -> (OsLayer, Controller) {
+        let mut cfg = SimConfig::default();
+        cfg.copy_mechanism = mech;
+        cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
+        cfg.os.placement = placement;
+        let ctrl = Controller::new(cfg.clone());
+        (OsLayer::new(&cfg), ctrl)
+    }
+
+    fn drain(ctrl: &mut Controller) -> Vec<u64> {
+        let mut done = vec![];
+        for _ in 0..2_000_000u64 {
+            ctrl.tick().unwrap();
+            done.extend(ctrl.drain_completions().into_iter().map(|c| c.id));
+            if ctrl.idle() {
+                break;
+            }
+        }
+        assert!(ctrl.idle(), "controller failed to drain OS copies");
+        done
+    }
+
+    #[test]
+    fn touch_demand_zeroes_then_hits() {
+        let (mut os, mut ctrl) =
+            setup(CopyMechanism::LisaRisc, PlacementPolicy::SubarrayPacked);
+        let out = os.execute(0, BulkOp::Touch { va: 8192 * 5 + 64, is_write: false }, &mut ctrl);
+        let (copies, addr) = match out {
+            OsOutcome::FaultThenAccess { copies, addr, .. } => (copies, addr),
+            other => panic!("first touch must demand-fault, got {other:?}"),
+        };
+        assert_eq!(copies.len(), 1);
+        assert_eq!(os.stats.pages_zeroed, 1);
+        assert_eq!(os.stats.demand_faults, 1);
+        let done = drain(&mut ctrl);
+        assert_eq!(done, copies);
+        // Second touch to the same page: plain access, same line.
+        let out2 = os.execute(0, BulkOp::Touch { va: 8192 * 5 + 64, is_write: false }, &mut ctrl);
+        assert_eq!(out2, OsOutcome::Access { addr, is_write: false });
+        assert_eq!(os.mapped_pages(0), 1);
+    }
+
+    #[test]
+    fn fork_then_write_breaks_cow_once() {
+        let (mut os, mut ctrl) =
+            setup(CopyMechanism::LisaRisc, PlacementPolicy::SubarrayPacked);
+        // Map 4 pages via zeroing.
+        let out = os.execute(0, BulkOp::Zero { va: 0, pages: 4 }, &mut ctrl);
+        assert!(matches!(out, OsOutcome::Stall(ref v) if v.len() == 4));
+        drain(&mut ctrl);
+        assert_eq!(os.execute(0, BulkOp::Fork, &mut ctrl), OsOutcome::Done);
+        assert_eq!(os.stats.forks, 1);
+        // Read: no fault.
+        assert!(matches!(
+            os.execute(0, BulkOp::Touch { va: 0, is_write: false }, &mut ctrl),
+            OsOutcome::Access { .. }
+        ));
+        // Write: one CoW copy; the repeat write does not fault again.
+        let w = os.execute(0, BulkOp::Touch { va: 0, is_write: true }, &mut ctrl);
+        assert!(matches!(w, OsOutcome::FaultThenAccess { .. }), "{w:?}");
+        assert_eq!(os.stats.cow_faults, 1);
+        drain(&mut ctrl);
+        assert!(matches!(
+            os.execute(0, BulkOp::Touch { va: 0, is_write: true }, &mut ctrl),
+            OsOutcome::Access { .. }
+        ));
+        assert_eq!(os.stats.cow_faults, 1);
+    }
+
+    #[test]
+    fn checkpoint_copies_exactly_the_dirty_pages() {
+        let (mut os, mut ctrl) =
+            setup(CopyMechanism::LisaRisc, PlacementPolicy::SubarrayPacked);
+        os.execute(0, BulkOp::Zero { va: 0, pages: 8 }, &mut ctrl);
+        drain(&mut ctrl);
+        // Zeroing dirtied all 8; first checkpoint shadows them.
+        let out = os.execute(0, BulkOp::Checkpoint, &mut ctrl);
+        assert!(matches!(out, OsOutcome::Stall(ref v) if v.len() == 8), "{out:?}");
+        drain(&mut ctrl);
+        // Touch-write 2 pages; next checkpoint copies exactly 2.
+        for p in [1u64, 6] {
+            os.execute(0, BulkOp::Touch { va: p * 8192, is_write: true }, &mut ctrl);
+            drain(&mut ctrl);
+        }
+        let out = os.execute(0, BulkOp::Checkpoint, &mut ctrl);
+        assert!(matches!(out, OsOutcome::Stall(ref v) if v.len() == 2), "{out:?}");
+        drain(&mut ctrl);
+        // Nothing dirty: checkpoint is free.
+        assert_eq!(os.execute(0, BulkOp::Checkpoint, &mut ctrl), OsOutcome::Done);
+    }
+
+    #[test]
+    fn promote_moves_into_zone_once() {
+        let (mut os, mut ctrl) =
+            setup(CopyMechanism::LisaRisc, PlacementPolicy::SubarrayPacked);
+        os.execute(0, BulkOp::Zero { va: 8192, pages: 1 }, &mut ctrl);
+        drain(&mut ctrl);
+        let out = os.execute(0, BulkOp::Promote { va: 8192 }, &mut ctrl);
+        let ids = match out {
+            OsOutcome::Stall(v) => v,
+            other => panic!("promote must stall on its copy, got {other:?}"),
+        };
+        assert_eq!(ids.len(), 1);
+        drain(&mut ctrl);
+        assert_eq!(os.stats.promotions, 1);
+        // The migration source frame is freed only once the copy that
+        // reads it has completed.
+        let before = os.frames.free_frames();
+        os.on_copy_complete(ids[0]);
+        assert_eq!(os.frames.free_frames(), before + 1, "source freed on completion");
+        // Second promote: already in the zone, no copy.
+        assert_eq!(os.execute(0, BulkOp::Promote { va: 8192 }, &mut ctrl), OsOutcome::Done);
+        assert_eq!(os.stats.promotions, 1);
+    }
+
+    #[test]
+    fn packed_placement_yields_same_bank_copies_random_does_not() {
+        let run = |placement| {
+            let (mut os, mut ctrl) = setup(CopyMechanism::LisaRisc, placement);
+            os.execute(0, BulkOp::Zero { va: 0, pages: 32 }, &mut ctrl);
+            drain(&mut ctrl);
+            os.execute(0, BulkOp::Fork, &mut ctrl);
+            for p in 0..32u64 {
+                os.execute(0, BulkOp::Touch { va: p * 8192, is_write: true }, &mut ctrl);
+                drain(&mut ctrl);
+            }
+            // Exclude the 32 (always same-bank) zero fills.
+            (os.stats.risc_hits - 32) as f64 / os.stats.cow_faults as f64
+        };
+        let packed = run(PlacementPolicy::SubarrayPacked);
+        let random = run(PlacementPolicy::Random);
+        assert!(packed > 0.9, "packed CoW hit rate {packed}");
+        assert!(random < 0.6, "random CoW hit rate {random}");
+    }
+
+    #[test]
+    fn memcpy_bulk_op_copies_pages() {
+        let (mut os, mut ctrl) =
+            setup(CopyMechanism::MemcpyChannel, PlacementPolicy::SubarraySpread);
+        os.execute(0, BulkOp::Zero { va: 0, pages: 4 }, &mut ctrl);
+        drain(&mut ctrl);
+        let out = os.execute(
+            0,
+            BulkOp::Memcpy { src_va: 0, dst_va: 64 * 8192, pages: 4 },
+            &mut ctrl,
+        );
+        assert!(matches!(out, OsOutcome::Stall(ref v) if v.len() == 4));
+        drain(&mut ctrl);
+        assert_eq!(os.mapped_pages(0), 8);
+        // All page traffic under the memcpy system crosses the channel.
+        assert_eq!(
+            os.stats.mech_pages[OsSummary::mech_index("memcpy")],
+            os.stats.pages_copied
+        );
+    }
+}

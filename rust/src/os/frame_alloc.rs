@@ -1,0 +1,393 @@
+//! Subarray-aware physical frame allocator.
+//!
+//! A *frame* is one OS-visible DRAM row (the page size of this OS
+//! layer is one 8 KB row, the granularity every in-DRAM copy mechanism
+//! moves). Frames are grouped by *subarray group* — the (channel,
+//! rank, bank, subarray) tuple — because that is the unit the copy
+//! mechanisms care about: pairs in the same subarray copy with
+//! RowClone intra-SA, pairs in the same bank with LISA-RISC, and
+//! anything further must fall back to RowClone-PSM or memcpy over the
+//! channel. Placement is therefore a first-class performance knob
+//! (`PlacementPolicy`), evaluated by experiment E9.
+//!
+//! The lowest visible subarray of every bank is held back as the
+//! *promotion zone*: only `alloc_zone` (hot-page migration toward the
+//! VILLA fast subarray at the bank's bottom) places frames there.
+
+use crate::config::{DramConfig, PlacementPolicy};
+use crate::dram::geometry::Address;
+use crate::util::rng::Pcg32;
+
+/// Subarray levels per bank reserved for hot-page promotion.
+pub const ZONE_LEVELS: usize = 1;
+
+/// The allocator. Frame ids are global visible-row indices:
+/// `frame = bank_group * visible_rows + visible_row`, with bank groups
+/// ordered `(channel, rank, bank)` — the same convention VILLA uses.
+#[derive(Debug, Clone)]
+pub struct FrameAlloc {
+    /// Free stacks per subarray group (push/pop at the tail; the
+    /// initial fill is descending so pop yields ascending frames).
+    free: Vec<Vec<u32>>,
+    /// Per-frame reference counts (CoW sharing).
+    refcnt: Vec<u16>,
+    policy: PlacementPolicy,
+    rng: Pcg32,
+    spread_cursor: usize,
+    villa_rr: usize,
+    groups_per_bank: usize,
+    banks_total: usize,
+    visible_rows: usize,
+    rows_per_sa: usize,
+    /// Rows per bank reserved (below the visible space) for VILLA.
+    reserved: usize,
+    ranks: usize,
+    banks: usize,
+}
+
+impl FrameAlloc {
+    pub fn new(dram: &DramConfig, reserved: usize, policy: PlacementPolicy, seed: u64) -> Self {
+        let visible_rows = dram.rows_per_bank() - reserved;
+        let rows_per_sa = dram.rows_per_subarray;
+        assert_eq!(
+            visible_rows % rows_per_sa,
+            0,
+            "reserved rows must be whole subarrays"
+        );
+        let groups_per_bank = visible_rows / rows_per_sa;
+        let banks_total = dram.channels * dram.ranks * dram.banks;
+        let n_frames = banks_total * visible_rows;
+        let mut free = vec![Vec::new(); banks_total * groups_per_bank];
+        // Descending fill so pop() hands out the lowest frame first.
+        for f in (0..n_frames as u32).rev() {
+            let g = Self::group_of_raw(f, visible_rows, rows_per_sa, groups_per_bank);
+            free[g].push(f);
+        }
+        Self {
+            free,
+            refcnt: vec![0; n_frames],
+            policy,
+            rng: Pcg32::new(seed, 0x05_A110C),
+            spread_cursor: 0,
+            villa_rr: 0,
+            groups_per_bank,
+            banks_total,
+            visible_rows,
+            rows_per_sa,
+            reserved,
+            ranks: dram.ranks,
+            banks: dram.banks,
+        }
+    }
+
+    fn group_of_raw(
+        frame: u32,
+        visible_rows: usize,
+        rows_per_sa: usize,
+        groups_per_bank: usize,
+    ) -> usize {
+        let gb = frame as usize / visible_rows;
+        let level = (frame as usize % visible_rows) / rows_per_sa;
+        gb * groups_per_bank + level
+    }
+
+    /// Subarray group of a frame.
+    pub fn group_of(&self, frame: u32) -> usize {
+        Self::group_of_raw(frame, self.visible_rows, self.rows_per_sa, self.groups_per_bank)
+    }
+
+    /// Bank group (channel-rank-bank index) of a frame.
+    pub fn bank_of(&self, frame: u32) -> usize {
+        frame as usize / self.visible_rows
+    }
+
+    /// Visible subarray level (0 = promotion zone) of a frame.
+    pub fn level_of(&self, frame: u32) -> usize {
+        (frame as usize % self.visible_rows) / self.rows_per_sa
+    }
+
+    /// DRAM coordinates of a frame's row.
+    pub fn addr_of(&self, frame: u32) -> Address {
+        let gb = self.bank_of(frame);
+        let vrow = frame as usize % self.visible_rows;
+        let channel = gb / (self.ranks * self.banks);
+        let rem = gb % (self.ranks * self.banks);
+        Address {
+            channel,
+            rank: rem / self.banks,
+            bank: rem % self.banks,
+            row: self.reserved + vrow,
+            col: 0,
+        }
+    }
+
+    pub fn free_frames(&self) -> usize {
+        self.free.iter().map(|g| g.len()).sum()
+    }
+
+    /// Is this group open to general allocation (not the promotion
+    /// zone)?
+    fn general(&self, group: usize) -> bool {
+        group % self.groups_per_bank >= ZONE_LEVELS.min(self.groups_per_bank - 1)
+    }
+
+    fn take(&mut self, group: usize) -> Option<u32> {
+        let f = self.free[group].pop()?;
+        self.refcnt[f as usize] = 1;
+        Some(f)
+    }
+
+    /// Allocate a frame under the configured placement policy.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let n = self.free.len();
+        match self.policy {
+            PlacementPolicy::Random => {
+                let start = self.rng.below(n as u64) as usize;
+                (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&g| self.general(g) && !self.free[g].is_empty())
+                    .and_then(|g| self.take(g))
+            }
+            PlacementPolicy::SubarrayPacked => (0..n)
+                .find(|&g| self.general(g) && !self.free[g].is_empty())
+                .and_then(|g| self.take(g)),
+            PlacementPolicy::SubarraySpread => {
+                // Rotation order iterates BANKS fastest (r -> bank
+                // r % banks, level r / banks), so consecutive
+                // allocations land in different banks — the deliberate
+                // anti-co-location endpoint of the placement axis.
+                for k in 1..=n {
+                    let r = (self.spread_cursor + k) % n;
+                    let bank = r % self.banks_total;
+                    let level = (r / self.banks_total) % self.groups_per_bank;
+                    let g = bank * self.groups_per_bank + level;
+                    if self.general(g) && !self.free[g].is_empty() {
+                        self.spread_cursor = r;
+                        return self.take(g);
+                    }
+                }
+                None
+            }
+            PlacementPolicy::VillaAware => {
+                for level in ZONE_LEVELS.min(self.groups_per_bank - 1)..self.groups_per_bank {
+                    for k in 0..self.banks_total {
+                        let b = (self.villa_rr + k) % self.banks_total;
+                        let g = b * self.groups_per_bank + level;
+                        if !self.free[g].is_empty() {
+                            self.villa_rr = (b + 1) % self.banks_total;
+                            return self.take(g);
+                        }
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Allocate a copy destination near `src` (the placement knob that
+    /// decides the RISC hit rate): co-locating policies try the source
+    /// bank first, nearest subarray level outward, then other banks of
+    /// the same rank; spreading policies deliberately ignore `src`.
+    pub fn alloc_near(&mut self, src: u32) -> Option<u32> {
+        match self.policy {
+            PlacementPolicy::Random | PlacementPolicy::SubarraySpread => self.alloc(),
+            PlacementPolicy::SubarrayPacked | PlacementPolicy::VillaAware => {
+                let gb = self.bank_of(src);
+                let src_level = self.level_of(src);
+                let floor = ZONE_LEVELS.min(self.groups_per_bank - 1);
+                // Same bank, nearest level first (lower level wins ties:
+                // shorter RBM hops toward the fast subarray).
+                let mut levels: Vec<usize> = (floor..self.groups_per_bank).collect();
+                levels.sort_by_key(|&l| (l.abs_diff(src_level), l));
+                for l in levels {
+                    let g = gb * self.groups_per_bank + l;
+                    if !self.free[g].is_empty() {
+                        return self.take(g);
+                    }
+                }
+                // Other banks of the same channel+rank, packed order.
+                let bank_base = gb - gb % self.banks;
+                for b in bank_base..bank_base + self.banks {
+                    if b == gb {
+                        continue;
+                    }
+                    for l in floor..self.groups_per_bank {
+                        let g = b * self.groups_per_bank + l;
+                        if !self.free[g].is_empty() {
+                            return self.take(g);
+                        }
+                    }
+                }
+                self.alloc()
+            }
+        }
+    }
+
+    /// Allocate in `frame`'s bank's promotion zone (hot-page
+    /// migration); `None` when the zone is full.
+    pub fn alloc_zone(&mut self, frame: u32) -> Option<u32> {
+        let gb = self.bank_of(frame);
+        for level in 0..ZONE_LEVELS.min(self.groups_per_bank) {
+            let g = gb * self.groups_per_bank + level;
+            if !self.free[g].is_empty() {
+                return self.take(g);
+            }
+        }
+        None
+    }
+
+    /// Allocate from the *top* group of `bank` (used for the per-bank
+    /// zero rows, keeping them clear of both the promotion zone and
+    /// the packed allocation front).
+    pub fn alloc_top(&mut self, bank_group: usize) -> Option<u32> {
+        for level in (0..self.groups_per_bank).rev() {
+            let g = bank_group * self.groups_per_bank + level;
+            if !self.free[g].is_empty() {
+                return self.take(g);
+            }
+        }
+        None
+    }
+
+    /// Add a reference (fork sharing).
+    pub fn retain(&mut self, frame: u32) {
+        self.refcnt[frame as usize] += 1;
+    }
+
+    /// Drop a reference; the frame returns to its free stack when the
+    /// count reaches zero. Returns true if the frame was freed.
+    pub fn release(&mut self, frame: u32) -> bool {
+        let rc = &mut self.refcnt[frame as usize];
+        debug_assert!(*rc > 0, "release of free frame {frame}");
+        *rc -= 1;
+        if *rc == 0 {
+            let g = self.group_of(frame);
+            self.free[g].push(frame);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, frame: u32) -> u16 {
+        self.refcnt[frame as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc(policy: PlacementPolicy) -> FrameAlloc {
+        FrameAlloc::new(&DramConfig::default(), 0, policy, 7)
+    }
+
+    #[test]
+    fn geometry_round_trip() {
+        let fa = alloc(PlacementPolicy::SubarrayPacked);
+        // Default geometry: 8 banks * 16 SAs * 512 rows.
+        assert_eq!(fa.free_frames(), 8 * 16 * 512);
+        let f = 3 * 8192 + 2 * 512 + 17; // bank 3, subarray 2, row 17
+        let a = fa.addr_of(f);
+        assert_eq!((a.channel, a.rank, a.bank), (0, 0, 3));
+        assert_eq!(a.row, 2 * 512 + 17);
+        assert_eq!(fa.level_of(f), 2);
+        assert_eq!(fa.bank_of(f), 3);
+    }
+
+    #[test]
+    fn packed_fills_one_subarray_before_the_next() {
+        let mut fa = alloc(PlacementPolicy::SubarrayPacked);
+        let frames: Vec<u32> = (0..600).map(|_| fa.alloc().unwrap()).collect();
+        // General allocation skips the promotion zone (level 0).
+        assert!(frames.iter().all(|&f| fa.level_of(f) >= ZONE_LEVELS));
+        // First 512 allocations land in one subarray group, same bank.
+        let g0 = fa.group_of(frames[0]);
+        assert!(frames[..512].iter().all(|&f| fa.group_of(f) == g0));
+        assert_ne!(fa.group_of(frames[512]), g0);
+        assert!(frames[..600].iter().all(|&f| fa.bank_of(f) == 0));
+    }
+
+    #[test]
+    fn spread_round_robins_banks() {
+        let mut fa = alloc(PlacementPolicy::SubarraySpread);
+        let a = fa.alloc().unwrap();
+        let b = fa.alloc().unwrap();
+        let c = fa.alloc().unwrap();
+        assert_ne!(fa.group_of(a), fa.group_of(b));
+        assert_ne!(fa.group_of(b), fa.group_of(c));
+        // Consecutive allocations land in different banks.
+        assert_ne!(fa.bank_of(a), fa.bank_of(b));
+        assert_ne!(fa.bank_of(b), fa.bank_of(c));
+    }
+
+    #[test]
+    fn villa_aware_packs_low_levels_across_banks() {
+        let mut fa = alloc(PlacementPolicy::VillaAware);
+        let frames: Vec<u32> = (0..16).map(|_| fa.alloc().unwrap()).collect();
+        // First pass: level 1 (lowest general) of 8 banks round-robin.
+        assert!(frames[..8].iter().all(|&f| fa.level_of(f) == 1));
+        let banks: Vec<usize> = frames[..8].iter().map(|&f| fa.bank_of(f)).collect();
+        assert_eq!(banks, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn alloc_near_colocates_under_packed_but_not_random() {
+        let mut packed = alloc(PlacementPolicy::SubarrayPacked);
+        let src = packed.alloc().unwrap();
+        let near = packed.alloc_near(src).unwrap();
+        assert_eq!(packed.bank_of(src), packed.bank_of(near));
+
+        let mut rnd = alloc(PlacementPolicy::Random);
+        let src = rnd.alloc().unwrap();
+        let same_bank = (0..64)
+            .filter(|_| {
+                let f = rnd.alloc_near(src).unwrap();
+                rnd.bank_of(f) == rnd.bank_of(src)
+            })
+            .count();
+        assert!(same_bank < 32, "random placement co-located {same_bank}/64");
+    }
+
+    #[test]
+    fn refcounts_gate_freeing() {
+        let mut fa = alloc(PlacementPolicy::SubarrayPacked);
+        let before = fa.free_frames();
+        let f = fa.alloc().unwrap();
+        fa.retain(f);
+        assert_eq!(fa.refcount(f), 2);
+        assert!(!fa.release(f));
+        assert_eq!(fa.free_frames(), before - 1);
+        assert!(fa.release(f));
+        assert_eq!(fa.free_frames(), before);
+        // LIFO reuse: the freed frame comes back first.
+        assert_eq!(fa.alloc().unwrap(), f);
+    }
+
+    #[test]
+    fn zone_allocation_stays_in_bank_and_zone() {
+        let mut fa = alloc(PlacementPolicy::SubarrayPacked);
+        let src = fa.alloc().unwrap(); // bank 0, level >= 1
+        let z = fa.alloc_zone(src).unwrap();
+        assert_eq!(fa.bank_of(z), fa.bank_of(src));
+        assert_eq!(fa.level_of(z), 0);
+        // The zone holds one subarray (512 frames); drain it.
+        for _ in 1..512 {
+            assert!(fa.alloc_zone(src).is_some());
+        }
+        assert!(fa.alloc_zone(src).is_none(), "zone should be exhausted");
+    }
+
+    #[test]
+    fn reserved_rows_shift_the_visible_space() {
+        // One reserved subarray (VILLA): rows start at 512.
+        let fa = FrameAlloc::new(
+            &DramConfig::default(),
+            512,
+            PlacementPolicy::SubarrayPacked,
+            1,
+        );
+        assert_eq!(fa.free_frames(), 8 * 15 * 512);
+        assert_eq!(fa.addr_of(0).row, 512);
+    }
+}

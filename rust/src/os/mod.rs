@@ -1,0 +1,27 @@
+//! OS-layer virtual memory and bulk-operation subsystem.
+//!
+//! LISA's headline applications only pay off when system software
+//! routes bulk work to them (RowClone's fork/zeroing/checkpoint
+//! consumers; the PIM-adoption surveys name the OS interface as the
+//! main barrier). This layer supplies that system software for the
+//! simulator:
+//!
+//! * `page_table` — a flat per-process page table with copy-on-write;
+//! * `frame_alloc` — a subarray-aware physical frame allocator whose
+//!   placement policy (`config::PlacementPolicy`) decides how often
+//!   copy pairs land within LISA-RISC reach;
+//! * `bulk` — the engine translating `TraceOp::Bulk` primitives
+//!   (memcpy / zero / fork / touch / checkpoint / promote) into
+//!   page-granular copy requests on the controller's page-copy queue,
+//!   with fault-triggered copies stalling the issuing core.
+//!
+//! The layer is constructed per `Simulation` only when a trace carries
+//! bulk ops, so non-OS workloads are bit-identical to before.
+
+pub mod bulk;
+pub mod frame_alloc;
+pub mod page_table;
+
+pub use bulk::{OsLayer, OsOutcome, OS_ID_BASE};
+pub use frame_alloc::FrameAlloc;
+pub use page_table::{PageEntry, PageTable};

@@ -1,0 +1,113 @@
+//! Flat per-process page table: virtual page number -> physical frame,
+//! with the copy-on-write bit that drives fork's lazy copies.
+//!
+//! A `BTreeMap` (not `HashMap`) keeps every whole-table walk — fork's
+//! CoW sweep, checkpoint's dirty scan — in deterministic vpn order, so
+//! the frame allocator sees an identical request sequence on every run
+//! (the whole simulator is bit-reproducible from the config seed).
+
+use std::collections::BTreeMap;
+
+/// One page-table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageEntry {
+    /// Physical frame (global visible-row index, see `frame_alloc`).
+    pub frame: u32,
+    /// Copy-on-write: the frame is shared with a forked child and a
+    /// store must break the sharing with a page copy first.
+    pub cow: bool,
+}
+
+/// A flat per-process page table.
+#[derive(Debug, Clone, Default)]
+pub struct PageTable {
+    entries: BTreeMap<u64, PageEntry>,
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Translate a virtual page number; `None` faults (unmapped).
+    pub fn translate(&self, vpn: u64) -> Option<PageEntry> {
+        self.entries.get(&vpn).copied()
+    }
+
+    /// Install (or replace) a mapping.
+    pub fn map(&mut self, vpn: u64, frame: u32, cow: bool) -> Option<PageEntry> {
+        self.entries.insert(vpn, PageEntry { frame, cow })
+    }
+
+    /// Point `vpn` at a new private frame (CoW break / migration).
+    pub fn remap(&mut self, vpn: u64, frame: u32) {
+        let e = self.entries.get_mut(&vpn).expect("remap of unmapped page");
+        e.frame = frame;
+        e.cow = false;
+    }
+
+    pub fn unmap(&mut self, vpn: u64) -> Option<PageEntry> {
+        self.entries.remove(&vpn)
+    }
+
+    /// Mark every mapping copy-on-write (fork); returns the shared
+    /// frames in vpn order so the caller can take child references.
+    pub fn mark_all_cow(&mut self) -> Vec<u32> {
+        let mut frames = Vec::with_capacity(self.entries.len());
+        for e in self.entries.values_mut() {
+            e.cow = true;
+            frames.push(e.frame);
+        }
+        frames
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate mappings in vpn order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, PageEntry)> + '_ {
+        self.entries.iter().map(|(&v, &e)| (v, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_translate_unmap() {
+        let mut pt = PageTable::new();
+        assert!(pt.translate(3).is_none());
+        assert!(pt.map(3, 77, false).is_none());
+        assert_eq!(pt.translate(3), Some(PageEntry { frame: 77, cow: false }));
+        assert_eq!(pt.len(), 1);
+        assert_eq!(pt.unmap(3).unwrap().frame, 77);
+        assert!(pt.is_empty());
+    }
+
+    #[test]
+    fn fork_marks_cow_and_remap_clears_it() {
+        let mut pt = PageTable::new();
+        pt.map(0, 10, false);
+        pt.map(9, 11, false);
+        pt.map(4, 12, false);
+        // Deterministic vpn order regardless of insertion order.
+        assert_eq!(pt.mark_all_cow(), vec![10, 12, 11]);
+        assert!(pt.translate(9).unwrap().cow);
+        pt.remap(9, 99);
+        let e = pt.translate(9).unwrap();
+        assert_eq!(e.frame, 99);
+        assert!(!e.cow);
+    }
+
+    #[test]
+    #[should_panic(expected = "remap of unmapped page")]
+    fn remap_requires_mapping() {
+        PageTable::new().remap(1, 2);
+    }
+}

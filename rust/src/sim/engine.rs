@@ -11,6 +11,7 @@ use crate::cpu::core::{Core, CoreWake};
 use crate::energy::EnergyModel;
 use crate::lisa::lip::lip_coverage;
 use crate::metrics::RunReport;
+use crate::os::OsLayer;
 use crate::workloads::Workload;
 
 /// One simulation instance (one workload on one configuration).
@@ -19,6 +20,10 @@ pub struct Simulation {
     pub ctrl: Controller,
     pub hier: Hierarchy,
     pub cores: Vec<Core>,
+    /// OS layer (page tables + frame allocator + bulk engine); present
+    /// only when the workload's traces carry OS bulk ops, so non-OS
+    /// workloads behave bit-identically to a build without it.
+    pub os: Option<OsLayer>,
     workload_name: String,
 }
 
@@ -28,6 +33,7 @@ impl Simulation {
         // trivial trace-level caching, bounded to keep memory sane.
         let n_ops = (cfg.requests_per_core as usize).clamp(1_000, 200_000);
         let traces = workload.traces(&cfg, n_ops);
+        let os = traces.iter().any(|t| t.needs_os()).then(|| OsLayer::new(&cfg));
         let ctrl = Controller::new(cfg.clone());
         let hier = Hierarchy::new(&cfg.cpu);
         let cores = traces
@@ -40,6 +46,7 @@ impl Simulation {
             ctrl,
             hier,
             cores,
+            os,
             workload_name: workload.name,
         }
     }
@@ -92,17 +99,21 @@ impl Simulation {
             self.ctrl.tick()?;
             cycles += 1;
             for c in self.ctrl.drain_completions() {
-                let core = &mut self.cores[c.core];
                 if c.was_copy {
-                    core.on_copy_complete(c.id);
+                    // The OS layer may hold a frame alive until its
+                    // migration copy has read it.
+                    if let Some(os) = self.os.as_mut() {
+                        os.on_copy_complete(c.id);
+                    }
+                    self.cores[c.core].on_copy_complete(c.id);
                 } else {
-                    core.on_mem_complete(c.id);
+                    self.cores[c.core].on_mem_complete(c.id);
                 }
             }
             let mut all_done = true;
             for core in self.cores.iter_mut() {
                 for _ in 0..ratio {
-                    core.cycle(&mut self.hier, &mut self.ctrl);
+                    core.cycle(&mut self.hier, &mut self.ctrl, self.os.as_mut());
                 }
                 all_done &= core.finished();
             }
@@ -178,6 +189,7 @@ impl Simulation {
                 .unwrap_or(0.0),
             lip_coverage: lip_coverage(&self.ctrl.dev.stats),
             energy: energy_model.breakdown_uj(&self.ctrl.dev.stats, cycles, tck),
+            os: self.os.as_ref().map(|o| o.summary()),
         }
     }
 }

@@ -4,16 +4,16 @@
 
 use anyhow::Result;
 
-use crate::config::{Calibration, CopyMechanism, SimConfig};
+use crate::config::{Calibration, CopyMechanism, PlacementPolicy, SimConfig};
 use crate::copy::isolated_copy;
 use crate::dram::area::AreaModel;
 use crate::dram::timing::SpeedBin;
 use crate::energy::EnergyModel;
 use crate::lisa::lip::{lip_report, LipReport};
 use crate::lisa::rbm::{rbm_bandwidth, RbmBandwidth};
-use crate::metrics::Comparison;
+use crate::metrics::{json, Comparison, RunReport};
 use crate::sim::campaign;
-use crate::sim::engine::{alone_ipcs, run_workload};
+use crate::sim::engine::{alone_ipcs, run_workload, Simulation};
 use crate::workloads::mixes;
 use crate::workloads::Workload;
 
@@ -197,7 +197,7 @@ pub struct Fig3Row {
 /// workload, plus the RC-InterSA-movement comparison. Each mix is an
 /// independent job, sharded across the campaign runner (result order
 /// is the mix order regardless of thread count).
-pub fn fig3(requests: u64, max_mixes: usize) -> Vec<Fig3Row> {
+pub fn fig3(requests: u64, max_mixes: usize, threads: usize) -> Vec<Fig3Row> {
     let base = cfg_baseline(requests);
     let villa = cfg_risc_villa(requests);
     let villa_rc = cfg_villa_rc(requests);
@@ -223,12 +223,12 @@ pub fn fig3(requests: u64, max_mixes: usize) -> Vec<Fig3Row> {
             }
         })
         .collect();
-    campaign::run_jobs(jobs, campaign::default_threads())
+    campaign::run_jobs(jobs, threads)
 }
 
 /// E5/E6 (Fig. 4): comparisons of RISC / RISC+VILLA / All over the
 /// baseline across the copy mixes, one campaign job per mix.
-pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
+pub fn fig4(requests: u64, max_mixes: usize, threads: usize) -> Vec<Comparison> {
     let base = cfg_baseline(requests);
     let configs = [
         ("LISA-RISC", cfg_risc(requests)),
@@ -254,7 +254,7 @@ pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
             }
         })
         .collect();
-    let per_mix = campaign::run_jobs(jobs, campaign::default_threads());
+    let per_mix = campaign::run_jobs(jobs, threads);
     let mut cmps: Vec<Comparison> = configs
         .iter()
         .map(|(name, _)| Comparison { name: name.to_string(), ..Default::default() })
@@ -270,7 +270,7 @@ pub fn fig4(requests: u64, max_mixes: usize) -> Vec<Comparison> {
 
 /// E7: LISA-LIP alone across the copy mixes (paper: +10.3% average
 /// over 50 workloads), one campaign job per mix.
-pub fn lip_system(requests: u64, max_mixes: usize) -> Comparison {
+pub fn lip_system(requests: u64, max_mixes: usize, threads: usize) -> Comparison {
     let base = cfg_baseline(requests);
     let lip = cfg_lip(requests);
     let mixes = mixes::copy_mixes(base.cpu.cores);
@@ -289,11 +289,98 @@ pub fn lip_system(requests: u64, max_mixes: usize) -> Comparison {
         })
         .collect();
     let mut cmp = Comparison { name: "LISA-LIP".into(), ..Default::default() };
-    for (imp, en) in campaign::run_jobs(jobs, campaign::default_threads()) {
+    for (imp, en) in campaign::run_jobs(jobs, threads) {
         cmp.ws_improvements.push(imp);
         cmp.energy_reductions.push(en);
     }
     cmp
+}
+
+// ---------------------------------------------------------------------------
+// E9: OS-level bulk operations (fork / zeroing / checkpoint / promotion)
+// across {copy mechanism} x {frame placement policy}.
+// ---------------------------------------------------------------------------
+
+/// The copy-mechanism axis of E9: memcpy over the channel, the best
+/// RowClone the pair's geometry allows, and LISA-RISC.
+pub const E9_MECHANISMS: [CopyMechanism; 3] = [
+    CopyMechanism::MemcpyChannel,
+    CopyMechanism::RowCloneInterSa,
+    CopyMechanism::LisaRisc,
+];
+
+/// The four OS scenario workloads of E9.
+pub const E9_SCENARIOS: [&str; 4] = ["os-fork", "os-zero", "os-checkpoint", "os-promote"];
+
+/// One finished E9 grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OsRow {
+    pub scenario: String,
+    pub mechanism: &'static str,
+    pub policy: &'static str,
+    pub report: RunReport,
+}
+
+/// Configuration for one E9 point.
+pub fn cfg_os(requests: u64, mech: CopyMechanism, policy: PlacementPolicy) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.requests_per_core = requests;
+    cfg.copy_mechanism = mech;
+    cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
+    cfg.os.placement = policy;
+    cfg
+}
+
+/// E9 driver: run every {scenario x mechanism x placement} point
+/// through the parallel campaign runner (scenario-major row order,
+/// deterministic at any thread count).
+pub fn e9_os(
+    requests: u64,
+    mechanisms: &[CopyMechanism],
+    policies: &[PlacementPolicy],
+    scenarios: &[String],
+    threads: usize,
+) -> Result<Vec<OsRow>> {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for scenario in scenarios {
+        for &mech in mechanisms {
+            for &policy in policies {
+                let cfg = cfg_os(requests, mech, policy);
+                let wl = mixes::workload_by_name(scenario, &cfg)?;
+                labels.push((scenario.clone(), mech.name(), policy.name()));
+                jobs.push(move || Simulation::new(cfg, wl).run());
+            }
+        }
+    }
+    let reports = campaign::run_jobs(jobs, threads);
+    Ok(labels
+        .into_iter()
+        .zip(reports)
+        .map(|((scenario, mechanism, policy), report)| OsRow {
+            scenario,
+            mechanism,
+            policy,
+            report,
+        })
+        .collect())
+}
+
+/// JSON document for an E9 run (`lisa os --out report.json`).
+pub fn os_json(rows: &[OsRow]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"scenario\":{},\"mechanism\":{},\"policy\":{},\"report\":{}}}",
+                json::string(&r.scenario),
+                json::string(r.mechanism),
+                json::string(r.policy),
+                r.report.to_json()
+            )
+        })
+        .collect();
+    format!("{{\"os\":[\n{}\n]}}\n", body.join(",\n"))
 }
 
 #[cfg(test)]
@@ -340,5 +427,38 @@ mod tests {
     fn area_report_under_one_percent() {
         let r = area_report(&SimConfig::default());
         assert!(r.total_fraction < 0.01);
+    }
+
+    #[test]
+    fn e9_grid_shape_and_config() {
+        let cfg = cfg_os(100, CopyMechanism::LisaRisc, PlacementPolicy::Random);
+        assert!(cfg.lisa.risc);
+        assert_eq!(cfg.os.placement, PlacementPolicy::Random);
+        let rows = e9_os(
+            120,
+            &[CopyMechanism::LisaRisc],
+            &[PlacementPolicy::SubarrayPacked, PlacementPolicy::Random],
+            &["os-fork".to_string()],
+            2,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.scenario == "os-fork"));
+        assert!(rows.iter().all(|r| {
+            let os = r.report.os.as_ref().expect("OS summary present");
+            os.pages_copied > 0
+        }));
+        let j = os_json(&rows);
+        assert_eq!(j.matches("\"scenario\"").count(), 2);
+        assert!(j.contains("\"policy\":\"packed\""), "{j}");
+        // Unknown scenarios fail fast.
+        assert!(e9_os(
+            100,
+            &[CopyMechanism::LisaRisc],
+            &[PlacementPolicy::Random],
+            &["no-such-scenario".to_string()],
+            1
+        )
+        .is_err());
     }
 }

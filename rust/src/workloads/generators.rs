@@ -18,6 +18,7 @@
 use crate::config::SimConfig;
 use crate::cpu::trace::{Trace, TraceOp};
 use crate::util::rng::Pcg32;
+use crate::workloads::os_scenarios::{self, OsScenario};
 
 /// What one core runs.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -43,6 +44,9 @@ pub enum WorkloadKind {
         /// within the same bank (drives LISA hop counts).
         hop_rows: u64,
     },
+    /// OS-level scenario (virtual addresses through the OS layer's
+    /// page tables and frame allocator; see `workloads/os_scenarios`).
+    Os(OsScenario),
 }
 
 /// A core's workload: kind + working set + intensity.
@@ -62,6 +66,18 @@ impl CoreSpec {
     /// Generate `n_ops` trace operations for core `core` (cores get
     /// disjoint address regions so mixes don't false-share).
     pub fn generate(&self, cfg: &SimConfig, core: usize, n_ops: usize, seed: u64) -> Trace {
+        if let WorkloadKind::Os(scn) = self.kind {
+            // OS scenarios are virtual-address traces; the OS layer
+            // resolves placement at run time.
+            return Trace::new(os_scenarios::generate(
+                scn,
+                cfg,
+                core,
+                n_ops,
+                seed ^ cfg.seed,
+                self.nonmem,
+            ));
+        }
         let mut rng = Pcg32::new(seed ^ cfg.seed, core as u64 + 101);
         // Each core owns a disjoint region.
         let region = 64u64 << 20;
@@ -174,6 +190,7 @@ impl CoreSpec {
                         });
                     }
                 }
+                WorkloadKind::Os(_) => unreachable!("handled above"),
             }
         }
         Trace::new(ops)
@@ -218,10 +235,12 @@ mod tests {
         let max0 = t0.ops.iter().map(|o| match o {
             TraceOp::Mem { addr, .. } => *addr,
             TraceOp::Copy { dst, .. } => *dst,
+            TraceOp::Bulk { .. } => 0,
         }).max().unwrap();
         let min1 = t1.ops.iter().map(|o| match o {
             TraceOp::Mem { addr, .. } => *addr,
             TraceOp::Copy { src, .. } => *src,
+            TraceOp::Bulk { .. } => u64::MAX,
         }).min().unwrap();
         assert!(max0 < min1, "core regions overlap");
     }

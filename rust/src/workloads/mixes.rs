@@ -15,6 +15,7 @@ use crate::config::SimConfig;
 use crate::cpu::trace::Trace;
 use crate::util::rng::Pcg32;
 use crate::workloads::generators::{CoreSpec, WorkloadKind};
+use crate::workloads::os_scenarios::OsScenario;
 
 /// A named multi-core workload.
 #[derive(Debug, Clone)]
@@ -154,11 +155,42 @@ pub fn micro_workloads(cores: usize) -> Vec<Workload> {
     ]
 }
 
+/// The four OS-scenario workloads of experiment E9 (every core runs
+/// its own process instance of the scenario).
+pub fn os_workloads(cores: usize) -> Vec<Workload> {
+    // For `Os` kinds only `nonmem` is read by the generator; working
+    // set and write mix are scenario parameters (page counts / touch
+    // ratios inside `OsScenario`), so `wss`/`write_frac` are zeroed to
+    // make that explicit.
+    let mk = |name: &str, scn: OsScenario, nonmem: u32| Workload {
+        name: name.to_string(),
+        cores: (0..cores)
+            .map(|_| CoreSpec {
+                kind: WorkloadKind::Os(scn),
+                wss: 0,
+                nonmem,
+                write_frac: 0.0,
+            })
+            .collect(),
+    };
+    vec![
+        mk("os-fork", OsScenario::ForkServer { pages: 64, period: 96 }, 4),
+        mk(
+            "os-zero",
+            OsScenario::BootZero { region_pages: 16, regions: 8, period: 64 },
+            4,
+        ),
+        mk("os-checkpoint", OsScenario::Checkpoint { pages: 96, period: 128 }, 4),
+        mk("os-promote", OsScenario::HotPromote { pages: 128, hot: 8, period: 64 }, 6),
+    ]
+}
+
 /// Every named workload in the suite.
 pub fn all_mixes(cfg: &SimConfig) -> Vec<Workload> {
     let cores = cfg.cpu.cores;
     let mut out = micro_workloads(cores);
     out.extend(villa_mixes(cores));
+    out.extend(os_workloads(cores));
     out.extend(copy_mixes(cores));
     out
 }
@@ -230,6 +262,20 @@ mod tests {
             })
             .sum();
         assert!(total_copies > 0);
+    }
+
+    #[test]
+    fn os_workloads_registered_and_bulk_bearing() {
+        let cfg = SimConfig::default();
+        for name in ["os-fork", "os-zero", "os-checkpoint", "os-promote"] {
+            let w = workload_by_name(name, &cfg).unwrap();
+            assert_eq!(w.cores.len(), 4);
+            let traces = w.traces(&cfg, 300);
+            assert!(
+                traces.iter().all(|t| t.needs_os()),
+                "{name}: every core must carry OS bulk ops"
+            );
+        }
     }
 
     #[test]

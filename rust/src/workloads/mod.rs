@@ -5,6 +5,8 @@
 
 pub mod generators;
 pub mod mixes;
+pub mod os_scenarios;
 
 pub use generators::{CoreSpec, WorkloadKind};
 pub use mixes::{all_mixes, workload_by_name, Workload};
+pub use os_scenarios::OsScenario;

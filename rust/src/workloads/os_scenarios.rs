@@ -1,0 +1,210 @@
+//! OS-scenario trace generators: the four system-level workloads of
+//! experiment E9, written at the *virtual* address level. Physical
+//! placement, faults and mechanism dispatch all happen at run time in
+//! the OS layer, so one trace evaluates every placement policy.
+//!
+//! * `ForkServer`  — a server forks periodically; post-fork writes
+//!                   break CoW pages one fault-copy at a time
+//!                   (RowClone's fork consumer).
+//! * `BootZero`    — bulk page zeroing sweeps (boot / mmap / security
+//!                   clearing) followed by touches of the fresh pages.
+//! * `Checkpoint`  — a write-heavy phase, then an epoch checkpoint
+//!                   bulk-copying exactly the dirtied pages.
+//! * `HotPromote`  — skewed accesses over a drifting hot set; the
+//!                   currently hottest page is migrated into its
+//!                   bank's promotion zone each period.
+
+use crate::config::SimConfig;
+use crate::cpu::trace::{BulkOp, TraceOp};
+use crate::util::rng::Pcg32;
+
+/// Syscall-ish instruction overheads charged as non-memory work.
+const FORK_NONMEM: u32 = 60;
+const BULK_CALL_NONMEM: u32 = 20;
+
+/// One core's OS scenario (parameters in pages of one DRAM row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OsScenario {
+    /// `pages` address-space size; fork every `period` ops.
+    ForkServer { pages: u32, period: u32 },
+    /// Zero `region_pages` at a time, touch for `period` ops, move on.
+    BootZero { region_pages: u32, regions: u32, period: u32 },
+    /// Write `period` ops over `pages`, then checkpoint the dirty set.
+    Checkpoint { pages: u32, period: u32 },
+    /// Skewed touches over `pages` with a `hot`-page working set that
+    /// drifts each period; promote the newest hot page per period.
+    HotPromote { pages: u32, hot: u32, period: u32 },
+}
+
+/// Generate `n_ops` trace operations for one core. Deterministic in
+/// (scenario, seed, core); virtual addresses are process-local (each
+/// core is its own process with its own page table).
+pub fn generate(
+    scn: OsScenario,
+    cfg: &SimConfig,
+    core: usize,
+    n_ops: usize,
+    seed: u64,
+    nonmem: u32,
+) -> Vec<TraceOp> {
+    let page = cfg.dram.row_bytes() as u64;
+    let mut rng = Pcg32::new(seed, core as u64 + 0x05_0000);
+    let mut ops = Vec::with_capacity(n_ops + 64);
+    let touch = |rng: &mut Pcg32, page_idx: u64, write: bool| TraceOp::Bulk {
+        nonmem,
+        op: BulkOp::Touch {
+            va: page_idx * page + rng.below(page / 64) * 64,
+            is_write: write,
+        },
+    };
+    match scn {
+        OsScenario::ForkServer { pages, period } => {
+            // Establish the address space once (demand-zeroed).
+            ops.push(TraceOp::Bulk {
+                nonmem: BULK_CALL_NONMEM,
+                op: BulkOp::Zero { va: 0, pages },
+            });
+            while ops.len() < n_ops {
+                ops.push(TraceOp::Bulk { nonmem: FORK_NONMEM, op: BulkOp::Fork });
+                for _ in 0..period {
+                    let p = rng.below(pages as u64);
+                    let w = rng.chance(0.35);
+                    ops.push(touch(&mut rng, p, w));
+                }
+            }
+        }
+        OsScenario::BootZero { region_pages, regions, period } => {
+            let mut region = 0u64;
+            while ops.len() < n_ops {
+                let base = region * region_pages as u64;
+                ops.push(TraceOp::Bulk {
+                    nonmem: BULK_CALL_NONMEM,
+                    op: BulkOp::Zero { va: base * page, pages: region_pages },
+                });
+                for _ in 0..period {
+                    let p = base + rng.below(region_pages as u64);
+                    let w = rng.chance(0.5);
+                    ops.push(touch(&mut rng, p, w));
+                }
+                region = (region + 1) % regions as u64;
+            }
+        }
+        OsScenario::Checkpoint { pages, period } => {
+            ops.push(TraceOp::Bulk {
+                nonmem: BULK_CALL_NONMEM,
+                op: BulkOp::Zero { va: 0, pages },
+            });
+            while ops.len() < n_ops {
+                for _ in 0..period {
+                    let p = rng.below(pages as u64);
+                    let w = rng.chance(0.6);
+                    ops.push(touch(&mut rng, p, w));
+                }
+                ops.push(TraceOp::Bulk {
+                    nonmem: BULK_CALL_NONMEM,
+                    op: BulkOp::Checkpoint,
+                });
+            }
+        }
+        OsScenario::HotPromote { pages, hot, period } => {
+            ops.push(TraceOp::Bulk {
+                nonmem: BULK_CALL_NONMEM,
+                op: BulkOp::Zero { va: 0, pages },
+            });
+            let mut hot_base = 0u64;
+            while ops.len() < n_ops {
+                for _ in 0..period {
+                    let p = if rng.chance(0.9) {
+                        (hot_base + rng.below(hot as u64)) % pages as u64
+                    } else {
+                        rng.below(pages as u64)
+                    };
+                    let w = rng.chance(0.3);
+                    ops.push(touch(&mut rng, p, w));
+                }
+                // The hot window drifts; promote the page that just
+                // became hot (OS-level migration toward the fast zone).
+                hot_base = (hot_base + 1) % pages as u64;
+                let newest = (hot_base + hot as u64 - 1) % pages as u64;
+                ops.push(TraceOp::Bulk {
+                    nonmem: BULK_CALL_NONMEM,
+                    op: BulkOp::Promote { va: newest * page },
+                });
+            }
+        }
+    }
+    ops.truncate(n_ops.max(1));
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    const ALL: [OsScenario; 4] = [
+        OsScenario::ForkServer { pages: 64, period: 48 },
+        OsScenario::BootZero { region_pages: 16, regions: 8, period: 32 },
+        OsScenario::Checkpoint { pages: 96, period: 64 },
+        OsScenario::HotPromote { pages: 128, hot: 8, period: 40 },
+    ];
+
+    #[test]
+    fn scenarios_are_deterministic_and_bulk_bearing() {
+        let c = cfg();
+        for scn in ALL {
+            let a = generate(scn, &c, 0, 800, 7, 4);
+            let b = generate(scn, &c, 0, 800, 7, 4);
+            assert_eq!(a, b, "{scn:?} not deterministic");
+            assert_eq!(a.len(), 800);
+            let d = generate(scn, &c, 0, 800, 8, 4);
+            assert_ne!(a, d, "{scn:?} ignores the seed");
+            let bulk = a.iter().filter(|o| matches!(o, TraceOp::Bulk { .. })).count();
+            assert_eq!(bulk, 800, "{scn:?}: everything routes through the OS");
+        }
+    }
+
+    #[test]
+    fn fork_server_interleaves_forks_and_touches() {
+        let ops = generate(OsScenario::ForkServer { pages: 32, period: 20 }, &cfg(), 1, 500, 1, 2);
+        let forks = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Bulk { op: BulkOp::Fork, .. }))
+            .count();
+        assert!((20..=30).contains(&forks), "{forks} forks in 500 ops");
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, TraceOp::Bulk { op: BulkOp::Touch { is_write: true, .. }, .. })));
+    }
+
+    #[test]
+    fn checkpoint_scenario_emits_checkpoints() {
+        let ops = generate(OsScenario::Checkpoint { pages: 16, period: 25 }, &cfg(), 0, 300, 1, 2);
+        let cps = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Bulk { op: BulkOp::Checkpoint, .. }))
+            .count();
+        assert!(cps >= 10, "{cps} checkpoints");
+    }
+
+    #[test]
+    fn promote_targets_stay_within_the_space() {
+        let pages = 64u64;
+        let ops = generate(
+            OsScenario::HotPromote { pages: pages as u32, hot: 4, period: 10 },
+            &cfg(),
+            0,
+            400,
+            3,
+            2,
+        );
+        for o in &ops {
+            if let TraceOp::Bulk { op: BulkOp::Promote { va }, .. } = o {
+                assert!(*va / 8192 < pages);
+            }
+        }
+    }
+}

@@ -95,6 +95,33 @@ fn equivalence_with_villa_caching() {
 }
 
 #[test]
+fn equivalence_on_os_scenarios() {
+    // The OS layer adds new state the horizon query must respect: the
+    // controller's page-copy queue, fault-stalled cores waiting on
+    // multiple copies, and the synthetic replay access after a fault.
+    // All four scenarios, under both the memcpy baseline and
+    // LISA-RISC, must stay bit-identical across engines.
+    for wl in ["os-fork", "os-zero", "os-checkpoint", "os-promote"] {
+        for mech in [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc] {
+            let cfg = matrix_cfg(mech, false, false, SpeedBin::Ddr3_1600, 300);
+            let r = assert_equivalent(&cfg, wl);
+            let os = r.os.expect("OS summary present");
+            assert!(os.pages_copied > 0, "{wl}/{mech:?}: no page copies");
+        }
+    }
+}
+
+#[test]
+fn equivalence_on_os_scenarios_across_placement_policies() {
+    use lisa::config::PlacementPolicy;
+    for policy in PlacementPolicy::ALL {
+        let mut cfg = matrix_cfg(CopyMechanism::LisaRisc, false, false, SpeedBin::Ddr3_1600, 250);
+        cfg.os.placement = policy;
+        assert_equivalent(&cfg, "os-fork");
+    }
+}
+
+#[test]
 fn equivalence_on_multi_rank_multi_channel_geometry() {
     let mut cfg = matrix_cfg(CopyMechanism::LisaRisc, false, false, SpeedBin::Ddr3_1600, 300);
     cfg.dram.channels = 2;

@@ -3,11 +3,11 @@
 //! cross-cutting invariants (data movement correctness under load,
 //! determinism, bank-parallelism).
 
-use lisa::config::{CopyMechanism, SimConfig};
+use lisa::config::{CopyMechanism, PlacementPolicy, SimConfig};
 use lisa::sim::campaign;
 use lisa::sim::engine::{run_workload, Simulation};
 use lisa::sim::experiments::{
-    cfg_all, cfg_baseline, cfg_risc, cfg_risc_villa, cfg_villa_rc,
+    cfg_all, cfg_baseline, cfg_os, cfg_risc, cfg_risc_villa, cfg_villa_rc, e9_os, os_json,
 };
 use lisa::workloads::mixes;
 
@@ -233,6 +233,107 @@ fn bank_parallelism_lisa_vs_rowclone() {
         lisa_r.dram_cycles,
         rc.dram_cycles
     );
+}
+
+#[test]
+fn e9_lisa_risc_beats_memcpy_on_fork_and_zeroing() {
+    // The E9 acceptance direction: routing OS bulk work through
+    // LISA-RISC must beat memcpy-over-channel on the fork and zeroing
+    // scenarios (RowClone's motivating consumers, served ~9x faster
+    // per page by LISA).
+    for scenario in ["os-fork", "os-zero"] {
+        let wl = mixes::workload_by_name(scenario, &SimConfig::default()).unwrap();
+        let run = |mech| {
+            let mut cfg = cfg_os(700, mech, PlacementPolicy::SubarrayPacked);
+            cfg.max_cycles = 50_000_000;
+            run_workload(&cfg, &wl)
+        };
+        let memcpy = run(CopyMechanism::MemcpyChannel);
+        let lisa = run(CopyMechanism::LisaRisc);
+        assert!(memcpy.os.as_ref().unwrap().pages_copied > 0);
+        assert!(lisa.os.as_ref().unwrap().pages_copied > 0);
+        assert!(
+            lisa.dram_cycles < memcpy.dram_cycles,
+            "{scenario}: LISA {} should beat memcpy {}",
+            lisa.dram_cycles,
+            memcpy.dram_cycles
+        );
+        assert!(
+            lisa.ipc_sum() > memcpy.ipc_sum(),
+            "{scenario}: LISA IPC {} vs memcpy {}",
+            lisa.ipc_sum(),
+            memcpy.ipc_sum()
+        );
+    }
+}
+
+#[test]
+fn e9_placement_policy_changes_the_risc_hit_rate() {
+    // The allocator's placement policy is the co-location knob: packed
+    // placement keeps CoW copy pairs in the source bank (RISC reach);
+    // random placement scatters them across banks.
+    let wl = mixes::workload_by_name("os-fork", &SimConfig::default()).unwrap();
+    let hit_rate = |policy| {
+        let mut cfg = cfg_os(700, CopyMechanism::LisaRisc, policy);
+        cfg.max_cycles = 50_000_000;
+        let r = run_workload(&cfg, &wl);
+        let os = r.os.unwrap();
+        assert!(os.cow_faults > 0, "{policy:?}: fork never faulted");
+        os.risc_hit_rate()
+    };
+    let packed = hit_rate(PlacementPolicy::SubarrayPacked);
+    let random = hit_rate(PlacementPolicy::Random);
+    let spread = hit_rate(PlacementPolicy::SubarraySpread);
+    assert!(
+        packed > random + 0.2,
+        "packed {packed:.3} should clearly beat random {random:.3}"
+    );
+    assert!(
+        packed > spread,
+        "packed {packed:.3} should beat spread {spread:.3}"
+    );
+}
+
+#[test]
+fn e9_report_is_identical_at_1_2_and_8_threads() {
+    // `lisa os` determinism: the full E9 path (grid -> campaign
+    // shards -> ordered rows -> JSON) at any thread count.
+    let scenarios: Vec<String> =
+        vec!["os-fork".into(), "os-checkpoint".into(), "os-promote".into()];
+    let mechs = [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc];
+    let policies = [PlacementPolicy::SubarrayPacked, PlacementPolicy::SubarraySpread];
+    let serial = e9_os(300, &mechs, &policies, &scenarios, 1).unwrap();
+    assert_eq!(serial.len(), 12);
+    let json1 = os_json(&serial);
+    for threads in [2, 8] {
+        let rows = e9_os(300, &mechs, &policies, &scenarios, threads).unwrap();
+        assert_eq!(serial, rows, "threads={threads}");
+        assert_eq!(json1, os_json(&rows), "threads={threads}");
+    }
+}
+
+#[test]
+fn os_scenarios_complete_under_every_mechanism() {
+    // No deadlocks between the page-copy queue, refresh and demand
+    // traffic for any mechanism on any scenario.
+    for scenario in ["os-fork", "os-zero", "os-checkpoint", "os-promote"] {
+        for mech in [
+            CopyMechanism::MemcpyChannel,
+            CopyMechanism::RowCloneInterSa,
+            CopyMechanism::LisaRisc,
+        ] {
+            let mut cfg = cfg_os(400, mech, PlacementPolicy::VillaAware);
+            cfg.max_cycles = 50_000_000;
+            let wl = mixes::workload_by_name(scenario, &cfg).unwrap();
+            let r = run_workload(&cfg, &wl);
+            assert!(
+                r.dram_cycles < cfg.max_cycles,
+                "{scenario}/{mech:?}: hit the cycle cap (deadlock?)"
+            );
+            let os = r.os.unwrap();
+            assert!(os.pages_copied > 0, "{scenario}/{mech:?}: no page traffic");
+        }
+    }
 }
 
 #[test]
