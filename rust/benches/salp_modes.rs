@@ -1,0 +1,55 @@
+//! E10 bench target: subarray-level-parallelism modes composed with
+//! LISA on the intra-bank-conflict workloads. Prints one table row per
+//! {workload x mode} with the structural counters that explain the
+//! cycle differences (activations avoided, per-subarray precharges,
+//! subarray-select switches).
+//!
+//! Usage: `cargo bench --bench salp_modes [-- REQUESTS]`
+
+use lisa::config::{CopyMechanism, SalpMode, SimConfig};
+use lisa::sim::engine::Simulation;
+use lisa::util::bench::Table;
+use lisa::workloads::mixes;
+
+fn main() {
+    let requests: u64 = std::env::args()
+        .skip(1)
+        .find_map(|s| s.parse().ok())
+        .unwrap_or(3_000);
+    println!("=== SALP/MASA modes x LISA (E10, {requests} requests/core) ===\n");
+    let mut t = Table::new(&[
+        "workload",
+        "mode",
+        "cycles",
+        "IPC sum",
+        "row-hit %",
+        "ACTs",
+        "PRE_SA",
+        "sa-switch",
+    ]);
+    for wl_name in ["salp-pingpong4", "salp-shared-bank4", "salp-copy-conflict4"] {
+        for mode in SalpMode::ALL {
+            let mut cfg = SimConfig::default();
+            cfg.requests_per_core = requests;
+            cfg.dram.salp = mode;
+            cfg.lisa.risc = true;
+            cfg.copy_mechanism = CopyMechanism::LisaRisc;
+            let wl = mixes::workload_by_name(wl_name, &cfg).unwrap();
+            let mut sim = Simulation::new(cfg, wl);
+            let r = sim.run();
+            let s = &sim.ctrl.dev.stats;
+            t.row(&[
+                wl_name.to_string(),
+                mode.name().to_string(),
+                format!("{}", r.dram_cycles),
+                format!("{:.3}", r.ipc_sum()),
+                format!("{:.1}", r.row_hit_rate * 100.0),
+                format!("{}", s.n_act),
+                format!("{}", s.n_pre_sa),
+                format!("{}", s.n_sa_switch),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(none serializes; salp1 overlaps tRP; salp2 keeps 2 rows; masa keeps all)");
+}

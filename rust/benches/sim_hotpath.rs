@@ -4,23 +4,50 @@
 //! default `run()`) and the per-cycle reference loop — the ratio is
 //! the repo's headline engine-speed metric.
 //!
-//! Usage: `cargo bench --bench sim_hotpath [-- REQUESTS]`
-//! (REQUESTS defaults to 5000; CI smoke mode passes a small value.)
+//! Usage: `cargo bench --bench sim_hotpath [-- REQUESTS]
+//!             [--json FILE] [--gate BASELINE] [--handicap N]`
+//!
+//! * REQUESTS defaults to 5000; CI smoke mode passes a small value.
+//! * `--json FILE` writes a machine-readable summary (the CI artifact
+//!   the perf-regression gate and historical comparisons consume).
+//! * `--gate BASELINE` compares the measurement against the checked-in
+//!   thresholds (`rust/ci/perf_baseline.toml`) and exits non-zero on a
+//!   regression beyond the (deliberately generous) tolerance.
+//! * `--handicap N` multiplies the measured fast-forward time by N —
+//!   an artificial slowdown for demonstrating that the gate fails
+//!   (e.g. `-- 800 --gate ci/perf_baseline.toml --handicap 10`).
 
 use std::time::Instant;
 
+use lisa::config::minitoml::Document;
 use lisa::config::SimConfig;
+use lisa::metrics::json;
 use lisa::sim::engine::Simulation;
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
 
 struct Measurement {
+    name: &'static str,
     cycles: u64,
-    ff_rate: f64,
-    ref_rate: f64,
+    ff_secs: f64,
+    ref_secs: f64,
 }
 
-fn bench_workload(name: &str, requests: u64) -> Measurement {
+impl Measurement {
+    fn ff_rate(&self) -> f64 {
+        self.cycles as f64 / self.ff_secs
+    }
+
+    fn ref_rate(&self) -> f64 {
+        self.cycles as f64 / self.ref_secs
+    }
+
+    fn speedup(&self) -> f64 {
+        self.ff_rate() / self.ref_rate()
+    }
+}
+
+fn bench_workload(name: &'static str, requests: u64, handicap: f64) -> Measurement {
     let mut cfg = SimConfig::default().with_all_lisa();
     cfg.requests_per_core = requests;
     let wl = mixes::workload_by_name(name, &cfg).unwrap();
@@ -28,30 +55,138 @@ fn bench_workload(name: &str, requests: u64) -> Measurement {
     let mut ff = Simulation::new(cfg.clone(), wl.clone());
     let t0 = Instant::now();
     let r_ff = ff.run();
-    let ff_dt = t0.elapsed().as_secs_f64();
+    let ff_secs = t0.elapsed().as_secs_f64() * handicap;
 
     let mut reference = Simulation::new(cfg, wl);
     let t0 = Instant::now();
     let r_ref = reference.reference_run();
-    let ref_dt = t0.elapsed().as_secs_f64();
+    let ref_secs = t0.elapsed().as_secs_f64();
 
     assert_eq!(
         r_ff, r_ref,
         "{name}: fast-forward must be cycle-exact vs the reference loop"
     );
     Measurement {
+        name,
         cycles: r_ff.dram_cycles,
-        ff_rate: r_ff.dram_cycles as f64 / ff_dt,
-        ref_rate: r_ref.dram_cycles as f64 / ref_dt,
+        ff_secs,
+        ref_secs,
+    }
+}
+
+/// The two gate-relevant aggregates, computed in exactly one place so
+/// the printed table, the JSON artifact and the gate verdict can never
+/// diverge: (aggregate fast-forward cycles/sec, worst-case speedup).
+fn aggregates(measurements: &[Measurement]) -> (f64, f64) {
+    let total_cycles: u64 = measurements.iter().map(|m| m.cycles).sum();
+    let total_ff_secs: f64 = measurements.iter().map(|m| m.ff_secs).sum();
+    let worst = measurements
+        .iter()
+        .map(Measurement::speedup)
+        .fold(f64::INFINITY, f64::min);
+    (total_cycles as f64 / total_ff_secs, worst)
+}
+
+fn summary_json(requests: u64, measurements: &[Measurement]) -> String {
+    let (agg_rate, worst) = aggregates(measurements);
+    let rows: Vec<String> = measurements
+        .iter()
+        .map(|m| {
+            format!(
+                "{{\"workload\":{},\"sim_cycles\":{},\"ff_cyc_per_sec\":{},\
+                 \"ref_cyc_per_sec\":{},\"speedup\":{}}}",
+                json::string(m.name),
+                m.cycles,
+                json::number(m.ff_rate()),
+                json::number(m.ref_rate()),
+                json::number(m.speedup()),
+            )
+        })
+        .collect();
+    format!(
+        "{{\"bench\":\"sim_hotpath\",\"schema\":1,\"requests\":{requests},\
+         \"workloads\":[\n{}\n],\"aggregate_ff_cyc_per_sec\":{},\
+         \"worst_ff_speedup\":{}}}\n",
+        rows.join(",\n"),
+        json::number(agg_rate),
+        json::number(worst),
+    )
+}
+
+/// Apply the checked-in perf baseline; returns Err lines on violation.
+fn check_gate(path: &str, measurements: &[Measurement]) -> Result<(), Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("perf baseline {path}: {e}"));
+    let doc = Document::parse(&text).expect("perf baseline parses");
+    let min_speedup = doc
+        .get_f64("sim_hotpath", "min_ff_speedup")
+        .expect("min_ff_speedup type")
+        .expect("min_ff_speedup present");
+    let min_mcyc = doc
+        .get_f64("sim_hotpath", "min_ff_mcyc_per_sec")
+        .expect("min_ff_mcyc_per_sec type")
+        .expect("min_ff_mcyc_per_sec present");
+
+    let (agg_rate, worst) = aggregates(measurements);
+    let agg_mcyc = agg_rate / 1e6;
+
+    let mut violations = Vec::new();
+    if worst < min_speedup {
+        violations.push(format!(
+            "worst-case fast-forward speedup {worst:.2}x < baseline floor {min_speedup:.2}x"
+        ));
+    }
+    if agg_mcyc < min_mcyc {
+        violations.push(format!(
+            "aggregate fast-forward throughput {agg_mcyc:.2} Mcyc/s < baseline floor \
+             {min_mcyc:.2} Mcyc/s"
+        ));
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(violations)
     }
 }
 
 fn main() {
-    // First numeric argument wins (cargo bench may inject `--bench`).
-    let requests: u64 = std::env::args()
-        .skip(1)
-        .find_map(|s| s.parse().ok())
-        .unwrap_or(5_000);
+    // First bare numeric argument = request count; flagged options may
+    // appear in any order (cargo bench injects its own `--bench`).
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut requests: u64 = 5_000;
+    let mut json_out: Option<String> = None;
+    let mut gate: Option<String> = None;
+    let mut handicap: f64 = 1.0;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--json" if i + 1 < argv.len() => {
+                json_out = Some(argv[i + 1].clone());
+                i += 1;
+            }
+            "--gate" if i + 1 < argv.len() => {
+                gate = Some(argv[i + 1].clone());
+                i += 1;
+            }
+            "--handicap" if i + 1 < argv.len() => {
+                handicap = argv[i + 1].parse().expect("numeric --handicap");
+                i += 1;
+            }
+            // cargo injects --bench for harness-style invocations.
+            "--bench" => {}
+            other => match other.parse() {
+                Ok(n) => requests = n,
+                // Anything else is a mistyped flag or a flag missing
+                // its value — neither may silently disable the gate.
+                Err(_) => {
+                    eprintln!("sim_hotpath: unknown or valueless argument '{other}'");
+                    std::process::exit(2);
+                }
+            },
+        }
+        i += 1;
+    }
+
     println!("=== Simulator hot-path throughput ({requests} requests/core) ===\n");
     let mut t = Table::new(&[
         "workload",
@@ -60,20 +195,45 @@ fn main() {
         "ref Mcyc/s",
         "speedup",
     ]);
-    let mut worst = f64::INFINITY;
+    let mut measurements = Vec::new();
     for name in ["stream4", "random4", "hotspot4", "fork4"] {
-        let m = bench_workload(name, requests);
-        let speedup = m.ff_rate / m.ref_rate;
-        worst = worst.min(speedup);
+        let m = bench_workload(name, requests, handicap);
         t.row(&[
             name.to_string(),
             format!("{}", m.cycles),
-            format!("{:.2}", m.ff_rate / 1e6),
-            format!("{:.2}", m.ref_rate / 1e6),
-            format!("{:.2}x", speedup),
+            format!("{:.2}", m.ff_rate() / 1e6),
+            format!("{:.2}", m.ref_rate() / 1e6),
+            format!("{:.2}x", m.speedup()),
         ]);
+        measurements.push(m);
     }
     t.print();
+    let (_, worst) = aggregates(&measurements);
     println!("\nworst-case fast-forward speedup: {worst:.2}x");
     println!("target (EXPERIMENTS.md §Perf): >= 3x vs the per-cycle reference loop");
+    if handicap != 1.0 {
+        println!("NOTE: fast-forward times artificially inflated {handicap}x (--handicap)");
+    }
+
+    if let Some(path) = json_out {
+        std::fs::write(&path, summary_json(requests, &measurements))
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+    if let Some(path) = gate {
+        match check_gate(&path, &measurements) {
+            Ok(()) => println!("perf gate: PASS ({path})"),
+            Err(violations) => {
+                eprintln!("perf gate: FAIL ({path})");
+                for v in &violations {
+                    eprintln!("  {v}");
+                }
+                eprintln!(
+                    "intentional engine change? bump the floors in {path} in the same PR \
+                     (one-line edit) and say why in the PR description"
+                );
+                std::process::exit(1);
+            }
+        }
+    }
 }

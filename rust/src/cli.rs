@@ -167,13 +167,16 @@ mod tests {
     #[test]
     fn threads_option_parses_on_every_campaign_subcommand() {
         // `--threads N` is plumbed through every campaign-backed
-        // subcommand; absence means "use available parallelism".
-        for cmd in ["fig3", "fig4", "lip-system", "sweep", "os", "run"] {
+        // subcommand; absence (or `0`) means "use available
+        // parallelism" — resolution lives in `campaign::resolve_threads`.
+        for cmd in ["fig3", "fig4", "lip-system", "sweep", "os", "salp", "run"] {
             let a = parse(&format!("{cmd} --threads 3"));
             assert_eq!(a.subcommand.as_deref(), Some(cmd));
             assert_eq!(a.opt_usize("threads").unwrap(), Some(3), "{cmd}");
             let bare = parse(cmd);
             assert_eq!(bare.opt_usize("threads").unwrap(), None, "{cmd}");
+            let zero = parse(&format!("{cmd} --threads 0"));
+            assert_eq!(zero.opt_usize("threads").unwrap(), Some(0), "{cmd}");
         }
         assert!(parse("os --threads x").opt_usize("threads").is_err());
     }

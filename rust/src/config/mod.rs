@@ -52,6 +52,79 @@ impl CopyMechanism {
     }
 }
 
+/// Subarray-level-parallelism mode of the bank state machine (Kim et
+/// al., "Exploiting the DRAM Microarchitecture to Increase
+/// Memory-Level Parallelism" — SALP-1 / SALP-2 / MASA), composable
+/// with the LISA substrate: LISA links subarrays for *data movement*,
+/// SALP exposes their independent *activation* state to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SalpMode {
+    /// Baseline: at most one non-precharged subarray per bank, and a
+    /// whole-bank precharge charges the full tRP before the next ACT.
+    None,
+    /// SALP-1: still one open row at a time, but precharge is a
+    /// per-subarray operation, so an ACT to a *different* subarray
+    /// overlaps with the previous subarray's tRP.
+    Salp1,
+    /// SALP-2: per-subarray sense-amp latches let two subarrays stay
+    /// open concurrently (the designated-subarray approximation: the
+    /// global-bitline select costs `t_sa_sel` on a subarray switch).
+    Salp2,
+    /// MASA: every subarray may hold an open row; RD/WR steers the
+    /// global bitlines by subarray-select (again `t_sa_sel` per
+    /// switch). The scheduler exploits open rows in distinct
+    /// subarrays of the same bank.
+    Masa,
+}
+
+impl SalpMode {
+    /// All modes, in increasing parallelism order.
+    pub const ALL: [SalpMode; 4] =
+        [SalpMode::None, SalpMode::Salp1, SalpMode::Salp2, SalpMode::Masa];
+
+    /// Parse a mode name (`none|salp1|salp2|masa`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Self::None,
+            "salp1" => Self::Salp1,
+            "salp2" => Self::Salp2,
+            "masa" => Self::Masa,
+            _ => bail!("unknown SALP mode '{s}' (none|salp1|salp2|masa)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Salp1 => "salp1",
+            Self::Salp2 => "salp2",
+            Self::Masa => "masa",
+        }
+    }
+
+    /// Maximum number of concurrently non-precharged subarrays per
+    /// bank under this mode.
+    pub fn open_cap(&self, subarrays_per_bank: usize) -> usize {
+        match self {
+            Self::None | Self::Salp1 => 1,
+            Self::Salp2 => 2,
+            Self::Masa => subarrays_per_bank,
+        }
+    }
+
+    /// Does the mode track activation state (and schedule precharges)
+    /// per subarray rather than per bank?
+    pub fn per_subarray(&self) -> bool {
+        *self != Self::None
+    }
+
+    /// Does the mode pay the subarray-select latch cost on RD/WR
+    /// subarray switches (the modes with >1 concurrently open row)?
+    pub fn has_sa_select(&self) -> bool {
+        matches!(self, Self::Salp2 | Self::Masa)
+    }
+}
+
 /// Physical frame placement policy of the OS-layer frame allocator
 /// (`os/frame_alloc.rs`). Placement decides where bulk-copy pairs land
 /// relative to each other, which in turn decides how many page copies
@@ -129,9 +202,11 @@ pub struct DramConfig {
     /// Cache lines (64 B) per row; 8 KB row => 128.
     pub columns: usize,
     pub speed: SpeedBin,
-    /// Subarray-level parallelism (SALP) — the paper's baseline has it
-    /// off; LISA configurations keep per-subarray row-buffer state.
-    pub salp: bool,
+    /// Subarray-level parallelism mode — the paper's baseline is
+    /// `SalpMode::None`; the device model always keeps per-subarray
+    /// row-buffer state, the mode decides how much of it the bank
+    /// state machine (and therefore the scheduler) may exploit.
+    pub salp: SalpMode,
 }
 
 impl Default for DramConfig {
@@ -144,7 +219,7 @@ impl Default for DramConfig {
             rows_per_subarray: 512,
             columns: 128,
             speed: SpeedBin::Ddr3_1600,
-            salp: false,
+            salp: SalpMode::None,
         }
     }
 }
@@ -368,7 +443,17 @@ impl SimConfig {
         set!(self.dram.subarrays_per_bank, get_usize, "dram", "subarrays_per_bank");
         set!(self.dram.rows_per_subarray, get_usize, "dram", "rows_per_subarray");
         set!(self.dram.columns, get_usize, "dram", "columns");
-        set!(self.dram.salp, get_bool, "dram", "salp");
+        // `salp` accepts either a mode name ("none"|"salp1"|"salp2"|
+        // "masa") or, for older configs, a boolean (true == masa).
+        match doc.get_str("dram", "salp") {
+            Ok(Some(s)) => self.dram.salp = SalpMode::parse(&s)?,
+            Ok(None) => {}
+            Err(_) => {
+                if let Some(b) = doc.get_bool("dram", "salp")? {
+                    self.dram.salp = if b { SalpMode::Masa } else { SalpMode::None };
+                }
+            }
+        }
         if let Some(s) = doc.get_str("dram", "speed")? {
             self.dram.speed = SpeedBin::parse(&s)?;
         }
@@ -490,7 +575,8 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.dram.banks, 16);
         assert_eq!(cfg.dram.speed, SpeedBin::Ddr4_2400);
-        assert!(cfg.dram.salp);
+        // Legacy boolean form maps true -> masa.
+        assert_eq!(cfg.dram.salp, SalpMode::Masa);
         assert!(cfg.lisa.risc && cfg.lisa.villa && !cfg.lisa.lip);
         assert_eq!(cfg.cpu.cores, 8);
         assert_eq!(cfg.copy_mechanism, CopyMechanism::LisaRisc);
@@ -528,6 +614,29 @@ mod tests {
             assert_eq!(CopyMechanism::parse(m.name()).unwrap(), m);
         }
         assert!(CopyMechanism::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn salp_mode_parse_round_trip() {
+        for m in SalpMode::ALL {
+            assert_eq!(SalpMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SalpMode::parse("salp3").is_err());
+        // String form in TOML.
+        let cfg = SimConfig::from_toml("[dram]\nsalp = \"salp2\"\n").unwrap();
+        assert_eq!(cfg.dram.salp, SalpMode::Salp2);
+        let cfg = SimConfig::from_toml("[dram]\nsalp = false\n").unwrap();
+        assert_eq!(cfg.dram.salp, SalpMode::None);
+        assert!(SimConfig::from_toml("[dram]\nsalp = \"bogus\"\n").is_err());
+        // Caps: none/salp1 serialize, salp2 pairs, masa is unbounded.
+        assert_eq!(SalpMode::None.open_cap(16), 1);
+        assert_eq!(SalpMode::Salp1.open_cap(16), 1);
+        assert_eq!(SalpMode::Salp2.open_cap(16), 2);
+        assert_eq!(SalpMode::Masa.open_cap(16), 16);
+        assert!(!SalpMode::None.per_subarray());
+        assert!(SalpMode::Salp1.per_subarray());
+        assert!(!SalpMode::Salp1.has_sa_select());
+        assert!(SalpMode::Masa.has_sa_select());
     }
 
     #[test]

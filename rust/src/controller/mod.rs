@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::config::{CopyMechanism, SimConfig};
 use crate::copy::CopyOp;
-use crate::dram::bank::DramDevice;
+use crate::dram::bank::{Bank, DramDevice};
 use crate::dram::command::Command;
 use crate::dram::geometry::Address;
 use crate::dram::timing::Timing;
@@ -589,6 +589,9 @@ impl Controller {
 
     /// Find the first schedulable (queue index, command) pair under
     /// FR-FCFS: pass 1 row hits, pass 2 oldest-first preparation.
+    /// Under SALP modes pass 1 sees the open row of the *request's own
+    /// subarray* (so hits in distinct subarrays of one bank coexist)
+    /// and pass 2 prepares rows per subarray via `prep_command`.
     fn pick_request(&self, ch: usize, writes: bool, now: u64) -> Option<(usize, Command)> {
         let c = &self.chans[ch];
         let q: &VecDeque<MemRequest> = if writes { &c.write_q } else { &c.read_q };
@@ -607,19 +610,20 @@ impl Controller {
             for (qi, req) in q.iter().enumerate() {
                 let a = &req.addr;
                 let bank = self.dev.bank(ch, a.rank, a.bank);
+                let sa = a.subarray(&self.cfg.dram);
                 // Fast rejects before the full timing check.
-                if bank.next_rdwr > now || bank.busy_until > now {
+                if bank.subarrays[sa].next_rdwr > now || bank.busy_until > now {
                     continue;
                 }
                 let w = writes || req.is_write;
                 if (w && !bus_ready_wr) || (!w && !bus_ready_rd) {
                     continue;
                 }
-                if bank.open_row() == Some(a.row) {
+                if bank.subarrays[sa].open_row() == Some(a.row) {
                     let cmd = if w {
-                        Command::Wr { rank: a.rank, bank: a.bank, col: a.col }
+                        Command::Wr { rank: a.rank, bank: a.bank, sa, col: a.col }
                     } else {
-                        Command::Rd { rank: a.rank, bank: a.bank, col: a.col }
+                        Command::Rd { rank: a.rank, bank: a.bank, sa, col: a.col }
                     };
                     if let Ok(e) = self.dev.earliest(ch, cmd, now) {
                         if e <= now {
@@ -638,7 +642,7 @@ impl Controller {
             .as_ref()
             .map(|op| op.banks(&self.cfg.dram))
             .unwrap_or([None; 3]);
-        // Pass 2: oldest-first, prepare the row (PRE or ACT).
+        // Pass 2: oldest-first, prepare the row (PRE / PRE_SA or ACT).
         for (qi, req) in q.iter().enumerate() {
             let a = &req.addr;
             // Don't prepare rows for ranks with refresh pending.
@@ -653,20 +657,23 @@ impl Controller {
             if bank.busy_until > now {
                 continue;
             }
-            if bank.open_row() == Some(a.row) {
+            let sa = a.subarray(&self.cfg.dram);
+            if bank.subarrays[sa].open_row() == Some(a.row) {
                 continue; // hit not ready yet (bus or tRCD); keep order
             }
-            let cmd = if bank.all_precharged() {
-                if bank.next_act > now {
-                    continue;
+            let cmd = self.prep_command(bank, a, sa);
+            // Cheap per-command register gates before the full check.
+            let ready = match cmd {
+                Command::Act { .. } => {
+                    bank.next_act <= now && bank.subarrays[sa].next_act <= now
                 }
-                Command::Act { rank: a.rank, bank: a.bank, row: a.row }
-            } else {
-                if bank.next_pre > now {
-                    continue;
-                }
-                Command::Pre { rank: a.rank, bank: a.bank }
+                Command::Pre { .. } => bank.next_pre <= now,
+                Command::PreSa { sa: victim, .. } => bank.subarrays[victim].next_pre <= now,
+                _ => true,
             };
+            if !ready {
+                continue;
+            }
             if let Ok(e) = self.dev.earliest(ch, cmd, now) {
                 if e <= now {
                     return Some((qi, cmd));
@@ -674,6 +681,38 @@ impl Controller {
             }
         }
         None
+    }
+
+    /// The row-preparation command pass 2 (oldest-first) would issue
+    /// for a request to `a` under the current bank state. The baseline
+    /// closes/opens whole banks; the SALP modes operate per subarray —
+    /// precharge the target subarray on a row conflict, activate while
+    /// under the mode's open-subarray cap, and otherwise evict the
+    /// lowest-indexed non-precharged subarray (a deterministic victim,
+    /// never `sa` itself, which is precharged in that branch). Shared
+    /// by the scheduler and the fast-forward horizon so both always
+    /// agree on the candidate command.
+    fn prep_command(&self, bank: &Bank, a: &Address, sa: usize) -> Command {
+        let mode = self.cfg.dram.salp;
+        if !mode.per_subarray() {
+            return if bank.all_precharged() {
+                Command::Act { rank: a.rank, bank: a.bank, row: a.row }
+            } else {
+                Command::Pre { rank: a.rank, bank: a.bank }
+            };
+        }
+        if !bank.subarrays[sa].is_precharged() {
+            Command::PreSa { rank: a.rank, bank: a.bank, sa }
+        } else if bank.open_count() < mode.open_cap(bank.subarrays.len()) {
+            Command::Act { rank: a.rank, bank: a.bank, row: a.row }
+        } else {
+            let victim = bank
+                .subarrays
+                .iter()
+                .position(|s| !s.is_precharged())
+                .expect("bank at cap has a non-precharged subarray");
+            Command::PreSa { rank: a.rank, bank: a.bank, sa: victim }
+        }
     }
 
     fn issue_for_request(
@@ -730,7 +769,7 @@ impl Controller {
                     Event::WriteDone { copy_id: req.copy_id, ch },
                 ));
             }
-            Command::Act { .. } | Command::Pre { .. } => {
+            Command::Act { .. } | Command::Pre { .. } | Command::PreSa { .. } => {
                 self.stats.row_misses += 1;
             }
             _ => {}
@@ -859,21 +898,20 @@ impl Controller {
     ) -> u64 {
         let a = &req.addr;
         let bank = self.dev.bank(ch, a.rank, a.bank);
-        let cmd = if bank.open_row() == Some(a.row) {
+        let sa = a.subarray(&self.cfg.dram);
+        let cmd = if bank.subarrays[sa].open_row() == Some(a.row) {
             // Pass 1 (row hits) has no rank/bank exclusions.
             if req.is_write {
-                Command::Wr { rank: a.rank, bank: a.bank, col: a.col }
+                Command::Wr { rank: a.rank, bank: a.bank, sa, col: a.col }
             } else {
-                Command::Rd { rank: a.rank, bank: a.bank, col: a.col }
+                Command::Rd { rank: a.rank, bank: a.bank, sa, col: a.col }
             }
         } else if c.refresh_pending[a.rank]
             || (copy_rank == Some(a.rank) && copy_banks.contains(&Some(a.bank)))
         {
             return u64::MAX;
-        } else if bank.all_precharged() {
-            Command::Act { rank: a.rank, bank: a.bank, row: a.row }
         } else {
-            Command::Pre { rank: a.rank, bank: a.bank }
+            self.prep_command(bank, a, sa)
         };
         // A structural Err is stable until some other command issues
         // (which is itself a horizon event), so it never bounds h.
@@ -1128,13 +1166,15 @@ mod tests {
             for rank in 0..c.cfg.dram.ranks {
                 for bank in 0..c.cfg.dram.banks {
                     let b = c.dev.bank(ch, rank, bank);
+                    // `subarrays` Debug covers every per-subarray
+                    // register, buffer state and tag.
                     s += &format!(
-                        "|{:?},{},{},{},{}",
-                        b.open_row(),
+                        "|{},{},{},{:?},{:?}",
                         b.busy_until,
                         b.next_act,
                         b.next_pre,
-                        b.next_rdwr
+                        b.last_sa,
+                        b.subarrays,
                     );
                 }
             }
@@ -1154,9 +1194,13 @@ mod tests {
         // (the per-cycle reference loop would be a pure no-op there).
         // Previously this was only checked end-to-end by the engine
         // equivalence suite; here it is checked directly per state.
+        use crate::config::SalpMode;
         use crate::util::proptest::check;
         check("next_event_cycle lower bound", 8, |g| {
             let mut c = ctrl(|cfg| {
+                // Per-subarray open rows must not break the bound: draw
+                // the SALP mode alongside the LISA switches.
+                cfg.dram.salp = *g.pick(&SalpMode::ALL);
                 cfg.lisa.risc = g.bool();
                 cfg.lisa.lip = g.bool();
                 cfg.copy_mechanism = if cfg.lisa.risc {
@@ -1234,6 +1278,115 @@ mod tests {
                 budget -= span;
             }
         });
+    }
+
+    #[test]
+    fn prop_refresh_is_never_starved_with_salp_open_rows() {
+        // A due refresh must reach the device within a bounded window
+        // no matter how many per-subarray open rows, copies and page
+        // copies the scheduler is juggling — SALP keeps more rows open
+        // per bank, so refresh has strictly more closing work to do.
+        use crate::config::SalpMode;
+        use crate::util::proptest::check;
+        check("refresh not starved", 6, |g| {
+            let mode = *g.pick(&SalpMode::ALL);
+            let mut c = ctrl(|cfg| {
+                cfg.dram.salp = mode;
+                cfg.lisa.risc = g.bool();
+                cfg.copy_mechanism = if cfg.lisa.risc {
+                    CopyMechanism::LisaRisc
+                } else {
+                    CopyMechanism::MemcpyChannel
+                };
+            });
+            let t_refi = c.dev.timing.t_refi;
+            let bound = 2 * t_refi;
+            let mut next_id = 1u64;
+            let mut pending_since: Option<u64> = None;
+            while c.now < 4 * t_refi {
+                // Keep request and copy pressure up so refresh really
+                // competes with open-row traffic.
+                if c.now % 131 == 0 {
+                    let addr = g.u64(32 << 20) & !63;
+                    let _ = c.enqueue_mem(next_id, 0, addr, g.chance(0.3));
+                    next_id += 1;
+                }
+                if c.now % 977 == 0 && g.chance(0.5) {
+                    c.enqueue_copy(CopyRequest {
+                        id: 0x8000 + next_id,
+                        core: 0,
+                        src: Address { channel: 0, rank: 0, bank: 0, row: g.usize(4000), col: 0 },
+                        dst: Address {
+                            channel: 0,
+                            rank: 0,
+                            bank: 0,
+                            row: 4096 + g.usize(3000),
+                            col: 0,
+                        },
+                        rows: 1 + g.usize(2),
+                        mechanism: c.cfg.copy_mechanism,
+                        arrive: 0,
+                    });
+                    next_id += 1;
+                }
+                c.tick().unwrap();
+                c.drain_completions();
+                let pending = c.chans[0].refresh_pending[0];
+                match (pending, pending_since) {
+                    (true, None) => pending_since = Some(c.now),
+                    (true, Some(t0)) => assert!(
+                        c.now - t0 < bound,
+                        "refresh pending for {} cycles under {:?}",
+                        c.now - t0,
+                        mode
+                    ),
+                    (false, _) => pending_since = None,
+                }
+            }
+            assert!(c.dev.stats.n_ref >= 2, "refreshes: {}", c.dev.stats.n_ref);
+        });
+    }
+
+    #[test]
+    fn masa_serves_conflicting_subarrays_without_thrashing() {
+        // Two request streams hammering different subarrays of ONE
+        // bank: the baseline must precharge back and forth, MASA keeps
+        // both rows open after the first conflict resolution.
+        use crate::config::SalpMode;
+        let run = |mode: SalpMode| {
+            let mut c = ctrl(|cfg| cfg.dram.salp = mode);
+            let mut id = 0u64;
+            let mut done = 0usize;
+            // One request at a time, alternating between rows in
+            // subarray 0 and subarray 1 of bank 0 — drained before the
+            // next arrives, so FR-FCFS cannot batch same-row hits and
+            // the baseline genuinely ping-pongs the bank.
+            for round in 0..16usize {
+                for row in [10usize, 700usize] {
+                    id += 1;
+                    assert!(c.enqueue_mem_mapped(
+                        id,
+                        0,
+                        Address { channel: 0, rank: 0, bank: 0, row, col: round },
+                        false,
+                    ));
+                    for _ in 0..10_000u64 {
+                        c.tick().unwrap();
+                        done += c.drain_completions().len();
+                        if c.idle() {
+                            break;
+                        }
+                    }
+                }
+            }
+            assert_eq!(done, 32, "{mode:?}: all requests complete");
+            (c.dev.stats.n_act, c.stats.row_hit_rate())
+        };
+        let (act_none, hit_none) = run(SalpMode::None);
+        let (act_masa, hit_masa) = run(SalpMode::Masa);
+        assert!(act_masa < act_none, "MASA acts {act_masa} vs baseline {act_none}");
+        assert!(hit_masa > hit_none, "MASA hit rate {hit_masa} vs baseline {hit_none}");
+        assert_eq!(act_masa, 2, "MASA opens each conflicting row exactly once");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Calibration, CopyMechanism, DramConfig, LisaConfig};
+use crate::config::{Calibration, CopyMechanism, DramConfig, LisaConfig, SalpMode};
 use crate::controller::request::CopyRequest;
 use crate::dram::bank::DramDevice;
 use crate::dram::command::Command;
@@ -131,6 +131,32 @@ impl CopyOp {
         (self.src().bank + 1) % cfg.banks
     }
 
+    /// Under MASA, same-bank mechanisms only need their hop path (for
+    /// LISA-RISC) or single subarray (RowClone intra) precharged — open
+    /// rows in other subarrays are preserved across the copy, which is
+    /// the SALP × LISA composition payoff. Inter-bank mechanisms still
+    /// close whole banks: `Transfer` grabs *the* open row of a bank, so
+    /// exactly one may exist. Returns the inclusive subarray span to
+    /// clear, or `None` when whole-bank precharge applies.
+    fn selective_span(
+        &self,
+        dev: &DramDevice,
+        src: &Address,
+        dst: &Address,
+    ) -> Option<(usize, usize)> {
+        if dev.cfg.salp != SalpMode::Masa {
+            return None;
+        }
+        match self.mechanism {
+            CopyMechanism::LisaRisc | CopyMechanism::RowCloneIntraSa => {
+                let a = src.subarray(&dev.cfg);
+                let b = dst.subarray(&dev.cfg);
+                Some((a.min(b), a.max(b)))
+            }
+            _ => None,
+        }
+    }
+
     /// The next command to issue, or None when this row's sequence is
     /// complete / the op is done. Pure function of current phase +
     /// device state (skips unnecessary precharges).
@@ -149,7 +175,14 @@ impl CopyOp {
         loop {
             match self.phase {
                 Phase::PreSrcBank => {
-                    if !dev.bank(ch, rank, src.bank).all_precharged() {
+                    if let Some((lo, hi)) = self.selective_span(dev, &src, &dst) {
+                        let b = dev.bank(ch, rank, src.bank);
+                        for sa in lo..=hi {
+                            if !b.subarrays[sa].is_precharged() {
+                                return Some(Command::PreSa { rank, bank: src.bank, sa });
+                            }
+                        }
+                    } else if !dev.bank(ch, rank, src.bank).all_precharged() {
                         return Some(Command::Pre { rank, bank: src.bank });
                     }
                     self.phase = Phase::PreDstBank;
@@ -242,11 +275,24 @@ impl CopyOp {
                     });
                 }
                 Phase::PreFinal => {
-                    if !dev.bank(ch, rank, src.bank).all_precharged() {
+                    if let Some((lo, hi)) = self.selective_span(dev, &src, &dst) {
+                        // Close only the hop path (source, destination
+                        // and the latched intermediates), one subarray
+                        // per scheduling slot; the phase repeats until
+                        // the whole path is clean.
+                        let b = dev.bank(ch, rank, src.bank);
+                        for sa in lo..=hi {
+                            if !b.subarrays[sa].is_precharged() {
+                                return Some(Command::PreSa { rank, bank: src.bank, sa });
+                            }
+                        }
+                        self.phase = Phase::PreFinalDst;
+                    } else if !dev.bank(ch, rank, src.bank).all_precharged() {
                         self.phase = Phase::PreFinalDst;
                         return Some(Command::Pre { rank, bank: src.bank });
+                    } else {
+                        self.phase = Phase::PreFinalDst;
                     }
-                    self.phase = Phase::PreFinalDst;
                 }
                 Phase::PreFinalDst => {
                     // Close whichever other banks the mechanism touched.
@@ -392,6 +438,8 @@ pub fn isolated_copy(
 /// the read phase), PRE. Data crosses the pin-limited channel twice.
 fn isolated_memcpy(dev: &mut DramDevice, src: &Address, dst: &Address) -> Result<u64> {
     let cols = dev.cfg.columns;
+    let src_sa = src.subarray(&dev.cfg);
+    let dst_sa = dst.subarray(&dev.cfg);
     let mut now = 0u64;
 
     let act = Command::Act { rank: src.rank, bank: src.bank, row: src.row };
@@ -401,7 +449,7 @@ fn isolated_memcpy(dev: &mut DramDevice, src: &Address, dst: &Address) -> Result
 
     let mut last_rd_done = 0;
     for col in 0..cols {
-        let rd = Command::Rd { rank: src.rank, bank: src.bank, col };
+        let rd = Command::Rd { rank: src.rank, bank: src.bank, sa: src_sa, col };
         let at = dev.earliest(0, rd, now)?;
         let done = dev.issue(0, rd, at)?.done_at;
         last_rd_done = done;
@@ -420,7 +468,7 @@ fn isolated_memcpy(dev: &mut DramDevice, src: &Address, dst: &Address) -> Result
 
     let mut last_done = last_rd_done;
     for col in 0..cols {
-        let wr = Command::Wr { rank: dst.rank, bank: dst.bank, col };
+        let wr = Command::Wr { rank: dst.rank, bank: dst.bank, sa: dst_sa, col };
         let at = dev.earliest(0, wr, now)?;
         let done = dev.issue(0, wr, at)?.done_at;
         last_done = last_done.max(done);
@@ -521,6 +569,55 @@ mod tests {
                 "{mech:?} failed to move data"
             );
         }
+    }
+
+    #[test]
+    fn masa_copy_preserves_off_path_open_rows() {
+        // The SALP x LISA composition: under MASA a LISA-RISC copy
+        // precharges only its hop path (per-subarray PREs), so an open
+        // row in an unrelated subarray of the same bank survives the
+        // whole copy sequence.
+        let mut cfg = DramConfig::default();
+        cfg.salp = SalpMode::Masa;
+        let mut lisa = LisaConfig::default();
+        lisa.risc = true;
+        let timing = Timing::new(SpeedBin::Ddr3_1600, &Calibration::default());
+        let mut dev = DramDevice::new(cfg.clone(), lisa, timing);
+        // Park an open row in subarray 12 (off the 0 -> 3 hop path).
+        let park = Command::Act { rank: 0, bank: 0, row: 12 * 512 + 5 };
+        let e = dev.earliest(0, park, 0).unwrap();
+        dev.issue(0, park, e).unwrap();
+        dev.set_row_tag(0, 0, 0, 7, 0x5A1B);
+        let req = CopyRequest {
+            id: 0,
+            core: 0,
+            src: Address { channel: 0, rank: 0, bank: 0, row: 7, col: 0 },
+            dst: Address { channel: 0, rank: 0, bank: 0, row: 3 * 512 + 9, col: 0 },
+            rows: 1,
+            mechanism: CopyMechanism::LisaRisc,
+            arrive: 0,
+        };
+        let mut op = CopyOp::new(req, &cfg);
+        let mut now = e + 1;
+        let mut n_pre_sa = 0;
+        while let Some(cmd) = op.next_command(&dev) {
+            assert!(
+                !matches!(cmd, Command::Pre { .. }),
+                "whole-bank PRE defeats the selective path: {cmd:?}"
+            );
+            if matches!(cmd, Command::PreSa { .. }) {
+                n_pre_sa += 1;
+            }
+            let at = dev.earliest(0, cmd, now).unwrap();
+            dev.issue(0, cmd, at).unwrap();
+            now = at + 1;
+        }
+        assert_eq!(dev.row_tag(0, 0, 0, 3 * 512 + 9), 0x5A1B);
+        // The parked row survived the copy.
+        assert_eq!(dev.bank(0, 0, 0).subarrays[12].open_row(), Some(12 * 512 + 5));
+        // Source, destination and the two latched intermediates were
+        // each closed individually.
+        assert_eq!(n_pre_sa, 4);
     }
 
     #[test]

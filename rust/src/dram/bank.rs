@@ -1,11 +1,24 @@
 //! The DRAM device state machine: per-bank / per-rank / per-channel
 //! timing-constraint tracking and command execution, including the
-//! RowClone and LISA command extensions.
+//! RowClone, LISA and SALP/MASA command extensions.
 //!
 //! The model follows the Ramulator approach: for every command the
 //! device can compute the earliest legal issue cycle from a set of
 //! "next allowed" registers updated on every issue, plus structural
 //! state checks (row open/closed, subarray latched, rank busy).
+//!
+//! Activation state is tracked **per subarray** (`dram/subarray.rs`):
+//! each subarray carries its own `next_act`/`next_pre`/`next_rdwr`/
+//! `ras_done`/`sense_done` registers. The configured `SalpMode`
+//! decides how much of that independence the bank state machine
+//! exposes — from the serialized baseline (`None`: one non-precharged
+//! subarray, whole-bank PRE pays full tRP before any ACT) to MASA
+//! (every subarray may hold an open row, RD/WR steers the global
+//! bitlines by subarray-select). Shared structures stay shared in
+//! every mode: the global bitlines/IO (channel RD/WR registers and the
+//! per-switch `t_sa_sel`), the bank-scope ACT-to-ACT current limit
+//! (tRRD within the bank), and the LISA inter-subarray link path
+//! (`busy_until` spans the bank for the duration of an RBM).
 //!
 //! Data movement *semantics* are modeled with content tags: every row
 //! has a 64-bit tag standing in for its 8 KB of data, and every
@@ -17,7 +30,7 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Result};
 
-use crate::config::{DramConfig, LisaConfig};
+use crate::config::{DramConfig, LisaConfig, SalpMode};
 use crate::dram::command::Command;
 use crate::dram::subarray::{SaState, Subarray};
 use crate::dram::timing::Timing;
@@ -35,6 +48,8 @@ pub struct CommandStats {
     pub n_act: u64,
     pub n_act_fast: u64,
     pub n_pre: u64,
+    /// Subset of `n_pre` issued as per-subarray precharges (SALP).
+    pub n_pre_sa: u64,
     pub n_pre_lip: u64,
     pub n_rd: u64,
     pub n_wr: u64,
@@ -43,25 +58,32 @@ pub struct CommandStats {
     pub n_transfer_cols: u64,
     pub n_act_copy: u64,
     pub n_act_store: u64,
+    /// RD/WR commands that paid the subarray-select switch (SALP-2 /
+    /// MASA designated-subarray hand-off).
+    pub n_sa_switch: u64,
 }
 
-/// One bank: timing registers + per-subarray buffers + row tags.
+/// One bank: bank-scope timing registers + per-subarray buffers (each
+/// with its own subarray-scope registers) + row tags.
 #[derive(Debug, Clone)]
 pub struct Bank {
     pub subarrays: Vec<Subarray>,
-    /// Earliest cycle an ACT may issue.
+    /// Earliest cycle an ACT may issue anywhere in the bank: charged
+    /// with tRP by whole-bank precharges, tRFC by refresh, and the
+    /// intra-bank ACT-to-ACT tRRD gap under SALP modes. Per-subarray
+    /// tRP lives in `Subarray::next_act`.
     pub next_act: u64,
-    /// Earliest cycle a PRE may issue.
+    /// Earliest cycle a whole-bank PRE may issue (running max of every
+    /// subarray's restore/recovery constraints).
     pub next_pre: u64,
-    /// Earliest cycle a RD/WR may issue (tRCD after ACT).
-    pub next_rdwr: u64,
-    /// When the most recent activation's restore completes (tRAS).
-    pub ras_done: u64,
-    /// When the most recent activation's sensing completes (tRCD) —
-    /// gates RBM and Transfer source readiness.
-    pub sense_done: u64,
-    /// Composite-op occupancy (RBM / Transfer).
+    /// Composite-op occupancy (RBM / Transfer): the inter-subarray
+    /// link path and the bank's global-bitline interface are shared,
+    /// so composite ops block the whole bank in every SALP mode.
     pub busy_until: u64,
+    /// The subarray the global-bitline select currently points at
+    /// (SALP-2 / MASA): a RD/WR to a different subarray pays
+    /// `t_sa_sel`. `None` in non-select modes and after full PRE.
+    pub last_sa: Option<usize>,
     /// Content tags of written rows (absent => default_tag).
     rows: HashMap<usize, u64>,
 }
@@ -72,22 +94,20 @@ impl Bank {
             subarrays: (0..subarrays).map(|_| Subarray::default()).collect(),
             next_act: 0,
             next_pre: 0,
-            next_rdwr: 0,
-            ras_done: 0,
-            sense_done: 0,
             busy_until: 0,
+            last_sa: None,
             rows: HashMap::new(),
         }
     }
 
-    /// The subarray that currently has an open row, if any.
+    /// The first subarray that currently has an open row, if any.
     pub fn open_subarray(&self) -> Option<usize> {
         self.subarrays
             .iter()
             .position(|sa| matches!(sa.state, SaState::Open { .. }))
     }
 
-    /// The open row (bank-relative), if any.
+    /// The first open row (bank-relative), if any.
     pub fn open_row(&self) -> Option<usize> {
         self.subarrays.iter().find_map(|sa| sa.open_row())
     }
@@ -97,21 +117,34 @@ impl Bank {
         self.subarrays.iter().all(|sa| sa.is_precharged())
     }
 
-    /// Earliest cycle an ACT may issue, from bank-local registers only
-    /// (rank-scope tRRD/tFAW constraints are the caller's job).
+    /// Number of non-precharged (open or latched) subarrays — the
+    /// quantity `SalpMode::open_cap` bounds.
+    pub fn open_count(&self) -> usize {
+        self.subarrays.iter().filter(|sa| !sa.is_precharged()).count()
+    }
+
+    /// Earliest cycle an ACT may issue, from bank-scope registers only
+    /// (per-subarray tRP and rank-scope tRRD/tFAW are the caller's job).
     pub fn act_earliest(&self) -> u64 {
         self.next_act.max(self.busy_until)
     }
 
-    /// Earliest cycle a PRE may issue, from bank-local registers.
+    /// Earliest cycle a whole-bank PRE may issue.
     pub fn pre_earliest(&self) -> u64 {
         self.next_pre.max(self.busy_until)
     }
 
-    /// Earliest cycle a RD/WR may issue, from bank-local registers
-    /// (the shared data-bus constraint is the caller's job).
-    pub fn rdwr_earliest(&self) -> u64 {
-        self.next_rdwr.max(self.busy_until)
+    /// Earliest cycle a RD/WR against subarray `sa` may issue, from
+    /// bank/subarray registers (the shared data-bus constraint is the
+    /// caller's job).
+    pub fn rdwr_earliest(&self, sa: usize) -> u64 {
+        self.subarrays[sa].next_rdwr.max(self.busy_until)
+    }
+
+    /// Max of every subarray's `next_act` — bounds refresh, which
+    /// internally activates rows in all subarrays.
+    pub fn sa_next_act_floor(&self) -> u64 {
+        self.subarrays.iter().map(|sa| sa.next_act).max().unwrap_or(0)
     }
 }
 
@@ -241,9 +274,10 @@ impl DramDevice {
 
     /// Earliest cycle >= `now` at which `cmd` can legally issue on
     /// channel `ch`. Err if the command is illegal in the current
-    /// structural state (e.g. ACT on a bank with an open row).
+    /// structural state (e.g. ACT on a bank at its open-subarray cap).
     pub fn earliest(&self, ch: usize, cmd: Command, now: u64) -> Result<u64> {
         let t = &self.timing;
+        let mode = self.cfg.salp;
         let chan = &self.channels[ch];
         let rank = &chan.ranks[cmd.rank()];
         let mut earliest = now.max(rank.busy_until);
@@ -258,13 +292,16 @@ impl DramDevice {
                 if !b.subarrays[sa].is_precharged() {
                     bail!("ACT: target subarray {sa} not precharged");
                 }
-                if !self.cfg.salp && !b.all_precharged() {
-                    bail!("ACT: bank has open/latched subarray (no SALP)");
+                if b.open_count() >= mode.open_cap(b.subarrays.len()) {
+                    bail!("ACT: bank at open-subarray cap ({} mode)", mode.name());
                 }
                 earliest = earliest
                     .max(b.act_earliest())
                     .max(rank.next_act)
                     .max(rank.faw_earliest(t.t_faw));
+                if mode.per_subarray() {
+                    earliest = earliest.max(b.subarrays[sa].next_act);
+                }
                 Ok(earliest)
             }
             Command::ActCopy { bank, row, .. } => {
@@ -277,7 +314,7 @@ impl DramDevice {
                 }
                 // The buffer must be fully restored into the source row
                 // before it can be reused to write another row.
-                Ok(earliest.max(b.ras_done).max(b.busy_until))
+                Ok(earliest.max(b.subarrays[sa].ras_done).max(b.busy_until))
             }
             Command::ActStore { bank, row, .. } => {
                 let b = &rank.banks[bank];
@@ -294,6 +331,19 @@ impl DramDevice {
                 }
                 Ok(earliest.max(b.pre_earliest()))
             }
+            Command::PreSa { bank, sa, .. } => {
+                if mode == SalpMode::None {
+                    bail!("PRE_SA: requires a SALP mode (configured: none)");
+                }
+                let b = &rank.banks[bank];
+                if sa >= b.subarrays.len() {
+                    bail!("PRE_SA: subarray {sa} out of range");
+                }
+                if b.subarrays[sa].is_precharged() {
+                    bail!("PRE_SA: subarray {sa} already precharged");
+                }
+                Ok(earliest.max(b.subarrays[sa].next_pre).max(b.busy_until))
+            }
             Command::PreAll { .. } => {
                 let mut e = earliest;
                 for b in &rank.banks {
@@ -303,16 +353,19 @@ impl DramDevice {
                 }
                 Ok(e)
             }
-            Command::Rd { bank, .. } | Command::Wr { bank, .. } => {
+            Command::Rd { bank, sa, .. } | Command::Wr { bank, sa, .. } => {
                 let b = &rank.banks[bank];
-                if b.open_row().is_none() {
-                    bail!("RD/WR: no open row");
+                if sa >= b.subarrays.len() {
+                    bail!("RD/WR: subarray {sa} out of range");
+                }
+                if b.subarrays[sa].open_row().is_none() {
+                    bail!("RD/WR: no open row in subarray {sa}");
                 }
                 let bus = match cmd {
                     Command::Rd { .. } => chan.next_rd,
                     _ => chan.next_wr,
                 };
-                Ok(earliest.max(b.rdwr_earliest()).max(bus))
+                Ok(earliest.max(b.rdwr_earliest(sa)).max(bus))
             }
             Command::Ref { .. } => {
                 for b in &rank.banks {
@@ -322,7 +375,10 @@ impl DramDevice {
                 }
                 let mut e = earliest;
                 for b in &rank.banks {
-                    e = e.max(b.act_earliest());
+                    // Refresh internally activates rows in every
+                    // subarray, so it also waits out any in-flight
+                    // per-subarray precharge (SALP modes).
+                    e = e.max(b.act_earliest()).max(b.sa_next_act_floor());
                 }
                 Ok(e)
             }
@@ -347,8 +403,8 @@ impl DramDevice {
                 // (conservative: RBM perturbs the buffer while cells
                 // are still connected).
                 let ready = match b.subarrays[from_sa].state {
-                    SaState::Open { .. } => b.ras_done,
-                    _ => b.sense_done,
+                    SaState::Open { .. } => b.subarrays[from_sa].ras_done,
+                    _ => b.subarrays[from_sa].sense_done,
                 };
                 Ok(earliest.max(ready).max(b.busy_until))
             }
@@ -358,15 +414,15 @@ impl DramDevice {
                 }
                 let sb = &rank.banks[src_bank];
                 let db = &rank.banks[dst_bank];
-                if sb.open_row().is_none() || db.open_row().is_none() {
+                let (Some(s_sa), Some(d_sa)) = (sb.open_subarray(), db.open_subarray()) else {
                     bail!("TRANSFER: both banks need an open row");
-                }
+                };
                 // Both banks' sensing must be complete; the internal
                 // bus shares the I/O path, so outstanding RD/WR bursts
                 // must drain (approximated by the channel registers).
                 Ok(earliest
-                    .max(sb.sense_done)
-                    .max(db.sense_done)
+                    .max(sb.subarrays[s_sa].sense_done)
+                    .max(db.subarrays[d_sa].sense_done)
                     .max(sb.busy_until)
                     .max(db.busy_until)
                     .max(chan.next_rd)
@@ -376,8 +432,8 @@ impl DramDevice {
     }
 
     /// Issue `cmd` at cycle `at` (must be >= earliest). Returns the
-    /// completion information. Panics in debug builds if timing is
-    /// violated — the scheduler must only issue legal commands.
+    /// completion information. Errors if timing would be violated —
+    /// the scheduler must only issue legal commands.
     pub fn issue(&mut self, ch: usize, cmd: Command, at: u64) -> Result<Issued> {
         let earliest = self.earliest(ch, cmd, at)?;
         if at < earliest {
@@ -387,7 +443,7 @@ impl DramDevice {
             );
         }
         let t = self.timing.clone();
-        let salp = self.cfg.salp;
+        let mode = self.cfg.salp;
         let lip_enabled = self.lisa.lip;
         let rows_per_sa = self.cfg.rows_per_subarray;
         let fast_k = if self.lisa.villa {
@@ -417,20 +473,23 @@ impl DramDevice {
                 rank.record_act(at);
                 rank.next_act = rank.next_act.max(at + t.t_rrd);
                 let b = &mut rank.banks[bank];
-                b.next_rdwr = at + t_rcd;
-                b.sense_done = at + t_rcd;
-                b.ras_done = at + t_ras;
                 b.next_pre = b.next_pre.max(at + t_ras);
                 // ACT-to-ACT in the same bank always requires an
-                // intervening PRE (state machine), which enforces
-                // tRAS + tRP = tRC in the standard case and the
-                // shorter LIP path when linked precharge applies.
-                if salp {
+                // intervening PRE (state machine) in the baseline,
+                // which enforces tRAS + tRP = tRC; SALP modes allow
+                // concurrent activations but still pace them by tRRD
+                // (shared in-bank charge pumps).
+                if mode.per_subarray() {
                     b.next_act = b.next_act.max(at + t.t_rrd);
                 }
                 let tag = *b.rows.get(&row).unwrap_or(&default_tag(global));
-                b.subarrays[sa].state = SaState::Open { row };
-                b.subarrays[sa].buffer_tag = Some(tag);
+                let s = &mut b.subarrays[sa];
+                s.state = SaState::Open { row };
+                s.buffer_tag = Some(tag);
+                s.next_rdwr = at + t_rcd;
+                s.sense_done = at + t_rcd;
+                s.ras_done = at + t_ras;
+                s.next_pre = s.next_pre.max(at + t_ras);
                 self.stats.n_act += 1;
                 if fast {
                     self.stats.n_act_fast += 1;
@@ -445,11 +504,13 @@ impl DramDevice {
                 let b = &mut chan.ranks[rank_idx].banks[bank];
                 let tag = b.subarrays[sa].buffer_tag.expect("latched buffer");
                 b.rows.insert(row, tag);
-                b.subarrays[sa].state = SaState::Open { row };
-                b.ras_done = at + t_ras;
-                b.sense_done = at; // buffer already full-swing
-                b.next_rdwr = b.next_rdwr.max(at);
                 b.next_pre = b.next_pre.max(at + t_ras);
+                let s = &mut b.subarrays[sa];
+                s.state = SaState::Open { row };
+                s.ras_done = at + t_ras;
+                s.sense_done = at; // buffer already full-swing
+                s.next_rdwr = s.next_rdwr.max(at);
+                s.next_pre = s.next_pre.max(at + t_ras);
                 self.stats.n_act_copy += 1;
                 Ok(Issued { done_at: at + t_ras })
             }
@@ -461,11 +522,13 @@ impl DramDevice {
                 let b = &mut chan.ranks[rank_idx].banks[bank];
                 let tag = b.subarrays[sa].buffer_tag.expect("latched buffer");
                 b.rows.insert(row, tag);
-                b.subarrays[sa].state = SaState::Open { row };
-                b.ras_done = at + t_ras;
-                b.sense_done = at;
-                b.next_rdwr = b.next_rdwr.max(at);
                 b.next_pre = b.next_pre.max(at + t_ras);
+                let s = &mut b.subarrays[sa];
+                s.state = SaState::Open { row };
+                s.ras_done = at + t_ras;
+                s.sense_done = at;
+                s.next_rdwr = s.next_rdwr.max(at);
+                s.next_pre = s.next_pre.max(at + t_ras);
                 self.stats.n_act_store += 1;
                 Ok(Issued { done_at: at + t_ras })
             }
@@ -495,9 +558,38 @@ impl DramDevice {
                 };
                 for sa in b.subarrays.iter_mut() {
                     sa.precharge();
+                    sa.next_act = sa.next_act.max(at + t_rp);
                 }
                 b.next_act = b.next_act.max(at + t_rp);
+                b.last_sa = None;
                 self.stats.n_pre += 1;
+                if use_lip {
+                    self.stats.n_pre_lip += 1;
+                }
+                Ok(Issued { done_at: at + t_rp })
+            }
+            Command::PreSa { bank, sa, .. } => {
+                let chan = &mut self.channels[ch];
+                let b = &mut chan.ranks[rank_idx].banks[bank];
+                let n_sa = b.subarrays.len();
+                let fast = is_fast(sa);
+                let left_ok = sa > 0 && b.subarrays[sa - 1].is_precharged();
+                let right_ok = sa + 1 < n_sa && b.subarrays[sa + 1].is_precharged();
+                let use_lip = lip_enabled && (left_ok || right_ok);
+                let t_rp = match (fast, use_lip) {
+                    (true, true) => t.t_rp_fast_lip,
+                    (true, false) => t.t_rp_fast,
+                    (false, true) => t.t_rp_lip,
+                    (false, false) => t.t_rp,
+                };
+                let s = &mut b.subarrays[sa];
+                s.precharge();
+                s.next_act = s.next_act.max(at + t_rp);
+                if b.last_sa == Some(sa) {
+                    b.last_sa = None;
+                }
+                self.stats.n_pre += 1;
+                self.stats.n_pre_sa += 1;
                 if use_lip {
                     self.stats.n_pre_lip += 1;
                 }
@@ -507,38 +599,63 @@ impl DramDevice {
                 let chan = &mut self.channels[ch];
                 let rank = &mut chan.ranks[rank_idx];
                 let mut done = at;
-                let mut issued_any = false;
                 for b in rank.banks.iter_mut() {
                     if !b.all_precharged() {
                         for sa in b.subarrays.iter_mut() {
                             sa.precharge();
+                            sa.next_act = sa.next_act.max(at + t.t_rp);
                         }
                         b.next_act = b.next_act.max(at + t.t_rp);
+                        b.last_sa = None;
                         done = done.max(at + t.t_rp);
-                        issued_any = true;
                         self.stats.n_pre += 1;
                     }
                 }
-                let _ = issued_any;
                 Ok(Issued { done_at: done })
             }
-            Command::Rd { bank, .. } => {
+            Command::Rd { bank, sa, .. } => {
                 let chan = &mut self.channels[ch];
                 let b = &mut chan.ranks[rank_idx].banks[bank];
-                b.next_pre = b.next_pre.max(at + t.t_rtp);
-                chan.next_rd = chan.next_rd.max(at + t.t_ccd);
-                chan.next_wr = chan.next_wr.max(at + t.t_rtw);
+                // Subarray-select hand-off (SALP-2/MASA): a switch
+                // delays the data burst, so it pushes the bus pacing
+                // and the read-to-precharge recovery along with it —
+                // otherwise back-to-back bursts would overlap on the
+                // shared channel.
+                let mut sel = 0;
+                if mode.has_sa_select() {
+                    if b.last_sa != Some(sa) {
+                        sel = t.t_sa_sel;
+                        self.stats.n_sa_switch += 1;
+                    }
+                    b.last_sa = Some(sa);
+                }
+                b.next_pre = b.next_pre.max(at + t.t_rtp + sel);
+                b.subarrays[sa].next_pre = b.subarrays[sa].next_pre.max(at + t.t_rtp + sel);
+                chan.next_rd = chan.next_rd.max(at + t.t_ccd + sel);
+                chan.next_wr = chan.next_wr.max(at + t.t_rtw + sel);
                 self.stats.n_rd += 1;
-                Ok(Issued { done_at: at + t.t_cl + t.t_bl })
+                Ok(Issued { done_at: at + t.t_cl + t.t_bl + sel })
             }
-            Command::Wr { bank, .. } => {
+            Command::Wr { bank, sa, .. } => {
                 let chan = &mut self.channels[ch];
                 let b = &mut chan.ranks[rank_idx].banks[bank];
-                b.next_pre = b.next_pre.max(at + t.t_cwl + t.t_bl + t.t_wr);
-                chan.next_wr = chan.next_wr.max(at + t.t_ccd);
-                chan.next_rd = chan.next_rd.max(at + t.t_cwl + t.t_bl + t.t_wtr);
+                let mut sel = 0;
+                if mode.has_sa_select() {
+                    if b.last_sa != Some(sa) {
+                        sel = t.t_sa_sel;
+                        self.stats.n_sa_switch += 1;
+                    }
+                    b.last_sa = Some(sa);
+                }
+                // Write recovery counts from the (possibly delayed)
+                // end of the data burst.
+                let recover = at + t.t_cwl + t.t_bl + t.t_wr + sel;
+                b.next_pre = b.next_pre.max(recover);
+                b.subarrays[sa].next_pre = b.subarrays[sa].next_pre.max(recover);
+                chan.next_wr = chan.next_wr.max(at + t.t_ccd + sel);
+                chan.next_rd = chan.next_rd.max(at + t.t_cwl + t.t_bl + t.t_wtr + sel);
                 self.stats.n_wr += 1;
-                Ok(Issued { done_at: at + t.t_cwl + t.t_bl })
+                Ok(Issued { done_at: at + t.t_cwl + t.t_bl + sel })
             }
             Command::Ref { .. } => {
                 let chan = &mut self.channels[ch];
@@ -560,11 +677,16 @@ impl DramDevice {
                 // (the property behind the paper's 1-to-N extension).
                 let (lo, hi) = (from_sa.min(to_sa), from_sa.max(to_sa));
                 for sa in lo..=hi {
+                    let s = &mut b.subarrays[sa];
                     if sa != from_sa {
-                        b.subarrays[sa].state = SaState::LatchedOnly;
-                        b.subarrays[sa].buffer_tag = Some(tag);
+                        s.state = SaState::LatchedOnly;
+                        s.buffer_tag = Some(tag);
+                        s.sense_done = end;
+                        s.ras_done = end;
                     }
+                    s.next_pre = s.next_pre.max(end);
                 }
+                // The link path spans the bank: composite occupancy.
                 b.busy_until = b.busy_until.max(end);
                 b.next_pre = b.next_pre.max(end);
                 self.stats.n_rbm_hops += hops;
@@ -585,11 +707,14 @@ impl DramDevice {
                     let dst_sa = db.open_subarray().unwrap();
                     db.rows.insert(dst_row, tag);
                     db.subarrays[dst_sa].buffer_tag = Some(tag);
+                    db.subarrays[dst_sa].next_pre = db.subarrays[dst_sa].next_pre.max(end);
                     db.busy_until = db.busy_until.max(end);
                     db.next_pre = db.next_pre.max(end);
                 }
                 {
                     let sb = &mut rank.banks[src_bank];
+                    let src_sa = sb.open_subarray().expect("open src row");
+                    sb.subarrays[src_sa].next_pre = sb.subarrays[src_sa].next_pre.max(end);
                     sb.busy_until = sb.busy_until.max(end);
                     sb.next_pre = sb.next_pre.max(end);
                 }
@@ -632,7 +757,7 @@ mod tests {
     fn act_then_rd_respects_trcd() {
         let mut d = dev();
         d.issue(0, ACT0, 0).unwrap();
-        let rd = Command::Rd { rank: 0, bank: 0, col: 3 };
+        let rd = Command::Rd { rank: 0, bank: 0, sa: 0, col: 3 };
         let e = d.earliest(0, rd, 0).unwrap();
         assert_eq!(e, d.timing.t_rcd);
         // Issuing early must fail.
@@ -653,9 +778,9 @@ mod tests {
     }
 
     #[test]
-    fn salp_allows_two_open_subarrays() {
+    fn masa_allows_two_open_subarrays() {
         let mut d = dev();
-        d.cfg.salp = true;
+        d.cfg.salp = SalpMode::Masa;
         d.issue(0, ACT0, 0).unwrap();
         let act2 = Command::Act { rank: 0, bank: 0, row: 700 }; // different SA
         let e = d.earliest(0, act2, 0).unwrap();
@@ -663,6 +788,93 @@ mod tests {
         d.issue(0, act2, e).unwrap();
         assert_eq!(d.bank(0, 0, 0).subarrays[0].open_row(), Some(10));
         assert_eq!(d.bank(0, 0, 0).subarrays[1].open_row(), Some(700));
+        assert_eq!(d.bank(0, 0, 0).open_count(), 2);
+    }
+
+    #[test]
+    fn pre_sa_requires_salp_mode_and_precharges_one_subarray() {
+        let mut d = dev();
+        d.issue(0, ACT0, 0).unwrap();
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 0 };
+        assert!(d.earliest(0, psa, 100).is_err(), "PRE_SA illegal in none mode");
+        d.cfg.salp = SalpMode::Salp1;
+        let e = d.earliest(0, psa, 0).unwrap();
+        assert_eq!(e, d.timing.t_ras); // tRAS restore before precharge
+        d.issue(0, psa, e).unwrap();
+        assert!(d.bank(0, 0, 0).all_precharged());
+        assert_eq!(d.stats.n_pre_sa, 1);
+        assert_eq!(d.stats.n_pre, 1);
+        // Already-precharged subarray is rejected.
+        assert!(d.earliest(0, psa, e + 100).is_err());
+    }
+
+    #[test]
+    fn salp1_overlaps_precharge_with_act_elsewhere() {
+        let mut d = dev();
+        d.cfg.salp = SalpMode::Salp1;
+        d.issue(0, ACT0, 0).unwrap();
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 0 };
+        let e = d.earliest(0, psa, 0).unwrap();
+        d.issue(0, psa, e).unwrap();
+        // An ACT to a *different* subarray overlaps with subarray 0's
+        // in-flight tRP...
+        let act2 = Command::Act { rank: 0, bank: 0, row: 700 };
+        let e2 = d.earliest(0, act2, e).unwrap();
+        assert!(e2 < e + d.timing.t_rp, "e2={e2} should overlap tRP");
+        // ...but reopening subarray 0 itself pays the full tRP.
+        let act0b = Command::Act { rank: 0, bank: 0, row: 11 };
+        let e0 = d.earliest(0, act0b, e).unwrap();
+        assert_eq!(e0, e + d.timing.t_rp);
+    }
+
+    #[test]
+    fn salp2_caps_open_subarrays_at_two() {
+        let mut d = dev();
+        d.cfg.salp = SalpMode::Salp2;
+        d.issue(0, ACT0, 0).unwrap();
+        let act2 = Command::Act { rank: 0, bank: 0, row: 700 };
+        let e = d.earliest(0, act2, 0).unwrap();
+        d.issue(0, act2, e).unwrap();
+        // A third concurrently open subarray exceeds the cap.
+        let act3 = Command::Act { rank: 0, bank: 0, row: 1500 };
+        assert!(d.earliest(0, act3, 1000).is_err());
+        // Closing one subarray restores headroom.
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 0 };
+        let ep = d.earliest(0, psa, 1000).unwrap();
+        d.issue(0, psa, ep).unwrap();
+        let e3 = d.earliest(0, act3, ep).unwrap();
+        d.issue(0, act3, e3).unwrap();
+        assert_eq!(d.bank(0, 0, 0).subarrays[2].open_row(), Some(1500));
+        assert_eq!(d.bank(0, 0, 0).open_count(), 2);
+    }
+
+    #[test]
+    fn masa_rd_pays_subarray_select_on_switch_only() {
+        let mut d = dev();
+        d.cfg.salp = SalpMode::Masa;
+        let mut at = 0;
+        for sa in 0..4usize {
+            let act = Command::Act { rank: 0, bank: 0, row: sa * 512 + 7 };
+            let e = d.earliest(0, act, at).unwrap();
+            d.issue(0, act, e).unwrap();
+            at = e + 1;
+        }
+        assert_eq!(d.bank(0, 0, 0).open_count(), 4);
+        let t = d.timing.clone();
+        at += t.t_rcd + t.t_ras; // everything sensed/restored
+        let rd0 = Command::Rd { rank: 0, bank: 0, sa: 0, col: 0 };
+        let e0 = d.earliest(0, rd0, at).unwrap();
+        let d0 = d.issue(0, rd0, e0).unwrap().done_at;
+        assert_eq!(d0, e0 + t.t_cl + t.t_bl + t.t_sa_sel, "fresh select pays");
+        let rd0b = Command::Rd { rank: 0, bank: 0, sa: 0, col: 1 };
+        let e0b = d.earliest(0, rd0b, e0 + 1).unwrap();
+        let d0b = d.issue(0, rd0b, e0b).unwrap().done_at;
+        assert_eq!(d0b, e0b + t.t_cl + t.t_bl, "same subarray: no switch");
+        let rd3 = Command::Rd { rank: 0, bank: 0, sa: 3, col: 0 };
+        let e3 = d.earliest(0, rd3, e0b + 1).unwrap();
+        let d3 = d.issue(0, rd3, e3).unwrap().done_at;
+        assert_eq!(d3, e3 + t.t_cl + t.t_bl + t.t_sa_sel, "switch pays again");
+        assert_eq!(d.stats.n_sa_switch, 2);
     }
 
     #[test]
@@ -688,6 +900,20 @@ mod tests {
         let e_act = d.earliest(0, ACT0, e).unwrap();
         assert_eq!(e_act, e + d.timing.t_rp_lip);
         assert!(d.timing.t_rp_lip < d.timing.t_rp);
+    }
+
+    #[test]
+    fn pre_sa_links_precharge_units_under_lip() {
+        let mut d = dev_lisa();
+        d.cfg.salp = SalpMode::Masa;
+        d.issue(0, ACT0, 0).unwrap();
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 0 };
+        let e = d.earliest(0, psa, 0).unwrap();
+        d.issue(0, psa, e).unwrap();
+        // Neighbor (subarray 1) was precharged, so LIP links apply.
+        assert_eq!(d.stats.n_pre_lip, 1);
+        let e_act = d.earliest(0, ACT0, e).unwrap();
+        assert_eq!(e_act, e + d.timing.t_rp_lip);
     }
 
     #[test]
@@ -757,7 +983,7 @@ mod tests {
     #[test]
     fn rbm_requires_precharged_path() {
         let mut d = dev_lisa();
-        d.cfg.salp = true;
+        d.cfg.salp = SalpMode::Masa;
         d.issue(0, ACT0, 0).unwrap();
         // Open a row in subarray 3 (on the path 0 -> 7).
         let mid = Command::Act { rank: 0, bank: 0, row: 3 * 512 };
@@ -765,6 +991,24 @@ mod tests {
         d.issue(0, mid, e).unwrap();
         let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 0, to_sa: 7 };
         assert!(d.earliest(0, rbm, 1000).is_err());
+    }
+
+    #[test]
+    fn masa_open_row_off_rbm_path_is_tolerated() {
+        // The link-path conflict rule: only subarrays ON the hop path
+        // must be precharged; an open row beyond the destination is
+        // none of RBM's business (the composition LISA + MASA relies
+        // on).
+        let mut d = dev_lisa();
+        d.cfg.salp = SalpMode::Masa;
+        d.issue(0, ACT0, 0).unwrap(); // subarray 0
+        let far = Command::Act { rank: 0, bank: 0, row: 12 * 512 };
+        let e = d.earliest(0, far, 0).unwrap();
+        d.issue(0, far, e).unwrap(); // subarray 12, off the 0->7 path
+        let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 0, to_sa: 7 };
+        let e_rbm = d.earliest(0, rbm, e).unwrap();
+        d.issue(0, rbm, e_rbm).unwrap();
+        assert_eq!(d.bank(0, 0, 0).subarrays[12].open_row(), Some(12 * 512));
     }
 
     #[test]
@@ -802,13 +1046,27 @@ mod tests {
     }
 
     #[test]
+    fn refresh_waits_out_per_subarray_precharge() {
+        let mut d = dev();
+        d.cfg.salp = SalpMode::Masa;
+        d.issue(0, ACT0, 0).unwrap();
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 0 };
+        let e = d.earliest(0, psa, 0).unwrap();
+        d.issue(0, psa, e).unwrap();
+        // All banks precharged, but subarray 0's tRP is still in
+        // flight: REF must not start under it.
+        let e_ref = d.earliest(0, Command::Ref { rank: 0 }, e).unwrap();
+        assert!(e_ref >= e + d.timing.t_rp, "e_ref={e_ref}");
+    }
+
+    #[test]
     fn wr_to_rd_turnaround() {
         let mut d = dev();
         d.issue(0, ACT0, 0).unwrap();
         let t_rcd = d.timing.t_rcd;
-        let wr = Command::Wr { rank: 0, bank: 0, col: 0 };
+        let wr = Command::Wr { rank: 0, bank: 0, sa: 0, col: 0 };
         d.issue(0, wr, t_rcd).unwrap();
-        let rd = Command::Rd { rank: 0, bank: 0, col: 1 };
+        let rd = Command::Rd { rank: 0, bank: 0, sa: 0, col: 1 };
         let e = d.earliest(0, rd, t_rcd).unwrap();
         let t = &d.timing;
         assert_eq!(e, t_rcd + t.t_cwl + t.t_bl + t.t_wtr);
@@ -821,7 +1079,7 @@ mod tests {
         // Subarray 0 is fast; activate a row there.
         let act_fast = Command::Act { rank: 0, bank: 0, row: 5 };
         d.issue(0, act_fast, 0).unwrap();
-        let rd = Command::Rd { rank: 0, bank: 0, col: 0 };
+        let rd = Command::Rd { rank: 0, bank: 0, sa: 0, col: 0 };
         let e = d.earliest(0, rd, 0).unwrap();
         assert_eq!(e, d.timing.t_rcd_fast);
         assert_eq!(d.stats.n_act_fast, 1);

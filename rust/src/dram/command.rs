@@ -18,14 +18,21 @@ pub enum Command {
     /// activate `row` so the buffer contents are restored into it
     /// (paper §3.1: step 3 of LISA-RISC).
     ActStore { rank: usize, bank: usize, row: usize },
-    /// Precharge the bank's open subarray (or a specific one if SALP).
+    /// Precharge every subarray of the bank (the standard PRE).
     Pre { rank: usize, bank: usize },
+    /// Precharge a single subarray of the bank, leaving the others'
+    /// open rows / latched buffers intact (SALP's per-subarray PRE;
+    /// only legal when the configuration's `SalpMode` tracks
+    /// per-subarray state).
+    PreSa { rank: usize, bank: usize, sa: usize },
     /// Precharge all banks in the rank (used before refresh).
     PreAll { rank: usize },
-    /// Read one cache line (column) from the open row.
-    Rd { rank: usize, bank: usize, col: usize },
-    /// Write one cache line (column) into the open row.
-    Wr { rank: usize, bank: usize, col: usize },
+    /// Read one cache line (column) from the row open in subarray
+    /// `sa` (the subarray-select bits SALP adds to column commands;
+    /// with a single open row per bank they are redundant).
+    Rd { rank: usize, bank: usize, sa: usize, col: usize },
+    /// Write one cache line (column) into the row open in subarray `sa`.
+    Wr { rank: usize, bank: usize, sa: usize, col: usize },
     /// Refresh the rank (all banks must be precharged).
     Ref { rank: usize },
     /// LISA row buffer movement: move the latched row buffer of
@@ -46,6 +53,7 @@ impl Command {
             | Command::ActCopy { rank, .. }
             | Command::ActStore { rank, .. }
             | Command::Pre { rank, .. }
+            | Command::PreSa { rank, .. }
             | Command::PreAll { rank }
             | Command::Rd { rank, .. }
             | Command::Wr { rank, .. }
@@ -62,6 +70,7 @@ impl Command {
             | Command::ActCopy { bank, .. }
             | Command::ActStore { bank, .. }
             | Command::Pre { bank, .. }
+            | Command::PreSa { bank, .. }
             | Command::Rd { bank, .. }
             | Command::Wr { bank, .. }
             | Command::Rbm { bank, .. } => Some(bank),
@@ -89,6 +98,7 @@ impl Command {
             Command::ActCopy { .. } => "ACT_COPY",
             Command::ActStore { .. } => "ACT_STORE",
             Command::Pre { .. } => "PRE",
+            Command::PreSa { .. } => "PRE_SA",
             Command::PreAll { .. } => "PREA",
             Command::Rd { .. } => "RD",
             Command::Wr { .. } => "WR",
@@ -111,8 +121,13 @@ mod tests {
         assert!(!act.uses_data_bus());
         assert!(!act.is_bulk());
 
-        let rd = Command::Rd { rank: 0, bank: 0, col: 5 };
+        let rd = Command::Rd { rank: 0, bank: 0, sa: 0, col: 5 };
         assert!(rd.uses_data_bus());
+
+        let psa = Command::PreSa { rank: 0, bank: 4, sa: 7 };
+        assert_eq!(psa.bank(), Some(4));
+        assert_eq!(psa.name(), "PRE_SA");
+        assert!(!psa.uses_data_bus() && !psa.is_bulk());
 
         let rbm = Command::Rbm { rank: 0, bank: 2, from_sa: 1, to_sa: 9 };
         assert!(rbm.is_bulk());

@@ -1,7 +1,11 @@
-//! Per-subarray row-buffer state. LISA is fundamentally a subarray-
-//! level substrate, so the device model tracks each subarray's row
-//! buffer individually (the baseline non-SALP configuration simply
-//! enforces at most one non-precharged subarray per bank).
+//! Per-subarray row-buffer and activation state. LISA is fundamentally
+//! a subarray-level substrate, and SALP/MASA expose the same structures
+//! as independent activation state machines — so the device model
+//! tracks each subarray's row buffer *and* its timing registers
+//! individually. The baseline (`SalpMode::None`) configuration simply
+//! enforces at most one non-precharged subarray per bank and consults
+//! the bank-scope registers, which keeps it cycle-identical to the
+//! pre-SALP model.
 
 /// State of one subarray's row buffer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -15,13 +19,30 @@ pub enum SaState {
     LatchedOnly,
 }
 
-/// One subarray: buffer state plus the content tag used to verify
-/// data-movement semantics (tags stand in for 8 KB of row data).
+/// One subarray: buffer state, the content tag used to verify
+/// data-movement semantics (tags stand in for 8 KB of row data), and
+/// the subarray-scope timing registers the SALP modes schedule
+/// against. Registers are "next allowed cycle" timestamps — stale
+/// values are always in the past, so they never need clearing.
 #[derive(Debug, Clone)]
 pub struct Subarray {
     pub state: SaState,
     /// Content tag of whatever the row buffer currently holds.
     pub buffer_tag: Option<u64>,
+    /// Earliest cycle an ACT may (re)open this subarray. Charged with
+    /// tRP by precharges; under SALP modes only the precharged
+    /// subarray pays it — ACTs elsewhere overlap with the tRP.
+    pub next_act: u64,
+    /// Earliest cycle this subarray's open row may be precharged
+    /// (tRAS restore, read-to-precharge, write recovery).
+    pub next_pre: u64,
+    /// Earliest RD/WR against this subarray's buffer (tRCD after ACT).
+    pub next_rdwr: u64,
+    /// When this subarray's last activation finishes restoring (tRAS).
+    pub ras_done: u64,
+    /// When this subarray's last activation finishes sensing (tRCD) —
+    /// gates RBM and Transfer source readiness.
+    pub sense_done: u64,
 }
 
 impl Default for Subarray {
@@ -29,6 +50,11 @@ impl Default for Subarray {
         Self {
             state: SaState::Precharged,
             buffer_tag: None,
+            next_act: 0,
+            next_pre: 0,
+            next_rdwr: 0,
+            ras_done: 0,
+            sense_done: 0,
         }
     }
 }
@@ -45,7 +71,9 @@ impl Subarray {
         }
     }
 
-    /// Precharge: closes the wordline and clears the buffer.
+    /// Precharge: closes the wordline and clears the buffer. Timing
+    /// registers are left alone — they are monotone timestamps and the
+    /// caller charges `next_act` with the applicable tRP.
     pub fn precharge(&mut self) {
         self.state = SaState::Precharged;
         self.buffer_tag = None;
@@ -64,6 +92,7 @@ mod tests {
 
         sa.state = SaState::Open { row: 7 };
         sa.buffer_tag = Some(0xAB);
+        sa.next_pre = 28;
         assert_eq!(sa.open_row(), Some(7));
         assert!(!sa.is_precharged());
 
@@ -74,5 +103,7 @@ mod tests {
         sa.precharge();
         assert!(sa.is_precharged());
         assert_eq!(sa.buffer_tag, None);
+        // Timing registers survive the precharge (monotone timestamps).
+        assert_eq!(sa.next_pre, 28);
     }
 }

@@ -69,6 +69,14 @@ pub struct Timing {
     pub t_faw: u64,
     pub t_refi: u64,
     pub t_rfc: u64,
+    // --- SALP extension ---
+    /// Subarray-select latch update: the extra latency a RD/WR pays
+    /// when it steers the global bitlines to a *different* subarray
+    /// than the previous column command used (SALP-2 / MASA designated-
+    /// subarray switch). One bus cycle — the select wires are driven in
+    /// parallel with column decode, so only the final mux hand-off is
+    /// exposed.
+    pub t_sa_sel: u64,
     // --- LISA extensions (from the calibrated circuit model) ---
     /// Row buffer movement, per hop.
     pub t_rbm: u64,
@@ -123,6 +131,7 @@ impl Timing {
             t_faw: c(40.0),
             t_refi: c(7800.0),
             t_rfc: c(260.0),
+            t_sa_sel: 1,
             t_rbm: c(cal.t_rbm_ns).max(1),
             t_rp_lip,
             t_rcd_fast: ((t_rcd as f64) * cal.fast_act_ratio).ceil().max(1.0) as u64,
@@ -172,6 +181,16 @@ mod tests {
         assert!(t.t_rcd_fast < t.t_rcd);
         assert!(t.t_ras_fast < t.t_ras);
         assert!(t.t_rp_fast < t.t_rp);
+    }
+
+    #[test]
+    fn sa_select_is_small_but_nonzero() {
+        // The SALP subarray-select hand-off must cost something (it is
+        // a real mux switch) but stay well under a column access —
+        // otherwise MASA's open-row hits would stop being hits.
+        let t = t();
+        assert!(t.t_sa_sel >= 1);
+        assert!(t.t_sa_sel < t.t_cl);
     }
 
     #[test]

@@ -62,6 +62,13 @@ impl EnergyModel {
 
     pub fn breakdown_uj(&self, s: &CommandStats, cycles: u64, tck_ns: f64) -> EnergyBreakdown {
         let acts = (s.n_act + s.n_act_copy + s.n_act_store) as f64 * self.e_act_nj;
+        // `n_pre` counts whole-bank PREs and per-subarray PRE_SAs
+        // alike at one e_pre each: the calibrated e_pre reflects a
+        // single subarray's bitlines (the baseline's typical case), so
+        // a SALP path closed by N PRE_SAs charges the same energy as N
+        // subarrays physically precharging; whole-bank PREs over
+        // multiple open subarrays undercount correspondingly (a
+        // pre-existing simplification of the baseline model).
         let pres = s.n_pre as f64 * self.e_pre_nj;
         let rbm = s.n_rbm_hops as f64 * self.e_rbm_hop_nj;
         let rd = s.n_rd as f64 * (self.e_rd_col_nj + self.e_io_col_nj);

@@ -6,7 +6,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use lisa::cli::Args;
-use lisa::config::{CopyMechanism, PlacementPolicy, SimConfig};
+use lisa::config::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
 use lisa::dram::timing::SpeedBin;
 use lisa::sim::campaign;
 use lisa::sim::engine::run_workload;
@@ -41,6 +41,15 @@ COMMANDS
               E9: OS-level bulk ops (fork / zeroing / checkpoint /
               promotion) across copy mechanisms x placement policies,
               JSON report to --out (or stdout)
+  salp        [--requests N] [--threads N] [--mechs A,B] [--modes A,B]
+              [--policies A,B] [--workloads A,B] [--out FILE]
+              E10: subarray-level parallelism (none|salp1|salp2|masa)
+              composed with LISA across copy mechanisms x placement
+              policies on intra-bank-conflict workloads,
+              JSON report to --out (or stdout)
+
+`--threads 0` (or omitting --threads) auto-detects the available
+hardware parallelism on every campaign-backed subcommand.
 ";
 
 const COMMANDS: &[&str] = &[
@@ -56,6 +65,7 @@ const COMMANDS: &[&str] = &[
     "lip-system",
     "area",
     "os",
+    "salp",
 ];
 
 fn load_config(args: &Args) -> Result<SimConfig> {
@@ -122,6 +132,7 @@ fn main() -> Result<()> {
         "fig4" => cmd_fig4(&args),
         "lip-system" => cmd_lip_system(&args),
         "os" => cmd_os(&args),
+        "salp" => cmd_salp(&args),
         "area" => {
             let cfg = load_config(&args)?;
             let r = exp::area_report(&cfg);
@@ -301,12 +312,10 @@ fn cmd_table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `--threads N`, defaulting to the available hardware parallelism —
-/// shared by every campaign-backed subcommand.
+/// `--threads N` — shared by every campaign-backed subcommand. Absent
+/// or `0` auto-detects the available hardware parallelism.
 fn parse_threads(args: &Args) -> Result<usize> {
-    Ok(args
-        .opt_usize("threads")?
-        .unwrap_or_else(campaign::default_threads))
+    Ok(campaign::resolve_threads(args.opt_usize("threads")?))
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
@@ -384,6 +393,62 @@ fn cmd_os(args: &Args) -> Result<()> {
         ]);
     }
     let json = exp::os_json(&rows);
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            table.print();
+            println!("wrote {path}");
+        }
+        None => {
+            eprintln!("{}", table.render());
+            print!("{json}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_salp(args: &Args) -> Result<()> {
+    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
+    let threads = parse_threads(args)?;
+    let mechanisms = match args.opt("mechs") {
+        Some(s) => parse_list(s, CopyMechanism::parse)?,
+        None => exp::E10_MECHANISMS.to_vec(),
+    };
+    let modes = match args.opt("modes") {
+        Some(s) => parse_list(s, SalpMode::parse)?,
+        None => SalpMode::ALL.to_vec(),
+    };
+    let policies = match args.opt("policies") {
+        Some(s) => parse_list(s, PlacementPolicy::parse)?,
+        None => PlacementPolicy::ALL.to_vec(),
+    };
+    let workloads: Vec<String> = match args.opt("workloads") {
+        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
+        None => exp::E10_WORKLOADS.iter().map(|s| s.to_string()).collect(),
+    };
+    let n = workloads.len() * mechanisms.len() * modes.len() * policies.len();
+    eprintln!("salp: {n} points on {threads} threads");
+    let t0 = std::time::Instant::now();
+    let rows = exp::e10_salp(requests, &mechanisms, &modes, &policies, &workloads, threads)?;
+    eprintln!("salp: done in {:.2} s", t0.elapsed().as_secs_f64());
+
+    let mut table = Table::new(&[
+        "workload", "mechanism", "mode", "policy", "cycles", "IPC sum", "row-hit %",
+        "copies",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.workload.clone(),
+            r.mechanism.to_string(),
+            r.mode.to_string(),
+            r.policy.to_string(),
+            format!("{}", r.report.dram_cycles),
+            format!("{:.3}", r.report.ipc_sum()),
+            format!("{:.1}", r.report.row_hit_rate * 100.0),
+            format!("{}", r.report.copies),
+        ]);
+    }
+    let json = exp::salp_json(&rows);
     match args.opt("out") {
         Some(path) => {
             std::fs::write(path, &json)?;

@@ -28,6 +28,17 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Resolve a user-supplied `--threads` value: absent or `0` means
+/// "auto-detect the available parallelism" (like `make -j` semantics),
+/// anything else is taken literally. Shared by every campaign-backed
+/// CLI subcommand.
+pub fn resolve_threads(requested: Option<usize>) -> usize {
+    match requested {
+        None | Some(0) => default_threads(),
+        Some(n) => n,
+    }
+}
+
 /// Run `jobs` across up to `threads` workers; results come back in
 /// job order regardless of scheduling. Panics in a job propagate.
 pub fn run_jobs<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
@@ -223,6 +234,18 @@ pub fn sweep_json(rows: &[SweepRow]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn threads_zero_autodetects() {
+        let auto = default_threads();
+        assert!(auto >= 1);
+        assert_eq!(resolve_threads(None), auto);
+        assert_eq!(resolve_threads(Some(0)), auto);
+        assert_eq!(resolve_threads(Some(3)), 3);
+        // And a campaign driven by the resolved value still works.
+        let jobs: Vec<_> = (0..4u64).map(|i| move || i * 2).collect();
+        assert_eq!(run_jobs(jobs, resolve_threads(Some(0))), vec![0, 2, 4, 6]);
+    }
 
     #[test]
     fn run_jobs_preserves_order_across_thread_counts() {

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::config::{Calibration, CopyMechanism, PlacementPolicy, SimConfig};
+use crate::config::{Calibration, CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
 use crate::copy::isolated_copy;
 use crate::dram::area::AreaModel;
 use crate::dram::timing::SpeedBin;
@@ -383,6 +383,112 @@ pub fn os_json(rows: &[OsRow]) -> String {
     format!("{{\"os\":[\n{}\n]}}\n", body.join(",\n"))
 }
 
+// ---------------------------------------------------------------------------
+// E10: subarray-level parallelism (SALP/MASA) composed with LISA —
+// {copy mechanism} x {parallelism mode} x {frame placement policy}.
+// ---------------------------------------------------------------------------
+
+/// The copy-mechanism axis of E10: the channel baseline vs LISA-RISC
+/// (the two ends of the movement spectrum the modes compose with).
+pub const E10_MECHANISMS: [CopyMechanism; 2] =
+    [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc];
+
+/// The E10 workload set: the three intra-bank-conflict mixes that make
+/// the parallelism modes visible, plus the fork scenario so the
+/// placement axis exercises the OS layer's subarray-aware allocator.
+pub const E10_WORKLOADS: [&str; 4] = [
+    "salp-pingpong4",
+    "salp-shared-bank4",
+    "salp-copy-conflict4",
+    "os-fork",
+];
+
+/// One finished E10 grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SalpRow {
+    pub workload: String,
+    pub mechanism: &'static str,
+    pub mode: &'static str,
+    pub policy: &'static str,
+    pub report: RunReport,
+}
+
+/// Configuration for one E10 point.
+pub fn cfg_salp(
+    requests: u64,
+    mech: CopyMechanism,
+    mode: SalpMode,
+    policy: PlacementPolicy,
+) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.requests_per_core = requests;
+    cfg.copy_mechanism = mech;
+    cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
+    cfg.dram.salp = mode;
+    cfg.os.placement = policy;
+    cfg
+}
+
+/// E10 driver: run every {workload x mechanism x mode x placement}
+/// point through the parallel campaign runner (workload-major row
+/// order, deterministic at any thread count).
+pub fn e10_salp(
+    requests: u64,
+    mechanisms: &[CopyMechanism],
+    modes: &[SalpMode],
+    policies: &[PlacementPolicy],
+    workloads: &[String],
+    threads: usize,
+) -> Result<Vec<SalpRow>> {
+    let mut labels = Vec::new();
+    let mut jobs = Vec::new();
+    for workload in workloads {
+        // One lookup per workload (the suite registry is rebuilt per
+        // call); the grid axes don't change workload construction.
+        let wl0 = mixes::workload_by_name(workload, &SimConfig::default())?;
+        for &mech in mechanisms {
+            for &mode in modes {
+                for &policy in policies {
+                    let cfg = cfg_salp(requests, mech, mode, policy);
+                    let wl = wl0.clone();
+                    labels.push((workload.clone(), mech.name(), mode.name(), policy.name()));
+                    jobs.push(move || Simulation::new(cfg, wl).run());
+                }
+            }
+        }
+    }
+    let reports = campaign::run_jobs(jobs, threads);
+    Ok(labels
+        .into_iter()
+        .zip(reports)
+        .map(|((workload, mechanism, mode, policy), report)| SalpRow {
+            workload,
+            mechanism,
+            mode,
+            policy,
+            report,
+        })
+        .collect())
+}
+
+/// JSON document for an E10 run (`lisa salp --out report.json`).
+pub fn salp_json(rows: &[SalpRow]) -> String {
+    let body: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"workload\":{},\"mechanism\":{},\"mode\":{},\"policy\":{},\"report\":{}}}",
+                json::string(&r.workload),
+                json::string(r.mechanism),
+                json::string(r.mode),
+                json::string(r.policy),
+                r.report.to_json()
+            )
+        })
+        .collect();
+    format!("{{\"salp\":[\n{}\n]}}\n", body.join(",\n"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,6 +533,70 @@ mod tests {
     fn area_report_under_one_percent() {
         let r = area_report(&SimConfig::default());
         assert!(r.total_fraction < 0.01);
+    }
+
+    #[test]
+    fn e10_grid_shape_and_config() {
+        let cfg = cfg_salp(
+            100,
+            CopyMechanism::LisaRisc,
+            SalpMode::Masa,
+            PlacementPolicy::Random,
+        );
+        assert!(cfg.lisa.risc);
+        assert_eq!(cfg.dram.salp, SalpMode::Masa);
+        assert_eq!(cfg.os.placement, PlacementPolicy::Random);
+        let rows = e10_salp(
+            120,
+            &[CopyMechanism::LisaRisc],
+            &[SalpMode::None, SalpMode::Masa],
+            &[PlacementPolicy::SubarrayPacked],
+            &["salp-pingpong4".to_string()],
+            2,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.workload == "salp-pingpong4"));
+        assert_eq!(rows[0].mode, "none");
+        assert_eq!(rows[1].mode, "masa");
+        let j = salp_json(&rows);
+        assert_eq!(j.matches("\"mode\"").count(), 2);
+        assert!(j.contains("\"mode\":\"masa\""), "{j}");
+        // Unknown workloads fail fast.
+        assert!(e10_salp(
+            100,
+            &[CopyMechanism::LisaRisc],
+            &[SalpMode::Masa],
+            &[PlacementPolicy::Random],
+            &["no-such-workload".to_string()],
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn e10_grid_is_byte_identical_across_thread_counts() {
+        // The acceptance bar for `lisa salp`: the full JSON document is
+        // byte-identical at 1, 2 and 8 threads.
+        let run = |threads: usize| {
+            e10_salp(
+                150,
+                &[CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
+                &[SalpMode::None, SalpMode::Masa],
+                &[PlacementPolicy::SubarrayPacked],
+                &["salp-shared-bank4".to_string()],
+                threads,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        assert_eq!(serial.len(), 4);
+        let json1 = salp_json(&serial);
+        for threads in [2, 8] {
+            let rows = run(threads);
+            assert_eq!(serial, rows, "threads={threads}");
+            assert_eq!(json1, salp_json(&rows), "threads={threads}");
+        }
     }
 
     #[test]

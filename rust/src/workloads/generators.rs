@@ -44,6 +44,25 @@ pub enum WorkloadKind {
         /// within the same bank (drives LISA hop counts).
         hop_rows: u64,
     },
+    /// Intra-bank subarray ping-pong: bursts of sequential lines from
+    /// rows in `subarrays` distinct subarrays of ONE bank, rotating
+    /// subarrays between bursts. The row-buffer-hostile pattern SALP
+    /// targets: the serialized baseline precharges on every rotation,
+    /// MASA keeps all rotation targets open (experiment E10).
+    SubarrayPingPong {
+        /// Distinct subarrays visited round-robin.
+        subarrays: u32,
+        /// First subarray index (lets mixes place cores in disjoint
+        /// subarray ranges of a shared bank).
+        first_sa: u32,
+        /// Rows used per subarray (cursor advances after each full
+        /// column sweep of a row).
+        rows: u32,
+        /// Consecutive cache lines per visit.
+        burst: u32,
+        /// Target bank; `None` = the core's own bank (core % banks).
+        bank: Option<u32>,
+    },
     /// OS-level scenario (virtual addresses through the OS layer's
     /// page tables and frame allocator; see `workloads/os_scenarios`).
     Os(OsScenario),
@@ -92,6 +111,7 @@ impl CoreSpec {
         let mut ops = Vec::with_capacity(n_ops);
         let mut cursor = 0u64;
         let mut ops_since_copy = 0u32;
+        let mut pp_op = 0u64;
         for _ in 0..n_ops {
             let is_write = rng.chance(self.write_frac);
             match self.kind {
@@ -189,6 +209,34 @@ impl CoreSpec {
                             dependent: false,
                         });
                     }
+                }
+                WorkloadKind::SubarrayPingPong { subarrays, first_sa, rows, burst, bank } => {
+                    // Raw physical addresses (like BulkCopy): the
+                    // subarray/bank targeting is the whole point, so
+                    // the per-core `base` region is not used.
+                    let n_sa = cfg.dram.subarrays_per_bank as u64;
+                    let rows_per_sa = cfg.dram.rows_per_subarray as u64;
+                    let cols = cfg.dram.columns as u64;
+                    let s = (subarrays.max(1) as u64).min(n_sa);
+                    let r = (rows.max(1) as u64).min(rows_per_sa);
+                    let b_len = (burst.max(1) as u64).min(cols);
+                    let bursts_per_row = (cols / b_len).max(1);
+                    let bank_i = bank.map(|b| b as u64).unwrap_or((core % cfg.dram.banks) as u64);
+                    let k = pp_op;
+                    pp_op += 1;
+                    let visit = k / b_len; // which burst
+                    let sweep = visit / s; // bursts this subarray has had
+                    let sa = (first_sa as u64 + visit % s) % n_sa;
+                    let col = (sweep % bursts_per_row) * b_len + k % b_len;
+                    let row_in_sa = (sweep / bursts_per_row) % r;
+                    let global_row = sa * rows_per_sa + row_in_sa;
+                    let addr = global_row * same_bank_row_stride + bank_i * row_bytes + col * 64;
+                    ops.push(TraceOp::Mem {
+                        nonmem: self.nonmem,
+                        addr,
+                        is_write,
+                        dependent: false,
+                    });
                 }
                 WorkloadKind::Os(_) => unreachable!("handled above"),
             }
@@ -290,6 +338,45 @@ mod tests {
             assert_eq!(s.col, 0);
             assert_ne!(s.row, d.row);
         }
+    }
+
+    #[test]
+    fn subarray_pingpong_rotates_subarrays_within_one_bank() {
+        use crate::controller::mapping::{Mapper, MappingScheme};
+        let c = cfg();
+        let kind = WorkloadKind::SubarrayPingPong {
+            subarrays: 4,
+            first_sa: 2,
+            rows: 16,
+            burst: 8,
+            bank: Some(3),
+        };
+        let t = spec(kind).generate(&c, 0, 512, 1);
+        let m = Mapper::new(&c.dram, MappingScheme::RowRankBankColCh);
+        let mut seen_sas = std::collections::BTreeSet::new();
+        let mut prev_sa = None;
+        let mut switches = 0usize;
+        for o in &t.ops {
+            let TraceOp::Mem { addr, .. } = o else {
+                panic!("mem only")
+            };
+            let a = m.map(*addr);
+            assert_eq!(a.bank, 3, "fixed-bank pingpong left its bank");
+            let sa = a.row / c.dram.rows_per_subarray;
+            assert!((2..6).contains(&sa), "subarray {sa} outside [2,6)");
+            if prev_sa.is_some() && prev_sa != Some(sa) {
+                switches += 1;
+            }
+            prev_sa = Some(sa);
+            seen_sas.insert(sa);
+        }
+        assert_eq!(seen_sas.len(), 4, "all four subarrays visited");
+        // 512 ops / burst 8 = 64 bursts, each rotating the subarray.
+        assert!(switches >= 60, "only {switches} subarray switches");
+        // Deterministic and seed-sensitive like every other generator.
+        let a = spec(kind).generate(&c, 0, 200, 7);
+        let b = spec(kind).generate(&c, 0, 200, 7);
+        assert_eq!(a.ops, b.ops);
     }
 
     #[test]

@@ -155,6 +155,60 @@ pub fn micro_workloads(cores: usize) -> Vec<Workload> {
     ]
 }
 
+/// Intra-bank-conflict workloads for the SALP/MASA substrate (E10):
+/// request streams that ping-pong between subarrays of one bank, so
+/// the parallelism mode visibly changes row-buffer behaviour. All of
+/// them keep off subarray 0 (`first_sa >= 2`) so they compose with
+/// VILLA's promotion subarray.
+pub fn salp_mixes(cores: usize) -> Vec<Workload> {
+    let pingpong = |first_sa: u32, subarrays: u32, rows: u32, burst: u32, bank| CoreSpec {
+        kind: WorkloadKind::SubarrayPingPong { subarrays, first_sa, rows, burst, bank },
+        wss: 0, // raw physical addressing; working set is sa x rows x 8 KB
+        nonmem: 2,
+        write_frac: 0.2,
+    };
+    vec![
+        // Every core ping-pongs 4 subarrays of its own bank: pure
+        // intra-bank conflicts, no cross-core interference.
+        Workload {
+            name: "salp-pingpong4".into(),
+            cores: (0..cores).map(|_| pingpong(2, 4, 16, 8, None)).collect(),
+        },
+        // All cores share bank 0 in disjoint subarray ranges: the
+        // cross-core version of the same conflict (the MASA headline).
+        Workload {
+            name: "salp-shared-bank4".into(),
+            cores: (0..cores)
+                .map(|i| pingpong(2 + 3 * (i as u32 % 4), 3, 32, 4, Some(0)))
+                .collect(),
+        },
+        // Bulk copies and subarray ping-pong fighting over the same
+        // banks: exercises the copy-vs-open-row exclusion rules and
+        // the LISA link path under every parallelism mode.
+        Workload {
+            name: "salp-copy-conflict4".into(),
+            cores: (0..cores)
+                .map(|i| {
+                    if i < 2 {
+                        CoreSpec {
+                            kind: WorkloadKind::BulkCopy {
+                                rows: 2,
+                                period: 80,
+                                hop_rows: 2048,
+                            },
+                            wss: 24 << 20,
+                            nonmem: 4,
+                            write_frac: 0.2,
+                        }
+                    } else {
+                        pingpong(8, 4, 8, 8, Some((i as u32) - 2))
+                    }
+                })
+                .collect(),
+        },
+    ]
+}
+
 /// The four OS-scenario workloads of experiment E9 (every core runs
 /// its own process instance of the scenario).
 pub fn os_workloads(cores: usize) -> Vec<Workload> {
@@ -190,6 +244,7 @@ pub fn all_mixes(cfg: &SimConfig) -> Vec<Workload> {
     let cores = cfg.cpu.cores;
     let mut out = micro_workloads(cores);
     out.extend(villa_mixes(cores));
+    out.extend(salp_mixes(cores));
     out.extend(os_workloads(cores));
     out.extend(copy_mixes(cores));
     out
@@ -275,6 +330,52 @@ mod tests {
                 traces.iter().all(|t| t.needs_os()),
                 "{name}: every core must carry OS bulk ops"
             );
+        }
+    }
+
+    #[test]
+    fn salp_mixes_target_single_banks_across_subarrays() {
+        use crate::controller::mapping::{Mapper, MappingScheme};
+        let cfg = SimConfig::default();
+        let m = Mapper::new(&cfg.dram, MappingScheme::RowRankBankColCh);
+        for name in ["salp-pingpong4", "salp-shared-bank4", "salp-copy-conflict4"] {
+            assert!(workload_by_name(name, &cfg).is_ok(), "{name} not registered");
+        }
+        // Shared-bank mix: every core stays in bank 0 but uses its own
+        // disjoint subarray range — intra-bank, cross-core conflicts.
+        let w = workload_by_name("salp-shared-bank4", &cfg).unwrap();
+        let traces = w.traces(&cfg, 600);
+        let mut per_core_sas: Vec<std::collections::BTreeSet<usize>> = Vec::new();
+        for t in &traces {
+            let mut sas = std::collections::BTreeSet::new();
+            for o in &t.ops {
+                if let TraceOp::Mem { addr, .. } = o {
+                    let a = m.map(*addr);
+                    assert_eq!(a.bank, 0, "shared-bank mix must stay in bank 0");
+                    sas.insert(a.row / cfg.dram.rows_per_subarray);
+                }
+            }
+            assert!(sas.len() >= 2, "core must ping-pong >= 2 subarrays: {sas:?}");
+            assert!(!sas.contains(&0), "subarray 0 is reserved for VILLA promotion");
+            per_core_sas.push(sas);
+        }
+        for i in 0..per_core_sas.len() {
+            for j in (i + 1)..per_core_sas.len() {
+                assert!(
+                    per_core_sas[i].is_disjoint(&per_core_sas[j]),
+                    "cores {i}/{j} share subarrays"
+                );
+            }
+        }
+        // Per-bank mix: each core owns its own bank.
+        let w = workload_by_name("salp-pingpong4", &cfg).unwrap();
+        let traces = w.traces(&cfg, 200);
+        for (core, t) in traces.iter().enumerate() {
+            for o in &t.ops {
+                if let TraceOp::Mem { addr, .. } = o {
+                    assert_eq!(m.map(*addr).bank, core % cfg.dram.banks);
+                }
+            }
         }
     }
 

@@ -4,7 +4,7 @@
 //! per-cycle loop) — cycles, IPC, energy, per-command stats — across
 //! the full configuration matrix the paper's evaluation sweeps.
 
-use lisa::config::{CopyMechanism, SimConfig};
+use lisa::config::{CopyMechanism, SalpMode, SimConfig};
 use lisa::dram::timing::SpeedBin;
 use lisa::metrics::RunReport;
 use lisa::sim::engine::Simulation;
@@ -20,7 +20,7 @@ const ALL_MECHANISMS: [CopyMechanism; 5] = [
 
 fn matrix_cfg(
     mech: CopyMechanism,
-    salp: bool,
+    salp: SalpMode,
     lip: bool,
     speed: SpeedBin,
     requests: u64,
@@ -45,7 +45,7 @@ fn assert_equivalent(cfg: &SimConfig, workload: &str) -> RunReport {
     let reference = reference_sim.reference_run();
     assert_eq!(
         fast, reference,
-        "fast-forward diverged from the reference loop: mech={:?} salp={} lip={} speed={:?} wl={workload}",
+        "fast-forward diverged from the reference loop: mech={:?} salp={:?} lip={} speed={:?} wl={workload}",
         cfg.copy_mechanism, cfg.dram.salp, cfg.lisa.lip, cfg.dram.speed
     );
     // The per-command device stats feed the energy model; equality of
@@ -57,10 +57,12 @@ fn assert_equivalent(cfg: &SimConfig, workload: &str) -> RunReport {
 
 #[test]
 fn matrix_all_mechanisms_salp_lip_speed_bins() {
-    // {5 mechanisms} x {SALP on/off} x {LIP on/off} x {DDR3, DDR4} on a
-    // copy-heavy workload (copies exercise every command sequence).
+    // {5 mechanisms} x {SALP off/full} x {LIP on/off} x {DDR3, DDR4}
+    // on a copy-heavy workload (copies exercise every command
+    // sequence); the two intermediate SALP modes get their own matrix
+    // below.
     for mech in ALL_MECHANISMS {
-        for salp in [false, true] {
+        for salp in [SalpMode::None, SalpMode::Masa] {
             for lip in [false, true] {
                 for speed in [SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400] {
                     let cfg = matrix_cfg(mech, salp, lip, speed, 250);
@@ -73,11 +75,37 @@ fn matrix_all_mechanisms_salp_lip_speed_bins() {
 }
 
 #[test]
+fn matrix_all_salp_modes_on_conflict_workloads() {
+    // The E10 acceptance matrix: all four parallelism modes x
+    // {memcpy, lisa-risc}, on both an intra-bank-conflict mix (open
+    // rows in many subarrays, PRE_SA victim eviction, subarray-select
+    // switches) and the copy-vs-open-row conflict mix.
+    for mode in SalpMode::ALL {
+        for mech in [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc] {
+            for wl in ["salp-shared-bank4", "salp-copy-conflict4"] {
+                let cfg = matrix_cfg(mech, mode, false, SpeedBin::Ddr3_1600, 300);
+                let r = assert_equivalent(&cfg, wl);
+                assert!(r.reads > 0, "{mode:?}/{mech:?}/{wl}: no reads");
+                if wl == "salp-copy-conflict4" {
+                    assert!(r.copies > 0, "{mode:?}/{mech:?}: no copies");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn equivalence_on_noncopy_behaviour_classes() {
     // Stream / random / pointer-chase / hotspot behaviours hit
     // different stall patterns (row hits, row conflicts, MLP=1).
     for wl in ["stream4", "random4", "chase4", "hotspot4"] {
-        let cfg = matrix_cfg(CopyMechanism::MemcpyChannel, false, false, SpeedBin::Ddr3_1600, 400);
+        let cfg = matrix_cfg(
+            CopyMechanism::MemcpyChannel,
+            SalpMode::None,
+            false,
+            SpeedBin::Ddr3_1600,
+            400,
+        );
         assert_equivalent(&cfg, wl);
     }
 }
@@ -87,7 +115,13 @@ fn equivalence_with_villa_caching() {
     // VILLA adds epoch maintenance + background fill copies — the
     // hardest case for the horizon query (epochs re-arm relative to
     // the cycle they are observed at).
-    let mut cfg = matrix_cfg(CopyMechanism::LisaRisc, false, true, SpeedBin::Ddr3_1600, 1_000);
+    let mut cfg = matrix_cfg(
+        CopyMechanism::LisaRisc,
+        SalpMode::None,
+        true,
+        SpeedBin::Ddr3_1600,
+        1_000,
+    );
     cfg.lisa.villa = true;
     cfg.lisa.villa_epoch_cycles = 5_000;
     let r = assert_equivalent(&cfg, "hotspot4");
@@ -103,7 +137,7 @@ fn equivalence_on_os_scenarios() {
     // LISA-RISC, must stay bit-identical across engines.
     for wl in ["os-fork", "os-zero", "os-checkpoint", "os-promote"] {
         for mech in [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc] {
-            let cfg = matrix_cfg(mech, false, false, SpeedBin::Ddr3_1600, 300);
+            let cfg = matrix_cfg(mech, SalpMode::None, false, SpeedBin::Ddr3_1600, 300);
             let r = assert_equivalent(&cfg, wl);
             let os = r.os.expect("OS summary present");
             assert!(os.pages_copied > 0, "{wl}/{mech:?}: no page copies");
@@ -115,7 +149,13 @@ fn equivalence_on_os_scenarios() {
 fn equivalence_on_os_scenarios_across_placement_policies() {
     use lisa::config::PlacementPolicy;
     for policy in PlacementPolicy::ALL {
-        let mut cfg = matrix_cfg(CopyMechanism::LisaRisc, false, false, SpeedBin::Ddr3_1600, 250);
+        let mut cfg = matrix_cfg(
+            CopyMechanism::LisaRisc,
+            SalpMode::None,
+            false,
+            SpeedBin::Ddr3_1600,
+            250,
+        );
         cfg.os.placement = policy;
         assert_equivalent(&cfg, "os-fork");
     }
@@ -123,7 +163,13 @@ fn equivalence_on_os_scenarios_across_placement_policies() {
 
 #[test]
 fn equivalence_on_multi_rank_multi_channel_geometry() {
-    let mut cfg = matrix_cfg(CopyMechanism::LisaRisc, false, false, SpeedBin::Ddr3_1600, 300);
+    let mut cfg = matrix_cfg(
+        CopyMechanism::LisaRisc,
+        SalpMode::None,
+        false,
+        SpeedBin::Ddr3_1600,
+        300,
+    );
     cfg.dram.channels = 2;
     cfg.dram.ranks = 2;
     cfg.validate().unwrap();
@@ -133,7 +179,13 @@ fn equivalence_on_multi_rank_multi_channel_geometry() {
 #[test]
 fn fast_forward_respects_the_cycle_cap() {
     // A tiny cycle cap must clip both engines at the same cycle count.
-    let mut cfg = matrix_cfg(CopyMechanism::MemcpyChannel, false, false, SpeedBin::Ddr3_1600, 5_000);
+    let mut cfg = matrix_cfg(
+        CopyMechanism::MemcpyChannel,
+        SalpMode::None,
+        false,
+        SpeedBin::Ddr3_1600,
+        5_000,
+    );
     cfg.max_cycles = 10_000;
     let r = assert_equivalent(&cfg, "random4");
     assert_eq!(r.dram_cycles, 10_000);

@@ -3,7 +3,7 @@
 //! cross-cutting invariants (data movement correctness under load,
 //! determinism, bank-parallelism).
 
-use lisa::config::{CopyMechanism, PlacementPolicy, SimConfig};
+use lisa::config::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
 use lisa::sim::campaign;
 use lisa::sim::engine::{run_workload, Simulation};
 use lisa::sim::experiments::{
@@ -337,12 +337,29 @@ fn os_scenarios_complete_under_every_mechanism() {
 }
 
 #[test]
-fn salp_configuration_runs() {
-    let mut cfg = quick(1_000);
-    cfg.dram.salp = true;
-    let wl = mixes::workload_by_name("random4", &cfg).unwrap();
-    let r = run_workload(&cfg, &wl);
-    assert!(r.reads > 0);
+fn every_salp_mode_runs_the_conflict_workload() {
+    // All four parallelism modes complete the intra-bank-conflict
+    // workload, and the mode differences are visible: MASA resolves
+    // the subarray ping-pong with strictly fewer activations (open
+    // rows persist) than the serialized baseline.
+    let mut acts = Vec::new();
+    for mode in SalpMode::ALL {
+        let mut cfg = quick(1_000);
+        cfg.dram.salp = mode;
+        let wl = mixes::workload_by_name("salp-pingpong4", &cfg).unwrap();
+        let mut sim = Simulation::new(cfg, wl);
+        let r = sim.run();
+        assert!(r.reads > 0, "{mode:?}: no DRAM reads");
+        assert!(r.dram_cycles > 0);
+        acts.push((mode, sim.ctrl.dev.stats.n_act));
+    }
+    let act_of = |m: SalpMode| acts.iter().find(|(x, _)| *x == m).unwrap().1;
+    assert!(
+        act_of(SalpMode::Masa) < act_of(SalpMode::None),
+        "MASA {} activations should undercut the baseline {}",
+        act_of(SalpMode::Masa),
+        act_of(SalpMode::None)
+    );
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! engines (using the in-tree proptest harness; replay failures with
 //! LISA_PROPTEST_SEED=<seed> cargo test).
 
-use lisa::config::{Calibration, CopyMechanism, DramConfig, LisaConfig, SimConfig};
+use lisa::config::{Calibration, CopyMechanism, DramConfig, LisaConfig, SalpMode, SimConfig};
 use lisa::controller::request::CopyRequest;
 use lisa::controller::Controller;
 use lisa::copy::CopyOp;
@@ -12,7 +12,7 @@ use lisa::dram::geometry::Address;
 use lisa::dram::timing::{SpeedBin, Timing};
 use lisa::util::proptest::check;
 
-fn device(salp: bool, lip: bool) -> DramDevice {
+fn device(salp: SalpMode, lip: bool) -> DramDevice {
     let mut cfg = DramConfig::default();
     cfg.salp = salp;
     let mut lisa_cfg = LisaConfig::default();
@@ -27,7 +27,8 @@ fn prop_earliest_is_idempotent_and_issue_at_earliest_succeeds() {
     // For random legal command sequences: earliest() twice gives the
     // same answer, and issuing exactly at earliest never fails.
     check("earliest/issue consistency", 60, |g| {
-        let mut dev = device(false, g.bool());
+        let mode = *g.pick(&SalpMode::ALL);
+        let mut dev = device(mode, g.bool());
         let mut now = 0u64;
         let mut last_row: Option<(usize, usize)> = None; // (bank, row)
         for _ in 0..40 {
@@ -38,15 +39,20 @@ fn prop_earliest_is_idempotent_and_issue_at_earliest_succeeds() {
                     let row = g.usize(8192);
                     let c = Command::Act { rank: 0, bank, row };
                     if dev.earliest(0, c, now).is_err() {
-                        // Bank open: precharge instead.
+                        // Bank open (or at the mode's open-subarray
+                        // cap): precharge instead.
                         Command::Pre { rank: 0, bank }
                     } else {
                         last_row = Some((bank, row));
                         c
                     }
                 }
-                (Some((b, _)), 1) => Command::Rd { rank: 0, bank: b, col: g.usize(128) },
-                (Some((b, _)), 2) => Command::Wr { rank: 0, bank: b, col: g.usize(128) },
+                (Some((b, r)), 1) => {
+                    Command::Rd { rank: 0, bank: b, sa: r / 512, col: g.usize(128) }
+                }
+                (Some((b, r)), 2) => {
+                    Command::Wr { rank: 0, bank: b, sa: r / 512, col: g.usize(128) }
+                }
                 (Some((b, _)), _) => {
                     last_row = None;
                     Command::Pre { rank: 0, bank: b }
@@ -68,10 +74,10 @@ fn prop_earliest_is_idempotent_and_issue_at_earliest_succeeds() {
 #[test]
 fn prop_issue_before_earliest_always_rejected() {
     check("early issue rejected", 40, |g| {
-        let mut dev = device(false, false);
+        let mut dev = device(SalpMode::None, false);
         let row = g.usize(8192);
         dev.issue(0, Command::Act { rank: 0, bank: 0, row }, 0).unwrap();
-        let rd = Command::Rd { rank: 0, bank: 0, col: g.usize(128) };
+        let rd = Command::Rd { rank: 0, bank: 0, sa: row / 512, col: g.usize(128) };
         let e = dev.earliest(0, rd, 0).unwrap();
         if e > 0 {
             let early = g.u64(e);
@@ -86,7 +92,7 @@ fn prop_copy_engine_always_moves_the_tag() {
     // on an idle device moves the source tag to the destination.
     check("copy moves tag", 50, |g| {
         let cfg = DramConfig::default();
-        let mut dev = device(false, false);
+        let mut dev = device(*g.pick(&SalpMode::ALL), false);
         let mech = *g.pick(&[
             CopyMechanism::LisaRisc,
             CopyMechanism::RowCloneIntraSa,
@@ -138,6 +144,7 @@ fn prop_controller_never_stalls_forever() {
     // Random small request soups must always drain (bounded cycles).
     check("controller liveness", 12, |g| {
         let mut cfg = SimConfig::default();
+        cfg.dram.salp = *g.pick(&SalpMode::ALL);
         cfg.lisa.risc = g.bool();
         cfg.lisa.lip = g.bool();
         cfg.copy_mechanism = if cfg.lisa.risc {
