@@ -5,8 +5,9 @@
 //!
 //! Env knobs: LISA_REQUESTS (default 2000), LISA_MIXES (default 15).
 
+use lisa::config::{LisaPreset, SimConfigBuilder};
 use lisa::sim::engine::alone_ipcs;
-use lisa::sim::experiments::{cfg_baseline, cfg_risc, improvement, ws_point_with};
+use lisa::sim::experiments::{improvement, ws_point_with};
 use lisa::util::bench::Table;
 use lisa::workloads::mixes::copy_mixes;
 
@@ -19,8 +20,15 @@ fn main() {
     let n = env_u64("LISA_MIXES", 15) as usize;
     println!("=== E5: LISA-RISC quad-core ({requests} reqs/core, {n} mixes) ===\n");
 
-    let base = cfg_baseline(requests);
-    let risc = cfg_risc(requests);
+    let cfg = |p| {
+        SimConfigBuilder::new()
+            .requests(requests)
+            .preset(p)
+            .build()
+            .expect("preset configs validate")
+    };
+    let base = cfg(LisaPreset::Baseline);
+    let risc = cfg(LisaPreset::Risc);
     let mixes = copy_mixes(base.cpu.cores);
 
     let mut t = Table::new(&["workload", "WS +%", "energy -%"]);

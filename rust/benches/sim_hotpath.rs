@@ -23,6 +23,7 @@ use lisa::config::minitoml::Document;
 use lisa::config::SimConfig;
 use lisa::metrics::json;
 use lisa::sim::engine::Simulation;
+use lisa::sim::spec::{self, RunOptions};
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
 
@@ -74,6 +75,41 @@ fn bench_workload(name: &'static str, requests: u64, handicap: f64) -> Measureme
     }
 }
 
+/// Grid-expansion overhead of the declarative experiment API: how
+/// many times per second the FULL built-in registry (every spec's
+/// default grid — several hundred `SimConfig`s + workload clones) can
+/// be expanded. Expansion happens once per campaign, strictly before
+/// any simulation starts, so it must stay off the simulated hot path;
+/// the gate floor in `ci/perf_baseline.toml` pins that down.
+struct Expansion {
+    points_per_registry: usize,
+    registries_per_sec: f64,
+}
+
+fn bench_grid_expansion() -> Expansion {
+    let specs = spec::registry();
+    let opts = RunOptions::default();
+    // Warm once (builds the workload suite caches, faults in code).
+    let mut points_per_registry = 0usize;
+    for s in &specs {
+        points_per_registry += spec::expand(s, &opts).expect("built-in grid").len();
+    }
+    const ITERS: usize = 5;
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    for _ in 0..ITERS {
+        for s in &specs {
+            total += spec::expand(s, &opts).expect("built-in grid").len();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(total, points_per_registry * ITERS);
+    Expansion {
+        points_per_registry,
+        registries_per_sec: ITERS as f64 / secs,
+    }
+}
+
 /// The two gate-relevant aggregates, computed in exactly one place so
 /// the printed table, the JSON artifact and the gate verdict can never
 /// diverge: (aggregate fast-forward cycles/sec, worst-case speedup).
@@ -87,7 +123,7 @@ fn aggregates(measurements: &[Measurement]) -> (f64, f64) {
     (total_cycles as f64 / total_ff_secs, worst)
 }
 
-fn summary_json(requests: u64, measurements: &[Measurement]) -> String {
+fn summary_json(requests: u64, measurements: &[Measurement], exp: &Expansion) -> String {
     let (agg_rate, worst) = aggregates(measurements);
     let rows: Vec<String> = measurements
         .iter()
@@ -104,17 +140,24 @@ fn summary_json(requests: u64, measurements: &[Measurement]) -> String {
         })
         .collect();
     format!(
-        "{{\"bench\":\"sim_hotpath\",\"schema\":1,\"requests\":{requests},\
+        "{{\"bench\":\"sim_hotpath\",\"schema\":2,\"requests\":{requests},\
          \"workloads\":[\n{}\n],\"aggregate_ff_cyc_per_sec\":{},\
-         \"worst_ff_speedup\":{}}}\n",
+         \"worst_ff_speedup\":{},\"grid_points\":{},\
+         \"grid_expansions_per_sec\":{}}}\n",
         rows.join(",\n"),
         json::number(agg_rate),
         json::number(worst),
+        exp.points_per_registry,
+        json::number(exp.registries_per_sec),
     )
 }
 
 /// Apply the checked-in perf baseline; returns Err lines on violation.
-fn check_gate(path: &str, measurements: &[Measurement]) -> Result<(), Vec<String>> {
+fn check_gate(
+    path: &str,
+    measurements: &[Measurement],
+    exp: &Expansion,
+) -> Result<(), Vec<String>> {
     let text = std::fs::read_to_string(path)
         .unwrap_or_else(|e| panic!("perf baseline {path}: {e}"));
     let doc = Document::parse(&text).expect("perf baseline parses");
@@ -126,6 +169,10 @@ fn check_gate(path: &str, measurements: &[Measurement]) -> Result<(), Vec<String
         .get_f64("sim_hotpath", "min_ff_mcyc_per_sec")
         .expect("min_ff_mcyc_per_sec type")
         .expect("min_ff_mcyc_per_sec present");
+    let min_expansions = doc
+        .get_f64("sim_hotpath", "min_grid_expansions_per_sec")
+        .expect("min_grid_expansions_per_sec type")
+        .expect("min_grid_expansions_per_sec present");
 
     let (agg_rate, worst) = aggregates(measurements);
     let agg_mcyc = agg_rate / 1e6;
@@ -140,6 +187,13 @@ fn check_gate(path: &str, measurements: &[Measurement]) -> Result<(), Vec<String
         violations.push(format!(
             "aggregate fast-forward throughput {agg_mcyc:.2} Mcyc/s < baseline floor \
              {min_mcyc:.2} Mcyc/s"
+        ));
+    }
+    if exp.registries_per_sec < min_expansions {
+        violations.push(format!(
+            "registry grid expansion {:.2}/s < baseline floor {min_expansions:.2}/s \
+             ({} points) — spec expansion must stay off the simulated hot path",
+            exp.registries_per_sec, exp.points_per_registry
         ));
     }
     if violations.is_empty() {
@@ -215,13 +269,20 @@ fn main() {
         println!("NOTE: fast-forward times artificially inflated {handicap}x (--handicap)");
     }
 
+    let expansion = bench_grid_expansion();
+    println!(
+        "experiment-registry grid expansion: {} points in {:.1} registries/s \
+         (off the simulated hot path; gated)",
+        expansion.points_per_registry, expansion.registries_per_sec
+    );
+
     if let Some(path) = json_out {
-        std::fs::write(&path, summary_json(requests, &measurements))
+        std::fs::write(&path, summary_json(requests, &measurements, &expansion))
             .unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("wrote {path}");
     }
     if let Some(path) = gate {
-        match check_gate(&path, &measurements) {
+        match check_gate(&path, &measurements, &expansion) {
             Ok(()) => println!("perf gate: PASS ({path})"),
             Err(violations) => {
                 eprintln!("perf gate: FAIL ({path})");

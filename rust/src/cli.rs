@@ -95,6 +95,19 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// A comma-separated list option (`--mechs memcpy,lisa-risc`):
+    /// `None` when absent, trimmed non-empty items otherwise. Shared
+    /// by every axis flag of the experiment subcommands.
+    pub fn opt_list(&self, key: &str) -> Option<Vec<String>> {
+        self.opt(key).map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|t| !t.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +140,22 @@ mod tests {
         let a = parse("x --flag --k v");
         assert!(a.has_flag("flag"));
         assert_eq!(a.opt("k"), Some("v"));
+    }
+
+    #[test]
+    fn opt_list_splits_and_trims() {
+        let a = parse("exp --mechs memcpy,lisa-risc --modes masa");
+        assert_eq!(
+            a.opt_list("mechs").unwrap(),
+            vec!["memcpy".to_string(), "lisa-risc".to_string()]
+        );
+        assert_eq!(a.opt_list("modes").unwrap(), vec!["masa".to_string()]);
+        assert_eq!(a.opt_list("policies"), None);
+        let a = Args::parse(["x".to_string(), "--ws=a, b,,c ".to_string()]).unwrap();
+        assert_eq!(
+            a.opt_list("ws").unwrap(),
+            vec!["a".to_string(), "b".to_string(), "c".to_string()]
+        );
     }
 
     #[test]

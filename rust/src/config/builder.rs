@@ -1,0 +1,346 @@
+//! `SimConfigBuilder`: typed, chainable construction of `SimConfig`s.
+//!
+//! This is the one place configurations are derived from experiment
+//! axes — it replaces the per-experiment `cfg_baseline` / `cfg_risc` /
+//! `cfg_os` / `cfg_salp` constructors that used to be scattered through
+//! `sim/experiments.rs`. Every built config validates, and
+//! `build()` → `SimConfig::to_toml()` → `SimConfig::from_toml()`
+//! round-trips to an equal config (property-tested below), so a grid
+//! point can always be persisted and replayed from a file.
+
+use anyhow::{bail, Result};
+
+use super::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
+use crate::dram::timing::SpeedBin;
+
+/// The named LISA feature combinations of the paper's system-level
+/// evaluation (Figs. 3/4) — the `preset` axis of the WS experiments.
+/// A preset fully determines the LISA switch block (risc/villa/lip,
+/// copy mechanism, VILLA epoch), so two presets never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LisaPreset {
+    /// memcpy over the channel, standard DRAM.
+    Baseline,
+    /// LISA-RISC only.
+    Risc,
+    /// LISA-RISC + LISA-VILLA.
+    RiscVilla,
+    /// All three LISA applications (Fig. 4 "All").
+    All,
+    /// VILLA with RowClone inter-subarray movement (the Fig. 3
+    /// comparison the paper shows LOSING 52.3%).
+    VillaRc,
+    /// LISA-LIP alone (E7).
+    Lip,
+}
+
+impl LisaPreset {
+    pub const ALL: [LisaPreset; 6] = [
+        LisaPreset::Baseline,
+        LisaPreset::Risc,
+        LisaPreset::RiscVilla,
+        LisaPreset::All,
+        LisaPreset::VillaRc,
+        LisaPreset::Lip,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "baseline" => Self::Baseline,
+            "risc" => Self::Risc,
+            "risc-villa" => Self::RiscVilla,
+            "all" => Self::All,
+            "villa-rc" => Self::VillaRc,
+            "lip" => Self::Lip,
+            _ => bail!(
+                "unknown LISA preset '{s}' \
+                 (baseline|risc|risc-villa|all|villa-rc|lip)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Baseline => "baseline",
+            Self::Risc => "risc",
+            Self::RiscVilla => "risc-villa",
+            Self::All => "all",
+            Self::VillaRc => "villa-rc",
+            Self::Lip => "lip",
+        }
+    }
+}
+
+/// Chainable `SimConfig` construction. Setters mirror the experiment
+/// axes; `build()` validates. Only fields `SimConfig::to_toml()` can
+/// serialize have setters, which is what makes the round-trip
+/// guarantee possible.
+#[derive(Debug, Clone, Default)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl SimConfigBuilder {
+    pub fn new() -> Self {
+        Self { cfg: SimConfig::default() }
+    }
+
+    /// Start from an existing configuration (e.g. one loaded from a
+    /// file) instead of the defaults.
+    pub fn from_config(cfg: SimConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Memory requests simulated per core.
+    pub fn requests(mut self, n: u64) -> Self {
+        self.cfg.requests_per_core = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    pub fn max_cycles(mut self, n: u64) -> Self {
+        self.cfg.max_cycles = n;
+        self
+    }
+
+    pub fn warmup_frac(mut self, f: f64) -> Self {
+        self.cfg.warmup_frac = f;
+        self
+    }
+
+    pub fn speed(mut self, s: SpeedBin) -> Self {
+        self.cfg.dram.speed = s;
+        self
+    }
+
+    /// Select the bulk-copy mechanism. Choosing LISA-RISC implies the
+    /// RISC substrate is present (links between subarrays); other
+    /// mechanisms leave the substrate switch untouched so a base
+    /// config's LISA features survive a mechanism sweep.
+    pub fn mechanism(mut self, m: CopyMechanism) -> Self {
+        self.cfg.copy_mechanism = m;
+        if m == CopyMechanism::LisaRisc {
+            self.cfg.lisa.risc = true;
+        }
+        self
+    }
+
+    pub fn salp(mut self, mode: SalpMode) -> Self {
+        self.cfg.dram.salp = mode;
+        self
+    }
+
+    pub fn placement(mut self, p: PlacementPolicy) -> Self {
+        self.cfg.os.placement = p;
+        self
+    }
+
+    pub fn risc(mut self, on: bool) -> Self {
+        self.cfg.lisa.risc = on;
+        self
+    }
+
+    pub fn villa(mut self, on: bool) -> Self {
+        self.cfg.lisa.villa = on;
+        self
+    }
+
+    pub fn lip(mut self, on: bool) -> Self {
+        self.cfg.lisa.lip = on;
+        self
+    }
+
+    pub fn villa_epoch_cycles(mut self, n: u64) -> Self {
+        self.cfg.lisa.villa_epoch_cycles = n;
+        self
+    }
+
+    pub fn cores(mut self, n: usize) -> Self {
+        self.cfg.cpu.cores = n;
+        self
+    }
+
+    pub fn banks(mut self, n: usize) -> Self {
+        self.cfg.dram.banks = n;
+        self
+    }
+
+    pub fn subarrays_per_bank(mut self, n: usize) -> Self {
+        self.cfg.dram.subarrays_per_bank = n;
+        self
+    }
+
+    /// Apply a named LISA feature combination. The preset overwrites
+    /// the whole LISA switch block (and the copy mechanism), so preset
+    /// axis values are order-independent with the other setters as
+    /// long as `mechanism()` is not applied after it.
+    pub fn preset(mut self, p: LisaPreset) -> Self {
+        // The short VILLA epoch matches the bounded run lengths the
+        // experiment drivers use (the paper sizes epochs against full
+        // SPEC runs; what matters is epochs << run length).
+        const BENCH_VILLA_EPOCH: u64 = 5_000;
+        let l = &mut self.cfg.lisa;
+        match p {
+            LisaPreset::Baseline => {
+                l.risc = false;
+                l.villa = false;
+                l.lip = false;
+                self.cfg.copy_mechanism = CopyMechanism::MemcpyChannel;
+            }
+            LisaPreset::Risc => {
+                l.risc = true;
+                l.villa = false;
+                l.lip = false;
+                self.cfg.copy_mechanism = CopyMechanism::LisaRisc;
+            }
+            LisaPreset::RiscVilla => {
+                l.risc = true;
+                l.villa = true;
+                l.lip = false;
+                l.villa_epoch_cycles = BENCH_VILLA_EPOCH;
+                self.cfg.copy_mechanism = CopyMechanism::LisaRisc;
+            }
+            LisaPreset::All => {
+                l.risc = true;
+                l.villa = true;
+                l.lip = true;
+                l.villa_epoch_cycles = BENCH_VILLA_EPOCH;
+                self.cfg.copy_mechanism = CopyMechanism::LisaRisc;
+            }
+            LisaPreset::VillaRc => {
+                // Fills fall back to RC-InterSA movement.
+                l.risc = false;
+                l.villa = true;
+                l.lip = false;
+                l.villa_epoch_cycles = BENCH_VILLA_EPOCH;
+                self.cfg.copy_mechanism = CopyMechanism::MemcpyChannel;
+            }
+            LisaPreset::Lip => {
+                l.risc = false;
+                l.villa = false;
+                l.lip = true;
+                self.cfg.copy_mechanism = CopyMechanism::MemcpyChannel;
+            }
+        }
+        self
+    }
+
+    /// Validate and return the configuration.
+    pub fn build(self) -> Result<SimConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn presets_compose_like_the_legacy_constructors() {
+        let b = |p| SimConfigBuilder::new().requests(100).preset(p).build().unwrap();
+        let base = b(LisaPreset::Baseline);
+        assert!(!base.lisa.risc && !base.lisa.villa && !base.lisa.lip);
+        assert_eq!(base.copy_mechanism, CopyMechanism::MemcpyChannel);
+        assert_eq!(base.requests_per_core, 100);
+        let risc = b(LisaPreset::Risc);
+        assert!(risc.lisa.risc && !risc.lisa.villa);
+        assert_eq!(risc.copy_mechanism, CopyMechanism::LisaRisc);
+        let rv = b(LisaPreset::RiscVilla);
+        assert!(rv.lisa.risc && rv.lisa.villa && !rv.lisa.lip);
+        assert_eq!(rv.lisa.villa_epoch_cycles, 5_000);
+        let all = b(LisaPreset::All);
+        assert!(all.lisa.risc && all.lisa.villa && all.lisa.lip);
+        let rc = b(LisaPreset::VillaRc);
+        assert!(rc.lisa.villa && !rc.lisa.risc);
+        assert_eq!(rc.copy_mechanism, CopyMechanism::MemcpyChannel);
+        let lip = b(LisaPreset::Lip);
+        assert!(lip.lisa.lip && !lip.lisa.risc && !lip.lisa.villa);
+    }
+
+    #[test]
+    fn preset_parse_round_trip() {
+        for p in LisaPreset::ALL {
+            assert_eq!(LisaPreset::parse(p.name()).unwrap(), p);
+        }
+        assert!(LisaPreset::parse("turbo").is_err());
+    }
+
+    #[test]
+    fn mechanism_implies_risc_substrate_only_for_lisa() {
+        let c = SimConfigBuilder::new()
+            .mechanism(CopyMechanism::LisaRisc)
+            .build()
+            .unwrap();
+        assert!(c.lisa.risc);
+        let c = SimConfigBuilder::new()
+            .mechanism(CopyMechanism::RowCloneInterSa)
+            .build()
+            .unwrap();
+        assert!(!c.lisa.risc);
+        // A base config's substrate survives a non-LISA mechanism.
+        let c = SimConfigBuilder::new()
+            .preset(LisaPreset::Risc)
+            .mechanism(CopyMechanism::MemcpyChannel)
+            .build()
+            .unwrap();
+        assert!(c.lisa.risc);
+        assert_eq!(c.copy_mechanism, CopyMechanism::MemcpyChannel);
+    }
+
+    #[test]
+    fn invalid_geometry_fails_build() {
+        assert!(SimConfigBuilder::new().banks(7).build().is_err());
+        assert!(SimConfigBuilder::new().cores(0).build().is_err());
+        assert!(SimConfigBuilder::new().warmup_frac(1.5).build().is_err());
+    }
+
+    #[test]
+    fn default_config_round_trips_through_toml() {
+        let cfg = SimConfigBuilder::new().build().unwrap();
+        let parsed = SimConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(cfg, parsed);
+    }
+
+    #[test]
+    fn prop_builder_round_trips_through_minitoml() {
+        // Satellite: build → to_toml → from_toml → equal, with random
+        // axis draws across every axis kind the experiment grids use
+        // plus geometry/seed/warmup perturbations.
+        let mechs = CopyMechanism::ALL;
+        check("builder ⇄ minitoml round trip", 128, |g| {
+            let mut b = SimConfigBuilder::new()
+                .requests(1 + g.u64(1 << 20))
+                .seed(g.u64(1 << 48))
+                .max_cycles(1 + g.u64(1 << 40))
+                .warmup_frac(g.f64() * 0.9)
+                .preset(*g.pick(&LisaPreset::ALL))
+                .mechanism(*g.pick(&mechs))
+                .salp(*g.pick(&SalpMode::ALL))
+                .placement(*g.pick(&PlacementPolicy::ALL))
+                .speed(*g.pick(&[SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400]));
+            if g.bool() {
+                b = b.cores(1 << g.usize(4));
+            }
+            if g.bool() {
+                b = b.banks(1 << (1 + g.usize(4)));
+            }
+            if g.bool() {
+                b = b.subarrays_per_bank(1 << (1 + g.usize(5)));
+            }
+            if g.bool() {
+                b = b.villa_epoch_cycles(1 + g.u64(1 << 20));
+            }
+            let cfg = b.build().unwrap();
+            let toml = cfg.to_toml();
+            let parsed = SimConfig::from_toml(&toml)
+                .unwrap_or_else(|e| panic!("reparse failed: {e}\n{toml}"));
+            assert_eq!(cfg, parsed, "round trip must be lossless:\n{toml}");
+        });
+    }
+}

@@ -1,7 +1,11 @@
 //! Configuration: a TOML-subset parser (`minitoml`, built in-tree —
-//! no serde offline) plus the typed simulator configuration tree.
+//! no serde offline), the typed simulator configuration tree, and the
+//! `SimConfigBuilder` every experiment derives its configs from.
 
+pub mod builder;
 pub mod minitoml;
+
+pub use builder::{LisaPreset, SimConfigBuilder};
 
 use std::path::Path;
 
@@ -28,6 +32,15 @@ pub enum CopyMechanism {
 }
 
 impl CopyMechanism {
+    /// All mechanisms, in Table 1 order.
+    pub const ALL: [CopyMechanism; 5] = [
+        CopyMechanism::MemcpyChannel,
+        CopyMechanism::RowCloneIntraSa,
+        CopyMechanism::RowCloneInterBank,
+        CopyMechanism::RowCloneInterSa,
+        CopyMechanism::LisaRisc,
+    ];
+
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "memcpy" => Self::MemcpyChannel,
@@ -177,7 +190,7 @@ impl PlacementPolicy {
 }
 
 /// OS-layer (virtual memory + bulk-operation subsystem) configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OsConfig {
     /// Frame placement policy for the subarray-aware allocator.
     pub placement: PlacementPolicy,
@@ -192,7 +205,7 @@ impl Default for OsConfig {
 /// DRAM organization. Defaults mirror the paper's configuration:
 /// DDR3-1600, 1 channel, 1 rank, 8 banks, 16 subarrays/bank,
 /// 512 rows/subarray, 8 KB rows (128 cache lines of 64 B).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DramConfig {
     pub channels: usize,
     pub ranks: usize,
@@ -241,7 +254,7 @@ impl DramConfig {
 }
 
 /// LISA feature switches (the paper's three applications).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LisaConfig {
     /// LISA-RISC: inter-subarray copies use RBM.
     pub risc: bool,
@@ -278,7 +291,7 @@ impl Default for LisaConfig {
 }
 
 /// CPU / cache hierarchy configuration (quad-core, paper §9 setup).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CpuConfig {
     pub cores: usize,
     /// CPU clock as a multiple of the DRAM bus clock (3.2 GHz / 800 MHz).
@@ -326,7 +339,7 @@ impl Default for CpuConfig {
 /// JAX/Pallas circuit artifacts through PJRT; the defaults below are
 /// the same values the checked-in circuit model yields, so the
 /// simulator is usable (and the test suite hermetic) without artifacts.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Calibration {
     /// Row buffer movement latency per hop, ns (raw circuit time x the
     /// paper's 60% process/temperature guard band).
@@ -369,7 +382,7 @@ impl Default for Calibration {
 }
 
 /// Top-level simulator configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
     pub dram: DramConfig,
     pub lisa: LisaConfig,
@@ -524,6 +537,85 @@ impl SimConfig {
             bail!("warmup_frac must be in [0,1)");
         }
         Ok(())
+    }
+
+    /// Serialize the full configuration as minitoml text. Covers every
+    /// key `apply` reads, so `SimConfig::from_toml(&cfg.to_toml())`
+    /// round-trips to an equal config for any builder-constructed
+    /// value (property-tested in `config/builder.rs`). Fields `apply`
+    /// cannot read (e.g. cache way counts/latencies) are intentionally
+    /// not serialized — the builder exposes no setters for them, so
+    /// they always carry their defaults.
+    pub fn to_toml(&self) -> String {
+        format!(
+            "[dram]\n\
+             channels = {}\n\
+             ranks = {}\n\
+             banks = {}\n\
+             subarrays_per_bank = {}\n\
+             rows_per_subarray = {}\n\
+             columns = {}\n\
+             speed = \"{}\"\n\
+             salp = \"{}\"\n\
+             \n[lisa]\n\
+             risc = {}\n\
+             villa = {}\n\
+             lip = {}\n\
+             fast_subarrays_per_bank = {}\n\
+             fast_rows_per_subarray = {}\n\
+             villa_epoch_cycles = {}\n\
+             villa_counters = {}\n\
+             villa_hot_per_epoch = {}\n\
+             \n[cpu]\n\
+             cores = {}\n\
+             clock_ratio = {}\n\
+             rob_size = {}\n\
+             mshrs = {}\n\
+             issue_width = {}\n\
+             l1_kb = {}\n\
+             l2_kb = {}\n\
+             llc_kb = {}\n\
+             \n[os]\n\
+             placement = \"{}\"\n\
+             \n{}\
+             \n[sim]\n\
+             copy_mechanism = \"{}\"\n\
+             requests_per_core = {}\n\
+             warmup_frac = {}\n\
+             max_cycles = {}\n\
+             seed = {}\n",
+            self.dram.channels,
+            self.dram.ranks,
+            self.dram.banks,
+            self.dram.subarrays_per_bank,
+            self.dram.rows_per_subarray,
+            self.dram.columns,
+            self.dram.speed.name(),
+            self.dram.salp.name(),
+            self.lisa.risc,
+            self.lisa.villa,
+            self.lisa.lip,
+            self.lisa.fast_subarrays_per_bank,
+            self.lisa.fast_rows_per_subarray,
+            self.lisa.villa_epoch_cycles,
+            self.lisa.villa_counters,
+            self.lisa.villa_hot_per_epoch,
+            self.cpu.cores,
+            self.cpu.clock_ratio,
+            self.cpu.rob_size,
+            self.cpu.mshrs,
+            self.cpu.issue_width,
+            self.cpu.l1_kb,
+            self.cpu.l2_kb,
+            self.cpu.llc_kb,
+            self.os.placement.name(),
+            Self::calibration_toml(&self.calibration),
+            self.copy_mechanism.name(),
+            self.requests_per_core,
+            self.warmup_frac,
+            self.max_cycles,
+            self.seed,
+        )
     }
 
     /// Serialize the calibration section (written by `lisa calibrate`).

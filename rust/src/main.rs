@@ -1,20 +1,26 @@
 //! `lisa` — CLI for the LISA reproduction: calibration, single
-//! workload runs, and the paper's experiments (E1-E8).
+//! workload runs, and the declarative experiment registry (`lisa exp`)
+//! covering the paper's evaluation grids E4–E10 plus sweeps. The
+//! historical per-experiment subcommands (`fig3`, `os`, `salp`, ...)
+//! are thin aliases onto the registry.
 
 use std::path::Path;
 
 use anyhow::{bail, Result};
 
 use lisa::cli::Args;
-use lisa::config::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
-use lisa::dram::timing::SpeedBin;
+use lisa::config::SimConfig;
 use lisa::sim::campaign;
 use lisa::sim::engine::run_workload;
 use lisa::sim::experiments as exp;
+use lisa::sim::spec::{self, ExperimentSpec, RunOptions};
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
 
-const USAGE: &str = "\
+/// The static half of the usage text; the experiment half is
+/// generated from the spec registry (`usage()` below), so the two can
+/// never drift.
+const USAGE_HEADER: &str = "\
 lisa — LISA (Low-Cost Inter-Linked Subarrays) full-system reproduction
 
 USAGE: lisa <command> [options]
@@ -24,32 +30,18 @@ COMMANDS
                                              write calibration.toml
                                              (needs the `runtime` feature)
   run         --workload NAME [--config F] [--requests N] [--threads N] [--ws]
-  sweep       [--mechs A,B] [--speeds A,B] [--workloads A,B | --mixes N]
-              [--requests N] [--threads N] [--out FILE]
-              parallel {mechanism x workload x speed-bin} campaign,
-              JSON report to --out (or stdout)
   list-workloads
   table1      [--config F]                   E1: 8 KB copy latency/energy
   rbm         E2: RBM bandwidth vs channel
   lip         E3: linked precharge latency
-  fig3        [--requests N] [--mixes N] [--threads N]   E4: LISA-VILLA
-  fig4        [--requests N] [--mixes N] [--threads N]   E5/E6: combined speedups
-  lip-system  [--requests N] [--mixes N] [--threads N]   E7: LIP system-level
   area        E8: die area overhead
-  os          [--requests N] [--threads N] [--mechs A,B] [--policies A,B]
-              [--scenarios A,B] [--out FILE]
-              E9: OS-level bulk ops (fork / zeroing / checkpoint /
-              promotion) across copy mechanisms x placement policies,
-              JSON report to --out (or stdout)
-  salp        [--requests N] [--threads N] [--mechs A,B] [--modes A,B]
-              [--policies A,B] [--workloads A,B] [--out FILE]
-              E10: subarray-level parallelism (none|salp1|salp2|masa)
-              composed with LISA across copy mechanisms x placement
-              policies on intra-bank-conflict workloads,
-              JSON report to --out (or stdout)
+  exp         declarative experiment grids — see below
 
-`--threads 0` (or omitting --threads) auto-detects the available
-hardware parallelism on every campaign-backed subcommand.
+Every experiment subcommand accepts [--requests N] [--threads N]
+[--out FILE]; `--threads 0` (or omitting --threads) auto-detects the
+available hardware parallelism. Without --out the JSON report goes to
+stdout and the table to stderr; with --out the JSON goes to the file.
+
 ";
 
 const COMMANDS: &[&str] = &[
@@ -66,7 +58,12 @@ const COMMANDS: &[&str] = &[
     "area",
     "os",
     "salp",
+    "exp",
 ];
+
+fn usage() -> String {
+    format!("{USAGE_HEADER}{}", spec::usage())
+}
 
 fn load_config(args: &Args) -> Result<SimConfig> {
     let mut cfg = match args.opt("config") {
@@ -93,13 +90,12 @@ fn load_config(args: &Args) -> Result<SimConfig> {
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let Some(cmd) = args.check_subcommand(COMMANDS)?.map(str::to_string) else {
-        print!("{USAGE}");
+        print!("{}", usage());
         return Ok(());
     };
     match cmd.as_str() {
         "calibrate" => cmd_calibrate(&args),
         "run" => cmd_run(&args),
-        "sweep" => cmd_sweep(&args),
         "list-workloads" => {
             let cfg = SimConfig::default();
             for w in mixes::all_mixes(&cfg) {
@@ -128,11 +124,6 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
-        "fig3" => cmd_fig3(&args),
-        "fig4" => cmd_fig4(&args),
-        "lip-system" => cmd_lip_system(&args),
-        "os" => cmd_os(&args),
-        "salp" => cmd_salp(&args),
         "area" => {
             let cfg = load_config(&args)?;
             let r = exp::area_report(&cfg);
@@ -146,7 +137,14 @@ fn main() -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown command '{other}'\n{USAGE}"),
+        "exp" => cmd_exp(&args),
+        // Legacy experiment subcommands: thin aliases onto the spec
+        // registry — same option flags, same pipeline, byte-identical
+        // JSON to `lisa exp <spec>`.
+        "fig3" | "fig4" | "lip-system" | "os" | "salp" | "sweep" => {
+            run_experiment(&spec::spec_for_alias(&cmd)?, &args)
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
     }
 }
 
@@ -185,7 +183,7 @@ fn cmd_calibrate(_args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let name = args.opt_or("workload", "stream4");
-    let threads = parse_threads(args)?;
+    let threads = campaign::resolve_threads(args.opt_usize("threads")?);
     let wl = mixes::workload_by_name(name, &cfg)?;
     if args.has_flag("ws") {
         // The N alone runs + the shared run go through the campaign
@@ -196,71 +194,6 @@ fn cmd_run(args: &Args) -> Result<()> {
     } else {
         let report = run_workload(&cfg, &wl);
         print_report(&report);
-    }
-    Ok(())
-}
-
-/// Parse a comma-separated list through an item parser.
-fn parse_list<T>(s: &str, parse: impl Fn(&str) -> Result<T>) -> Result<Vec<T>> {
-    s.split(',')
-        .map(str::trim)
-        .filter(|t| !t.is_empty())
-        .map(parse)
-        .collect()
-}
-
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let base = load_config(args)?;
-    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
-    let threads = parse_threads(args)?;
-    let mechanisms =
-        parse_list(args.opt_or("mechs", "memcpy,lisa-risc"), CopyMechanism::parse)?;
-    let speeds = parse_list(args.opt_or("speeds", "ddr3-1600"), SpeedBin::parse)?;
-    let workloads: Vec<String> = match args.opt("workloads") {
-        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
-        None => {
-            // Default grid: the micro suite plus the first N copy mixes.
-            let n_mixes = args.opt_usize("mixes")?.unwrap_or(4);
-            let mut w: Vec<String> =
-                vec!["stream4".into(), "random4".into(), "hotspot4".into(), "fork4".into()];
-            w.extend((0..n_mixes).map(|i| format!("copy-mix-{i:02}")));
-            w
-        }
-    };
-    let spec = campaign::SweepSpec { base, mechanisms, speeds, workloads, requests, threads };
-    let n_points = spec.points().len();
-    eprintln!("sweep: {n_points} points on {threads} threads");
-    let t0 = std::time::Instant::now();
-    let rows = campaign::run_sweep(&spec)?;
-    eprintln!("sweep: done in {:.2} s", t0.elapsed().as_secs_f64());
-
-    let mut table = Table::new(&[
-        "workload", "speed", "mechanism", "cycles", "IPC sum", "copies", "energy uJ",
-    ]);
-    for r in &rows {
-        table.row(&[
-            r.workload.clone(),
-            r.speed.to_string(),
-            r.mechanism.to_string(),
-            format!("{}", r.report.dram_cycles),
-            format!("{:.3}", r.report.ipc_sum()),
-            format!("{}", r.report.copies),
-            format!("{:.1}", r.report.energy.total),
-        ]);
-    }
-    let json = campaign::sweep_json(&rows);
-    match args.opt("out") {
-        Some(path) => {
-            std::fs::write(path, &json)?;
-            table.print();
-            println!("wrote {path}");
-        }
-        None => {
-            // JSON goes to stdout (machine-parseable / pipeable); the
-            // human-readable table joins the progress lines on stderr.
-            eprintln!("{}", table.render());
-            print!("{json}");
-        }
     }
     Ok(())
 }
@@ -312,165 +245,85 @@ fn cmd_table1(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `--threads N` — shared by every campaign-backed subcommand. Absent
-/// or `0` auto-detects the available hardware parallelism.
-fn parse_threads(args: &Args) -> Result<usize> {
-    Ok(campaign::resolve_threads(args.opt_usize("threads")?))
-}
-
-fn cmd_fig3(args: &Args) -> Result<()> {
-    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
-    let mixes_n = args.opt_usize("mixes")?.unwrap_or(8);
-    let rows = exp::fig3(requests, mixes_n, parse_threads(args)?);
-    let mut t = Table::new(&["workload", "villa +%", "hit rate %", "rc-inter +%"]);
-    for r in &rows {
-        t.row(&[
-            r.workload.clone(),
-            format!("{:+.1}", r.villa_improvement * 100.0),
-            format!("{:.1}", r.villa_hit_rate * 100.0),
-            format!("{:+.1}", r.rc_inter_improvement * 100.0),
-        ]);
+/// `lisa exp [--list] | lisa exp <name> [--<axis> a,b] [...]`.
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args.positional.first().map(String::as_str);
+    if name.is_none() || args.has_flag("list") {
+        if args.has_flag("list") {
+            // Compact registry listing (the CI smoke step).
+            let mut t = Table::new(&["name", "points", "eval", "description"]);
+            for s in spec::registry() {
+                t.row(&[
+                    s.name.clone(),
+                    format!("{}", s.default_points()),
+                    format!("{:?}", s.eval),
+                    s.title.clone(),
+                ]);
+            }
+            t.print();
+        } else {
+            print!("{}", spec::usage());
+        }
+        return Ok(());
     }
-    t.print();
-    Ok(())
+    let s = spec::spec_by_name(name.unwrap())?;
+    run_experiment(&s, args)
 }
 
-fn cmd_fig4(args: &Args) -> Result<()> {
-    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
-    let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
-    let cmps = exp::fig4(requests, mixes_n, parse_threads(args)?);
-    let mut t = Table::new(&["config", "mean WS +%", "geomean x", "max +%", "energy -%"]);
-    for c in &cmps {
-        t.row(&[
-            c.name.clone(),
-            format!("{:+.1}", c.mean_ws_improvement() * 100.0),
-            format!("{:.3}", c.geomean_speedup()),
-            format!("{:+.1}", c.max_ws_improvement() * 100.0),
-            format!("{:.1}", c.mean_energy_reduction() * 100.0),
-        ]);
-    }
-    t.print();
-    println!("(paper Fig. 4: RISC +59.6%, +VILLA +16.5% over RISC, +LIP +8.8% over RISC+VILLA, all +94.8%, energy -49%)");
-    Ok(())
-}
-
-fn cmd_os(args: &Args) -> Result<()> {
-    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
-    let threads = parse_threads(args)?;
-    let mechanisms = match args.opt("mechs") {
-        Some(s) => parse_list(s, CopyMechanism::parse)?,
-        None => exp::E9_MECHANISMS.to_vec(),
-    };
-    let policies = match args.opt("policies") {
-        Some(s) => parse_list(s, PlacementPolicy::parse)?,
-        None => PlacementPolicy::ALL.to_vec(),
-    };
-    let scenarios: Vec<String> = match args.opt("scenarios") {
-        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
-        None => exp::E9_SCENARIOS.iter().map(|s| s.to_string()).collect(),
-    };
-    let n = scenarios.len() * mechanisms.len() * policies.len();
-    eprintln!("os: {n} points on {threads} threads");
+/// The one experiment pipeline behind `lisa exp <name>` and every
+/// legacy alias: parse shared options, expand + run the grid, emit
+/// the unified table/JSON report.
+fn run_experiment(s: &ExperimentSpec, args: &Args) -> Result<()> {
+    let opts = RunOptions::from_args(s, args)?;
+    let n_points: usize = spec::effective_axes(s, &opts)?
+        .iter()
+        .map(|(_, v)| v.len())
+        .product();
+    eprintln!("{}: {} points on {} threads", s.name, n_points, opts.threads);
     let t0 = std::time::Instant::now();
-    let rows = exp::e9_os(requests, &mechanisms, &policies, &scenarios, threads)?;
-    eprintln!("os: done in {:.2} s", t0.elapsed().as_secs_f64());
+    let report = spec::run(s, &opts)?;
+    eprintln!("{}: done in {:.2} s", s.name, t0.elapsed().as_secs_f64());
+    emit_report(args, &report)
+}
 
-    let mut table = Table::new(&[
-        "scenario", "mechanism", "policy", "cycles", "IPC sum", "pages", "RISC hit %",
-        "faults",
-    ]);
-    for r in &rows {
-        let os = r.report.os.clone().unwrap_or_default();
-        table.row(&[
-            r.scenario.clone(),
-            r.mechanism.to_string(),
-            r.policy.to_string(),
-            format!("{}", r.report.dram_cycles),
-            format!("{:.3}", r.report.ipc_sum()),
-            format!("{}", os.pages_copied),
-            format!("{:.1}", os.risc_hit_rate() * 100.0),
-            format!("{}", os.cow_faults + os.demand_faults),
-        ]);
-    }
-    let json = exp::os_json(&rows);
+/// Shared report writing: JSON to `--out` (table + confirmation to
+/// stdout), or JSON to stdout with the table on stderr so the
+/// machine-readable document stays pipeable.
+fn emit_report(args: &Args, report: &spec::Report) -> Result<()> {
+    let table = report.table();
+    let json = report.to_json();
+    let summaries = report.ws_summary();
+    let render_summary = |to_stderr: bool| {
+        for c in &summaries {
+            let line = format!(
+                "{}: mean WS {:+.1}%  geomean {:.3}x  max {:+.1}%  energy -{:.1}% \
+                 (vs the first preset, {} workloads)",
+                c.name,
+                c.mean_ws_improvement() * 100.0,
+                c.geomean_speedup(),
+                c.max_ws_improvement() * 100.0,
+                c.mean_energy_reduction() * 100.0,
+                c.ws_improvements.len()
+            );
+            if to_stderr {
+                eprintln!("{line}");
+            } else {
+                println!("{line}");
+            }
+        }
+    };
     match args.opt("out") {
         Some(path) => {
             std::fs::write(path, &json)?;
             table.print();
+            render_summary(false);
             println!("wrote {path}");
         }
         None => {
             eprintln!("{}", table.render());
+            render_summary(true);
             print!("{json}");
         }
     }
-    Ok(())
-}
-
-fn cmd_salp(args: &Args) -> Result<()> {
-    let requests = args.opt_u64("requests")?.unwrap_or(2_000);
-    let threads = parse_threads(args)?;
-    let mechanisms = match args.opt("mechs") {
-        Some(s) => parse_list(s, CopyMechanism::parse)?,
-        None => exp::E10_MECHANISMS.to_vec(),
-    };
-    let modes = match args.opt("modes") {
-        Some(s) => parse_list(s, SalpMode::parse)?,
-        None => SalpMode::ALL.to_vec(),
-    };
-    let policies = match args.opt("policies") {
-        Some(s) => parse_list(s, PlacementPolicy::parse)?,
-        None => PlacementPolicy::ALL.to_vec(),
-    };
-    let workloads: Vec<String> = match args.opt("workloads") {
-        Some(s) => s.split(',').map(|t| t.trim().to_string()).collect(),
-        None => exp::E10_WORKLOADS.iter().map(|s| s.to_string()).collect(),
-    };
-    let n = workloads.len() * mechanisms.len() * modes.len() * policies.len();
-    eprintln!("salp: {n} points on {threads} threads");
-    let t0 = std::time::Instant::now();
-    let rows = exp::e10_salp(requests, &mechanisms, &modes, &policies, &workloads, threads)?;
-    eprintln!("salp: done in {:.2} s", t0.elapsed().as_secs_f64());
-
-    let mut table = Table::new(&[
-        "workload", "mechanism", "mode", "policy", "cycles", "IPC sum", "row-hit %",
-        "copies",
-    ]);
-    for r in &rows {
-        table.row(&[
-            r.workload.clone(),
-            r.mechanism.to_string(),
-            r.mode.to_string(),
-            r.policy.to_string(),
-            format!("{}", r.report.dram_cycles),
-            format!("{:.3}", r.report.ipc_sum()),
-            format!("{:.1}", r.report.row_hit_rate * 100.0),
-            format!("{}", r.report.copies),
-        ]);
-    }
-    let json = exp::salp_json(&rows);
-    match args.opt("out") {
-        Some(path) => {
-            std::fs::write(path, &json)?;
-            table.print();
-            println!("wrote {path}");
-        }
-        None => {
-            eprintln!("{}", table.render());
-            print!("{json}");
-        }
-    }
-    Ok(())
-}
-
-fn cmd_lip_system(args: &Args) -> Result<()> {
-    let requests = args.opt_u64("requests")?.unwrap_or(3_000);
-    let mixes_n = args.opt_usize("mixes")?.unwrap_or(50);
-    let c = exp::lip_system(requests, mixes_n, parse_threads(args)?);
-    println!(
-        "LISA-LIP: mean WS improvement {:+.1}% across {} mixes (paper: +10.3%)",
-        c.mean_ws_improvement() * 100.0,
-        c.ws_improvements.len()
-    );
     Ok(())
 }

@@ -7,19 +7,17 @@
 //! claimed from an atomic cursor and their results written back by
 //! index, so the same campaign at 1, 2 or N threads yields identical
 //! ordered results — only wall-clock time changes. Used by the
-//! weighted-speedup helper (the N alone runs + 1 shared run), the
-//! experiment drivers (E4–E7) and the `sweep` CLI subcommand.
+//! weighted-speedup helper (the N alone runs + 1 shared run) and the
+//! declarative experiment grids (`sim/spec.rs`), which expand every
+//! `ExperimentSpec` into the jobs sharded here.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use anyhow::Result;
-
-use crate::config::{CopyMechanism, SimConfig};
-use crate::dram::timing::SpeedBin;
-use crate::metrics::{json, RunReport};
+use crate::config::SimConfig;
+use crate::metrics::RunReport;
 use crate::sim::engine::Simulation;
-use crate::workloads::{mixes, Workload};
+use crate::workloads::Workload;
 
 /// Default worker count: one per available hardware thread.
 pub fn default_threads() -> usize {
@@ -124,116 +122,10 @@ pub fn weighted_speedup(
     (shared.weighted_speedup(&alone), shared)
 }
 
-// ---------------------------------------------------------------------------
-// Sweep campaigns: {mechanism × workload × speed-bin} grids.
-// ---------------------------------------------------------------------------
-
-/// One point of a sweep grid.
-#[derive(Debug, Clone)]
-pub struct SweepPoint {
-    pub mechanism: CopyMechanism,
-    pub speed: SpeedBin,
-    pub workload: String,
-}
-
-/// A sweep campaign: the cross product of mechanisms, speed bins and
-/// workload names over a base configuration.
-#[derive(Debug, Clone)]
-pub struct SweepSpec {
-    pub base: SimConfig,
-    pub mechanisms: Vec<CopyMechanism>,
-    pub speeds: Vec<SpeedBin>,
-    pub workloads: Vec<String>,
-    pub requests: u64,
-    pub threads: usize,
-}
-
-impl SweepSpec {
-    /// Grid order: workload-major, then speed, then mechanism — so all
-    /// mechanism columns for one (workload, speed) row are adjacent.
-    pub fn points(&self) -> Vec<SweepPoint> {
-        let mut out = Vec::new();
-        for workload in &self.workloads {
-            for &speed in &self.speeds {
-                for &mechanism in &self.mechanisms {
-                    out.push(SweepPoint {
-                        mechanism,
-                        speed,
-                        workload: workload.clone(),
-                    });
-                }
-            }
-        }
-        out
-    }
-}
-
-/// The base configuration specialized to one grid point. LISA-RISC
-/// implies the RISC substrate is present (matching `cfg_risc`); other
-/// LISA switches follow the base configuration untouched.
-pub fn point_config(base: &SimConfig, point: &SweepPoint, requests: u64) -> SimConfig {
-    let mut cfg = base.clone();
-    cfg.requests_per_core = requests;
-    cfg.dram.speed = point.speed;
-    cfg.copy_mechanism = point.mechanism;
-    if point.mechanism == CopyMechanism::LisaRisc {
-        cfg.lisa.risc = true;
-    }
-    cfg
-}
-
-/// One finished sweep point.
-#[derive(Debug, Clone, PartialEq)]
-pub struct SweepRow {
-    pub mechanism: &'static str,
-    pub speed: &'static str,
-    pub workload: String,
-    pub report: RunReport,
-}
-
-/// Run the whole grid through the campaign runner. Workload names are
-/// resolved up front so a typo fails fast instead of mid-campaign.
-pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepRow>> {
-    let points = spec.points();
-    let mut jobs = Vec::with_capacity(points.len());
-    for p in &points {
-        let cfg = point_config(&spec.base, p, spec.requests);
-        let wl = mixes::workload_by_name(&p.workload, &cfg)?;
-        jobs.push(move || Simulation::new(cfg, wl).run());
-    }
-    let reports = run_jobs(jobs, spec.threads);
-    Ok(points
-        .into_iter()
-        .zip(reports)
-        .map(|(p, report)| SweepRow {
-            mechanism: p.mechanism.name(),
-            speed: p.speed.name(),
-            workload: p.workload,
-            report,
-        })
-        .collect())
-}
-
-/// JSON document for a finished sweep (`lisa sweep --out report.json`).
-pub fn sweep_json(rows: &[SweepRow]) -> String {
-    let body: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"mechanism\":{},\"speed\":{},\"workload\":{},\"report\":{}}}",
-                json::string(r.mechanism),
-                json::string(r.speed),
-                json::string(&r.workload),
-                r.report.to_json()
-            )
-        })
-        .collect();
-    format!("{{\"sweep\":[\n{}\n]}}\n", body.join(",\n"))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::mixes;
 
     #[test]
     fn threads_zero_autodetects() {
@@ -274,58 +166,17 @@ mod tests {
     }
 
     #[test]
-    fn sweep_grid_shape_and_config() {
-        let spec = SweepSpec {
-            base: SimConfig::default(),
-            mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
-            speeds: vec![SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400],
-            workloads: vec!["stream4".into(), "fork4".into()],
-            requests: 100,
-            threads: 1,
-        };
-        let points = spec.points();
-        assert_eq!(points.len(), 8);
-        // Workload-major ordering.
-        assert!(points[..4].iter().all(|p| p.workload == "stream4"));
-        let cfg = point_config(&spec.base, &points[1], 100);
-        assert_eq!(cfg.copy_mechanism, CopyMechanism::LisaRisc);
-        assert!(cfg.lisa.risc, "LISA-RISC points enable the substrate");
-        assert_eq!(cfg.requests_per_core, 100);
-    }
-
-    #[test]
-    fn sweep_rejects_unknown_workloads() {
-        let spec = SweepSpec {
-            base: SimConfig::default(),
-            mechanisms: vec![CopyMechanism::MemcpyChannel],
-            speeds: vec![SpeedBin::Ddr3_1600],
-            workloads: vec!["no-such-workload".into()],
-            requests: 100,
-            threads: 1,
-        };
-        assert!(run_sweep(&spec).is_err());
-    }
-
-    #[test]
-    fn campaign_is_deterministic_across_thread_counts() {
-        let spec = SweepSpec {
-            base: SimConfig::default(),
-            mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
-            speeds: vec![SpeedBin::Ddr3_1600],
-            workloads: vec!["stream4".into(), "fork4".into()],
-            requests: 400,
-            threads: 1,
-        };
-        let serial = run_sweep(&spec).unwrap();
-        assert_eq!(serial.len(), 4);
-        for threads in [2, 8] {
-            let mut spec_n = spec.clone();
-            spec_n.threads = threads;
-            let parallel = run_sweep(&spec_n).unwrap();
-            assert_eq!(serial, parallel, "threads={threads}");
-        }
-        assert!(serial.iter().all(|r| r.report.dram_cycles > 0));
-        assert_eq!(sweep_json(&serial).matches("\"mechanism\"").count(), 4);
+    fn run_reports_preserves_point_order() {
+        let mut cfg = SimConfig::default();
+        cfg.requests_per_core = 300;
+        let wl_a = mixes::workload_by_name("stream4", &cfg).unwrap();
+        let wl_b = mixes::workload_by_name("fork4", &cfg).unwrap();
+        let points =
+            vec![(cfg.clone(), wl_a.clone()), (cfg.clone(), wl_b.clone())];
+        let serial = run_reports(points.clone(), 1);
+        assert_eq!(serial[0].workload, "stream4");
+        assert_eq!(serial[1].workload, "fork4");
+        assert_eq!(serial, run_reports(points, 4));
     }
 
     #[test]

@@ -194,7 +194,12 @@ impl Simulation {
     }
 }
 
-/// Human-readable configuration label for reports.
+/// Human-readable configuration label for reports. Every knob an
+/// experiment axis can move appears in the name when it is off its
+/// default, so two distinct grid points can never alias (collision-
+/// tested over the full built-in registry grid in
+/// `tests/experiment_api.rs`). Default-valued knobs are elided to
+/// keep the common labels short ("memcpy", "lisa-risc+villa", ...).
 pub fn config_name(cfg: &SimConfig) -> String {
     let mut parts = vec![cfg.copy_mechanism.name().to_string()];
     if cfg.lisa.villa {
@@ -202,6 +207,13 @@ pub fn config_name(cfg: &SimConfig) -> String {
     }
     if cfg.lisa.lip {
         parts.push("lip".into());
+    }
+    if cfg.dram.salp != crate::config::SalpMode::None {
+        parts.push(format!("salp:{}", cfg.dram.salp.name()));
+    }
+    let default_placement = crate::config::OsConfig::default().placement;
+    if cfg.os.placement != default_placement {
+        parts.push(format!("place:{}", cfg.os.placement.name()));
     }
     parts.join("+")
 }

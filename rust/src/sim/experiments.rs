@@ -1,20 +1,23 @@
-//! Experiment drivers: one function per paper table/figure (DESIGN.md
-//! per-experiment index E1-E8). Shared by the bench targets, the
-//! examples and the CLI so every surface reports identical numbers.
+//! Experiment drivers for the circuit-level artifacts (Table 1, RBM,
+//! LIP, area) plus thin derivations of the paper's figure aggregates
+//! from the declarative experiment API (`sim/spec.rs`). The
+//! system-level grids themselves — which configs run on which
+//! workloads — live in the spec registry; this module only reduces
+//! unified [`spec::Report`]s to the figure-shaped summaries the bench
+//! targets and examples print.
 
 use anyhow::Result;
 
-use crate::config::{Calibration, CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
+use crate::config::{Calibration, CopyMechanism, SimConfig};
 use crate::copy::isolated_copy;
 use crate::dram::area::AreaModel;
 use crate::dram::timing::SpeedBin;
 use crate::energy::EnergyModel;
 use crate::lisa::lip::{lip_report, LipReport};
 use crate::lisa::rbm::{rbm_bandwidth, RbmBandwidth};
-use crate::metrics::{json, Comparison, RunReport};
-use crate::sim::campaign;
-use crate::sim::engine::{alone_ipcs, run_workload, Simulation};
-use crate::workloads::mixes;
+use crate::metrics::Comparison;
+use crate::sim::engine::{alone_ipcs, run_workload};
+use crate::sim::spec::{self, RunOptions};
 use crate::workloads::Workload;
 
 /// E1 (Table 1 / Fig. 2): one row per copy mechanism.
@@ -72,60 +75,8 @@ pub fn area_report(cfg: &SimConfig) -> crate::dram::area::AreaReport {
 }
 
 // ---------------------------------------------------------------------------
-// System-level configurations (Fig. 3 / Fig. 4 / §3.1.2).
+// Weighted-speedup helpers (shared by the bench targets).
 // ---------------------------------------------------------------------------
-
-/// Baseline: memcpy over the channel, standard DRAM.
-pub fn cfg_baseline(requests: u64) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.copy_mechanism = CopyMechanism::MemcpyChannel;
-    cfg.requests_per_core = requests;
-    cfg
-}
-
-/// LISA-RISC only.
-pub fn cfg_risc(requests: u64) -> SimConfig {
-    let mut cfg = cfg_baseline(requests);
-    cfg.lisa.risc = true;
-    cfg.copy_mechanism = CopyMechanism::LisaRisc;
-    cfg
-}
-
-/// LISA-RISC + LISA-VILLA.
-pub fn cfg_risc_villa(requests: u64) -> SimConfig {
-    let mut cfg = cfg_risc(requests);
-    cfg.lisa.villa = true;
-    // Short epochs relative to the bounded run lengths used in the
-    // bench harness (the paper's epoch is sized against full SPEC
-    // runs; what matters is epochs << run length).
-    cfg.lisa.villa_epoch_cycles = 5_000;
-    cfg
-}
-
-/// All three LISA applications (Fig. 4 "All").
-pub fn cfg_all(requests: u64) -> SimConfig {
-    let mut cfg = cfg_risc_villa(requests);
-    cfg.lisa.lip = true;
-    cfg
-}
-
-/// LIP only (E7).
-pub fn cfg_lip(requests: u64) -> SimConfig {
-    let mut cfg = cfg_baseline(requests);
-    cfg.lisa.lip = true;
-    cfg
-}
-
-/// VILLA with RowClone inter-subarray movement (Fig. 3's comparison:
-/// the paper shows this LOSES 52.3% because RC movement is slow and
-/// blocks the internal bus).
-pub fn cfg_villa_rc(requests: u64) -> SimConfig {
-    let mut cfg = cfg_baseline(requests);
-    cfg.lisa.villa = true;
-    cfg.lisa.risc = false; // fills fall back to RC-InterSA
-    cfg.lisa.villa_epoch_cycles = 5_000;
-    cfg
-}
 
 /// One configuration's weighted-speedup measurement on a workload.
 #[derive(Debug, Clone)]
@@ -171,8 +122,6 @@ pub fn improvement(base: &WsPoint, cfg: &WsPoint) -> (f64, f64) {
 /// Weighted-speedup improvement of `cfg` over `base` on a workload:
 /// (WS_cfg / WS_base) - 1, each normalized by its own alone runs.
 /// Also returns the energy reduction fraction and villa hit rate.
-/// (Prefer `ws_point` + `improvement` when comparing several configs
-/// against one baseline — it avoids re-running the baseline.)
 pub fn ws_improvement(
     base: &SimConfig,
     cfg: &SimConfig,
@@ -182,6 +131,19 @@ pub fn ws_improvement(
     let c = ws_point(cfg, workload);
     let (imp, en) = improvement(&b, &c);
     (imp, en, c.villa_hit_rate)
+}
+
+// ---------------------------------------------------------------------------
+// Figure-shaped derivations over the declarative experiment API.
+// ---------------------------------------------------------------------------
+
+fn run_builtin(name: &str, requests: u64, max_mixes: usize, threads: usize) -> spec::Report {
+    let s = spec::spec_by_name(name).expect("built-in spec present");
+    let opts = RunOptions::default()
+        .requests(requests)
+        .mixes(max_mixes)
+        .threads(threads);
+    spec::run(&s, &opts).expect("built-in grid runs")
 }
 
 /// E4 (Fig. 3) row.
@@ -194,299 +156,71 @@ pub struct Fig3Row {
 }
 
 /// E4 (Fig. 3): LISA-VILLA improvement + hit rate per hot-region
-/// workload, plus the RC-InterSA-movement comparison. Each mix is an
-/// independent job, sharded across the campaign runner (result order
-/// is the mix order regardless of thread count).
+/// workload, plus the RC-InterSA-movement comparison — the `fig3`
+/// spec's {workload × baseline/risc-villa/villa-rc} grid reduced to
+/// the figure's per-workload rows.
 pub fn fig3(requests: u64, max_mixes: usize, threads: usize) -> Vec<Fig3Row> {
-    let base = cfg_baseline(requests);
-    let villa = cfg_risc_villa(requests);
-    let villa_rc = cfg_villa_rc(requests);
-    let mixes = mixes::villa_mixes(base.cpu.cores);
-    let jobs: Vec<_> = mixes
-        .iter()
-        .take(max_mixes)
-        .map(|wl| {
-            let base = base.clone();
-            let villa = villa.clone();
-            let villa_rc = villa_rc.clone();
-            move || {
-                let alone = alone_ipcs(&base, wl);
-                let b = ws_point_with(&base, wl, &alone);
-                let v = ws_point_with(&villa, wl, &alone);
-                let rc = ws_point_with(&villa_rc, wl, &alone);
-                Fig3Row {
-                    workload: wl.name.clone(),
-                    villa_improvement: improvement(&b, &v).0,
-                    villa_hit_rate: v.villa_hit_rate,
-                    rc_inter_improvement: improvement(&b, &rc).0,
-                }
+    let report = run_builtin("fig3", requests, max_mixes, threads);
+    // Select records by axis value (never by grid position) so edits
+    // to the fig3 spec's preset list cannot silently misalign rows.
+    let mut workloads: Vec<&str> = Vec::new();
+    for r in &report.records {
+        if let Some(w) = r.axis("workload") {
+            if !workloads.contains(&w) {
+                workloads.push(w);
             }
+        }
+    }
+    let find = |w: &str, p: &str| {
+        report
+            .records
+            .iter()
+            .find(|r| r.axis("workload") == Some(w) && r.axis("preset") == Some(p))
+    };
+    workloads
+        .iter()
+        .filter_map(|w| {
+            let base = find(w, "baseline")?;
+            let villa = find(w, "risc-villa")?;
+            let rc = find(w, "villa-rc")?;
+            let imp = |r: &spec::Record| match (base.ws, r.ws) {
+                (Some(b), Some(c)) if b > 0.0 => c / b - 1.0,
+                _ => 0.0,
+            };
+            Some(Fig3Row {
+                workload: w.to_string(),
+                villa_improvement: imp(villa),
+                villa_hit_rate: villa.report.villa_hit_rate,
+                rc_inter_improvement: imp(rc),
+            })
         })
-        .collect();
-    campaign::run_jobs(jobs, threads)
+        .collect()
 }
 
 /// E5/E6 (Fig. 4): comparisons of RISC / RISC+VILLA / All over the
-/// baseline across the copy mixes, one campaign job per mix.
+/// baseline across the copy mixes (the `fig4` spec's WS summary with
+/// the figure's configuration labels).
 pub fn fig4(requests: u64, max_mixes: usize, threads: usize) -> Vec<Comparison> {
-    let base = cfg_baseline(requests);
-    let configs = [
-        ("LISA-RISC", cfg_risc(requests)),
-        ("LISA-(RISC+VILLA)", cfg_risc_villa(requests)),
-        ("LISA-All", cfg_all(requests)),
-    ];
-    let mixes = mixes::copy_mixes(base.cpu.cores);
-    let jobs: Vec<_> = mixes
-        .iter()
-        .take(max_mixes)
-        .map(|wl| {
-            let base = base.clone();
-            let configs = configs.clone();
-            move || {
-                // One set of baseline alone runs + one baseline
-                // measurement, shared by all three configs.
-                let alone = alone_ipcs(&base, wl);
-                let b = ws_point_with(&base, wl, &alone);
-                configs
-                    .iter()
-                    .map(|(_, cfg)| improvement(&b, &ws_point_with(cfg, wl, &alone)))
-                    .collect::<Vec<_>>()
-            }
-        })
-        .collect();
-    let per_mix = campaign::run_jobs(jobs, threads);
-    let mut cmps: Vec<Comparison> = configs
-        .iter()
-        .map(|(name, _)| Comparison { name: name.to_string(), ..Default::default() })
-        .collect();
-    for row in per_mix {
-        for (i, (imp, en)) in row.into_iter().enumerate() {
-            cmps[i].ws_improvements.push(imp);
-            cmps[i].energy_reductions.push(en);
-        }
+    let report = run_builtin("fig4", requests, max_mixes, threads);
+    let mut cmps = report.ws_summary();
+    for c in &mut cmps {
+        c.name = match c.name.as_str() {
+            "risc" => "LISA-RISC".to_string(),
+            "risc-villa" => "LISA-(RISC+VILLA)".to_string(),
+            "all" => "LISA-All".to_string(),
+            other => other.to_string(),
+        };
     }
     cmps
 }
 
 /// E7: LISA-LIP alone across the copy mixes (paper: +10.3% average
-/// over 50 workloads), one campaign job per mix.
+/// over 50 workloads) — the `lip-system` spec's WS summary.
 pub fn lip_system(requests: u64, max_mixes: usize, threads: usize) -> Comparison {
-    let base = cfg_baseline(requests);
-    let lip = cfg_lip(requests);
-    let mixes = mixes::copy_mixes(base.cpu.cores);
-    let jobs: Vec<_> = mixes
-        .iter()
-        .take(max_mixes)
-        .map(|wl| {
-            let base = base.clone();
-            let lip = lip.clone();
-            move || {
-                let alone = alone_ipcs(&base, wl);
-                let b = ws_point_with(&base, wl, &alone);
-                let c = ws_point_with(&lip, wl, &alone);
-                improvement(&b, &c)
-            }
-        })
-        .collect();
-    let mut cmp = Comparison { name: "LISA-LIP".into(), ..Default::default() };
-    for (imp, en) in campaign::run_jobs(jobs, threads) {
-        cmp.ws_improvements.push(imp);
-        cmp.energy_reductions.push(en);
-    }
+    let report = run_builtin("lip-system", requests, max_mixes, threads);
+    let mut cmp = report.ws_summary().pop().unwrap_or_default();
+    cmp.name = "LISA-LIP".to_string();
     cmp
-}
-
-// ---------------------------------------------------------------------------
-// E9: OS-level bulk operations (fork / zeroing / checkpoint / promotion)
-// across {copy mechanism} x {frame placement policy}.
-// ---------------------------------------------------------------------------
-
-/// The copy-mechanism axis of E9: memcpy over the channel, the best
-/// RowClone the pair's geometry allows, and LISA-RISC.
-pub const E9_MECHANISMS: [CopyMechanism; 3] = [
-    CopyMechanism::MemcpyChannel,
-    CopyMechanism::RowCloneInterSa,
-    CopyMechanism::LisaRisc,
-];
-
-/// The four OS scenario workloads of E9.
-pub const E9_SCENARIOS: [&str; 4] = ["os-fork", "os-zero", "os-checkpoint", "os-promote"];
-
-/// One finished E9 grid point.
-#[derive(Debug, Clone, PartialEq)]
-pub struct OsRow {
-    pub scenario: String,
-    pub mechanism: &'static str,
-    pub policy: &'static str,
-    pub report: RunReport,
-}
-
-/// Configuration for one E9 point.
-pub fn cfg_os(requests: u64, mech: CopyMechanism, policy: PlacementPolicy) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.requests_per_core = requests;
-    cfg.copy_mechanism = mech;
-    cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
-    cfg.os.placement = policy;
-    cfg
-}
-
-/// E9 driver: run every {scenario x mechanism x placement} point
-/// through the parallel campaign runner (scenario-major row order,
-/// deterministic at any thread count).
-pub fn e9_os(
-    requests: u64,
-    mechanisms: &[CopyMechanism],
-    policies: &[PlacementPolicy],
-    scenarios: &[String],
-    threads: usize,
-) -> Result<Vec<OsRow>> {
-    let mut labels = Vec::new();
-    let mut jobs = Vec::new();
-    for scenario in scenarios {
-        for &mech in mechanisms {
-            for &policy in policies {
-                let cfg = cfg_os(requests, mech, policy);
-                let wl = mixes::workload_by_name(scenario, &cfg)?;
-                labels.push((scenario.clone(), mech.name(), policy.name()));
-                jobs.push(move || Simulation::new(cfg, wl).run());
-            }
-        }
-    }
-    let reports = campaign::run_jobs(jobs, threads);
-    Ok(labels
-        .into_iter()
-        .zip(reports)
-        .map(|((scenario, mechanism, policy), report)| OsRow {
-            scenario,
-            mechanism,
-            policy,
-            report,
-        })
-        .collect())
-}
-
-/// JSON document for an E9 run (`lisa os --out report.json`).
-pub fn os_json(rows: &[OsRow]) -> String {
-    let body: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"scenario\":{},\"mechanism\":{},\"policy\":{},\"report\":{}}}",
-                json::string(&r.scenario),
-                json::string(r.mechanism),
-                json::string(r.policy),
-                r.report.to_json()
-            )
-        })
-        .collect();
-    format!("{{\"os\":[\n{}\n]}}\n", body.join(",\n"))
-}
-
-// ---------------------------------------------------------------------------
-// E10: subarray-level parallelism (SALP/MASA) composed with LISA —
-// {copy mechanism} x {parallelism mode} x {frame placement policy}.
-// ---------------------------------------------------------------------------
-
-/// The copy-mechanism axis of E10: the channel baseline vs LISA-RISC
-/// (the two ends of the movement spectrum the modes compose with).
-pub const E10_MECHANISMS: [CopyMechanism; 2] =
-    [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc];
-
-/// The E10 workload set: the three intra-bank-conflict mixes that make
-/// the parallelism modes visible, plus the fork scenario so the
-/// placement axis exercises the OS layer's subarray-aware allocator.
-pub const E10_WORKLOADS: [&str; 4] = [
-    "salp-pingpong4",
-    "salp-shared-bank4",
-    "salp-copy-conflict4",
-    "os-fork",
-];
-
-/// One finished E10 grid point.
-#[derive(Debug, Clone, PartialEq)]
-pub struct SalpRow {
-    pub workload: String,
-    pub mechanism: &'static str,
-    pub mode: &'static str,
-    pub policy: &'static str,
-    pub report: RunReport,
-}
-
-/// Configuration for one E10 point.
-pub fn cfg_salp(
-    requests: u64,
-    mech: CopyMechanism,
-    mode: SalpMode,
-    policy: PlacementPolicy,
-) -> SimConfig {
-    let mut cfg = SimConfig::default();
-    cfg.requests_per_core = requests;
-    cfg.copy_mechanism = mech;
-    cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
-    cfg.dram.salp = mode;
-    cfg.os.placement = policy;
-    cfg
-}
-
-/// E10 driver: run every {workload x mechanism x mode x placement}
-/// point through the parallel campaign runner (workload-major row
-/// order, deterministic at any thread count).
-pub fn e10_salp(
-    requests: u64,
-    mechanisms: &[CopyMechanism],
-    modes: &[SalpMode],
-    policies: &[PlacementPolicy],
-    workloads: &[String],
-    threads: usize,
-) -> Result<Vec<SalpRow>> {
-    let mut labels = Vec::new();
-    let mut jobs = Vec::new();
-    for workload in workloads {
-        // One lookup per workload (the suite registry is rebuilt per
-        // call); the grid axes don't change workload construction.
-        let wl0 = mixes::workload_by_name(workload, &SimConfig::default())?;
-        for &mech in mechanisms {
-            for &mode in modes {
-                for &policy in policies {
-                    let cfg = cfg_salp(requests, mech, mode, policy);
-                    let wl = wl0.clone();
-                    labels.push((workload.clone(), mech.name(), mode.name(), policy.name()));
-                    jobs.push(move || Simulation::new(cfg, wl).run());
-                }
-            }
-        }
-    }
-    let reports = campaign::run_jobs(jobs, threads);
-    Ok(labels
-        .into_iter()
-        .zip(reports)
-        .map(|((workload, mechanism, mode, policy), report)| SalpRow {
-            workload,
-            mechanism,
-            mode,
-            policy,
-            report,
-        })
-        .collect())
-}
-
-/// JSON document for an E10 run (`lisa salp --out report.json`).
-pub fn salp_json(rows: &[SalpRow]) -> String {
-    let body: Vec<String> = rows
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"workload\":{},\"mechanism\":{},\"mode\":{},\"policy\":{},\"report\":{}}}",
-                json::string(&r.workload),
-                json::string(r.mechanism),
-                json::string(r.mode),
-                json::string(r.policy),
-                r.report.to_json()
-            )
-        })
-        .collect();
-    format!("{{\"salp\":[\n{}\n]}}\n", body.join(",\n"))
 }
 
 #[cfg(test)]
@@ -518,117 +252,27 @@ mod tests {
     }
 
     #[test]
-    fn config_builders_compose() {
-        assert!(!cfg_baseline(100).lisa.risc);
-        assert!(cfg_risc(100).lisa.risc);
-        let rv = cfg_risc_villa(100);
-        assert!(rv.lisa.villa && rv.lisa.risc && !rv.lisa.lip);
-        let all = cfg_all(100);
-        assert!(all.lisa.villa && all.lisa.risc && all.lisa.lip);
-        let rc = cfg_villa_rc(100);
-        assert!(rc.lisa.villa && !rc.lisa.risc);
-    }
-
-    #[test]
     fn area_report_under_one_percent() {
         let r = area_report(&SimConfig::default());
         assert!(r.total_fraction < 0.01);
     }
 
     #[test]
-    fn e10_grid_shape_and_config() {
-        let cfg = cfg_salp(
-            100,
-            CopyMechanism::LisaRisc,
-            SalpMode::Masa,
-            PlacementPolicy::Random,
-        );
-        assert!(cfg.lisa.risc);
-        assert_eq!(cfg.dram.salp, SalpMode::Masa);
-        assert_eq!(cfg.os.placement, PlacementPolicy::Random);
-        let rows = e10_salp(
-            120,
-            &[CopyMechanism::LisaRisc],
-            &[SalpMode::None, SalpMode::Masa],
-            &[PlacementPolicy::SubarrayPacked],
-            &["salp-pingpong4".to_string()],
-            2,
-        )
-        .unwrap();
-        assert_eq!(rows.len(), 2);
-        assert!(rows.iter().all(|r| r.workload == "salp-pingpong4"));
-        assert_eq!(rows[0].mode, "none");
-        assert_eq!(rows[1].mode, "masa");
-        let j = salp_json(&rows);
-        assert_eq!(j.matches("\"mode\"").count(), 2);
-        assert!(j.contains("\"mode\":\"masa\""), "{j}");
-        // Unknown workloads fail fast.
-        assert!(e10_salp(
-            100,
-            &[CopyMechanism::LisaRisc],
-            &[SalpMode::Masa],
-            &[PlacementPolicy::Random],
-            &["no-such-workload".to_string()],
-            1
-        )
-        .is_err());
+    fn fig3_rows_derive_from_the_spec_grid() {
+        // One mix, tiny runs: the derivation must key rows by workload
+        // and compute improvements against the baseline preset record.
+        let rows = fig3(200, 1, 2);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].workload.starts_with("villa-"));
+        assert!(rows[0].villa_improvement.is_finite());
+        assert!(rows[0].rc_inter_improvement.is_finite());
     }
 
     #[test]
-    fn e10_grid_is_byte_identical_across_thread_counts() {
-        // The acceptance bar for `lisa salp`: the full JSON document is
-        // byte-identical at 1, 2 and 8 threads.
-        let run = |threads: usize| {
-            e10_salp(
-                150,
-                &[CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
-                &[SalpMode::None, SalpMode::Masa],
-                &[PlacementPolicy::SubarrayPacked],
-                &["salp-shared-bank4".to_string()],
-                threads,
-            )
-            .unwrap()
-        };
-        let serial = run(1);
-        assert_eq!(serial.len(), 4);
-        let json1 = salp_json(&serial);
-        for threads in [2, 8] {
-            let rows = run(threads);
-            assert_eq!(serial, rows, "threads={threads}");
-            assert_eq!(json1, salp_json(&rows), "threads={threads}");
-        }
-    }
-
-    #[test]
-    fn e9_grid_shape_and_config() {
-        let cfg = cfg_os(100, CopyMechanism::LisaRisc, PlacementPolicy::Random);
-        assert!(cfg.lisa.risc);
-        assert_eq!(cfg.os.placement, PlacementPolicy::Random);
-        let rows = e9_os(
-            120,
-            &[CopyMechanism::LisaRisc],
-            &[PlacementPolicy::SubarrayPacked, PlacementPolicy::Random],
-            &["os-fork".to_string()],
-            2,
-        )
-        .unwrap();
-        assert_eq!(rows.len(), 2);
-        assert!(rows.iter().all(|r| r.scenario == "os-fork"));
-        assert!(rows.iter().all(|r| {
-            let os = r.report.os.as_ref().expect("OS summary present");
-            os.pages_copied > 0
-        }));
-        let j = os_json(&rows);
-        assert_eq!(j.matches("\"scenario\"").count(), 2);
-        assert!(j.contains("\"policy\":\"packed\""), "{j}");
-        // Unknown scenarios fail fast.
-        assert!(e9_os(
-            100,
-            &[CopyMechanism::LisaRisc],
-            &[PlacementPolicy::Random],
-            &["no-such-scenario".to_string()],
-            1
-        )
-        .is_err());
+    fn fig4_uses_figure_labels() {
+        let cmps = fig4(150, 1, 2);
+        let names: Vec<&str> = cmps.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, ["LISA-RISC", "LISA-(RISC+VILLA)", "LISA-All"]);
+        assert!(cmps.iter().all(|c| c.ws_improvements.len() == 1));
     }
 }

@@ -1,9 +1,10 @@
 //! Simulation engine (CPU ⇄ controller ⇄ DRAM binding), the parallel
-//! campaign runner, and the experiment drivers that regenerate the
-//! paper's tables and figures.
+//! campaign runner, the declarative experiment API (`spec`) and the
+//! drivers that regenerate the paper's tables and figures.
 
 pub mod campaign;
 pub mod engine;
 pub mod experiments;
+pub mod spec;
 
 pub use engine::Simulation;

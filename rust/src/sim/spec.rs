@@ -1,0 +1,995 @@
+//! The declarative experiment API: named axes → config grid →
+//! campaign → one report schema.
+//!
+//! An [`ExperimentSpec`] names its axes (workloads, copy mechanisms,
+//! SALP modes, placement policies, speed bins, LISA presets) and their
+//! default values; [`expand`] turns the cartesian product into
+//! `SimConfig` grid points via [`SimConfigBuilder`]; [`run`] shards
+//! the points across the campaign runner and returns a [`Report`] —
+//! one record per point, one JSON serializer for every experiment.
+//! The built-in registry covers the paper's system-level experiments
+//! (`fig3`, `fig4`, `lip-system`, `e9-os`, `e10-salp`, `sweep`); the
+//! legacy CLI subcommands are thin aliases onto it, and a new scenario
+//! is one more [`ExperimentSpec`] value — no CLI surgery required.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::config::builder::LisaPreset;
+use crate::config::{
+    CopyMechanism, PlacementPolicy, SalpMode, SimConfig, SimConfigBuilder,
+};
+use crate::dram::timing::SpeedBin;
+use crate::metrics::{json, Comparison, RunReport};
+use crate::sim::campaign;
+use crate::sim::engine::{alone_ipcs, run_workload};
+use crate::util::bench::Table;
+use crate::workloads::{mixes, Workload};
+
+/// What an axis value means — how it is validated and applied to the
+/// config builder during grid expansion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisKind {
+    /// Selects the workload (not a config field). Every spec has
+    /// exactly one.
+    Workload,
+    Mechanism,
+    SalpMode,
+    Placement,
+    Speed,
+    /// Named LISA feature combination — the config axis of the
+    /// weighted-speedup experiments.
+    Preset,
+}
+
+impl AxisKind {
+    /// The value set, for generated usage text.
+    pub fn choices(&self) -> &'static str {
+        match self {
+            Self::Workload => "any suite workload (see `lisa list-workloads`)",
+            Self::Mechanism => "memcpy|rc-intra|rc-bank|rc-inter|lisa-risc",
+            Self::SalpMode => "none|salp1|salp2|masa",
+            Self::Placement => "random|packed|spread|villa-aware",
+            Self::Speed => "ddr3-1600|ddr4-2400",
+            Self::Preset => "baseline|risc|risc-villa|all|villa-rc|lip",
+        }
+    }
+
+    /// Parse-validate one value (workloads are resolved against the
+    /// suite during expansion, where the registry is built once).
+    fn validate(&self, v: &str) -> Result<()> {
+        match self {
+            Self::Workload => Ok(()),
+            Self::Mechanism => CopyMechanism::parse(v).map(|_| ()),
+            Self::SalpMode => SalpMode::parse(v).map(|_| ()),
+            Self::Placement => PlacementPolicy::parse(v).map(|_| ()),
+            Self::Speed => SpeedBin::parse(v).map(|_| ()),
+            Self::Preset => LisaPreset::parse(v).map(|_| ()),
+        }
+    }
+}
+
+/// One named axis of an experiment grid.
+#[derive(Debug, Clone)]
+pub struct AxisDef {
+    /// Record/JSON key (`workload`, `mech`, `mode`, `policy`, ...).
+    pub name: String,
+    /// CLI option that overrides the values (`--<flag> a,b,c`); kept
+    /// distinct from `name` so legacy spellings (`--mechs`,
+    /// `--scenarios`) stay valid.
+    pub flag: String,
+    pub kind: AxisKind,
+    /// Default values (the full built-in grid).
+    pub values: Vec<String>,
+    /// How `--mixes N` re-derives this axis's values, for the specs
+    /// whose workload set is "first N of a mix family".
+    pub with_mixes: Option<fn(usize) -> Vec<String>>,
+}
+
+impl AxisDef {
+    pub fn new(name: &str, flag: &str, kind: AxisKind, values: Vec<String>) -> Self {
+        Self {
+            name: name.to_string(),
+            flag: flag.to_string(),
+            kind,
+            values,
+            with_mixes: None,
+        }
+    }
+
+    pub fn with_mixes(mut self, f: fn(usize) -> Vec<String>) -> Self {
+        self.with_mixes = Some(f);
+        self
+    }
+}
+
+/// How the grid is evaluated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Eval {
+    /// One independent simulation per grid point.
+    Raw,
+    /// The paper's multiprogrammed methodology: per workload, measure
+    /// alone-run IPCs once on the first preset (the baseline), then
+    /// one shared run per preset; each record carries its weighted
+    /// speedup against those alone runs. Requires exactly two axes:
+    /// a `Workload` axis followed by a `Preset` axis.
+    WeightedSpeedup,
+}
+
+/// A declarative experiment: axes + defaults + evaluation mode.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Registry key (`lisa exp <name>`).
+    pub name: String,
+    /// One-line description for `--list` and the generated usage text.
+    pub title: String,
+    /// Default requests per core (`--requests` overrides).
+    pub requests: u64,
+    pub eval: Eval,
+    /// Grid axes, outermost first — records come back in this
+    /// cartesian order regardless of thread count.
+    pub axes: Vec<AxisDef>,
+}
+
+impl ExperimentSpec {
+    /// Grid size with the default axis values.
+    pub fn default_points(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+}
+
+/// Per-invocation overrides (CLI options or test parameters).
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// Requests per core; `None` means the spec default.
+    pub requests: Option<u64>,
+    /// RNG seed override (`--seed`).
+    pub seed: Option<u64>,
+    /// Base configuration the grid specializes (`--config FILE`);
+    /// `None` means the defaults.
+    pub base: Option<SimConfig>,
+    /// Worker threads; `0` auto-detects.
+    pub threads: usize,
+    /// `--mixes N` — re-derive mix-family workload axes to their
+    /// first N entries.
+    pub mixes: Option<usize>,
+    /// Explicit per-axis value overrides, keyed by axis *name*.
+    pub axes: Vec<(String, Vec<String>)>,
+}
+
+impl RunOptions {
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    pub fn requests(mut self, n: u64) -> Self {
+        self.requests = Some(n);
+        self
+    }
+
+    pub fn mixes(mut self, n: usize) -> Self {
+        self.mixes = Some(n);
+        self
+    }
+
+    pub fn base(mut self, cfg: SimConfig) -> Self {
+        self.base = Some(cfg);
+        self
+    }
+
+    pub fn axis(mut self, name: &str, values: &[&str]) -> Self {
+        self.axes
+            .push((name.to_string(), values.iter().map(|s| s.to_string()).collect()));
+        self
+    }
+
+    /// Extract overrides from parsed CLI arguments: `--requests`,
+    /// `--threads`, `--mixes`, plus one `--<flag> a,b,c` list option
+    /// per spec axis. Shared by `lisa exp <name>` and every legacy
+    /// alias subcommand, which is what keeps their behaviour (and
+    /// JSON) identical by construction.
+    pub fn from_args(spec: &ExperimentSpec, args: &Args) -> Result<Self> {
+        let base = match args.opt("config") {
+            Some(path) => Some(SimConfig::from_file(Path::new(path))?),
+            None => None,
+        };
+        let mut opts = RunOptions {
+            requests: args.opt_u64("requests")?,
+            seed: args.opt_u64("seed")?,
+            base,
+            threads: campaign::resolve_threads(args.opt_usize("threads")?),
+            mixes: args.opt_usize("mixes")?,
+            axes: Vec::new(),
+        };
+        for axis in &spec.axes {
+            if let Some(values) = args.opt_list(&axis.flag) {
+                opts.axes.push((axis.name.clone(), values));
+            }
+        }
+        Ok(opts)
+    }
+
+    fn axis_override(&self, name: &str) -> Option<&[String]> {
+        self.axes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+    }
+}
+
+/// The effective value list of each axis under `opts`: explicit
+/// override > `--mixes` re-derivation > spec default. Values are
+/// parse-validated here so a typo fails before any simulation runs.
+pub fn effective_axes(
+    spec: &ExperimentSpec,
+    opts: &RunOptions,
+) -> Result<Vec<(AxisDef, Vec<String>)>> {
+    let mut out = Vec::with_capacity(spec.axes.len());
+    for axis in &spec.axes {
+        let values: Vec<String> =
+            if let Some(explicit) = opts.axis_override(&axis.name) {
+                explicit.to_vec()
+            } else if let (Some(n), Some(derive)) = (opts.mixes, axis.with_mixes) {
+                derive(n)
+            } else {
+                axis.values.clone()
+            };
+        if values.is_empty() {
+            bail!("experiment '{}': axis '{}' has no values", spec.name, axis.name);
+        }
+        for v in &values {
+            axis.kind
+                .validate(v)
+                .with_context(|| format!("axis '{}'", axis.name))?;
+        }
+        out.push((axis.clone(), values));
+    }
+    Ok(out)
+}
+
+/// One expanded grid point: the axis coordinates, the fully built
+/// config and the resolved workload.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub axes: Vec<(String, String)>,
+    pub cfg: SimConfig,
+    pub workload: Workload,
+}
+
+/// Expand a spec into its config grid (cartesian product in axis
+/// order, first axis outermost). The workload suite is constructed
+/// once and shared across points, so expansion cost is O(grid) — it
+/// never touches the simulated hot path.
+pub fn expand(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Vec<GridPoint>> {
+    let axes = effective_axes(spec, opts)?;
+    let requests = opts.requests.unwrap_or(spec.requests);
+    let base = opts.base.clone().unwrap_or_default();
+    // Workloads scale with the base config's core count; the suite is
+    // built once and shared by every grid point.
+    let suite: BTreeMap<String, Workload> = mixes::all_mixes(&base)
+        .into_iter()
+        .map(|w| (w.name.clone(), w))
+        .collect();
+    let n_points: usize = axes.iter().map(|(_, v)| v.len()).product();
+    let mut points = Vec::with_capacity(n_points);
+    let mut idx = vec![0usize; axes.len()];
+    loop {
+        let mut builder =
+            SimConfigBuilder::from_config(base.clone()).requests(requests);
+        if let Some(seed) = opts.seed {
+            builder = builder.seed(seed);
+        }
+        let mut coords = Vec::with_capacity(axes.len());
+        let mut workload: Option<&Workload> = None;
+        for (d, (axis, values)) in axes.iter().enumerate() {
+            let v = &values[idx[d]];
+            coords.push((axis.name.clone(), v.clone()));
+            match axis.kind {
+                AxisKind::Workload => {
+                    workload = Some(suite.get(v).ok_or_else(|| {
+                        anyhow::anyhow!("unknown workload '{v}' (axis '{}')", axis.name)
+                    })?);
+                }
+                AxisKind::Mechanism => {
+                    builder = builder.mechanism(CopyMechanism::parse(v)?);
+                }
+                AxisKind::SalpMode => builder = builder.salp(SalpMode::parse(v)?),
+                AxisKind::Placement => {
+                    builder = builder.placement(PlacementPolicy::parse(v)?);
+                }
+                AxisKind::Speed => builder = builder.speed(SpeedBin::parse(v)?),
+                AxisKind::Preset => builder = builder.preset(LisaPreset::parse(v)?),
+            }
+        }
+        let Some(workload) = workload else {
+            bail!("experiment '{}' has no workload axis", spec.name);
+        };
+        points.push(GridPoint {
+            axes: coords,
+            cfg: builder.build()?,
+            workload: workload.clone(),
+        });
+        // Odometer increment, last axis fastest.
+        let mut d = axes.len();
+        loop {
+            if d == 0 {
+                return Ok(points);
+            }
+            d -= 1;
+            idx[d] += 1;
+            if idx[d] < axes[d].1.len() {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+/// One finished grid point: where it sits in the grid, its weighted
+/// speedup (WS evaluations only) and the full run report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub axes: Vec<(String, String)>,
+    pub ws: Option<f64>,
+    pub report: RunReport,
+}
+
+impl Record {
+    /// The value of a named axis, if the record has it.
+    pub fn axis(&self, name: &str) -> Option<&str> {
+        self.axes
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn to_json(&self) -> String {
+        let axes: Vec<String> = self
+            .axes
+            .iter()
+            .map(|(n, v)| format!("{}:{}", json::string(n), json::string(v)))
+            .collect();
+        format!(
+            "{{\"config\":{},\"axes\":{{{}}},\"ws\":{},\"report\":{}}}",
+            json::string(&self.report.config_name),
+            axes.join(","),
+            self.ws.map_or_else(|| "null".to_string(), json::number),
+            self.report.to_json()
+        )
+    }
+}
+
+/// The unified result document: every experiment — built-in or
+/// user-registered — serializes through this one schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub experiment: String,
+    pub requests: u64,
+    pub records: Vec<Record>,
+}
+
+impl Report {
+    /// The single JSON serializer of the experiment surface:
+    /// `{"experiment", "schema", "requests", "records": [{config,
+    /// axes, ws, report}]}` with `report` a full `RunReport`.
+    pub fn to_json(&self) -> String {
+        let body: Vec<String> = self.records.iter().map(Record::to_json).collect();
+        format!(
+            "{{\"experiment\":{},\"schema\":1,\"requests\":{},\"records\":[\n{}\n]}}\n",
+            json::string(&self.experiment),
+            self.requests,
+            body.join(",\n")
+        )
+    }
+
+    /// Human-readable table over the common columns (axes + the
+    /// headline metrics every record carries).
+    pub fn table(&self) -> Table {
+        let axis_names: Vec<String> =
+            self.records.first().map_or_else(Vec::new, |r| {
+                r.axes.iter().map(|(n, _)| n.clone()).collect()
+            });
+        let has_ws = self.records.iter().any(|r| r.ws.is_some());
+        let mut headers: Vec<&str> = axis_names.iter().map(String::as_str).collect();
+        headers.extend(["config", "cycles", "IPC sum"]);
+        if has_ws {
+            headers.push("WS");
+        }
+        headers.extend(["row-hit %", "copies", "energy uJ"]);
+        let mut t = Table::new(&headers);
+        for r in &self.records {
+            let mut cells: Vec<String> =
+                r.axes.iter().map(|(_, v)| v.clone()).collect();
+            cells.push(r.report.config_name.clone());
+            cells.push(format!("{}", r.report.dram_cycles));
+            cells.push(format!("{:.3}", r.report.ipc_sum()));
+            if has_ws {
+                cells.push(r.ws.map_or_else(String::new, |w| format!("{w:.3}")));
+            }
+            cells.push(format!("{:.1}", r.report.row_hit_rate * 100.0));
+            cells.push(format!("{}", r.report.copies));
+            cells.push(format!("{:.1}", r.report.energy.total));
+            t.row(&cells);
+        }
+        t
+    }
+
+    /// Weighted-speedup summaries for WS experiments: one
+    /// [`Comparison`] per non-baseline preset value (WS improvement
+    /// and energy reduction per workload vs the baseline preset, in
+    /// workload order). Empty for raw grids.
+    pub fn ws_summary(&self) -> Vec<Comparison> {
+        let mut presets: Vec<&str> = Vec::new();
+        let mut workloads: Vec<&str> = Vec::new();
+        for r in &self.records {
+            if let (Some(w), Some(p)) = (r.axis("workload"), r.axis("preset")) {
+                if !presets.contains(&p) {
+                    presets.push(p);
+                }
+                if !workloads.contains(&w) {
+                    workloads.push(w);
+                }
+            }
+        }
+        if presets.len() < 2 {
+            return Vec::new();
+        }
+        let find = |w: &str, p: &str| {
+            self.records
+                .iter()
+                .find(|r| r.axis("workload") == Some(w) && r.axis("preset") == Some(p))
+        };
+        let baseline = presets[0];
+        presets[1..]
+            .iter()
+            .map(|p| {
+                let mut cmp =
+                    Comparison { name: p.to_string(), ..Default::default() };
+                for w in &workloads {
+                    let (Some(b), Some(c)) = (find(w, baseline), find(w, p)) else {
+                        continue;
+                    };
+                    let (Some(b_ws), Some(c_ws)) = (b.ws, c.ws) else { continue };
+                    cmp.ws_improvements
+                        .push(if b_ws > 0.0 { c_ws / b_ws - 1.0 } else { 0.0 });
+                    let (be, ce) = (b.report.energy.total, c.report.energy.total);
+                    cmp.energy_reductions
+                        .push(if be > 0.0 { 1.0 - ce / be } else { 0.0 });
+                }
+                cmp
+            })
+            .collect()
+    }
+}
+
+/// Run an experiment spec: expand the grid, shard it across the
+/// campaign runner, return the unified report. Record order is the
+/// grid order at any thread count (campaign determinism).
+pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
+    let requests = opts.requests.unwrap_or(spec.requests);
+    let threads = campaign::resolve_threads(Some(opts.threads));
+    let records = match spec.eval {
+        Eval::Raw => {
+            let points = expand(spec, opts)?;
+            let labels: Vec<Vec<(String, String)>> =
+                points.iter().map(|p| p.axes.clone()).collect();
+            let pairs: Vec<(SimConfig, Workload)> =
+                points.into_iter().map(|p| (p.cfg, p.workload)).collect();
+            let reports = campaign::run_reports(pairs, threads);
+            labels
+                .into_iter()
+                .zip(reports)
+                .map(|(axes, report)| Record { axes, ws: None, report })
+                .collect()
+        }
+        Eval::WeightedSpeedup => run_weighted(spec, opts, threads)?,
+    };
+    Ok(Report { experiment: spec.name.clone(), requests, records })
+}
+
+/// WS evaluation: one campaign job per workload — the alone runs are
+/// measured once on the first preset (the baseline) and shared by
+/// every preset's shared run, following the paper lineage's
+/// multiprogrammed methodology (SALP / TL-DRAM / RowClone).
+fn run_weighted(
+    spec: &ExperimentSpec,
+    opts: &RunOptions,
+    threads: usize,
+) -> Result<Vec<Record>> {
+    let points = expand(spec, opts)?;
+    if spec.axes.len() != 2
+        || spec.axes[0].kind != AxisKind::Workload
+        || spec.axes[1].kind != AxisKind::Preset
+    {
+        bail!(
+            "experiment '{}': WeightedSpeedup needs a workload axis then a preset axis",
+            spec.name
+        );
+    }
+    let n_presets = effective_axes(spec, opts)?[1].1.len();
+    // Points arrive workload-major; chunk them back into per-workload
+    // jobs so the alone runs are measured once per workload.
+    let jobs: Vec<_> = points
+        .chunks(n_presets)
+        .map(|chunk| {
+            let chunk = chunk.to_vec();
+            move || {
+                let baseline = &chunk[0];
+                let alone = alone_ipcs(&baseline.cfg, &baseline.workload);
+                chunk
+                    .iter()
+                    .map(|p| {
+                        let shared = run_workload(&p.cfg, &p.workload);
+                        let ws = shared.weighted_speedup(&alone);
+                        Record { axes: p.axes.clone(), ws: Some(ws), report: shared }
+                    })
+                    .collect::<Vec<_>>()
+            }
+        })
+        .collect();
+    Ok(campaign::run_jobs(jobs, threads).into_iter().flatten().collect())
+}
+
+// ---------------------------------------------------------------------------
+// Built-in registry.
+// ---------------------------------------------------------------------------
+
+fn default_cores() -> usize {
+    SimConfig::default().cpu.cores
+}
+
+fn villa_mix_names(n: usize) -> Vec<String> {
+    mixes::villa_mixes(default_cores())
+        .into_iter()
+        .take(n)
+        .map(|w| w.name)
+        .collect()
+}
+
+fn copy_mix_names(n: usize) -> Vec<String> {
+    mixes::copy_mixes(default_cores())
+        .into_iter()
+        .take(n)
+        .map(|w| w.name)
+        .collect()
+}
+
+/// The default `sweep` workload grid: the micro suite plus the first
+/// `n` copy mixes.
+fn sweep_workloads(n: usize) -> Vec<String> {
+    let mut w: Vec<String> =
+        vec!["stream4".into(), "random4".into(), "hotspot4".into(), "fork4".into()];
+    w.extend(copy_mix_names(n));
+    w
+}
+
+fn strings(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// Every built-in experiment spec. Adding a scenario here is the
+/// entire registration step — the `exp` subcommand, its usage text,
+/// the legacy-alias table and the JSON schema all derive from this
+/// list.
+pub fn registry() -> Vec<ExperimentSpec> {
+    vec![
+        ExperimentSpec {
+            name: "fig3".into(),
+            title: "E4 (Fig. 3): LISA-VILLA vs RC-InterSA movement on hot-region mixes"
+                .into(),
+            requests: 3_000,
+            eval: Eval::WeightedSpeedup,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    villa_mix_names(usize::MAX),
+                )
+                .with_mixes(villa_mix_names),
+                AxisDef::new(
+                    "preset",
+                    "presets",
+                    AxisKind::Preset,
+                    strings(&["baseline", "risc-villa", "villa-rc"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "fig4".into(),
+            title: "E5/E6 (Fig. 4): RISC / +VILLA / All speedups over the copy mixes"
+                .into(),
+            requests: 3_000,
+            eval: Eval::WeightedSpeedup,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    copy_mix_names(usize::MAX),
+                )
+                .with_mixes(copy_mix_names),
+                AxisDef::new(
+                    "preset",
+                    "presets",
+                    AxisKind::Preset,
+                    strings(&["baseline", "risc", "risc-villa", "all"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "lip-system".into(),
+            title: "E7: LISA-LIP alone at the system level".into(),
+            requests: 3_000,
+            eval: Eval::WeightedSpeedup,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    copy_mix_names(usize::MAX),
+                )
+                .with_mixes(copy_mix_names),
+                AxisDef::new(
+                    "preset",
+                    "presets",
+                    AxisKind::Preset,
+                    strings(&["baseline", "lip"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "e9-os".into(),
+            title: "E9: OS bulk ops (fork/zero/checkpoint/promote) × mechanism × placement"
+                .into(),
+            requests: 2_000,
+            eval: Eval::Raw,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "scenarios",
+                    AxisKind::Workload,
+                    strings(&["os-fork", "os-zero", "os-checkpoint", "os-promote"]),
+                ),
+                AxisDef::new(
+                    "mech",
+                    "mechs",
+                    AxisKind::Mechanism,
+                    strings(&["memcpy", "rc-inter", "lisa-risc"]),
+                ),
+                AxisDef::new(
+                    "policy",
+                    "policies",
+                    AxisKind::Placement,
+                    strings(&["random", "packed", "spread", "villa-aware"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "e10-salp".into(),
+            title: "E10: SALP/MASA modes composed with LISA on intra-bank conflicts"
+                .into(),
+            requests: 2_000,
+            eval: Eval::Raw,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    strings(&[
+                        "salp-pingpong4",
+                        "salp-shared-bank4",
+                        "salp-copy-conflict4",
+                        "os-fork",
+                    ]),
+                ),
+                AxisDef::new(
+                    "mech",
+                    "mechs",
+                    AxisKind::Mechanism,
+                    strings(&["memcpy", "lisa-risc"]),
+                ),
+                AxisDef::new(
+                    "mode",
+                    "modes",
+                    AxisKind::SalpMode,
+                    strings(&["none", "salp1", "salp2", "masa"]),
+                ),
+                AxisDef::new(
+                    "policy",
+                    "policies",
+                    AxisKind::Placement,
+                    strings(&["random", "packed", "spread", "villa-aware"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "sweep".into(),
+            title: "Mechanism × speed-bin × workload sweep campaign".into(),
+            requests: 2_000,
+            eval: Eval::Raw,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    sweep_workloads(4),
+                )
+                .with_mixes(sweep_workloads),
+                AxisDef::new(
+                    "speed",
+                    "speeds",
+                    AxisKind::Speed,
+                    strings(&["ddr3-1600"]),
+                ),
+                AxisDef::new(
+                    "mech",
+                    "mechs",
+                    AxisKind::Mechanism,
+                    strings(&["memcpy", "lisa-risc"]),
+                ),
+            ],
+        },
+    ]
+}
+
+/// Look up a built-in spec by registry name.
+pub fn spec_by_name(name: &str) -> Result<ExperimentSpec> {
+    let specs = registry();
+    let known: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+    specs
+        .iter()
+        .find(|s| s.name == name)
+        .cloned()
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown experiment '{name}' (expected one of: {})", known.join(", "))
+        })
+}
+
+/// Legacy subcommand → registry-spec name. The legacy subcommands are
+/// thin aliases: same option flags, same pipeline, byte-identical
+/// JSON (tested in `tests/experiment_api.rs`).
+pub const LEGACY_ALIASES: &[(&str, &str)] = &[
+    ("fig3", "fig3"),
+    ("fig4", "fig4"),
+    ("lip-system", "lip-system"),
+    ("os", "e9-os"),
+    ("salp", "e10-salp"),
+    ("sweep", "sweep"),
+];
+
+/// Resolve a legacy subcommand to its spec.
+pub fn spec_for_alias(alias: &str) -> Result<ExperimentSpec> {
+    let Some((_, name)) = LEGACY_ALIASES.iter().find(|(a, _)| *a == alias) else {
+        bail!("'{alias}' is not a legacy experiment subcommand");
+    };
+    spec_by_name(name)
+}
+
+/// Generated usage text for the `exp` subcommand: one block per
+/// registered spec (name, grid, axis flags with defaults). USAGE can
+/// never drift from the registry because it *is* the registry.
+pub fn usage() -> String {
+    let mut out = String::from(
+        "lisa exp <name> [--requests N] [--threads N] [--mixes N] [--seed N]\n\
+         \x20        [--config FILE] [--out FILE]\n\
+         lisa exp --list\n\nEXPERIMENTS\n",
+    );
+    for spec in registry() {
+        out.push_str(&format!(
+            "  {:<12} {} ({} points)\n",
+            spec.name,
+            spec.title,
+            spec.default_points()
+        ));
+        for axis in &spec.axes {
+            let preview: Vec<&str> =
+                axis.values.iter().take(4).map(String::as_str).collect();
+            let ellipsis = if axis.values.len() > 4 { ",..." } else { "" };
+            out.push_str(&format!(
+                "      --{} {}{}   ({})\n",
+                axis.flag,
+                preview.join(","),
+                ellipsis,
+                axis.kind.choices()
+            ));
+        }
+    }
+    out.push_str(
+        "\nLegacy aliases (same flags, same JSON): fig3, fig4, lip-system, \
+         os -> e9-os, salp -> e10-salp, sweep.\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_specs_expand_with_defaults() {
+        for spec in registry() {
+            let points = expand(&spec, &RunOptions::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            assert_eq!(points.len(), spec.default_points(), "{}", spec.name);
+            // Every point carries a workload and a valid config.
+            for p in &points {
+                assert!(p.axes.iter().any(|(n, _)| n == "workload"));
+                p.cfg.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn grid_order_is_axis_major() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let opts = RunOptions::default()
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy", "lisa-risc"])
+            .axis("mode", &["none", "masa"])
+            .axis("policy", &["packed"]);
+        let points = expand(&spec, &opts).unwrap();
+        assert_eq!(points.len(), 4);
+        // workload-major, then mech, then mode (odometer order).
+        let coord = |i: usize, name: &str| {
+            points[i]
+                .axes
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap()
+                .1
+                .clone()
+        };
+        assert_eq!(coord(0, "mech"), "memcpy");
+        assert_eq!(coord(0, "mode"), "none");
+        assert_eq!(coord(1, "mode"), "masa");
+        assert_eq!(coord(2, "mech"), "lisa-risc");
+        assert_eq!(points[0].cfg.dram.salp, SalpMode::None);
+        assert_eq!(points[1].cfg.dram.salp, SalpMode::Masa);
+        assert_eq!(points[2].cfg.copy_mechanism, CopyMechanism::LisaRisc);
+        assert!(points[2].cfg.lisa.risc);
+    }
+
+    #[test]
+    fn bad_axis_values_fail_before_any_simulation() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let bad_mode = RunOptions::default().axis("mode", &["salp9"]);
+        assert!(expand(&spec, &bad_mode).is_err());
+        let bad_wl = RunOptions::default().axis("workload", &["no-such-workload"]);
+        assert!(expand(&spec, &bad_wl).is_err());
+    }
+
+    #[test]
+    fn mixes_override_truncates_mix_family_axes() {
+        let spec = spec_by_name("fig4").unwrap();
+        let axes = effective_axes(&spec, &RunOptions::default().mixes(3)).unwrap();
+        assert_eq!(axes[0].1, vec!["copy-mix-00", "copy-mix-01", "copy-mix-02"]);
+        // Explicit values win over --mixes.
+        let both = RunOptions::default().mixes(3).axis("workload", &["copy-mix-07"]);
+        let axes = effective_axes(&spec, &both).unwrap();
+        assert_eq!(axes[0].1, vec!["copy-mix-07"]);
+        // Sweep's --mixes appends to the micro suite.
+        let sweep = spec_by_name("sweep").unwrap();
+        let axes = effective_axes(&sweep, &RunOptions::default().mixes(1)).unwrap();
+        assert_eq!(axes[0].1.len(), 5);
+        assert_eq!(axes[0].1[4], "copy-mix-00");
+    }
+
+    #[test]
+    fn options_from_args_reads_axis_flags() {
+        let spec = spec_by_name("e9-os").unwrap();
+        let args = Args::parse(
+            "os --requests 500 --threads 2 --mechs memcpy,lisa-risc --scenarios os-zero"
+                .split_whitespace()
+                .map(str::to_string),
+        )
+        .unwrap();
+        let opts = RunOptions::from_args(&spec, &args).unwrap();
+        assert_eq!(opts.requests, Some(500));
+        assert_eq!(opts.threads, 2);
+        assert_eq!(opts.seed, None);
+        assert!(opts.base.is_none());
+        assert_eq!(
+            opts.axis_override("mech").unwrap(),
+            &["memcpy".to_string(), "lisa-risc".to_string()]
+        );
+        assert_eq!(opts.axis_override("workload").unwrap(), &["os-zero".to_string()]);
+    }
+
+    #[test]
+    fn seed_and_base_config_specialize_every_grid_point() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let mut base = SimConfig::default();
+        base.cpu.cores = 2;
+        let opts = RunOptions::default()
+            .base(base)
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy"])
+            .axis("mode", &["masa"])
+            .axis("policy", &["packed"]);
+        let mut opts = opts;
+        opts.seed = Some(77);
+        let points = expand(&spec, &opts).unwrap();
+        assert_eq!(points.len(), 1);
+        assert_eq!(points[0].cfg.cpu.cores, 2, "base config survives the axes");
+        assert_eq!(points[0].cfg.seed, 77);
+        assert_eq!(points[0].cfg.dram.salp, SalpMode::Masa);
+    }
+
+    #[test]
+    fn raw_run_produces_one_record_per_point() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let opts = RunOptions::default()
+            .requests(120)
+            .threads(2)
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["lisa-risc"])
+            .axis("mode", &["none", "masa"])
+            .axis("policy", &["packed"]);
+        let report = run(&spec, &opts).unwrap();
+        assert_eq!(report.experiment, "e10-salp");
+        assert_eq!(report.requests, 120);
+        assert_eq!(report.records.len(), 2);
+        assert_eq!(report.records[0].axis("mode"), Some("none"));
+        assert_eq!(report.records[1].axis("mode"), Some("masa"));
+        assert!(report.records.iter().all(|r| r.ws.is_none()));
+        let j = report.to_json();
+        assert!(j.contains("\"experiment\":\"e10-salp\""), "{j}");
+        assert!(j.contains("\"mode\":\"masa\""), "{j}");
+        // One "config" key per record plus one inside each RunReport.
+        assert_eq!(j.matches("\"config\":").count(), 4, "{j}");
+        // The table renders without panicking and has one line per
+        // record plus header + separator.
+        assert_eq!(report.table().render().lines().count(), 2 + 2);
+    }
+
+    #[test]
+    fn weighted_run_carries_ws_and_summary() {
+        let spec = spec_by_name("fig3").unwrap();
+        let opts = RunOptions::default()
+            .requests(300)
+            .threads(2)
+            .mixes(2)
+            .axis("preset", &["baseline", "risc-villa"]);
+        let report = run(&spec, &opts).unwrap();
+        assert_eq!(report.records.len(), 4);
+        assert!(report.records.iter().all(|r| r.ws.is_some()));
+        // Workload-major: records 0,1 share workload, differ in preset.
+        assert_eq!(report.records[0].axis("workload"), report.records[1].axis("workload"));
+        assert_eq!(report.records[0].axis("preset"), Some("baseline"));
+        let summary = report.ws_summary();
+        assert_eq!(summary.len(), 1);
+        assert_eq!(summary[0].name, "risc-villa");
+        assert_eq!(summary[0].ws_improvements.len(), 2);
+    }
+
+    #[test]
+    fn alias_table_points_at_registered_specs() {
+        for (alias, name) in LEGACY_ALIASES {
+            let spec = spec_for_alias(alias).unwrap();
+            assert_eq!(&spec.name, name);
+        }
+        assert!(spec_for_alias("table1").is_err());
+        assert!(spec_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn usage_text_tracks_the_registry() {
+        let u = usage();
+        for spec in registry() {
+            assert!(u.contains(&spec.name), "usage misses {}", spec.name);
+            for axis in &spec.axes {
+                assert!(
+                    u.contains(&format!("--{}", axis.flag)),
+                    "usage misses --{} of {}",
+                    axis.flag,
+                    spec.name
+                );
+            }
+        }
+    }
+}

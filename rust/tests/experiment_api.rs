@@ -1,0 +1,219 @@
+//! Integration tests for the declarative experiment API: legacy
+//! subcommands are byte-identical aliases of the registry path, the
+//! big grids stay deterministic at any thread count, config names
+//! cannot alias across the full built-in grid, and a new scenario is
+//! one `ExperimentSpec` value — no CLI surgery.
+
+use lisa::cli::Args;
+use lisa::config::{PlacementPolicy, SalpMode};
+use lisa::sim::engine::config_name;
+use lisa::sim::spec::{
+    self, AxisDef, AxisKind, Eval, ExperimentSpec, RunOptions, LEGACY_ALIASES,
+};
+
+fn args_of(line: &str) -> Args {
+    Args::parse(line.split_whitespace().map(str::to_string)).unwrap()
+}
+
+/// Run one experiment the way a CLI subcommand does: resolve the spec,
+/// extract options from the parsed arguments, run, serialize.
+fn json_via(spec: &ExperimentSpec, argv: &str) -> String {
+    let args = args_of(argv);
+    let opts = RunOptions::from_args(spec, &args).unwrap();
+    spec::run(spec, &opts).unwrap().to_json()
+}
+
+#[test]
+fn every_legacy_subcommand_is_byte_identical_to_its_registry_spec() {
+    // The acceptance bar of the API redesign: `lisa <legacy> ...` and
+    // `lisa exp <spec> ...` produce byte-identical JSON for the same
+    // options — including the legacy flag spellings (`--scenarios`,
+    // `--mechs`, `--mixes`).
+    let shrunk: &[(&str, &str)] = &[
+        ("fig3", "--requests 200 --mixes 1 --threads 2"),
+        ("fig4", "--requests 150 --mixes 1 --threads 2 --presets baseline,risc"),
+        ("lip-system", "--requests 150 --mixes 1 --threads 2"),
+        (
+            "os",
+            "--requests 200 --threads 2 --mechs memcpy,lisa-risc \
+             --policies packed --scenarios os-fork",
+        ),
+        (
+            "salp",
+            "--requests 150 --threads 2 --mechs lisa-risc --modes none,masa \
+             --policies packed --workloads salp-pingpong4",
+        ),
+        ("sweep", "--requests 300 --threads 2 --mechs memcpy --workloads stream4"),
+    ];
+    for (alias, flags) in shrunk {
+        let (_, name) = LEGACY_ALIASES
+            .iter()
+            .find(|(a, _)| a == alias)
+            .unwrap_or_else(|| panic!("{alias} missing from LEGACY_ALIASES"));
+        let legacy_spec = spec::spec_for_alias(alias).unwrap();
+        let exp_spec = spec::spec_by_name(name).unwrap();
+        let legacy = json_via(&legacy_spec, &format!("{alias} {flags}"));
+        let exp = json_via(&exp_spec, &format!("exp {name} {flags}"));
+        assert!(!legacy.is_empty());
+        assert_eq!(legacy, exp, "{alias} vs exp {name}");
+        // The unified schema is the same document shape everywhere.
+        assert!(legacy.contains(&format!("\"experiment\":\"{name}\"")), "{legacy}");
+        assert!(legacy.contains("\"schema\":1"), "{legacy}");
+        assert!(legacy.contains("\"records\":["), "{legacy}");
+    }
+}
+
+#[test]
+fn e9_grid_is_byte_identical_across_thread_counts() {
+    let s = spec::spec_by_name("e9-os").unwrap();
+    let opts = RunOptions::default()
+        .requests(300)
+        .axis("workload", &["os-fork", "os-checkpoint", "os-promote"])
+        .axis("mech", &["memcpy", "lisa-risc"])
+        .axis("policy", &["packed", "spread"]);
+    let serial = spec::run(&s, &opts.clone().threads(1)).unwrap();
+    assert_eq!(serial.records.len(), 12);
+    // Scenario-major row order, and every record carries the OS layer.
+    assert!(serial.records[..4]
+        .iter()
+        .all(|r| r.axis("workload") == Some("os-fork")));
+    assert!(serial
+        .records
+        .iter()
+        .all(|r| r.report.os.as_ref().is_some_and(|o| o.pages_copied > 0)));
+    let json1 = serial.to_json();
+    for threads in [2, 8] {
+        let rows = spec::run(&s, &opts.clone().threads(threads)).unwrap();
+        assert_eq!(serial, rows, "threads={threads}");
+        assert_eq!(json1, rows.to_json(), "threads={threads}");
+    }
+}
+
+#[test]
+fn e10_grid_is_byte_identical_across_thread_counts() {
+    let s = spec::spec_by_name("e10-salp").unwrap();
+    let opts = RunOptions::default()
+        .requests(150)
+        .axis("workload", &["salp-shared-bank4"])
+        .axis("mech", &["memcpy", "lisa-risc"])
+        .axis("mode", &["none", "masa"])
+        .axis("policy", &["packed"]);
+    let serial = spec::run(&s, &opts.clone().threads(1)).unwrap();
+    assert_eq!(serial.records.len(), 4);
+    assert_eq!(serial.records[0].axis("mode"), Some("none"));
+    assert_eq!(serial.records[1].axis("mode"), Some("masa"));
+    let json1 = serial.to_json();
+    for threads in [2, 8] {
+        let rows = spec::run(&s, &opts.clone().threads(threads)).unwrap();
+        assert_eq!(serial, rows, "threads={threads}");
+        assert_eq!(json1, rows.to_json(), "threads={threads}");
+    }
+}
+
+#[test]
+fn config_names_cannot_alias_across_the_full_builtin_grid() {
+    // The satellite fix: `config_name` now folds in the SALP mode and
+    // the placement policy, so distinct grid points of any built-in
+    // experiment never share a label unless their configs agree on
+    // every axis-visible knob.
+    let mut by_name: std::collections::BTreeMap<
+        String,
+        (lisa::config::CopyMechanism, bool, bool, SalpMode, PlacementPolicy),
+    > = std::collections::BTreeMap::new();
+    let mut points = 0usize;
+    for s in spec::registry() {
+        for p in spec::expand(&s, &RunOptions::default()).unwrap() {
+            points += 1;
+            let knobs = (
+                p.cfg.copy_mechanism,
+                p.cfg.lisa.villa,
+                p.cfg.lisa.lip,
+                p.cfg.dram.salp,
+                p.cfg.os.placement,
+            );
+            let name = config_name(&p.cfg);
+            if let Some(prev) = by_name.get(&name) {
+                assert_eq!(
+                    prev, &knobs,
+                    "config name '{name}' aliases two distinct configs"
+                );
+            } else {
+                by_name.insert(name, knobs);
+            }
+        }
+    }
+    // The registry actually exercised a non-trivial grid.
+    assert!(points > 400, "expected the full built-in grid, saw {points}");
+    // Spot checks: the knobs that used to alias are now in the name.
+    let salp_cfg = lisa::config::SimConfigBuilder::new()
+        .salp(SalpMode::Masa)
+        .placement(PlacementPolicy::Random)
+        .build()
+        .unwrap();
+    let name = config_name(&salp_cfg);
+    assert!(name.contains("salp:masa"), "{name}");
+    assert!(name.contains("place:random"), "{name}");
+    // Defaults stay short.
+    let default_name = config_name(&lisa::config::SimConfig::default());
+    assert_eq!(default_name, "memcpy");
+}
+
+#[test]
+fn a_new_scenario_is_one_spec_value() {
+    // The extension story the redesign exists for: registering a brand
+    // new experiment means building one `ExperimentSpec` — the same
+    // pipeline expands, runs, tabulates and serializes it without any
+    // per-experiment code.
+    let custom = ExperimentSpec {
+        name: "zero-storm".into(),
+        title: "demand-zero pressure across placements".into(),
+        requests: 150,
+        eval: Eval::Raw,
+        axes: vec![
+            AxisDef::new(
+                "workload",
+                "workloads",
+                AxisKind::Workload,
+                vec!["os-zero".into()],
+            ),
+            AxisDef::new(
+                "policy",
+                "policies",
+                AxisKind::Placement,
+                vec!["packed".into(), "random".into()],
+            ),
+        ],
+    };
+    let report = spec::run(&custom, &RunOptions::default().threads(2)).unwrap();
+    assert_eq!(report.experiment, "zero-storm");
+    assert_eq!(report.records.len(), 2);
+    assert_eq!(report.records[0].axis("policy"), Some("packed"));
+    let j = report.to_json();
+    assert!(j.contains("\"experiment\":\"zero-storm\""), "{j}");
+    // And the CLI option extractor understands its flags with zero
+    // subcommand plumbing.
+    let args = args_of("exp zero-storm --policies random --requests 99");
+    let opts = RunOptions::from_args(&custom, &args).unwrap();
+    assert_eq!(opts.requests, Some(99));
+    let axes = spec::effective_axes(&custom, &opts).unwrap();
+    assert_eq!(axes[1].1, vec!["random".to_string()]);
+}
+
+#[test]
+fn weighted_specs_reject_malformed_axis_shapes() {
+    // WeightedSpeedup is only defined for {workload × preset} grids;
+    // anything else must fail loudly, not mis-normalize.
+    let bad = ExperimentSpec {
+        name: "bad-ws".into(),
+        title: "ws without a preset axis".into(),
+        requests: 100,
+        eval: Eval::WeightedSpeedup,
+        axes: vec![AxisDef::new(
+            "workload",
+            "workloads",
+            AxisKind::Workload,
+            vec!["stream4".into()],
+        )],
+    };
+    assert!(spec::run(&bad, &RunOptions::default().threads(1)).is_err());
+}

@@ -3,12 +3,12 @@
 //! cross-cutting invariants (data movement correctness under load,
 //! determinism, bank-parallelism).
 
-use lisa::config::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
+use lisa::config::{
+    CopyMechanism, LisaPreset, PlacementPolicy, SalpMode, SimConfig, SimConfigBuilder,
+};
 use lisa::sim::campaign;
 use lisa::sim::engine::{run_workload, Simulation};
-use lisa::sim::experiments::{
-    cfg_all, cfg_baseline, cfg_os, cfg_risc, cfg_risc_villa, cfg_villa_rc, e9_os, os_json,
-};
+use lisa::sim::spec::{self, RunOptions};
 use lisa::workloads::mixes;
 
 fn quick(requests: u64) -> SimConfig {
@@ -16,6 +16,26 @@ fn quick(requests: u64) -> SimConfig {
     cfg.requests_per_core = requests;
     cfg.max_cycles = 50_000_000;
     cfg
+}
+
+/// One of the paper's named feature combinations at a given run length.
+fn preset_cfg(requests: u64, p: LisaPreset) -> SimConfig {
+    SimConfigBuilder::new()
+        .requests(requests)
+        .preset(p)
+        .build()
+        .expect("preset configs validate")
+}
+
+/// An E9 grid-point config (mechanism × placement).
+fn os_cfg(requests: u64, mech: CopyMechanism, policy: PlacementPolicy) -> SimConfig {
+    SimConfigBuilder::new()
+        .requests(requests)
+        .mechanism(mech)
+        .placement(policy)
+        .max_cycles(50_000_000)
+        .build()
+        .expect("os configs validate")
 }
 
 #[test]
@@ -65,22 +85,20 @@ fn generator_seeding_is_deterministic_end_to_end() {
 
 #[test]
 fn campaign_thread_count_does_not_change_results() {
-    // The full campaign stack (config grid -> parallel shards ->
-    // ordered reports) is deterministic in everything but wall-clock:
+    // The full campaign stack (spec grid -> parallel shards ->
+    // ordered records) is deterministic in everything but wall-clock:
     // 1, 2 and 8 worker threads must produce identical ordered rows.
-    let spec = campaign::SweepSpec {
-        base: quick(600),
-        mechanisms: vec![CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc],
-        speeds: vec![lisa::dram::timing::SpeedBin::Ddr3_1600],
-        workloads: vec!["fork4".into(), "copy-mix-01".into()],
-        requests: 600,
-        threads: 1,
-    };
-    let serial = campaign::run_sweep(&spec).unwrap();
+    let sweep = spec::spec_by_name("sweep").unwrap();
+    let opts = RunOptions::default()
+        .requests(600)
+        .axis("workload", &["fork4", "copy-mix-01"])
+        .axis("speed", &["ddr3-1600"])
+        .axis("mech", &["memcpy", "lisa-risc"]);
+    let serial = spec::run(&sweep, &opts.clone().threads(1)).unwrap();
+    assert_eq!(serial.records.len(), 4);
     for threads in [2, 8] {
-        let mut spec_n = spec.clone();
-        spec_n.threads = threads;
-        assert_eq!(serial, campaign::run_sweep(&spec_n).unwrap(), "threads={threads}");
+        let parallel = spec::run(&sweep, &opts.clone().threads(threads)).unwrap();
+        assert_eq!(serial, parallel, "threads={threads}");
     }
     // And the parallel weighted-speedup helper agrees with itself.
     let cfg = quick(600);
@@ -116,8 +134,8 @@ fn all_copy_mechanisms_complete_copy_mixes() {
 #[test]
 fn paper_claim_risc_beats_memcpy_beats_nothing() {
     // E5 direction: LISA-RISC > baseline on copy-heavy workloads.
-    let base = cfg_baseline(1_500);
-    let risc = cfg_risc(1_500);
+    let base = preset_cfg(1_500, LisaPreset::Baseline);
+    let risc = preset_cfg(1_500, LisaPreset::Risc);
     let wl = mixes::workload_by_name("fork4", &base).unwrap();
     let r_base = run_workload(&base, &wl);
     let r_risc = run_workload(&risc, &wl);
@@ -134,8 +152,8 @@ fn paper_claim_risc_beats_memcpy_beats_nothing() {
 #[test]
 fn paper_claim_villa_without_lisa_is_catastrophic() {
     // Fig. 3's second point: VILLA with RC-InterSA movement collapses.
-    let villa_lisa = cfg_risc_villa(1_500);
-    let villa_rc = cfg_villa_rc(1_500);
+    let villa_lisa = preset_cfg(1_500, LisaPreset::RiscVilla);
+    let villa_rc = preset_cfg(1_500, LisaPreset::VillaRc);
     let wl = mixes::workload_by_name("hotspot4", &villa_lisa).unwrap();
     let r_lisa = run_workload(&villa_lisa, &wl);
     let r_rc = run_workload(&villa_rc, &wl);
@@ -150,7 +168,7 @@ fn paper_claim_villa_without_lisa_is_catastrophic() {
 
 #[test]
 fn lip_reduces_cycles_on_row_miss_traffic() {
-    let base = cfg_baseline(1_500);
+    let base = preset_cfg(1_500, LisaPreset::Baseline);
     let mut lip = base.clone();
     lip.lisa.lip = true;
     let wl = mixes::workload_by_name("random4", &base).unwrap();
@@ -168,9 +186,9 @@ fn lip_reduces_cycles_on_row_miss_traffic() {
 #[test]
 fn combined_config_stacks_benefits() {
     // Fig. 4 direction on one copy mix: All >= RISC >= baseline.
-    let base = cfg_baseline(1_200);
-    let risc = cfg_risc(1_200);
-    let all = cfg_all(1_200);
+    let base = preset_cfg(1_200, LisaPreset::Baseline);
+    let risc = preset_cfg(1_200, LisaPreset::Risc);
+    let all = preset_cfg(1_200, LisaPreset::All);
     let wl = mixes::workload_by_name("copy-mix-04", &base).unwrap();
     let c_base = run_workload(&base, &wl).dram_cycles;
     let c_risc = run_workload(&risc, &wl).dram_cycles;
@@ -244,8 +262,7 @@ fn e9_lisa_risc_beats_memcpy_on_fork_and_zeroing() {
     for scenario in ["os-fork", "os-zero"] {
         let wl = mixes::workload_by_name(scenario, &SimConfig::default()).unwrap();
         let run = |mech| {
-            let mut cfg = cfg_os(700, mech, PlacementPolicy::SubarrayPacked);
-            cfg.max_cycles = 50_000_000;
+            let cfg = os_cfg(700, mech, PlacementPolicy::SubarrayPacked);
             run_workload(&cfg, &wl)
         };
         let memcpy = run(CopyMechanism::MemcpyChannel);
@@ -274,8 +291,7 @@ fn e9_placement_policy_changes_the_risc_hit_rate() {
     // random placement scatters them across banks.
     let wl = mixes::workload_by_name("os-fork", &SimConfig::default()).unwrap();
     let hit_rate = |policy| {
-        let mut cfg = cfg_os(700, CopyMechanism::LisaRisc, policy);
-        cfg.max_cycles = 50_000_000;
+        let cfg = os_cfg(700, CopyMechanism::LisaRisc, policy);
         let r = run_workload(&cfg, &wl);
         let os = r.os.unwrap();
         assert!(os.cow_faults > 0, "{policy:?}: fork never faulted");
@@ -295,24 +311,6 @@ fn e9_placement_policy_changes_the_risc_hit_rate() {
 }
 
 #[test]
-fn e9_report_is_identical_at_1_2_and_8_threads() {
-    // `lisa os` determinism: the full E9 path (grid -> campaign
-    // shards -> ordered rows -> JSON) at any thread count.
-    let scenarios: Vec<String> =
-        vec!["os-fork".into(), "os-checkpoint".into(), "os-promote".into()];
-    let mechs = [CopyMechanism::MemcpyChannel, CopyMechanism::LisaRisc];
-    let policies = [PlacementPolicy::SubarrayPacked, PlacementPolicy::SubarraySpread];
-    let serial = e9_os(300, &mechs, &policies, &scenarios, 1).unwrap();
-    assert_eq!(serial.len(), 12);
-    let json1 = os_json(&serial);
-    for threads in [2, 8] {
-        let rows = e9_os(300, &mechs, &policies, &scenarios, threads).unwrap();
-        assert_eq!(serial, rows, "threads={threads}");
-        assert_eq!(json1, os_json(&rows), "threads={threads}");
-    }
-}
-
-#[test]
 fn os_scenarios_complete_under_every_mechanism() {
     // No deadlocks between the page-copy queue, refresh and demand
     // traffic for any mechanism on any scenario.
@@ -322,8 +320,7 @@ fn os_scenarios_complete_under_every_mechanism() {
             CopyMechanism::RowCloneInterSa,
             CopyMechanism::LisaRisc,
         ] {
-            let mut cfg = cfg_os(400, mech, PlacementPolicy::VillaAware);
-            cfg.max_cycles = 50_000_000;
+            let cfg = os_cfg(400, mech, PlacementPolicy::VillaAware);
             let wl = mixes::workload_by_name(scenario, &cfg).unwrap();
             let r = run_workload(&cfg, &wl);
             assert!(
