@@ -20,12 +20,26 @@
 use std::time::Instant;
 
 use lisa::config::minitoml::Document;
-use lisa::config::SimConfig;
+use lisa::config::{CopyMechanism, SalpMode, SimConfig};
 use lisa::metrics::json;
 use lisa::sim::engine::Simulation;
 use lisa::sim::spec::{self, RunOptions};
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
+
+/// Measured configurations. The four all-LISA rows are the historical
+/// smoke set; `salp-conflict` drives an intra-bank conflict mix under
+/// MASA + LISA-RISC — together with `fork4` (copy-heavy) it anchors
+/// the per-class throughput floors of the perf gate, because those two
+/// put the most pressure on the scheduler's per-bank index and the
+/// cached event horizons.
+const CASES: [(&str, &str, SalpMode); 5] = [
+    ("stream4", "stream4", SalpMode::None),
+    ("random4", "random4", SalpMode::None),
+    ("hotspot4", "hotspot4", SalpMode::None),
+    ("fork4", "fork4", SalpMode::None),
+    ("salp-conflict", "salp-shared-bank4", SalpMode::Masa),
+];
 
 struct Measurement {
     name: &'static str,
@@ -48,10 +62,27 @@ impl Measurement {
     }
 }
 
-fn bench_workload(name: &'static str, requests: u64, handicap: f64) -> Measurement {
-    let mut cfg = SimConfig::default().with_all_lisa();
+fn bench_workload(
+    name: &'static str,
+    workload: &str,
+    salp: SalpMode,
+    requests: u64,
+    handicap: f64,
+) -> Measurement {
+    let mut cfg = if salp == SalpMode::None {
+        SimConfig::default().with_all_lisa()
+    } else {
+        // SALP rows run MASA + LISA-RISC + LIP without VILLA (the
+        // composition the E10 equivalence matrix pins).
+        let mut c = SimConfig::default();
+        c.lisa.risc = true;
+        c.lisa.lip = true;
+        c.copy_mechanism = CopyMechanism::LisaRisc;
+        c.dram.salp = salp;
+        c
+    };
     cfg.requests_per_core = requests;
-    let wl = mixes::workload_by_name(name, &cfg).unwrap();
+    let wl = mixes::workload_by_name(workload, &cfg).unwrap();
 
     let mut ff = Simulation::new(cfg.clone(), wl.clone());
     let t0 = Instant::now();
@@ -140,7 +171,7 @@ fn summary_json(requests: u64, measurements: &[Measurement], exp: &Expansion) ->
         })
         .collect();
     format!(
-        "{{\"bench\":\"sim_hotpath\",\"schema\":2,\"requests\":{requests},\
+        "{{\"bench\":\"sim_hotpath\",\"schema\":3,\"requests\":{requests},\
          \"workloads\":[\n{}\n],\"aggregate_ff_cyc_per_sec\":{},\
          \"worst_ff_speedup\":{},\"grid_points\":{},\
          \"grid_expansions_per_sec\":{}}}\n",
@@ -188,6 +219,29 @@ fn check_gate(
             "aggregate fast-forward throughput {agg_mcyc:.2} Mcyc/s < baseline floor \
              {min_mcyc:.2} Mcyc/s"
         ));
+    }
+    // Per-class floors: the copy-heavy and SALP-conflict rows are the
+    // scheduler-index / horizon-cache stress cases the aggregate can
+    // average away, so each is gated on its own.
+    for (key, wl) in [
+        ("min_ff_mcyc_per_sec_copy", "fork4"),
+        ("min_ff_mcyc_per_sec_salp", "salp-conflict"),
+    ] {
+        let floor = doc
+            .get_f64("sim_hotpath", key)
+            .unwrap_or_else(|e| panic!("{key} type: {e}"))
+            .unwrap_or_else(|| panic!("{key} present"));
+        let m = measurements
+            .iter()
+            .find(|m| m.name == wl)
+            .unwrap_or_else(|| panic!("gated workload '{wl}' was measured"));
+        let rate = m.ff_rate() / 1e6;
+        if rate < floor {
+            violations.push(format!(
+                "{wl} fast-forward throughput {rate:.2} Mcyc/s < class floor \
+                 {floor:.2} Mcyc/s ({key})"
+            ));
+        }
     }
     if exp.registries_per_sec < min_expansions {
         violations.push(format!(
@@ -250,8 +304,8 @@ fn main() {
         "speedup",
     ]);
     let mut measurements = Vec::new();
-    for name in ["stream4", "random4", "hotspot4", "fork4"] {
-        let m = bench_workload(name, requests, handicap);
+    for (name, workload, salp) in CASES {
+        let m = bench_workload(name, workload, salp, requests, handicap);
         t.row(&[
             name.to_string(),
             format!("{}", m.cycles),

@@ -192,11 +192,20 @@ fn parse_value(s: &str) -> Result<Value> {
         "false" => return Ok(Value::Bool(false)),
         _ => {}
     }
-    // Hex integers.
+    // Hex integers (underscores between hex digits, TOML-style).
     if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
-        return Ok(Value::Int(i64::from_str_radix(hex, 16)?));
+        if hex.contains('_') && !underscores_between(hex, |c| c.is_ascii_hexdigit()) {
+            bail!("bad underscore placement in number '{s}'");
+        }
+        let cleaned: String = hex.chars().filter(|&c| c != '_').collect();
+        return Ok(Value::Int(i64::from_str_radix(&cleaned, 16)?));
     }
-    // Underscore separators allowed in numbers, TOML-style.
+    // Underscore separators allowed in numbers, TOML-style: each `_`
+    // must sit between two digits. (Stripping them first would accept
+    // TOML-invalid spellings like `_1`, `1__2` and `1_`.)
+    if s.contains('_') && !underscores_between(s, |c| c.is_ascii_digit()) {
+        bail!("bad underscore placement in number '{s}'");
+    }
     let cleaned: String = s.chars().filter(|&c| c != '_').collect();
     if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
         if let Ok(f) = cleaned.parse::<f64>() {
@@ -206,6 +215,24 @@ fn parse_value(s: &str) -> Result<Value> {
         return Ok(Value::Int(i));
     }
     bail!("cannot parse value '{s}'")
+}
+
+/// TOML's underscore rule for numeric literals: every underscore must
+/// be surrounded by digits of the literal's radix (so `1_000`,
+/// `1e1_0` and `0xdead_beef` pass; `_1`, `1_`, `1__2`, `1_.5`, `-_1`
+/// and `0x_ff` do not).
+fn underscores_between(s: &str, is_digit: impl Fn(u8) -> bool) -> bool {
+    let b = s.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'_' {
+            let prev_ok = i > 0 && is_digit(b[i - 1]);
+            let next_ok = i + 1 < b.len() && is_digit(b[i + 1]);
+            if !prev_ok || !next_ok {
+                return false;
+            }
+        }
+    }
+    true
 }
 
 fn unescape(s: &str) -> Result<String> {
@@ -261,6 +288,30 @@ mod tests {
     fn underscore_numbers() {
         let doc = Document::parse("n = 1_000_000\n").unwrap();
         assert_eq!(doc.get_i64("", "n").unwrap(), Some(1_000_000));
+        // Underscores between digits work in floats and exponents too.
+        let doc = Document::parse("f = 1_000.000_1\ne = 1e1_0\nneg = -1_000\n").unwrap();
+        assert_eq!(doc.get_f64("", "f").unwrap(), Some(1000.0001));
+        assert_eq!(doc.get_f64("", "e").unwrap(), Some(1e10));
+        assert_eq!(doc.get_i64("", "neg").unwrap(), Some(-1000));
+        // Hex literals take underscores between hex digits.
+        let doc = Document::parse("h = 0xdead_beef\n").unwrap();
+        assert_eq!(doc.get_i64("", "h").unwrap(), Some(0xdead_beef));
+    }
+
+    #[test]
+    fn misplaced_underscores_rejected() {
+        // TOML requires underscores between digits; stripping them
+        // blindly used to accept all of these.
+        let bad = [
+            "_1", "1_", "1__2", "1_.5", "1._5", "-_1", "1_e3", "1e_3", "0x_ff",
+            "0xff_", "0x1__2",
+        ];
+        for bad in bad {
+            assert!(
+                Document::parse(&format!("n = {bad}\n")).is_err(),
+                "'{bad}' must be rejected"
+            );
+        }
     }
 
     #[test]

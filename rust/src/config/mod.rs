@@ -515,7 +515,11 @@ impl SimConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        if self.dram.banks == 0 || self.dram.subarrays_per_bank == 0 {
+        if self.dram.channels == 0
+            || self.dram.ranks == 0
+            || self.dram.banks == 0
+            || self.dram.subarrays_per_bank == 0
+        {
             bail!("dram geometry must be non-zero");
         }
         if !self.dram.banks.is_power_of_two()
@@ -527,6 +531,18 @@ impl SimConfig {
         }
         if self.cpu.cores == 0 {
             bail!("need at least one core");
+        }
+        if self.cpu.clock_ratio == 0 {
+            // `Simulation::drive` steps each core `clock_ratio` times
+            // per DRAM cycle; zero would never step a core and the run
+            // would silently spin to the max_cycles cap.
+            bail!("cpu.clock_ratio must be >= 1");
+        }
+        if self.cpu.issue_width == 0 {
+            bail!("cpu.issue_width must be >= 1 (cores could neither issue nor retire)");
+        }
+        if self.cpu.rob_size == 0 || self.cpu.mshrs == 0 {
+            bail!("cpu.rob_size and cpu.mshrs must be >= 1");
         }
         if self.lisa.villa
             && self.lisa.fast_subarrays_per_bank >= self.dram.subarrays_per_bank
@@ -679,6 +695,30 @@ mod tests {
     fn invalid_geometry_rejected() {
         assert!(SimConfig::from_toml("[dram]\nbanks = 7\n").is_err());
         assert!(SimConfig::from_toml("[cpu]\ncores = 0\n").is_err());
+    }
+
+    #[test]
+    fn zero_cpu_and_timing_fields_rejected() {
+        // clock_ratio = 0 used to validate, making `Simulation::drive`
+        // never step a core (`for _ in 0..ratio`) and silently spin to
+        // the max_cycles cap. The sibling per-cycle quantities have the
+        // same never-progress failure mode.
+        let cases: [(&str, fn(&mut SimConfig)); 6] = [
+            ("clock_ratio", |c| c.cpu.clock_ratio = 0),
+            ("issue_width", |c| c.cpu.issue_width = 0),
+            ("rob_size", |c| c.cpu.rob_size = 0),
+            ("mshrs", |c| c.cpu.mshrs = 0),
+            ("channels", |c| c.dram.channels = 0),
+            ("ranks", |c| c.dram.ranks = 0),
+        ];
+        for (name, poison) in cases {
+            let mut cfg = SimConfig::default();
+            poison(&mut cfg);
+            assert!(cfg.validate().is_err(), "zero {name} must be rejected");
+        }
+        // The TOML path runs the same validation.
+        assert!(SimConfig::from_toml("[cpu]\nclock_ratio = 0\n").is_err());
+        assert!(SimConfig::from_toml("[cpu]\nissue_width = 0\n").is_err());
     }
 
     #[test]

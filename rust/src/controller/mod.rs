@@ -4,8 +4,10 @@
 //! (access counting, address redirection, cache-fill copies).
 
 pub mod mapping;
+pub mod queue;
 pub mod request;
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 
 use anyhow::Result;
@@ -19,6 +21,7 @@ use crate::dram::timing::Timing;
 use crate::lisa::villa::VillaManager;
 use crate::util::stats::Histogram;
 use mapping::{Mapper, MappingScheme};
+use queue::{BankedQueue, QueueLoc};
 use request::{Completion, CopyRequest, MemRequest};
 
 /// Queue capacities (per channel), Ramulator-like defaults.
@@ -88,8 +91,8 @@ struct MemcpyState {
 /// Per-channel controller state.
 #[derive(Debug)]
 struct ChannelState {
-    read_q: VecDeque<MemRequest>,
-    write_q: VecDeque<MemRequest>,
+    read_q: BankedQueue,
+    write_q: BankedQueue,
     copy_q: VecDeque<CopyRequest>,
     active_copy: Option<CopyOp>,
     pending_cmd: Option<Command>,
@@ -112,6 +115,12 @@ pub struct Controller {
     page_copy_q: VecDeque<CopyRequest>,
     inflight: Vec<(u64, Event)>,
     completions: Vec<Completion>,
+    /// Cached per-channel horizon (`channel_horizon`), dropped on any
+    /// mutation of the channel's controller or device state. `Cell`
+    /// keeps `next_event_cycle` a `&self` query. Purely a cache: the
+    /// per-cycle reference loop never consults it, and tests pin the
+    /// cached value against a fresh recomputation at every probe.
+    horizon: Vec<Cell<Option<u64>>>,
     pub stats: CtrlStats,
     pub now: u64,
 }
@@ -135,10 +144,10 @@ impl Controller {
         } else {
             None
         };
-        let chans = (0..cfg.dram.channels)
+        let chans: Vec<ChannelState> = (0..cfg.dram.channels)
             .map(|_| ChannelState {
-                read_q: VecDeque::with_capacity(READ_Q_CAP),
-                write_q: VecDeque::with_capacity(WRITE_Q_CAP),
+                read_q: BankedQueue::new(cfg.dram.ranks, cfg.dram.banks),
+                write_q: BankedQueue::new(cfg.dram.ranks, cfg.dram.banks),
                 copy_q: VecDeque::new(),
                 active_copy: None,
                 pending_cmd: None,
@@ -150,6 +159,7 @@ impl Controller {
                 refresh_pending: vec![false; cfg.dram.ranks],
             })
             .collect();
+        let horizon = (0..chans.len()).map(|_| Cell::new(None)).collect();
         Self {
             cfg,
             dev,
@@ -159,9 +169,18 @@ impl Controller {
             page_copy_q: VecDeque::new(),
             inflight: Vec::new(),
             completions: Vec::new(),
+            horizon,
             stats: CtrlStats::default(),
             now: 0,
         }
+    }
+
+    /// Drop channel `ch`'s cached horizon: some state consulted by
+    /// `channel_horizon` changed. Every mutation of `chans[ch]` or of
+    /// the device's channel `ch` must be followed by this.
+    #[inline]
+    fn invalidate_horizon(&self, ch: usize) {
+        self.horizon[ch].set(None);
     }
 
     /// Room for another read/write on `ch`?
@@ -204,7 +223,9 @@ impl Controller {
             addr = redirected;
             for c in copies {
                 self.stats.villa_copies += 1;
-                self.chans[c.src.channel].copy_q.push_back(c);
+                let cch = c.src.channel;
+                self.chans[cch].copy_q.push_back(c);
+                self.invalidate_horizon(cch);
             }
         }
         let ch = addr.channel;
@@ -222,6 +243,7 @@ impl Controller {
         } else {
             self.chans[ch].read_q.push_back(req);
         }
+        self.invalidate_horizon(ch);
         true
     }
 
@@ -235,7 +257,9 @@ impl Controller {
                 v.invalidate(&a);
             }
         }
-        self.chans[req.src.channel].copy_q.push_back(req);
+        let ch = req.src.channel;
+        self.chans[ch].copy_q.push_back(req);
+        self.invalidate_horizon(ch);
     }
 
     /// Enqueue a page-granularity copy from the OS layer. Requests
@@ -270,12 +294,22 @@ impl Controller {
         let now = self.now;
         // Deliver due events. swap_remove keeps this O(n) per tick.
         let mut i = 0;
+        let mut delivered = false;
         while i < self.inflight.len() {
             if self.inflight[i].0 <= now {
                 let (_, ev) = self.inflight.swap_remove(i);
                 self.handle_event(ev)?;
+                delivered = true;
             } else {
                 i += 1;
+            }
+        }
+        if delivered {
+            // Event delivery can mutate any channel's queues / copy
+            // state; events are rare relative to ticks, so a blanket
+            // drop is cheaper than tracking the channels touched.
+            for h in &self.horizon {
+                h.set(None);
             }
         }
         if let Some(v) = self.villa.as_mut() {
@@ -390,8 +424,11 @@ impl Controller {
 
         // 1. Refresh has absolute priority once due.
         for rank in 0..self.cfg.dram.ranks {
-            if now >= self.chans[ch].next_refresh[rank] {
+            if now >= self.chans[ch].next_refresh[rank]
+                && !self.chans[ch].refresh_pending[rank]
+            {
                 self.chans[ch].refresh_pending[rank] = true;
+                self.invalidate_horizon(ch);
             }
             if self.chans[ch].refresh_pending[rank] {
                 let cmd = Command::Ref { rank };
@@ -400,6 +437,7 @@ impl Controller {
                         self.dev.issue(ch, cmd, now)?;
                         self.chans[ch].refresh_pending[rank] = false;
                         self.chans[ch].next_refresh[rank] += self.dev.timing.t_refi;
+                        self.invalidate_horizon(ch);
                         return Ok(());
                     }
                 } else {
@@ -410,6 +448,7 @@ impl Controller {
                             if let Ok(e) = self.dev.earliest(ch, pre, now) {
                                 if e <= now {
                                     self.dev.issue(ch, pre, now)?;
+                                    self.invalidate_horizon(ch);
                                     return Ok(());
                                 }
                             }
@@ -455,6 +494,9 @@ impl Controller {
                         ));
                     }
                 }
+                // Both arms mutate the copy engine state (sequence
+                // advanced + command staged, or the op retired).
+                self.invalidate_horizon(ch);
             }
         }
         if copy_paused {
@@ -471,6 +513,7 @@ impl Controller {
                         op.on_issued(issued.done_at);
                     }
                     self.chans[ch].pending_cmd = None;
+                    self.invalidate_horizon(ch);
                     return Ok(());
                 }
                 Ok(_) => {}
@@ -490,6 +533,7 @@ impl Controller {
                             if let Ok(e) = self.dev.earliest(ch, pre, now) {
                                 if e <= now {
                                     self.dev.issue(ch, pre, now)?;
+                                    self.invalidate_horizon(ch);
                                     return Ok(());
                                 }
                             }
@@ -500,6 +544,7 @@ impl Controller {
                             op.restart_row();
                         }
                         self.chans[ch].pending_cmd = None;
+                        self.invalidate_horizon(ch);
                     }
                 }
             }
@@ -532,6 +577,7 @@ impl Controller {
         } else {
             c.active_copy = Some(CopyOp::new(req, &self.cfg.dram));
         }
+        self.invalidate_horizon(ch);
     }
 
     fn generate_memcpy_reads(&mut self, ch: usize) {
@@ -540,6 +586,7 @@ impl Controller {
         let Some(m) = c.active_memcpy.as_mut() else {
             return;
         };
+        let mut pushed = false;
         while m.reads_issued < cols && c.read_q.len() < READ_Q_CAP {
             let mut a = m.req.src;
             a.row += m.row_idx;
@@ -554,6 +601,10 @@ impl Controller {
                 copy_id: Some(m.req.id),
             });
             m.reads_issued += 1;
+            pushed = true;
+        }
+        if pushed {
+            self.invalidate_horizon(ch);
         }
     }
 
@@ -576,25 +627,34 @@ impl Controller {
         }
         let serve_writes = self.chans[ch].drain_mode;
 
-        if let Some((qi, cmd)) = self.pick_request(ch, serve_writes, now) {
-            self.issue_for_request(ch, serve_writes, qi, cmd)?;
+        if let Some((loc, cmd)) = self.pick_request(ch, serve_writes, now) {
+            self.issue_for_request(ch, serve_writes, loc, cmd)?;
             return Ok(());
         }
         // Nothing issuable in the preferred queue: try the other one.
-        if let Some((qi, cmd)) = self.pick_request(ch, !serve_writes, now) {
-            self.issue_for_request(ch, !serve_writes, qi, cmd)?;
+        if let Some((loc, cmd)) = self.pick_request(ch, !serve_writes, now) {
+            self.issue_for_request(ch, !serve_writes, loc, cmd)?;
         }
         Ok(())
     }
 
-    /// Find the first schedulable (queue index, command) pair under
-    /// FR-FCFS: pass 1 row hits, pass 2 oldest-first preparation.
-    /// Under SALP modes pass 1 sees the open row of the *request's own
-    /// subarray* (so hits in distinct subarrays of one bank coexist)
-    /// and pass 2 prepares rows per subarray via `prep_command`.
-    fn pick_request(&self, ch: usize, writes: bool, now: u64) -> Option<(usize, Command)> {
+    /// Find the oldest schedulable (queue location, command) pair
+    /// under FR-FCFS: pass 1 row hits, pass 2 oldest-first
+    /// preparation. Under SALP modes pass 1 sees the open row of the
+    /// *request's own subarray* (so hits in distinct subarrays of one
+    /// bank coexist) and pass 2 prepares rows per subarray via
+    /// `prep_command`.
+    ///
+    /// Both passes walk the per-(rank, bank) buckets instead of the
+    /// flat queue: bank-level rejects (busy bank, refresh-parked rank,
+    /// copy-owned bank) skip whole buckets, and a bucket stops being
+    /// scanned as soon as a candidate older than its remaining entries
+    /// is in hand. Selection is identical to the flat oldest-first
+    /// scan: the winner is the ready candidate with the minimum
+    /// arrival `seq` over all buckets.
+    fn pick_request(&self, ch: usize, writes: bool, now: u64) -> Option<(QueueLoc, Command)> {
         let c = &self.chans[ch];
-        let q: &VecDeque<MemRequest> = if writes { &c.write_q } else { &c.read_q };
+        let q: &BankedQueue = if writes { &c.write_q } else { &c.read_q };
         if q.is_empty() {
             return None;
         }
@@ -605,32 +665,47 @@ impl Controller {
         let bus_ready_rd = chan_dev.next_rd <= now;
         let bus_ready_wr = chan_dev.next_wr <= now;
 
-        // Pass 1: row hits ready to go.
+        // Pass 1: the oldest row hit ready to go.
         if bus_ready_rd || bus_ready_wr {
-            for (qi, req) in q.iter().enumerate() {
-                let a = &req.addr;
-                let bank = self.dev.bank(ch, a.rank, a.bank);
-                let sa = a.subarray(&self.cfg.dram);
-                // Fast rejects before the full timing check.
-                if bank.subarrays[sa].next_rdwr > now || bank.busy_until > now {
+            let mut best: Option<(u64, QueueLoc, Command)> = None;
+            for (bucket, rank, bank_i, entries) in q.banks_with_work() {
+                let bank = self.dev.bank(ch, rank, bank_i);
+                // Fast reject for the whole bucket.
+                if bank.busy_until > now {
                     continue;
                 }
-                let w = writes || req.is_write;
-                if (w && !bus_ready_wr) || (!w && !bus_ready_rd) {
-                    continue;
-                }
-                if bank.subarrays[sa].open_row() == Some(a.row) {
-                    let cmd = if w {
-                        Command::Wr { rank: a.rank, bank: a.bank, sa, col: a.col }
-                    } else {
-                        Command::Rd { rank: a.rank, bank: a.bank, sa, col: a.col }
-                    };
-                    if let Ok(e) = self.dev.earliest(ch, cmd, now) {
-                        if e <= now {
-                            return Some((qi, cmd));
+                for (pos, e) in entries.iter().enumerate() {
+                    // Bucket entries are seq-ascending: nothing below
+                    // can beat an older candidate already in hand.
+                    if best.as_ref().is_some_and(|(s, ..)| *s < e.seq) {
+                        break;
+                    }
+                    let a = &e.req.addr;
+                    let sa = a.subarray(&self.cfg.dram);
+                    if bank.subarrays[sa].next_rdwr > now {
+                        continue;
+                    }
+                    let w = writes || e.req.is_write;
+                    if (w && !bus_ready_wr) || (!w && !bus_ready_rd) {
+                        continue;
+                    }
+                    if bank.subarrays[sa].open_row() == Some(a.row) {
+                        let cmd = if w {
+                            Command::Wr { rank: a.rank, bank: a.bank, sa, col: a.col }
+                        } else {
+                            Command::Rd { rank: a.rank, bank: a.bank, sa, col: a.col }
+                        };
+                        if let Ok(e_cyc) = self.dev.earliest(ch, cmd, now) {
+                            if e_cyc <= now {
+                                best = Some((e.seq, QueueLoc { bucket, pos }, cmd));
+                                break;
+                            }
                         }
                     }
                 }
+            }
+            if let Some((_, loc, cmd)) = best {
+                return Some((loc, cmd));
             }
         }
         // Banks owned by the active copy: don't open new rows there,
@@ -643,44 +718,54 @@ impl Controller {
             .map(|op| op.banks(&self.cfg.dram))
             .unwrap_or([None; 3]);
         // Pass 2: oldest-first, prepare the row (PRE / PRE_SA or ACT).
-        for (qi, req) in q.iter().enumerate() {
-            let a = &req.addr;
-            // Don't prepare rows for ranks with refresh pending.
-            if c.refresh_pending[a.rank] {
+        let mut best: Option<(u64, QueueLoc, Command)> = None;
+        for (bucket, rank, bank_i, entries) in q.banks_with_work() {
+            // Don't prepare rows for ranks with refresh pending, nor
+            // for banks the active copy owns; a busy bank can take
+            // neither ACT nor PRE. All three park the whole bucket.
+            if c.refresh_pending[rank] {
                 continue;
             }
-            if copy_rank == Some(a.rank) && copy_banks.contains(&Some(a.bank)) {
+            if copy_rank == Some(rank) && copy_banks.contains(&Some(bank_i)) {
                 continue;
             }
-            let bank = self.dev.bank(ch, a.rank, a.bank);
-            // Fast reject: a busy bank can take neither ACT nor PRE.
+            let bank = self.dev.bank(ch, rank, bank_i);
             if bank.busy_until > now {
                 continue;
             }
-            let sa = a.subarray(&self.cfg.dram);
-            if bank.subarrays[sa].open_row() == Some(a.row) {
-                continue; // hit not ready yet (bus or tRCD); keep order
-            }
-            let cmd = self.prep_command(bank, a, sa);
-            // Cheap per-command register gates before the full check.
-            let ready = match cmd {
-                Command::Act { .. } => {
-                    bank.next_act <= now && bank.subarrays[sa].next_act <= now
+            for (pos, e) in entries.iter().enumerate() {
+                if best.as_ref().is_some_and(|(s, ..)| *s < e.seq) {
+                    break;
                 }
-                Command::Pre { .. } => bank.next_pre <= now,
-                Command::PreSa { sa: victim, .. } => bank.subarrays[victim].next_pre <= now,
-                _ => true,
-            };
-            if !ready {
-                continue;
-            }
-            if let Ok(e) = self.dev.earliest(ch, cmd, now) {
-                if e <= now {
-                    return Some((qi, cmd));
+                let a = &e.req.addr;
+                let sa = a.subarray(&self.cfg.dram);
+                if bank.subarrays[sa].open_row() == Some(a.row) {
+                    continue; // hit not ready yet (bus or tRCD); keep order
+                }
+                let cmd = self.prep_command(bank, a, sa);
+                // Cheap per-command register gates before the full check.
+                let ready = match cmd {
+                    Command::Act { .. } => {
+                        bank.next_act <= now && bank.subarrays[sa].next_act <= now
+                    }
+                    Command::Pre { .. } => bank.next_pre <= now,
+                    Command::PreSa { sa: victim, .. } => {
+                        bank.subarrays[victim].next_pre <= now
+                    }
+                    _ => true,
+                };
+                if !ready {
+                    continue;
+                }
+                if let Ok(e_cyc) = self.dev.earliest(ch, cmd, now) {
+                    if e_cyc <= now {
+                        best = Some((e.seq, QueueLoc { bucket, pos }, cmd));
+                        break;
+                    }
                 }
             }
         }
-        None
+        best.map(|(_, loc, cmd)| (loc, cmd))
     }
 
     /// The row-preparation command pass 2 (oldest-first) would issue
@@ -719,7 +804,7 @@ impl Controller {
         &mut self,
         ch: usize,
         writes: bool,
-        qi: usize,
+        loc: QueueLoc,
         cmd: Command,
     ) -> Result<()> {
         let now = self.now;
@@ -727,7 +812,7 @@ impl Controller {
         match cmd {
             Command::Rd { .. } => {
                 self.stats.row_hits += 1;
-                let req = self.chans[ch].read_q.remove(qi).expect("read present");
+                let req = self.chans[ch].read_q.remove(loc).expect("read present");
                 let lat = issued.done_at - req.arrive;
                 if let Some(copy_id) = req.copy_id {
                     let m = self.chans[ch].active_memcpy.as_ref().expect("memcpy");
@@ -762,7 +847,7 @@ impl Controller {
                 } else {
                     &mut self.chans[ch].read_q
                 };
-                let req = q.remove(qi).expect("write present");
+                let req = q.remove(loc).expect("write present");
                 debug_assert!(req.is_write);
                 self.inflight.push((
                     issued.done_at,
@@ -774,6 +859,7 @@ impl Controller {
             }
             _ => {}
         }
+        self.invalidate_horizon(ch);
         Ok(())
     }
 
@@ -795,7 +881,25 @@ impl Controller {
     /// returned one, so the engine may jump `now` straight to it.
     /// Returning `self.now` means "possibly active right now; do not
     /// skip". `u64::MAX` means nothing will ever happen again.
+    ///
+    /// The per-channel component is cached (`self.horizon`) and only
+    /// recomputed after a mutation of that channel's state; the cheap
+    /// global terms (in-flight events, the VILLA epoch boundary, the
+    /// parked page-copy head) are evaluated fresh on every call.
     pub fn next_event_cycle(&self) -> u64 {
+        self.next_event_cycle_inner(true)
+    }
+
+    /// `next_event_cycle` with the per-channel horizon cache bypassed
+    /// (neither consulted nor filled). The two must agree at every
+    /// cycle; the lower-bound property test pins them against each
+    /// other so a stale cache is a loud failure, not a silent slowdown
+    /// (or worse, a skipped event).
+    pub fn next_event_cycle_uncached(&self) -> u64 {
+        self.next_event_cycle_inner(false)
+    }
+
+    fn next_event_cycle_inner(&self, use_cache: bool) -> u64 {
         let now = self.now;
         let mut h = u64::MAX;
         for (t, _) in &self.inflight {
@@ -817,67 +921,98 @@ impl Controller {
                 return now;
             }
         }
-        for (ch, c) in self.chans.iter().enumerate() {
-            // Refresh deadlines and pending-refresh progress.
-            for rank in 0..self.cfg.dram.ranks {
-                if c.refresh_pending[rank] {
-                    match self.dev.earliest(ch, Command::Ref { rank }, now) {
-                        Ok(e) => h = h.min(e),
-                        Err(_) => {
-                            // REF blocked on open banks: the tick loop
-                            // closes them one PRE at a time.
-                            for bank in 0..self.cfg.dram.banks {
-                                if !self.dev.bank(ch, rank, bank).all_precharged() {
-                                    let pre = Command::Pre { rank, bank };
-                                    if let Ok(e) = self.dev.earliest(ch, pre, now) {
-                                        h = h.min(e);
-                                    }
+        for ch in 0..self.chans.len() {
+            let hc = if use_cache {
+                match self.horizon[ch].get() {
+                    Some(v) => v,
+                    None => {
+                        let v = self.channel_horizon(ch);
+                        self.horizon[ch].set(Some(v));
+                        v
+                    }
+                }
+            } else {
+                self.channel_horizon(ch)
+            };
+            // Every term of `channel_horizon` is `max(now, f(state))`
+            // for a pure `f` of the channel's frozen state, so a
+            // cached value computed at an earlier `now` stays exact
+            // under the clamp below until the state mutates (which
+            // drops the cache).
+            h = h.min(hc.max(now));
+            if h <= now {
+                return now;
+            }
+        }
+        h
+    }
+
+    /// The per-channel horizon component: refresh deadlines and
+    /// pending-refresh progress, the copy engine, memcpy read
+    /// generation, and every FR-FCFS candidate — against the channel's
+    /// current (frozen) controller + device state.
+    fn channel_horizon(&self, ch: usize) -> u64 {
+        let now = self.now;
+        let c = &self.chans[ch];
+        let mut h = u64::MAX;
+        // Refresh deadlines and pending-refresh progress.
+        for rank in 0..self.cfg.dram.ranks {
+            if c.refresh_pending[rank] {
+                match self.dev.earliest(ch, Command::Ref { rank }, now) {
+                    Ok(e) => h = h.min(e),
+                    Err(_) => {
+                        // REF blocked on open banks: the tick loop
+                        // closes them one PRE at a time.
+                        for bank in 0..self.cfg.dram.banks {
+                            if !self.dev.bank(ch, rank, bank).all_precharged() {
+                                let pre = Command::Pre { rank, bank };
+                                if let Ok(e) = self.dev.earliest(ch, pre, now) {
+                                    h = h.min(e);
                                 }
                             }
                         }
                     }
-                } else {
-                    h = h.min(c.next_refresh[rank].max(now));
                 }
-            }
-            // Copy engine: activation and sequence advancement mutate
-            // state on the very next tick — never skip across them.
-            if c.active_copy.is_none() && c.active_memcpy.is_none() && !c.copy_q.is_empty()
-            {
-                return now;
-            }
-            if let Some(cmd) = c.pending_cmd {
-                match self.dev.earliest(ch, cmd, now) {
-                    Ok(e) => h = h.min(e),
-                    // Structurally blocked: the tick loop's recovery
-                    // path (close bank / restart row) mutates state.
-                    Err(_) => return now,
-                }
-            } else if c.active_copy.is_some() {
-                return now; // next_command() advances the sequence
-            }
-            if let Some(m) = c.active_memcpy.as_ref() {
-                if m.reads_issued < self.cfg.dram.columns && c.read_q.len() < READ_Q_CAP {
-                    return now; // read generation runs this tick
-                }
-            }
-            // FR-FCFS candidates: per-bank earliest() for every queued
-            // request (both queues are consulted every tick regardless
-            // of drain mode, so both bound the horizon).
-            let copy_rank = c.active_copy.as_ref().map(|op| op.req.src.rank);
-            let copy_banks: [Option<usize>; 3] = c
-                .active_copy
-                .as_ref()
-                .map(|op| op.banks(&self.cfg.dram))
-                .unwrap_or([None; 3]);
-            for req in c.read_q.iter().chain(c.write_q.iter()) {
-                h = h.min(self.request_ready_cycle(ch, c, req, copy_rank, &copy_banks, now));
-                if h <= now {
-                    return now;
-                }
+            } else {
+                h = h.min(c.next_refresh[rank].max(now));
             }
         }
-        h.max(now)
+        // Copy engine: activation and sequence advancement mutate
+        // state on the very next tick — never skip across them.
+        if c.active_copy.is_none() && c.active_memcpy.is_none() && !c.copy_q.is_empty() {
+            return now;
+        }
+        if let Some(cmd) = c.pending_cmd {
+            match self.dev.earliest(ch, cmd, now) {
+                Ok(e) => h = h.min(e),
+                // Structurally blocked: the tick loop's recovery
+                // path (close bank / restart row) mutates state.
+                Err(_) => return now,
+            }
+        } else if c.active_copy.is_some() {
+            return now; // next_command() advances the sequence
+        }
+        if let Some(m) = c.active_memcpy.as_ref() {
+            if m.reads_issued < self.cfg.dram.columns && c.read_q.len() < READ_Q_CAP {
+                return now; // read generation runs this tick
+            }
+        }
+        // FR-FCFS candidates: per-bank earliest() for every queued
+        // request (both queues are consulted every tick regardless
+        // of drain mode, so both bound the horizon).
+        let copy_rank = c.active_copy.as_ref().map(|op| op.req.src.rank);
+        let copy_banks: [Option<usize>; 3] = c
+            .active_copy
+            .as_ref()
+            .map(|op| op.banks(&self.cfg.dram))
+            .unwrap_or([None; 3]);
+        for req in c.read_q.iter().chain(c.write_q.iter()) {
+            h = h.min(self.request_ready_cycle(ch, c, req, copy_rank, &copy_banks, now));
+            if h <= now {
+                return now;
+            }
+        }
+        h
     }
 
     /// Earliest cycle the scheduler could legally serve `req`,
@@ -1142,14 +1277,65 @@ mod tests {
         assert_eq!(c.stats.copies_done, 8);
     }
 
+    #[test]
+    fn horizon_cache_tracks_enqueues_and_issues() {
+        let mut c = ctrl(|_| {});
+        // Warm the cache on an idle controller: the horizon is the
+        // first refresh deadline, well in the future.
+        let h0 = c.next_event_cycle();
+        assert_eq!(h0, c.next_event_cycle_uncached());
+        assert!(h0 > c.now, "idle controller horizon must be ahead");
+        // An enqueue must drop the cached horizon on the spot: a fresh
+        // request to a precharged bank is schedulable immediately.
+        assert!(c.enqueue_mem(1, 0, 0x10000, false));
+        let h1 = c.next_event_cycle();
+        assert_eq!(h1, c.next_event_cycle_uncached(), "stale cache after enqueue");
+        assert_eq!(h1, c.now, "a fresh request is schedulable now");
+        // Every subsequent issue/completion keeps cache and fresh
+        // recomputation in lock-step until the controller drains.
+        for _ in 0..10_000u64 {
+            c.tick().unwrap();
+            c.drain_completions();
+            assert_eq!(
+                c.next_event_cycle(),
+                c.next_event_cycle_uncached(),
+                "cache diverged at cycle {}",
+                c.now
+            );
+            if c.idle() {
+                break;
+            }
+        }
+        assert!(c.idle());
+        // And a copy enqueue invalidates its channel too.
+        c.enqueue_copy(CopyRequest {
+            id: 7,
+            core: 0,
+            src: Address { channel: 0, rank: 0, bank: 0, row: 10, col: 0 },
+            dst: Address { channel: 0, rank: 0, bank: 1, row: 20, col: 0 },
+            rows: 1,
+            mechanism: CopyMechanism::MemcpyChannel,
+            arrive: 0,
+        });
+        let h2 = c.next_event_cycle();
+        assert_eq!(h2, c.next_event_cycle_uncached(), "stale cache after copy enqueue");
+        assert_eq!(h2, c.now, "copy activation runs on the next tick");
+    }
+
     /// Fingerprint of every behaviorally relevant piece of controller
     /// + device state the tick loop can mutate, EXCEPT the clock and
     /// the `drain_mode` hysteresis bit (recomputed from queue lengths
-    /// before every use, so it cannot alter behavior on its own).
+    /// before every use, so it cannot alter behavior on its own). The
+    /// horizon cache is deliberately excluded: it is a derived value,
+    /// pinned against fresh recomputation separately.
     fn fingerprint(c: &Controller) -> String {
         let mut s = format!("{:?}|{:?}|{:?}", c.inflight, c.stats, c.dev.stats);
         for (ch, cs) in c.chans.iter().enumerate() {
-            let ids = |q: &VecDeque<MemRequest>| q.iter().map(|r| r.id).collect::<Vec<_>>();
+            // (seq, id) pairs bucket-major: a dropped, duplicated or
+            // misfiled per-bank index entry changes the fingerprint.
+            let ids = |q: &BankedQueue| {
+                q.iter_entries().map(|e| (e.seq, e.req.id)).collect::<Vec<_>>()
+            };
             s += &format!(
                 "|{:?}{:?}{:?}{:?}{:?}{:?}{:?}{:?}",
                 ids(&cs.read_q),
@@ -1252,6 +1438,15 @@ mod tests {
             let mut budget = 12_000u64;
             while budget > 0 && !c.idle() {
                 let h = c.next_event_cycle();
+                // The cached horizon must agree with a fresh, cache-
+                // bypassing recomputation at every probe — a missed
+                // invalidation fails here, not as a silent slowdown.
+                assert_eq!(
+                    h,
+                    c.next_event_cycle_uncached(),
+                    "stale per-channel horizon cache at cycle {}",
+                    c.now
+                );
                 if h <= c.now {
                     c.tick().unwrap();
                     c.drain_completions();
@@ -1273,6 +1468,12 @@ mod tests {
                         fp,
                         "state changed at cycle {} before horizon {h}",
                         c.now - 1
+                    );
+                    assert_eq!(
+                        c.next_event_cycle(),
+                        c.next_event_cycle_uncached(),
+                        "horizon cache diverged mid-gap at cycle {}",
+                        c.now
                     );
                 }
                 budget -= span;

@@ -1,0 +1,195 @@
+//! Per-(rank, bank) indexed FIFO request queues for the FR-FCFS
+//! scheduler.
+//!
+//! FR-FCFS consults requests *per bank* — whether a request is a row
+//! hit and which prepare command it needs are properties of its bank
+//! (and subarray) state — so the queue keeps one FIFO bucket per
+//! (rank, bank) plus a monotone arrival counter. A full oldest-first
+//! scan over N queued requests becomes a scan over only the buckets
+//! with pending work, each prunable by bank-level state (busy,
+//! refresh-parked, copy-owned) before any per-request timing query,
+//! and prunable by sequence number once an older candidate is in hand.
+//! The buckets ARE the queue — there is no secondary index that could
+//! fall out of sync with it.
+
+use std::collections::VecDeque;
+
+use crate::controller::request::MemRequest;
+
+/// A queue entry: the request plus its arrival sequence number (the
+/// global FIFO position, used for oldest-first selection across bank
+/// buckets).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub seq: u64,
+    pub req: MemRequest,
+}
+
+/// Position of an entry inside a `BankedQueue`, as returned by the
+/// scheduler's scans and consumed by `remove`. Valid only until the
+/// queue is next mutated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueLoc {
+    pub bucket: usize,
+    pub pos: usize,
+}
+
+/// FIFO request queue bucketed per (rank, bank).
+#[derive(Debug)]
+pub struct BankedQueue {
+    /// `rank * banks + bank` → FIFO bucket, ascending `seq` within.
+    buckets: Vec<VecDeque<Entry>>,
+    banks: usize,
+    len: usize,
+    next_seq: u64,
+}
+
+impl BankedQueue {
+    pub fn new(ranks: usize, banks: usize) -> Self {
+        Self {
+            buckets: (0..ranks * banks).map(|_| VecDeque::new()).collect(),
+            banks,
+            len: 0,
+            next_seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append a request. FIFO order within its (rank, bank) bucket;
+    /// `seq` preserves the global arrival order across buckets.
+    pub fn push_back(&mut self, req: MemRequest) {
+        let b = req.addr.rank * self.banks + req.addr.bank;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.buckets[b].push_back(Entry { seq, req });
+        self.len += 1;
+    }
+
+    /// Remove and return the request at `loc`.
+    pub fn remove(&mut self, loc: QueueLoc) -> Option<MemRequest> {
+        let e = self.buckets[loc.bucket].remove(loc.pos)?;
+        self.len -= 1;
+        Some(e.req)
+    }
+
+    /// Non-empty buckets as `(bucket, rank, bank, entries)`, in
+    /// ascending (rank, bank) order.
+    pub fn banks_with_work(
+        &self,
+    ) -> impl Iterator<Item = (usize, usize, usize, &VecDeque<Entry>)> + '_ {
+        let banks = self.banks;
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .map(move |(i, q)| (i, i / banks, i % banks, q))
+    }
+
+    /// Every queued request, bucket-major. Deterministic, but NOT the
+    /// global arrival order — order-sensitive callers must use `seq`.
+    pub fn iter(&self) -> impl Iterator<Item = &MemRequest> + '_ {
+        self.buckets.iter().flat_map(|q| q.iter().map(|e| &e.req))
+    }
+
+    /// Every entry (with its `seq`), bucket-major — fingerprints and
+    /// consistency checks.
+    pub fn iter_entries(&self) -> impl Iterator<Item = &Entry> + '_ {
+        self.buckets.iter().flat_map(|q| q.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::geometry::Address;
+
+    fn req(id: u64, rank: usize, bank: usize) -> MemRequest {
+        MemRequest {
+            id,
+            core: 0,
+            addr: Address { channel: 0, rank, bank, row: 1, col: 0 },
+            is_write: false,
+            arrive: 0,
+            done: None,
+            copy_id: None,
+        }
+    }
+
+    #[test]
+    fn buckets_preserve_fifo_and_len_invariants() {
+        let mut q = BankedQueue::new(2, 4);
+        assert!(q.is_empty());
+        // Interleave two banks and a second rank.
+        q.push_back(req(1, 0, 2));
+        q.push_back(req(2, 0, 0));
+        q.push_back(req(3, 0, 2));
+        q.push_back(req(4, 1, 3));
+        assert_eq!(q.len(), 4);
+
+        // Entries carry ascending global seq; buckets are per (rank,
+        // bank) and FIFO within.
+        let entries: Vec<(u64, u64)> =
+            q.iter_entries().map(|e| (e.seq, e.req.id)).collect();
+        assert_eq!(entries, vec![(1, 2), (0, 1), (2, 3), (3, 4)]);
+
+        let work: Vec<(usize, usize, Vec<u64>)> = q
+            .banks_with_work()
+            .map(|(_, r, b, es)| (r, b, es.iter().map(|e| e.req.id).collect()))
+            .collect();
+        assert_eq!(
+            work,
+            vec![(0, 0, vec![2]), (0, 2, vec![1, 3]), (1, 3, vec![4])]
+        );
+
+        // Bucket lengths always sum to len().
+        assert_eq!(q.banks_with_work().count(), 3, "three non-empty buckets");
+        let total: usize = q.banks_with_work().map(|(.., es)| es.len()).sum();
+        assert_eq!(total, q.len());
+
+        // Removal by location keeps order and len coherent.
+        let (bucket, ..) = q
+            .banks_with_work()
+            .find(|(_, r, b, _)| *r == 0 && *b == 2)
+            .map(|(i, r, b, _)| (i, r, b))
+            .unwrap();
+        let removed = q.remove(QueueLoc { bucket, pos: 0 }).unwrap();
+        assert_eq!(removed.id, 1);
+        assert_eq!(q.len(), 3);
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+        assert!(q.remove(QueueLoc { bucket, pos: 5 }).is_none());
+        assert_eq!(q.len(), 3, "failed removal must not corrupt len");
+    }
+
+    #[test]
+    fn seq_is_monotone_across_interleaved_pushes_and_removals() {
+        let mut q = BankedQueue::new(1, 2);
+        for i in 0..6 {
+            q.push_back(req(i, 0, (i % 2) as usize));
+        }
+        let bucket0 = 0;
+        q.remove(QueueLoc { bucket: bucket0, pos: 0 }).unwrap();
+        q.push_back(req(100, 0, 0));
+        // New arrivals always get a seq larger than every live entry.
+        let max_seq = q.iter_entries().map(|e| e.seq).max().unwrap();
+        let new_seq = q
+            .iter_entries()
+            .find(|e| e.req.id == 100)
+            .map(|e| e.seq)
+            .unwrap();
+        assert_eq!(new_seq, max_seq);
+        // Within each bucket seq stays strictly ascending.
+        for (.., es) in q.banks_with_work() {
+            for w in es.iter().collect::<Vec<_>>().windows(2) {
+                assert!(w[0].seq < w[1].seq);
+            }
+        }
+    }
+}

@@ -84,6 +84,13 @@ pub struct Bank {
     /// (SALP-2 / MASA): a RD/WR to a different subarray pays
     /// `t_sa_sel`. `None` in non-select modes and after full PRE.
     pub last_sa: Option<usize>,
+    /// Number of non-precharged (open or latched) subarrays,
+    /// maintained incrementally on every state transition.
+    /// `open_count`/`all_precharged` are hot: the scheduler's prepare
+    /// pass, the fast-forward horizon, the refresh machinery and the
+    /// copy engines consult them per candidate — O(1) here instead of
+    /// a subarray scan per query.
+    open_cnt: usize,
     /// Content tags of written rows (absent => default_tag).
     rows: HashMap<usize, u64>,
 }
@@ -96,6 +103,7 @@ impl Bank {
             next_pre: 0,
             busy_until: 0,
             last_sa: None,
+            open_cnt: 0,
             rows: HashMap::new(),
         }
     }
@@ -114,12 +122,18 @@ impl Bank {
 
     /// Any subarray not precharged (open OR latched)?
     pub fn all_precharged(&self) -> bool {
-        self.subarrays.iter().all(|sa| sa.is_precharged())
+        self.open_cnt == 0
     }
 
     /// Number of non-precharged (open or latched) subarrays — the
     /// quantity `SalpMode::open_cap` bounds.
     pub fn open_count(&self) -> usize {
+        self.open_cnt
+    }
+
+    /// `open_count` recomputed from subarray state. Tests pin the
+    /// incremental counter against this after every state transition.
+    pub fn open_count_scan(&self) -> usize {
         self.subarrays.iter().filter(|sa| !sa.is_precharged()).count()
     }
 
@@ -483,6 +497,8 @@ impl DramDevice {
                     b.next_act = b.next_act.max(at + t.t_rrd);
                 }
                 let tag = *b.rows.get(&row).unwrap_or(&default_tag(global));
+                // Target subarray was precharged (validated above).
+                b.open_cnt += 1;
                 let s = &mut b.subarrays[sa];
                 s.state = SaState::Open { row };
                 s.buffer_tag = Some(tag);
@@ -560,6 +576,7 @@ impl DramDevice {
                     sa.precharge();
                     sa.next_act = sa.next_act.max(at + t_rp);
                 }
+                b.open_cnt = 0;
                 b.next_act = b.next_act.max(at + t_rp);
                 b.last_sa = None;
                 self.stats.n_pre += 1;
@@ -582,6 +599,8 @@ impl DramDevice {
                     (false, true) => t.t_rp_lip,
                     (false, false) => t.t_rp,
                 };
+                // Target subarray was non-precharged (validated above).
+                b.open_cnt -= 1;
                 let s = &mut b.subarrays[sa];
                 s.precharge();
                 s.next_act = s.next_act.max(at + t_rp);
@@ -605,6 +624,7 @@ impl DramDevice {
                             sa.precharge();
                             sa.next_act = sa.next_act.max(at + t.t_rp);
                         }
+                        b.open_cnt = 0;
                         b.next_act = b.next_act.max(at + t.t_rp);
                         b.last_sa = None;
                         done = done.max(at + t.t_rp);
@@ -677,6 +697,11 @@ impl DramDevice {
                 // (the property behind the paper's 1-to-N extension).
                 let (lo, hi) = (from_sa.min(to_sa), from_sa.max(to_sa));
                 for sa in lo..=hi {
+                    if sa != from_sa {
+                        // Path subarrays were precharged (validated);
+                        // latching makes them non-precharged.
+                        b.open_cnt += 1;
+                    }
                     let s = &mut b.subarrays[sa];
                     if sa != from_sa {
                         s.state = SaState::LatchedOnly;
@@ -978,6 +1003,41 @@ mod tests {
         let e2 = d.earliest(0, store, done).unwrap();
         d.issue(0, store, e2).unwrap();
         assert_eq!(d.row_tag(0, 0, 0, 7 * 512 + 33), 0xBEEF);
+    }
+
+    #[test]
+    fn open_count_is_maintained_incrementally() {
+        // Every transition class: ACT (pre -> open), RBM (path latches
+        // -> non-precharged), ACT_STORE (latched -> open, no change),
+        // PRE_SA (one down), PRE (all down). The incremental counter
+        // must match a scan of subarray state after each.
+        let mut d = dev_lisa();
+        d.cfg.salp = SalpMode::Masa;
+        let check = |d: &DramDevice, expect: usize| {
+            let b = d.bank(0, 0, 0);
+            assert_eq!(b.open_count(), expect);
+            assert_eq!(b.open_count(), b.open_count_scan(), "counter drifted");
+            assert_eq!(b.all_precharged(), expect == 0);
+        };
+        check(&d, 0);
+        d.issue(0, ACT0, 0).unwrap();
+        check(&d, 1);
+        let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 0, to_sa: 3 };
+        let e = d.earliest(0, rbm, 0).unwrap();
+        d.issue(0, rbm, e).unwrap();
+        check(&d, 4); // sa0 open + sa1..=3 latched
+        let psa = Command::PreSa { rank: 0, bank: 0, sa: 1 };
+        let ep = d.earliest(0, psa, e).unwrap();
+        d.issue(0, psa, ep).unwrap();
+        check(&d, 3);
+        let store = Command::ActStore { rank: 0, bank: 0, row: 3 * 512 + 9 };
+        let es = d.earliest(0, store, ep).unwrap();
+        d.issue(0, store, es).unwrap();
+        check(&d, 3); // latched -> open keeps the count
+        let pre = Command::Pre { rank: 0, bank: 0 };
+        let epre = d.earliest(0, pre, es).unwrap();
+        d.issue(0, pre, epre).unwrap();
+        check(&d, 0);
     }
 
     #[test]

@@ -208,6 +208,12 @@ impl Comparison {
     }
 
     pub fn max_ws_improvement(&self) -> f64 {
+        if self.ws_improvements.is_empty() {
+            // Folding from f64::MIN would report finite garbage
+            // (-1.7e308) that even slips past the non-finite→null
+            // JSON audit; empty aggregates are 0.0 like the mean.
+            return 0.0;
+        }
         self.ws_improvements.iter().cloned().fold(f64::MIN, f64::max)
     }
 
@@ -308,6 +314,22 @@ mod tests {
         assert!(j.contains("\"lisa_risc\":6"), "{j}");
         let r = RunReport { os: Some(o), ..Default::default() };
         assert!(r.to_json().contains("\"os\":{\"pages_copied\":8"));
+    }
+
+    #[test]
+    fn empty_comparison_aggregates_are_zero_not_fold_garbage() {
+        let c = Comparison::default();
+        assert_eq!(c.max_ws_improvement(), 0.0);
+        assert_eq!(c.mean_ws_improvement(), 0.0);
+        assert_eq!(c.mean_energy_reduction(), 0.0);
+        assert!(c.max_ws_improvement().is_finite());
+        // Non-empty all-negative comparisons still report the true
+        // (negative) maximum — only the empty case is pinned to zero.
+        let c = Comparison {
+            ws_improvements: vec![-0.2, -0.05],
+            ..Default::default()
+        };
+        assert!((c.max_ws_improvement() + 0.05).abs() < 1e-12);
     }
 
     #[test]

@@ -180,6 +180,29 @@ mod tests {
     }
 
     #[test]
+    fn indexed_scheduler_state_is_thread_migration_safe() {
+        // The controller's per-channel horizon cache is interior-
+        // mutable state private to each Simulation; campaigns move
+        // Simulations across worker threads. A SALP + copy-heavy grid
+        // (the configs with the most per-bank bucket and cache churn)
+        // must stay byte-identical at 1, 2 and 8 threads.
+        use crate::config::{CopyMechanism, SalpMode};
+        let mut cfg = SimConfig::default();
+        cfg.requests_per_core = 300;
+        cfg.dram.salp = SalpMode::Masa;
+        cfg.lisa.risc = true;
+        cfg.copy_mechanism = CopyMechanism::LisaRisc;
+        let points: Vec<(SimConfig, Workload)> =
+            ["salp-shared-bank4", "salp-copy-conflict4", "fork4"]
+                .iter()
+                .map(|w| (cfg.clone(), mixes::workload_by_name(w, &cfg).unwrap()))
+                .collect();
+        let serial = run_reports(points.clone(), 1);
+        assert_eq!(serial, run_reports(points.clone(), 2));
+        assert_eq!(serial, run_reports(points, 8));
+    }
+
+    #[test]
     fn parallel_weighted_speedup_matches_serial_engine() {
         let mut cfg = SimConfig::default();
         cfg.requests_per_core = 800;

@@ -145,6 +145,13 @@ impl Simulation {
     /// controller neither delivers an event nor issues a command
     /// (`Controller::next_event_cycle`), and every core only burns
     /// clock (`Core::next_wake`). Returns 0 when anything is active.
+    ///
+    /// The controller query is cheap to repeat: its per-channel
+    /// component is cached inside the controller and only recomputed
+    /// after that channel's state actually changed, so the common
+    /// probe pattern here — repeated queries across core-limited
+    /// partial jumps while the DRAM side is frozen — no longer re-walks
+    /// the queues, refresh deadlines and copy sequences each time.
     fn idle_gap(&self, ratio: u64) -> u64 {
         let now = self.ctrl.now;
         let mut horizon = self.ctrl.next_event_cycle();

@@ -79,13 +79,15 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile (nearest-rank) of an unsorted slice.
+/// Percentile (nearest-rank) of an unsorted slice. NaNs sort last
+/// (IEEE total order) instead of panicking the comparator, so a
+/// degenerate sample poisons only the top percentiles.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
     v[rank.min(v.len()) - 1]
 }
@@ -179,6 +181,16 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(percentile(&xs, 1.0), 1.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // partial_cmp().unwrap() used to panic here.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 1.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "NaN sorts last");
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

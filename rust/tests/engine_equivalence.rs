@@ -177,6 +177,32 @@ fn equivalence_on_multi_rank_multi_channel_geometry() {
 }
 
 #[test]
+fn equivalence_under_indexed_scheduler_stress_geometry() {
+    // The per-(rank, bank) request index and the cached per-channel
+    // event horizons carry the most state here: two channels x two
+    // ranks of buckets, MASA keeping many subarrays open per bank,
+    // LIP changing precharge timing, and a LISA-RISC copy engine +
+    // refresh invalidating horizons concurrently. A dropped or
+    // misfiled bucket entry changes scheduling order, and a stale
+    // horizon skips an event — either diverges from the per-cycle
+    // reference loop and fails the byte-identical report check.
+    for wl in ["fork4", "salp-copy-conflict4", "salp-shared-bank4"] {
+        let mut cfg = matrix_cfg(
+            CopyMechanism::LisaRisc,
+            SalpMode::Masa,
+            true,
+            SpeedBin::Ddr3_1600,
+            250,
+        );
+        cfg.dram.channels = 2;
+        cfg.dram.ranks = 2;
+        cfg.validate().unwrap();
+        let r = assert_equivalent(&cfg, wl);
+        assert!(r.reads > 0, "{wl}: no reads exercised");
+    }
+}
+
+#[test]
 fn fast_forward_respects_the_cycle_cap() {
     // A tiny cycle cap must clip both engines at the same cycle count.
     let mut cfg = matrix_cfg(

@@ -67,6 +67,16 @@ fn prop_earliest_is_idempotent_and_issue_at_earliest_succeeds() {
                 panic!("issue at earliest failed for {cmd:?}: {err}")
             });
             now = e1;
+            // The incrementally maintained per-bank open count must
+            // match a scan of subarray state after every transition.
+            for b in 0..8 {
+                let bank = dev.bank(0, 0, b);
+                assert_eq!(
+                    bank.open_count(),
+                    bank.open_count_scan(),
+                    "open count drifted on bank {b} after {cmd:?}"
+                );
+            }
         }
     });
 }
@@ -177,9 +187,19 @@ fn prop_controller_never_stalls_forever() {
             expected += 1;
         }
         let mut done = 0;
-        for _ in 0..2_000_000u64 {
+        for t in 0..2_000_000u64 {
             ctrl.tick().unwrap();
             done += ctrl.drain_completions().len();
+            // Periodically pin the cached horizon against a fresh
+            // recomputation (every tick would dominate the runtime).
+            if t % 64 == 0 {
+                assert_eq!(
+                    ctrl.next_event_cycle(),
+                    ctrl.next_event_cycle_uncached(),
+                    "stale horizon cache at cycle {}",
+                    ctrl.now
+                );
+            }
             if ctrl.idle() {
                 break;
             }
