@@ -634,6 +634,17 @@ impl SimConfig {
         )
     }
 
+    /// Stable 128-bit content hash (32 hex chars) of the canonical
+    /// TOML serialization — the config half of the campaign result-
+    /// cache key (`sim/cache.rs`). Two configs hash equal iff their
+    /// `to_toml` documents are byte-equal, which the builder round-
+    /// trip property pins to "equal configurations": every knob
+    /// `apply` can read is covered, so any behavioral config change
+    /// moves the hash and invalidates cached results.
+    pub fn content_hash(&self) -> String {
+        crate::util::hash::content_key(&self.to_toml())
+    }
+
     /// Serialize the calibration section (written by `lisa calibrate`).
     pub fn calibration_toml(c: &Calibration) -> String {
         format!(
@@ -689,6 +700,28 @@ mod tests {
         assert_eq!(cfg.cpu.cores, 8);
         assert_eq!(cfg.copy_mechanism, CopyMechanism::LisaRisc);
         assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn content_hash_tracks_the_canonical_form() {
+        // Equal configs hash equal (the cache key must be stable) ...
+        let a = SimConfig::default();
+        assert_eq!(a.content_hash(), SimConfig::default().content_hash());
+        assert_eq!(a.content_hash().len(), 32);
+        // ... and every cache-relevant knob moves it, including the
+        // ones that silently shared config *names* before PR 4.
+        let edits: [fn(&mut SimConfig); 5] = [
+            |c| c.seed = 2,
+            |c| c.requests_per_core += 1,
+            |c| c.dram.salp = SalpMode::Masa,
+            |c| c.os.placement = PlacementPolicy::SubarrayPacked,
+            |c| c.calibration.t_rbm_ns += 0.5,
+        ];
+        for (i, edit) in edits.iter().enumerate() {
+            let mut cfg = SimConfig::default();
+            edit(&mut cfg);
+            assert_ne!(cfg.content_hash(), a.content_hash(), "edit {i}");
+        }
     }
 
     #[test]

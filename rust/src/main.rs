@@ -42,6 +42,12 @@ Every experiment subcommand accepts [--requests N] [--threads N]
 available hardware parallelism. Without --out the JSON report goes to
 stdout and the table to stderr; with --out the JSON goes to the file.
 
+Campaign subcommands also accept [--journal FILE] (checkpoint finished
+jobs as they complete), [--resume FILE] (adopt a prior journal, then
+keep appending to it) and [--cache-dir DIR] / [--no-cache] (reuse
+finished jobs across invocations; default cache: target/lisa-cache).
+Resumed and cached runs are byte-identical to fresh ones.
+
 ";
 
 const COMMANDS: &[&str] = &[
@@ -282,6 +288,18 @@ fn run_experiment(s: &ExperimentSpec, args: &Args) -> Result<()> {
     eprintln!("{}: {} points on {} threads", s.name, n_points, opts.threads);
     let t0 = std::time::Instant::now();
     let report = spec::run(s, &opts)?;
+    // Provenance to stderr, never into the JSON: resumed/cached
+    // reports stay byte-identical to fresh ones (CI greps this line).
+    let st = report.stats;
+    eprintln!(
+        "{}: jobs {} = {} resumed + {} cache hits + {} ran ({:.1}% cached)",
+        s.name,
+        st.total(),
+        st.resumed,
+        st.cache_hits,
+        st.ran,
+        st.reuse_pct()
+    );
     eprintln!("{}: done in {:.2} s", s.name, t0.elapsed().as_secs_f64());
     emit_report(args, &report)
 }

@@ -2,7 +2,10 @@
 //! multi-programmed metric [Snavely & Tullsen, Eyerman & Eeckhout]),
 //! and the experiment report structures.
 
+use anyhow::{anyhow, bail, Result};
+
 use crate::energy::EnergyBreakdown;
+use crate::util::json::Value;
 use crate::util::stats::geomean;
 
 /// Aggregate statistics of the OS layer (`os/bulk.rs`) for one run.
@@ -74,6 +77,54 @@ impl OsSummary {
             self.mech_pages[4],
         )
     }
+
+    /// Rebuild from the object [`Self::to_json`] emits (the campaign
+    /// journal / result-cache read path). `risc_hit_rate` is derived,
+    /// not stored, so the round trip is exact.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mech = v
+            .get("mech_pages")
+            .ok_or_else(|| anyhow!("os summary missing 'mech_pages'"))?;
+        let mut mech_pages = [0u64; 5];
+        for (i, key) in ["memcpy", "rc_intra", "rc_bank", "rc_inter", "lisa_risc"]
+            .iter()
+            .enumerate()
+        {
+            mech_pages[i] = field_u64(mech, key)?;
+        }
+        Ok(Self {
+            pages_copied: field_u64(v, "pages_copied")?,
+            pages_zeroed: field_u64(v, "pages_zeroed")?,
+            cow_faults: field_u64(v, "cow_faults")?,
+            demand_faults: field_u64(v, "demand_faults")?,
+            forks: field_u64(v, "forks")?,
+            checkpoints: field_u64(v, "checkpoints")?,
+            promotions: field_u64(v, "promotions")?,
+            risc_hits: field_u64(v, "risc_hits")?,
+            mech_pages,
+        })
+    }
+}
+
+fn field_u64(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| anyhow!("report field '{key}' is not a u64"))
+}
+
+fn field_f64(v: &Value, key: &str) -> Result<f64> {
+    // The emitter writes non-finite floats as null; they read back as
+    // NaN and re-serialize as null, keeping round trips byte-stable.
+    v.get(key)
+        .and_then(Value::as_f64_or_nan)
+        .ok_or_else(|| anyhow!("report field '{key}' is not a number"))
+}
+
+fn field_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("report field '{key}' is not a string"))?
+        .to_string())
 }
 
 /// Result of simulating one workload on one configuration.
@@ -103,12 +154,40 @@ pub struct RunReport {
 impl RunReport {
     /// Weighted speedup against per-core alone-run IPCs:
     /// WS = sum_i IPC_shared,i / IPC_alone,i.
+    ///
+    /// The two slices must be the same length — `zip` would otherwise
+    /// silently truncate to the shorter one and return a plausible but
+    /// wrong WS (cores dropped from the sum). Debug builds assert; the
+    /// campaign paths go through [`Self::try_weighted_speedup`] so the
+    /// mismatch fails loudly there in release builds too.
     pub fn weighted_speedup(&self, alone_ipc: &[f64]) -> f64 {
+        debug_assert_eq!(
+            self.ipc.len(),
+            alone_ipc.len(),
+            "weighted speedup needs one alone-run IPC per shared-run core"
+        );
         self.ipc
             .iter()
             .zip(alone_ipc)
             .map(|(s, a)| if *a > 0.0 { s / a } else { 0.0 })
             .sum()
+    }
+
+    /// [`Self::weighted_speedup`] with the length mismatch as a hard
+    /// error — the campaign/experiment paths use this so a miscounted
+    /// alone-run vector cannot produce a silently-truncated WS.
+    pub fn try_weighted_speedup(&self, alone_ipc: &[f64]) -> Result<f64> {
+        if self.ipc.len() != alone_ipc.len() {
+            bail!(
+                "weighted speedup over {} shared-run cores needs {} alone-run \
+                 IPCs, got {} (workload '{}')",
+                self.ipc.len(),
+                self.ipc.len(),
+                alone_ipc.len(),
+                self.workload
+            );
+        }
+        Ok(self.weighted_speedup(alone_ipc))
     }
 
     pub fn ipc_sum(&self) -> f64 {
@@ -148,6 +227,55 @@ impl RunReport {
                 .as_ref()
                 .map_or_else(|| "null".to_string(), |o| o.to_json()),
         )
+    }
+
+    /// Rebuild a report from the object [`Self::to_json`] emits — the
+    /// read path of the campaign checkpoint journal and result cache.
+    ///
+    /// The round trip is byte-stable through `to_json` but lossy in
+    /// memory where the JSON is: the energy breakdown only serializes
+    /// its total/background/rbm components (the rest read back as
+    /// zero), and non-finite floats read back as NaN. Campaign reports
+    /// only ever compare and re-emit through JSON, so neither loss is
+    /// observable there.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let ipc = v
+            .get("ipc")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("report missing 'ipc' array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64_or_nan()
+                    .ok_or_else(|| anyhow!("non-numeric IPC entry"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        let e = v
+            .get("energy_uj")
+            .ok_or_else(|| anyhow!("report missing 'energy_uj'"))?;
+        let energy = EnergyBreakdown::from_serialized(
+            field_f64(e, "total")?,
+            field_f64(e, "background")?,
+            field_f64(e, "rbm")?,
+        );
+        let os = match v.get("os") {
+            None | Some(Value::Null) => None,
+            Some(o) => Some(OsSummary::from_json(o)?),
+        };
+        Ok(Self {
+            workload: field_str(v, "workload")?,
+            config_name: field_str(v, "config")?,
+            ipc,
+            dram_cycles: field_u64(v, "dram_cycles")?,
+            reads: field_u64(v, "reads")?,
+            writes: field_u64(v, "writes")?,
+            copies: field_u64(v, "copies")?,
+            avg_read_latency_cycles: field_f64(v, "avg_read_latency_cycles")?,
+            row_hit_rate: field_f64(v, "row_hit_rate")?,
+            villa_hit_rate: field_f64(v, "villa_hit_rate")?,
+            lip_coverage: field_f64(v, "lip_coverage")?,
+            energy,
+            os,
+        })
     }
 }
 
@@ -237,6 +365,27 @@ mod tests {
         // Degenerate alone IPC contributes zero, not a panic.
         let ws = r.weighted_speedup(&[0.0, 2.0]);
         assert!((ws - 1.0).abs() < 1e-12);
+        assert!((r.try_weighted_speedup(&[2.0, 2.0]).unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_speedup_length_mismatch_fails_loudly() {
+        // Regression: `zip` used to truncate a short alone-run vector
+        // and return a plausible-but-wrong WS (here 0.5 instead of an
+        // error — core 1's term silently vanished).
+        let r = RunReport { ipc: vec![1.0, 2.0], ..Default::default() };
+        let err = r.try_weighted_speedup(&[2.0]).unwrap_err().to_string();
+        assert!(err.contains("2 shared-run cores"), "{err}");
+        assert!(err.contains("got 1"), "{err}");
+        assert!(r.try_weighted_speedup(&[2.0, 2.0, 2.0]).is_err());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "one alone-run IPC per shared-run core")]
+    fn weighted_speedup_mismatch_asserts_in_debug() {
+        let r = RunReport { ipc: vec![1.0, 2.0], ..Default::default() };
+        r.weighted_speedup(&[2.0]);
     }
 
     #[test]
@@ -297,6 +446,56 @@ mod tests {
         assert!(j.contains("\"ipc\":[]"), "{j}");
         assert!(j.contains("weird \\\"name\\\"\\n"), "{j}");
         assert!(j.contains("\"os\":null"), "{j}");
+    }
+
+    #[test]
+    fn report_json_round_trips_byte_identically() {
+        // The campaign journal / result cache store reports as the
+        // exact JSON `to_json` emits; reading them back and re-emitting
+        // must reproduce the bytes — including NaN→null→NaN floats and
+        // the OS summary block.
+        let os = OsSummary {
+            pages_copied: 8,
+            risc_hits: 6,
+            mech_pages: [2, 0, 0, 0, 6],
+            ..Default::default()
+        };
+        let r = RunReport {
+            workload: "os-fork \"weird\"\n".into(),
+            config_name: "risc+salp:masa".into(),
+            ipc: vec![1.0, 1.0 / 3.0, f64::NAN],
+            dram_cycles: 123_456_789,
+            reads: 42,
+            writes: 7,
+            copies: 3,
+            avg_read_latency_cycles: 88.125,
+            row_hit_rate: f64::INFINITY,
+            villa_hit_rate: 0.25,
+            lip_coverage: 0.0,
+            energy: EnergyBreakdown::from_serialized(12.5, 3.25, 0.0625),
+            os: Some(os),
+        };
+        let emitted = r.to_json();
+        let parsed = crate::util::json::parse(&emitted).unwrap();
+        let back = RunReport::from_json(&parsed).unwrap();
+        assert_eq!(back.to_json(), emitted);
+        // Exact fields survive; non-finite floats degrade to NaN only.
+        assert_eq!(back.dram_cycles, r.dram_cycles);
+        assert_eq!(back.workload, r.workload);
+        assert!(back.row_hit_rate.is_nan());
+        assert_eq!(back.os.as_ref().unwrap().mech_pages, [2, 0, 0, 0, 6]);
+        // A report without an OS layer round-trips too.
+        let plain = RunReport { os: None, ..r.clone() };
+        let emitted = plain.to_json();
+        let back =
+            RunReport::from_json(&crate::util::json::parse(&emitted).unwrap())
+                .unwrap();
+        assert_eq!(back.to_json(), emitted);
+        assert!(back.os.is_none());
+        // Truncated or reshaped documents fail loudly.
+        assert!(RunReport::from_json(&Value::Null).is_err());
+        let half = crate::util::json::parse("{\"workload\":\"x\"}").unwrap();
+        assert!(RunReport::from_json(&half).is_err());
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Content-addressed result cache for campaign jobs: finished records
+//! are stored under `<cache-dir>/<code-version>/<key>.json`, where
+//! `key` is the job's content key (`spec::job_key` — a hash over the
+//! evaluation mode, base config TOML, axis coordinates, workload name
+//! and the fully-built per-point `SimConfig::to_toml()`), so an
+//! unchanged re-invocation re-runs zero points and a changed grid
+//! re-runs exactly the points whose inputs changed.
+//!
+//! The code version is part of the path *and* of the key text itself:
+//! a rebuilt simulator never resurrects results computed by different
+//! code. Writes go through a temp file + `rename` so a concurrent
+//! campaign (or a `kill -9`) can never leave a half-written entry that
+//! later reads as a hit; the stored key is verified on read as a
+//! belt-and-braces check against renamed or corrupted files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::json as emit;
+use crate::util::json::{self, Value};
+
+/// Bumped whenever the serialized record format (or anything else
+/// that invalidates cached results without changing the crate
+/// version) changes.
+pub const CACHE_SCHEMA: u64 = 1;
+
+/// The version component of the cache namespace: crate version plus
+/// cache schema. Folded into the job content key as well, so journals
+/// written by other versions fail their key check on resume.
+pub fn code_version() -> String {
+    format!("{}-s{}", env!("CARGO_PKG_VERSION"), CACHE_SCHEMA)
+}
+
+/// Handle on one version-namespace directory of the cache.
+#[derive(Debug, Clone)]
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) the cache at `dir`, namespaced by
+    /// [`code_version`].
+    pub fn open(dir: &Path) -> Result<Self> {
+        let dir = dir.join(code_version());
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    fn entry_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look up a job's records. Any unreadable, unparseable or
+    /// key-mismatched entry is a miss — the cache never errors a
+    /// campaign, it only saves work.
+    pub fn get(&self, key: &str) -> Option<Vec<Value>> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        let v = json::parse(&text).ok()?;
+        if v.get("key")?.as_str()? != key {
+            return None;
+        }
+        Some(v.get("records")?.as_array()?.to_vec())
+    }
+
+    /// Store a finished job's serialized records under `key`,
+    /// atomically (temp file + rename).
+    pub fn put(&self, key: &str, records_json: &[String]) -> Result<()> {
+        let body = format!(
+            "{{\"v\":{CACHE_SCHEMA},\"key\":{},\"records\":[{}]}}\n",
+            emit::string(key),
+            records_json.join(",")
+        );
+        let path = self.entry_path(key);
+        // Unique temp name per process: concurrent campaigns writing
+        // the same key race only at the (atomic) rename.
+        let tmp = self.dir.join(format!("{key}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, body)
+            .with_context(|| format!("writing cache entry {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing cache entry {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_cache(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("lisa-cache-test-{}-{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn put_then_get_round_trips_and_misses_are_none() {
+        let dir = temp_cache("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let key = "aaaabbbbccccddddeeeeffff00001111";
+        assert!(cache.get(key).is_none(), "cold cache");
+        cache.put(key, &["{\"ws\":1.5}".to_string(), "{\"ws\":null}".into()]).unwrap();
+        let records = cache.get(key).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].get("ws").unwrap().as_f64(), Some(1.5));
+        // Overwrites are atomic replacements, not appends.
+        cache.put(key, &["{\"ws\":2.5}".to_string()]).unwrap();
+        assert_eq!(cache.get(key).unwrap().len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_entries_read_as_misses() {
+        let dir = temp_cache("corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let key = "00001111222233334444555566667777";
+        cache.put(key, &["{\"x\":1}".to_string()]).unwrap();
+        // Truncate the entry mid-document: miss, not error.
+        let path = dir.join(code_version()).join(format!("{key}.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(cache.get(key).is_none());
+        // An entry renamed onto the wrong key fails its stored-key check.
+        std::fs::write(&path, text.replace(key, "deadbeef")).unwrap();
+        assert!(cache.get(key).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cache_is_namespaced_by_code_version() {
+        assert!(code_version().contains(&format!("s{CACHE_SCHEMA}")));
+        let dir = temp_cache("namespace");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let key = "ffff0000ffff0000ffff0000ffff0000";
+        cache.put(key, &["1".to_string()]).unwrap();
+        assert!(dir.join(code_version()).join(format!("{key}.json")).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -3,15 +3,31 @@
 //!
 //! The paper's evaluation sweeps {mechanism × workload × config} grids
 //! through the simulator; every point is an independent, deterministic
-//! run, so the campaign layer is embarrassingly parallel. Jobs are
-//! claimed from an atomic cursor and their results written back by
-//! index, so the same campaign at 1, 2 or N threads yields identical
-//! ordered results — only wall-clock time changes. Used by the
-//! weighted-speedup helper (the N alone runs + 1 shared run) and the
-//! declarative experiment grids (`sim/spec.rs`), which expand every
-//! `ExperimentSpec` into the jobs sharded here.
+//! run, so the campaign layer is embarrassingly parallel. Scheduling is
+//! work-stealing: the job indices are dealt round-robin into one deque
+//! per worker, owners pop their own deque from the front and idle
+//! workers steal from the back of a victim's deque, so a straggler job
+//! never strands the rest of its deque the way the old atomic-cursor
+//! claim loop could strand nothing but *did* funnel every claim through
+//! one contended counter. Results are written back by job index, never
+//! by completion order, so the same campaign at 1, 2 or N threads
+//! yields byte-identical ordered results — only wall-clock changes.
+//!
+//! A panic in any job poisons the pool: the flag is checked at claim
+//! time, so surviving workers finish the job in hand and stop instead
+//! of burning through the rest of a doomed campaign. The panic then
+//! propagates to the caller via `std::thread::scope`.
+//!
+//! Used by the weighted-speedup helper (the N alone runs + 1 shared
+//! run) and the declarative experiment grids (`sim/spec.rs`), which
+//! expand every `ExperimentSpec` into the jobs sharded here;
+//! [`run_jobs_sparse`] additionally streams each finished result to a
+//! caller-supplied sink — the hook the campaign checkpoint journal and
+//! result cache hang off.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 use crate::config::SimConfig;
@@ -44,34 +60,99 @@ where
     T: Send,
     F: FnOnce() -> T + Send,
 {
+    run_jobs_sparse(jobs.into_iter().enumerate().collect(), threads, |_, _: &T| {})
+        .into_iter()
+        .map(|(_, t)| t)
+        .collect()
+}
+
+/// [`run_jobs`] for a sparse slice of a larger campaign: each job
+/// carries the caller's index (e.g. its grid position, with resumed or
+/// cached positions absent), and `sink` observes every `(index,
+/// result)` pair as it completes — the checkpoint-journal hook. The
+/// sink runs on worker threads in completion order, so it must carry
+/// its own synchronization; results still come back in submission
+/// order regardless.
+///
+/// Scheduling: indices are dealt round-robin into per-worker deques.
+/// An owner pops from the front of its own deque; a worker whose deque
+/// is empty steals from the back of the next non-empty victim. Stolen
+/// or not, a result lands in the slot of the job that produced it, so
+/// the output is independent of the schedule.
+pub fn run_jobs_sparse<T, F, S>(jobs: Vec<(usize, F)>, threads: usize, sink: S) -> Vec<(usize, T)>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+    S: Fn(usize, &T) + Sync,
+{
     let n = jobs.len();
     if n == 0 {
         return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        return jobs.into_iter().map(|f| f()).collect();
+        // Serial fast path: same order, same sink calls, no pool.
+        return jobs
+            .into_iter()
+            .map(|(idx, f)| {
+                let t = f();
+                sink(idx, &t);
+                (idx, t)
+            })
+            .collect();
     }
-    let slots: Vec<Mutex<Option<F>>> =
-        jobs.into_iter().map(|f| Mutex::new(Some(f))).collect();
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<(usize, F)>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let out: Vec<Mutex<Option<(usize, T)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // Deque d owns slots {d, d+threads, d+2*threads, ...}, front first.
+    let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((w..n).step_by(threads).collect()))
+        .collect();
+    let poisoned = AtomicBool::new(false);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+        for w in 0..threads {
+            let (slots, out, deques) = (&slots, &out, &deques);
+            let (poisoned, sink) = (&poisoned, &sink);
+            s.spawn(move || loop {
+                // Checked at claim time: a panic elsewhere stops this
+                // worker before it starts another (possibly long) job.
+                if poisoned.load(Ordering::Acquire) {
                     break;
                 }
-                let job = slots[i].lock().expect("job slot").take().expect("claimed once");
-                let result = job();
-                *out[i].lock().expect("result slot") = Some(result);
+                let Some(slot) = claim(deques, w) else { break };
+                let (idx, job) =
+                    slots[slot].lock().expect("job slot").take().expect("claimed once");
+                match catch_unwind(AssertUnwindSafe(job)) {
+                    Ok(t) => {
+                        sink(idx, &t);
+                        *out[slot].lock().expect("result slot") = Some((idx, t));
+                    }
+                    Err(payload) => {
+                        poisoned.store(true, Ordering::Release);
+                        resume_unwind(payload);
+                    }
+                }
             });
         }
     });
     out.into_iter()
         .map(|m| m.into_inner().expect("result lock").expect("job completed"))
         .collect()
+}
+
+/// Claim the next slot for worker `w`: own deque front, else steal
+/// from the back of the next victim (cyclic scan).
+fn claim(deques: &[Mutex<VecDeque<usize>>], w: usize) -> Option<usize> {
+    if let Some(i) = deques[w].lock().expect("own deque").pop_front() {
+        return Some(i);
+    }
+    for step in 1..deques.len() {
+        let victim = (w + step) % deques.len();
+        if let Some(i) = deques[victim].lock().expect("victim deque").pop_back() {
+            return Some(i);
+        }
+    }
+    None
 }
 
 /// Run a batch of (config, workload) simulations in parallel,
@@ -119,13 +200,17 @@ pub fn weighted_speedup(
     let mut reports = run_jobs(jobs, threads);
     let shared = reports.pop().expect("shared run present");
     let alone: Vec<f64> = reports.iter().map(|r| r.ipc[0]).collect();
-    (shared.weighted_speedup(&alone), shared)
+    let ws = shared
+        .try_weighted_speedup(&alone)
+        .expect("one alone run per core by construction");
+    (ws, shared)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::workloads::mixes;
+    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn threads_zero_autodetects() {
@@ -147,7 +232,7 @@ mod tests {
             (0..32u64)
                 .map(|i| {
                     move || {
-                        // Unequal work so threads interleave.
+                        // Unequal work so threads interleave and steal.
                         let mut acc = i;
                         for k in 0..((i % 7) * 1000) {
                             acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
@@ -163,6 +248,91 @@ mod tests {
             assert_eq!(serial, parallel, "threads={threads}");
         }
         assert_eq!(run_jobs(Vec::<fn() -> u8>::new(), 4), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn stealing_drains_a_stacked_deque() {
+        // All the work lands in worker 0's deque positions (indices
+        // 0, t, 2t, ... carry the heavy jobs); the other workers go
+        // idle immediately and must steal to finish. Every job still
+        // runs exactly once and results stay in submission order.
+        let threads = 4;
+        let executed = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..64usize)
+            .map(|i| {
+                let executed = &executed;
+                move || {
+                    executed.fetch_add(1, Ordering::Relaxed);
+                    if i % threads == 0 {
+                        // Heavy job: worker 0's whole hand.
+                        let mut acc = i as u64;
+                        for k in 0..20_000u64 {
+                            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                        }
+                        std::hint::black_box(acc);
+                    }
+                    i
+                }
+            })
+            .collect();
+        let results = run_jobs(jobs, threads);
+        assert_eq!(results, (0..64).collect::<Vec<_>>());
+        assert_eq!(executed.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn sparse_jobs_keep_their_indices_and_feed_the_sink() {
+        // A resumed campaign runs a sparse subset of the grid: indices
+        // are non-contiguous and must come back untouched, and the
+        // sink must observe every completion exactly once.
+        let jobs: Vec<(usize, _)> =
+            [3usize, 7, 12, 40].iter().map(|&i| (i, move || i * 10)).collect();
+        let seen = Mutex::new(Vec::new());
+        let results = run_jobs_sparse(jobs, 2, |idx, r: &usize| {
+            seen.lock().unwrap().push((idx, *r));
+        });
+        assert_eq!(results, vec![(3, 30), (7, 70), (12, 120), (40, 400)]);
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![(3, 30), (7, 70), (12, 120), (40, 400)]);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_the_caller() {
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom in job")),
+            Box::new(|| 3),
+        ];
+        let r = catch_unwind(AssertUnwindSafe(|| run_jobs(jobs, 2)));
+        assert!(r.is_err(), "panic must not be swallowed");
+    }
+
+    #[test]
+    fn poison_flag_stops_surviving_workers_early() {
+        // Job 0 panics immediately; the 15 other jobs sleep. With 2
+        // workers the survivor may finish the job already in hand, but
+        // the claim-time poison check must keep it from draining the
+        // rest of the campaign.
+        let executed = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..16)
+            .map(|i| {
+                let executed = &executed;
+                let job: Box<dyn FnOnce() + Send + '_> = if i == 0 {
+                    Box::new(|| panic!("poison"))
+                } else {
+                    Box::new(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        executed.fetch_add(1, Ordering::Relaxed);
+                    })
+                };
+                job
+            })
+            .collect();
+        let r = catch_unwind(AssertUnwindSafe(|| run_jobs(jobs, 2)));
+        assert!(r.is_err());
+        let done = executed.load(Ordering::Relaxed);
+        assert!(done < 15, "poisoned pool still ran {done}/15 surviving jobs");
     }
 
     #[test]

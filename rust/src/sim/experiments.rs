@@ -94,11 +94,12 @@ pub struct WsPoint {
 /// performance changes.
 pub fn ws_point_with(cfg: &SimConfig, workload: &Workload, alone: &[f64]) -> WsPoint {
     let shared = run_workload(cfg, workload);
-    WsPoint {
-        ws: shared.weighted_speedup(alone),
-        energy_uj: shared.energy.total,
-        villa_hit_rate: shared.villa_hit_rate,
-    }
+    // try_: a miscounted alone-run vector must fail loudly here, not
+    // be zip-truncated into a plausible WS (see RunReport docs).
+    let ws = shared
+        .try_weighted_speedup(alone)
+        .expect("alone-run IPCs measured on the same workload");
+    WsPoint { ws, energy_uj: shared.energy.total, villa_hit_rate: shared.villa_hit_rate }
 }
 
 /// Convenience: measure with the config's own alone runs.

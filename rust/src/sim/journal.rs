@@ -1,0 +1,177 @@
+//! Append-only campaign checkpoint journal: one JSON line per finished
+//! campaign job, flushed as it completes, so a killed run can resume
+//! with `--resume <journal>` and produce byte-identical output to an
+//! uninterrupted one.
+//!
+//! Line format (version 1):
+//!
+//! ```text
+//! {"v":1,"idx":<job index>,"key":"<32-hex content key>","records":[<Record JSON>,...]}
+//! ```
+//!
+//! `idx` is the job's position in grid order — where the records slot
+//! back into the report. `key` is the job's content key (see
+//! `spec::job_key`): the resume path only trusts an entry whose key
+//! matches what the *current* invocation computes for that index, so a
+//! journal from an edited grid, different base config or older code
+//! version silently degrades to "re-run" instead of resurrecting stale
+//! results. The reader skips torn or malformed lines — the tail a
+//! `kill -9` leaves mid-write — and lets later entries for an index
+//! supersede earlier ones (a resumed run appends to the same file).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::json as emit;
+use crate::util::json::{self, Value};
+
+/// Journal line format version; bumped on incompatible changes.
+pub const JOURNAL_VERSION: u64 = 1;
+
+/// One parsed journal line.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    /// Campaign job index (grid order).
+    pub idx: usize,
+    /// Content key the writer computed for the job.
+    pub key: String,
+    /// The job's serialized `Record`s, one `Value` each.
+    pub records: Vec<Value>,
+}
+
+/// Appending writer over a journal file. Created lazily by the
+/// campaign runner when `--journal`/`--resume` is given; each
+/// [`append`](Self::append) flushes, so at most the line being written
+/// when the process dies is lost (and the reader skips it).
+#[derive(Debug)]
+pub struct JournalWriter {
+    file: File,
+}
+
+impl JournalWriter {
+    /// Open `path` for appending, creating it (and its parent
+    /// directory) if missing. Appending — never truncating — is what
+    /// lets `--resume FILE` keep journaling into the same file.
+    pub fn append_to(path: &Path) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating journal dir {}", dir.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Self { file })
+    }
+
+    /// Append one finished job: its index, content key and serialized
+    /// records (each already a complete `Record` JSON object).
+    pub fn append(&mut self, idx: usize, key: &str, records_json: &[String]) -> Result<()> {
+        let line = format!(
+            "{{\"v\":{JOURNAL_VERSION},\"idx\":{idx},\"key\":{},\"records\":[{}]}}\n",
+            emit::string(key),
+            records_json.join(",")
+        );
+        self.file.write_all(line.as_bytes()).context("appending journal line")?;
+        self.file.flush().context("flushing journal")
+    }
+}
+
+/// Read every well-formed entry of a journal, in file order. Torn and
+/// malformed lines (including whole-line garbage and wrong-version
+/// entries) are skipped, not errors: the common case is the half-line
+/// a killed run left at EOF.
+pub fn read(path: &Path) -> Result<Vec<JournalEntry>> {
+    let file = File::open(path)
+        .with_context(|| format!("opening journal {}", path.display()))?;
+    let mut entries = Vec::new();
+    for line in BufReader::new(file).lines() {
+        let line = line.context("reading journal")?;
+        if let Some(entry) = parse_line(&line) {
+            entries.push(entry);
+        }
+    }
+    Ok(entries)
+}
+
+fn parse_line(line: &str) -> Option<JournalEntry> {
+    if line.trim().is_empty() {
+        return None;
+    }
+    let v = json::parse(line).ok()?;
+    if v.get("v")?.as_u64()? != JOURNAL_VERSION {
+        return None;
+    }
+    Some(JournalEntry {
+        idx: v.get("idx")?.as_u64()? as usize,
+        key: v.get("key")?.as_str()?.to_string(),
+        records: v.get("records")?.as_array()?.to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("lisa-journal-test-{}-{tag}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_read_round_trips() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut w = JournalWriter::append_to(&path).unwrap();
+        w.append(2, "00ff", &["{\"ws\":1.5}".to_string()]).unwrap();
+        w.append(0, "a0b1", &["{\"ws\":null}".into(), "{\"ws\":2}".into()]).unwrap();
+        drop(w);
+        // Re-open appending (the --resume path) and add a superseding
+        // entry for idx 2.
+        let mut w = JournalWriter::append_to(&path).unwrap();
+        w.append(2, "00ff", &["{\"ws\":1.75}".to_string()]).unwrap();
+        drop(w);
+        let entries = read(&path).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!((entries[0].idx, entries[0].key.as_str()), (2, "00ff"));
+        assert_eq!(entries[1].records.len(), 2);
+        assert!(entries[1].records[0].get("ws").unwrap().is_null());
+        // File order is preserved: last write is last, so "latest
+        // wins" is a simple forward fold for the consumer.
+        assert_eq!(entries[2].records[0].get("ws").unwrap().as_f64(), Some(1.75));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_and_malformed_lines_are_skipped() {
+        let path = temp_path("torn");
+        let good = format!(
+            "{{\"v\":{JOURNAL_VERSION},\"idx\":1,\"key\":\"ab\",\"records\":[{{\"x\":1}}]}}"
+        );
+        let wrong_version = "{\"v\":999,\"idx\":2,\"key\":\"cd\",\"records\":[]}";
+        // A torn tail: the same good line cut mid-record, no newline.
+        let torn = &good[..good.len() - 7];
+        std::fs::write(&path, format!("{good}\nnot json\n{wrong_version}\n\n{torn}"))
+            .unwrap();
+        let entries = read(&path).unwrap();
+        assert_eq!(entries.len(), 1, "only the intact line survives");
+        assert_eq!(entries[0].idx, 1);
+        assert_eq!(entries[0].records[0].get("x").unwrap().as_u64(), Some(1));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_journal_is_an_error_but_empty_is_fine() {
+        assert!(read(Path::new("/no/such/lisa-journal")).is_err());
+        let path = temp_path("empty");
+        std::fs::write(&path, "").unwrap();
+        assert!(read(&path).unwrap().is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

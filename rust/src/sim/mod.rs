@@ -2,9 +2,11 @@
 //! campaign runner, the declarative experiment API (`spec`) and the
 //! drivers that regenerate the paper's tables and figures.
 
+pub mod cache;
 pub mod campaign;
 pub mod engine;
 pub mod experiments;
+pub mod journal;
 pub mod spec;
 
 pub use engine::Simulation;

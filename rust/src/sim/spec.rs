@@ -13,7 +13,8 @@
 //! is one more [`ExperimentSpec`] value — no CLI surgery required.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -24,9 +25,11 @@ use crate::config::{
 };
 use crate::dram::timing::SpeedBin;
 use crate::metrics::{json, Comparison, RunReport};
-use crate::sim::campaign;
 use crate::sim::engine::{alone_ipcs, run_workload};
+use crate::sim::{cache, campaign, journal};
 use crate::util::bench::Table;
+use crate::util::hash;
+use crate::util::json::Value;
 use crate::workloads::{mixes, Workload};
 
 /// What an axis value means — how it is validated and applied to the
@@ -141,6 +144,13 @@ impl ExperimentSpec {
     }
 }
 
+/// Where `lisa exp` caches finished campaign jobs unless `--cache-dir`
+/// redirects or `--no-cache` disables it (relative to the working
+/// directory — under `cargo run` that is the crate's `target/`
+/// neighborhood, wiped by `cargo clean`). Library callers
+/// (`RunOptions::default()`) get no cache unless they opt in.
+pub const DEFAULT_CACHE_DIR: &str = "target/lisa-cache";
+
 /// Per-invocation overrides (CLI options or test parameters).
 #[derive(Debug, Clone, Default)]
 pub struct RunOptions {
@@ -158,6 +168,15 @@ pub struct RunOptions {
     pub mixes: Option<usize>,
     /// Explicit per-axis value overrides, keyed by axis *name*.
     pub axes: Vec<(String, Vec<String>)>,
+    /// `--journal FILE` — checkpoint finished jobs here as they
+    /// complete.
+    pub journal: Option<PathBuf>,
+    /// `--resume FILE` — adopt matching finished jobs from a prior
+    /// journal, then keep appending to it (unless `journal` points
+    /// elsewhere). A missing file is a fresh start, not an error.
+    pub resume: Option<PathBuf>,
+    /// Result-cache directory; `None` disables caching.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl RunOptions {
@@ -187,15 +206,41 @@ impl RunOptions {
         self
     }
 
+    pub fn journal(mut self, path: impl Into<PathBuf>) -> Self {
+        self.journal = Some(path.into());
+        self
+    }
+
+    pub fn resume(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
     /// Extract overrides from parsed CLI arguments: `--requests`,
-    /// `--threads`, `--mixes`, plus one `--<flag> a,b,c` list option
-    /// per spec axis. Shared by `lisa exp <name>` and every legacy
-    /// alias subcommand, which is what keeps their behaviour (and
-    /// JSON) identical by construction.
+    /// `--threads`, `--mixes`, the campaign flags (`--journal`,
+    /// `--resume`, `--cache-dir`, `--no-cache`), plus one
+    /// `--<flag> a,b,c` list option per spec axis. Shared by
+    /// `lisa exp <name>` and every legacy alias subcommand, which is
+    /// what keeps their behaviour (and JSON) identical by
+    /// construction. The CLI caches by default ([`DEFAULT_CACHE_DIR`]);
+    /// `--no-cache` wins over `--cache-dir` if both appear.
     pub fn from_args(spec: &ExperimentSpec, args: &Args) -> Result<Self> {
         let base = match args.opt("config") {
             Some(path) => Some(SimConfig::from_file(Path::new(path))?),
             None => None,
+        };
+        let cache_dir = if args.has_flag("no-cache") {
+            None
+        } else {
+            Some(args.opt("cache-dir").map_or_else(
+                || PathBuf::from(DEFAULT_CACHE_DIR),
+                PathBuf::from,
+            ))
         };
         let mut opts = RunOptions {
             requests: args.opt_u64("requests")?,
@@ -204,6 +249,9 @@ impl RunOptions {
             threads: campaign::resolve_threads(args.opt_usize("threads")?),
             mixes: args.opt_usize("mixes")?,
             axes: Vec::new(),
+            journal: args.opt("journal").map(PathBuf::from),
+            resume: args.opt("resume").map(PathBuf::from),
+            cache_dir,
         };
         for axis in &spec.axes {
             if let Some(values) = args.opt_list(&axis.flag) {
@@ -211,6 +259,13 @@ impl RunOptions {
             }
         }
         Ok(opts)
+    }
+
+    /// Where checkpoints go: `--journal` if given, else the `--resume`
+    /// file itself (resuming keeps journaling into the same file, so a
+    /// twice-killed campaign still resumes from one place).
+    fn journal_path(&self) -> Option<&Path> {
+        self.journal.as_deref().or(self.resume.as_deref())
     }
 
     fn axis_override(&self, name: &str) -> Option<&[String]> {
@@ -347,7 +402,12 @@ impl Record {
             .map(|(_, v)| v.as_str())
     }
 
-    fn to_json(&self) -> String {
+    /// Serialize as one element of the report's `records` array. Also
+    /// the campaign journal / result-cache entry format: the write →
+    /// [`Self::from_json`] → write round trip is byte-identical, which
+    /// is what makes resumed and cached campaigns byte-identical to
+    /// fresh ones.
+    pub fn to_json(&self) -> String {
         let axes: Vec<String> = self
             .axes
             .iter()
@@ -361,15 +421,88 @@ impl Record {
             self.report.to_json()
         )
     }
+
+    /// Rebuild a record from the object [`Self::to_json`] emits — the
+    /// journal/cache read path. The top-level `config` field is
+    /// redundant with the embedded report's and is ignored. A `ws` of
+    /// `null` reads back as `None`; a shared run whose WS was NaN also
+    /// serialized as `null` (JSON has no NaN), so it re-serializes
+    /// identically either way.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let axes = v
+            .get("axes")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow::anyhow!("record missing 'axes' object"))?
+            .iter()
+            .map(|(n, val)| {
+                val.as_str()
+                    .map(|s| (n.clone(), s.to_string()))
+                    .ok_or_else(|| anyhow::anyhow!("axis '{n}' is not a string"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let ws = match v.get("ws") {
+            None => bail!("record missing 'ws'"),
+            Some(Value::Null) => None,
+            Some(x) => Some(
+                x.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("record 'ws' is not a number"))?,
+            ),
+        };
+        let report = RunReport::from_json(
+            v.get("report")
+                .ok_or_else(|| anyhow::anyhow!("record missing 'report'"))?,
+        )?;
+        Ok(Self { axes, ws, report })
+    }
+}
+
+/// How a campaign's jobs were satisfied: adopted from a `--resume`
+/// journal, returned by the result cache, or actually simulated.
+/// `resumed + cache_hits + ran` is the total job count.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CampaignStats {
+    pub resumed: usize,
+    pub cache_hits: usize,
+    pub ran: usize,
+}
+
+impl CampaignStats {
+    pub fn total(&self) -> usize {
+        self.resumed + self.cache_hits + self.ran
+    }
+
+    /// Fraction of jobs that did not need simulation, as a percentage.
+    pub fn reuse_pct(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            (self.resumed + self.cache_hits) as f64 * 100.0 / self.total() as f64
+        }
+    }
 }
 
 /// The unified result document: every experiment — built-in or
 /// user-registered — serializes through this one schema.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Report {
     pub experiment: String,
     pub requests: u64,
     pub records: Vec<Record>,
+    /// Provenance counters for this invocation (resumed / cached /
+    /// simulated). Deliberately outside both `to_json` and `==`: they
+    /// describe how the report was produced, not what it says, and a
+    /// resumed or fully-cached report must stay byte-identical (and
+    /// equal) to a fresh one. `main` prints them to stderr instead.
+    pub stats: CampaignStats,
+}
+
+/// Content equality only — see the `stats` field doc.
+impl PartialEq for Report {
+    fn eq(&self, other: &Self) -> bool {
+        self.experiment == other.experiment
+            && self.requests == other.requests
+            && self.records == other.records
+    }
 }
 
 impl Report {
@@ -466,72 +599,224 @@ impl Report {
     }
 }
 
-/// Run an experiment spec: expand the grid, shard it across the
-/// campaign runner, return the unified report. Record order is the
-/// grid order at any thread count (campaign determinism).
+/// One schedulable campaign job: the consecutive grid points it
+/// evaluates together (a single point for raw grids; one workload's
+/// preset chunk for WS grids, so the alone runs are measured once per
+/// workload) plus the content key that addresses it in the checkpoint
+/// journal and the result cache.
+#[derive(Debug, Clone)]
+struct CampaignJob {
+    points: Vec<GridPoint>,
+    key: String,
+}
+
+/// Content key of one campaign job: a hash over everything its records
+/// depend on — code version, evaluation mode, the *base* config TOML
+/// (workload suites are generated from the base config, so the same
+/// workload name can mean different traces under a different base),
+/// and per point its axis coordinates, workload name and fully-built
+/// config. Two invocations agree on a job's key iff the job would
+/// produce the same records, which is what makes journal resume and
+/// cache hits safe.
+fn job_key(eval: Eval, base_toml: &str, points: &[GridPoint]) -> String {
+    let mut text = String::new();
+    text.push_str(&cache::code_version());
+    text.push('\n');
+    text.push_str(match eval {
+        Eval::Raw => "raw",
+        Eval::WeightedSpeedup => "ws",
+    });
+    text.push('\n');
+    text.push_str(base_toml);
+    for p in points {
+        text.push('\u{1f}');
+        for (name, value) in &p.axes {
+            text.push_str(name);
+            text.push('=');
+            text.push_str(value);
+            text.push(';');
+        }
+        text.push_str(&p.workload.name);
+        text.push('\n');
+        text.push_str(&p.cfg.content_hash());
+    }
+    hash::content_key(&text)
+}
+
+/// Evaluate one job. WS jobs follow the paper lineage's
+/// multiprogrammed methodology (SALP / TL-DRAM / RowClone): the alone
+/// runs are measured once on the chunk's first point (the baseline
+/// preset) and shared by every preset's shared run.
+fn eval_job(eval: Eval, points: &[GridPoint]) -> Result<Vec<Record>> {
+    match eval {
+        Eval::Raw => Ok(points
+            .iter()
+            .map(|p| Record {
+                axes: p.axes.clone(),
+                ws: None,
+                report: run_workload(&p.cfg, &p.workload),
+            })
+            .collect()),
+        Eval::WeightedSpeedup => {
+            let baseline = &points[0];
+            let alone = alone_ipcs(&baseline.cfg, &baseline.workload);
+            points
+                .iter()
+                .map(|p| {
+                    let shared = run_workload(&p.cfg, &p.workload);
+                    let ws = shared.try_weighted_speedup(&alone).with_context(|| {
+                        format!("grid point {:?}", p.axes)
+                    })?;
+                    Ok(Record { axes: p.axes.clone(), ws: Some(ws), report: shared })
+                })
+                .collect()
+        }
+    }
+}
+
+/// Run an experiment spec: expand the grid, chunk it into keyed jobs,
+/// satisfy each from the `--resume` journal, then the result cache,
+/// then the work-stealing campaign runner (streaming completions back
+/// to journal and cache), and return the unified report. Record order
+/// is the grid order at any thread count, resumed or not (campaign
+/// determinism: results are keyed by grid index, never by completion
+/// order).
 pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
     let requests = opts.requests.unwrap_or(spec.requests);
     let threads = campaign::resolve_threads(Some(opts.threads));
-    let records = match spec.eval {
-        Eval::Raw => {
-            let points = expand(spec, opts)?;
-            let labels: Vec<Vec<(String, String)>> =
-                points.iter().map(|p| p.axes.clone()).collect();
-            let pairs: Vec<(SimConfig, Workload)> =
-                points.into_iter().map(|p| (p.cfg, p.workload)).collect();
-            let reports = campaign::run_reports(pairs, threads);
-            labels
-                .into_iter()
-                .zip(reports)
-                .map(|(axes, report)| Record { axes, ws: None, report })
-                .collect()
-        }
-        Eval::WeightedSpeedup => run_weighted(spec, opts, threads)?,
-    };
-    Ok(Report { experiment: spec.name.clone(), requests, records })
-}
-
-/// WS evaluation: one campaign job per workload — the alone runs are
-/// measured once on the first preset (the baseline) and shared by
-/// every preset's shared run, following the paper lineage's
-/// multiprogrammed methodology (SALP / TL-DRAM / RowClone).
-fn run_weighted(
-    spec: &ExperimentSpec,
-    opts: &RunOptions,
-    threads: usize,
-) -> Result<Vec<Record>> {
     let points = expand(spec, opts)?;
-    if spec.axes.len() != 2
-        || spec.axes[0].kind != AxisKind::Workload
-        || spec.axes[1].kind != AxisKind::Preset
-    {
-        bail!(
-            "experiment '{}': WeightedSpeedup needs a workload axis then a preset axis",
-            spec.name
-        );
-    }
-    let n_presets = effective_axes(spec, opts)?[1].1.len();
-    // Points arrive workload-major; chunk them back into per-workload
-    // jobs so the alone runs are measured once per workload.
-    let jobs: Vec<_> = points
-        .chunks(n_presets)
-        .map(|chunk| {
-            let chunk = chunk.to_vec();
-            move || {
-                let baseline = &chunk[0];
-                let alone = alone_ipcs(&baseline.cfg, &baseline.workload);
-                chunk
-                    .iter()
-                    .map(|p| {
-                        let shared = run_workload(&p.cfg, &p.workload);
-                        let ws = shared.weighted_speedup(&alone);
-                        Record { axes: p.axes.clone(), ws: Some(ws), report: shared }
-                    })
-                    .collect::<Vec<_>>()
+    let chunk = match spec.eval {
+        Eval::Raw => 1,
+        Eval::WeightedSpeedup => {
+            if spec.axes.len() != 2
+                || spec.axes[0].kind != AxisKind::Workload
+                || spec.axes[1].kind != AxisKind::Preset
+            {
+                bail!(
+                    "experiment '{}': WeightedSpeedup needs a workload axis then a preset axis",
+                    spec.name
+                );
             }
+            // Points arrive workload-major; chunk them back into
+            // per-workload jobs.
+            effective_axes(spec, opts)?[1].1.len()
+        }
+    };
+    let base_toml = opts.base.clone().unwrap_or_default().to_toml();
+    let jobs: Vec<CampaignJob> = points
+        .chunks(chunk)
+        .map(|c| CampaignJob {
+            key: job_key(spec.eval, &base_toml, c),
+            points: c.to_vec(),
         })
         .collect();
-    Ok(campaign::run_jobs(jobs, threads).into_iter().flatten().collect())
+    let (records, stats) = run_campaign(spec.eval, jobs, threads, opts)?;
+    Ok(Report { experiment: spec.name.clone(), requests, records, stats })
+}
+
+/// The campaign core: resume → cache → simulate, with completions
+/// streamed to the journal and cache as they happen.
+fn run_campaign(
+    eval: Eval,
+    jobs: Vec<CampaignJob>,
+    threads: usize,
+    opts: &RunOptions,
+) -> Result<(Vec<Record>, CampaignStats)> {
+    let n = jobs.len();
+    let mut slots: Vec<Option<Vec<Record>>> = (0..n).map(|_| None).collect();
+    let mut stats = CampaignStats::default();
+
+    // 1. Adopt finished jobs from a prior journal. Only entries whose
+    // key matches what *this* invocation computes for that index are
+    // trusted; anything else (edited grid, different base config,
+    // older code, torn records) silently degrades to "re-run". Later
+    // entries supersede earlier ones.
+    if let Some(path) = &opts.resume {
+        if path.exists() {
+            for entry in journal::read(path)? {
+                let Some(job) = jobs.get(entry.idx) else { continue };
+                if job.key != entry.key || entry.records.len() != job.points.len() {
+                    continue;
+                }
+                if let Ok(records) = parse_records(&entry.records) {
+                    slots[entry.idx] = Some(records);
+                }
+            }
+            stats.resumed = slots.iter().filter(|s| s.is_some()).count();
+        }
+    }
+
+    // 2. Consult the content-addressed cache for what's still open.
+    let cache = match &opts.cache_dir {
+        Some(dir) => Some(cache::ResultCache::open(dir)?),
+        None => None,
+    };
+    if let Some(cache) = &cache {
+        for (i, job) in jobs.iter().enumerate() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let Some(raw) = cache.get(&job.key) else { continue };
+            if raw.len() != job.points.len() {
+                continue;
+            }
+            if let Ok(records) = parse_records(&raw) {
+                slots[i] = Some(records);
+                stats.cache_hits += 1;
+            }
+        }
+    }
+
+    // 3. Simulate the rest on the work-stealing pool, streaming each
+    // completion to the journal (flushed per job — a killed run keeps
+    // everything finished) and the cache. Sink failures are remembered
+    // and surfaced once the pool drains: a campaign whose checkpoints
+    // are silently lost would defeat the point of asking for them.
+    let writer = match opts.journal_path() {
+        Some(path) => Some(Mutex::new(journal::JournalWriter::append_to(path)?)),
+        None => None,
+    };
+    let keys: Vec<String> = jobs.iter().map(|j| j.key.clone()).collect();
+    let sink_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let pending: Vec<(usize, _)> = jobs
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| slots[*i].is_none())
+        .map(|(i, job)| (i, move || eval_job(eval, &job.points)))
+        .collect();
+    stats.ran = pending.len();
+    let sink = |idx: usize, result: &Result<Vec<Record>>| {
+        let Ok(records) = result else { return };
+        let json: Vec<String> = records.iter().map(Record::to_json).collect();
+        let journaled = match &writer {
+            Some(w) => {
+                w.lock().expect("journal writer").append(idx, &keys[idx], &json)
+            }
+            None => Ok(()),
+        };
+        let cached = match &cache {
+            Some(c) => c.put(&keys[idx], &json),
+            None => Ok(()),
+        };
+        if let Err(e) = journaled.and(cached) {
+            sink_err.lock().expect("sink error slot").get_or_insert(e);
+        }
+    };
+    let results = campaign::run_jobs_sparse(pending, threads, sink);
+    if let Some(e) = sink_err.into_inner().expect("sink error slot") {
+        return Err(e.context("campaign checkpointing failed"));
+    }
+    for (idx, result) in results {
+        slots[idx] = Some(result?);
+    }
+    let records =
+        slots.into_iter().flat_map(|s| s.expect("every job resolved")).collect();
+    Ok((records, stats))
+}
+
+/// Parse one journal/cache entry's record array.
+fn parse_records(raw: &[Value]) -> Result<Vec<Record>> {
+    raw.iter().map(Record::from_json).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -777,6 +1062,7 @@ pub fn usage() -> String {
     let mut out = String::from(
         "lisa exp <name> [--requests N] [--threads N] [--mixes N] [--seed N]\n\
          \x20        [--config FILE] [--out FILE]\n\
+         \x20        [--journal FILE] [--resume FILE] [--cache-dir DIR] [--no-cache]\n\
          lisa exp --list\n\nEXPERIMENTS\n",
     );
     for spec in registry() {
@@ -801,7 +1087,12 @@ pub fn usage() -> String {
     }
     out.push_str(
         "\nLegacy aliases (same flags, same JSON): fig3, fig4, lip-system, \
-         os -> e9-os, salp -> e10-salp, sweep.\n",
+         os -> e9-os, salp -> e10-salp, sweep.\n\
+         \nCampaigns checkpoint to --journal as jobs finish; --resume FILE \
+         adopts a\nprior journal's finished jobs (and keeps appending to it), \
+         byte-identical\nto an uninterrupted run. Results are cached under \
+         target/lisa-cache\n(--cache-dir overrides, --no-cache disables): an \
+         unchanged re-invocation\nre-runs zero points.\n",
     );
     out
 }
@@ -898,6 +1189,171 @@ mod tests {
             &["memcpy".to_string(), "lisa-risc".to_string()]
         );
         assert_eq!(opts.axis_override("workload").unwrap(), &["os-zero".to_string()]);
+    }
+
+    #[test]
+    fn options_from_args_reads_campaign_flags() {
+        let spec = spec_by_name("e9-os").unwrap();
+        let parse = |line: &str| {
+            let args =
+                Args::parse(line.split_whitespace().map(str::to_string)).unwrap();
+            RunOptions::from_args(&spec, &args).unwrap()
+        };
+        // CLI default: cache on at the default location, no journal.
+        let opts = parse("os --requests 10");
+        assert_eq!(opts.cache_dir.as_deref(), Some(Path::new(DEFAULT_CACHE_DIR)));
+        assert!(opts.journal.is_none() && opts.resume.is_none());
+        assert!(opts.journal_path().is_none());
+        // Explicit plumbing.
+        let opts = parse("os --journal a.jsonl --resume b.jsonl --cache-dir /tmp/c");
+        assert_eq!(opts.journal.as_deref(), Some(Path::new("a.jsonl")));
+        assert_eq!(opts.resume.as_deref(), Some(Path::new("b.jsonl")));
+        assert_eq!(opts.cache_dir.as_deref(), Some(Path::new("/tmp/c")));
+        // --journal wins as the checkpoint target; --resume alone
+        // means "keep appending to the file being resumed".
+        assert_eq!(opts.journal_path(), Some(Path::new("a.jsonl")));
+        assert_eq!(
+            parse("os --resume b.jsonl").journal_path(),
+            Some(Path::new("b.jsonl"))
+        );
+        // --no-cache wins over --cache-dir; library default is off.
+        assert!(parse("os --cache-dir /tmp/c --no-cache").cache_dir.is_none());
+        assert!(RunOptions::default().cache_dir.is_none());
+    }
+
+    #[test]
+    fn record_json_round_trips_byte_identically() {
+        use crate::metrics::{OsSummary, RunReport};
+        let mk = |ws: Option<f64>, os: Option<OsSummary>| Record {
+            axes: vec![
+                ("workload".into(), "os-fork".into()),
+                ("mech\"quoted".into(), "lisa-risc\n".into()),
+            ],
+            ws,
+            report: RunReport {
+                workload: "os-fork".into(),
+                config_name: "lisa-risc".into(),
+                ipc: vec![0.5, 1.0 / 3.0, f64::NAN],
+                dram_cycles: 123_456,
+                os,
+                ..Default::default()
+            },
+        };
+        let os = OsSummary { pages_copied: 8, risc_hits: 6, ..Default::default() };
+        for rec in [mk(Some(2.5), None), mk(None, Some(os)), mk(Some(0.1), None)] {
+            let text = rec.to_json();
+            let back = Record::from_json(&crate::util::json::parse(&text).unwrap())
+                .unwrap();
+            assert_eq!(back.to_json(), text);
+            assert_eq!(back.axes, rec.axes);
+        }
+        // Half a record (a torn journal line's parse) errors, never
+        // fabricates defaults.
+        let bad = crate::util::json::parse("{\"config\":\"x\"}").unwrap();
+        assert!(Record::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn job_keys_are_content_addressed() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let opts = RunOptions::default()
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy", "lisa-risc"])
+            .axis("mode", &["none"])
+            .axis("policy", &["packed"]);
+        let base = SimConfig::default().to_toml();
+        let points = expand(&spec, &opts).unwrap();
+        let k0 = job_key(Eval::Raw, &base, &points[..1]);
+        assert_eq!(k0.len(), 32, "32-hex content key");
+        // Deterministic across invocations...
+        let again = expand(&spec, &opts).unwrap();
+        assert_eq!(k0, job_key(Eval::Raw, &base, &again[..1]));
+        // ...and sensitive to every input: the point, the eval mode,
+        // the base config, the code version's inputs.
+        assert_ne!(k0, job_key(Eval::Raw, &base, &points[1..2]));
+        assert_ne!(k0, job_key(Eval::WeightedSpeedup, &base, &points[..1]));
+        let mut other_base = SimConfig::default();
+        other_base.cpu.cores = 2;
+        assert_ne!(k0, job_key(Eval::Raw, &other_base.to_toml(), &points[..1]));
+        // A --requests override changes the per-point config, not just
+        // the base, and must move the key.
+        let more = expand(&spec, &opts.clone().requests(999)).unwrap();
+        assert_ne!(k0, job_key(Eval::Raw, &base, &more[..1]));
+    }
+
+    #[test]
+    fn campaign_resumes_and_caches_byte_identically() {
+        let tag = format!("spec-campaign-{}", std::process::id());
+        let dir = std::env::temp_dir().join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = spec_by_name("e10-salp").unwrap();
+        let base_opts = RunOptions::default()
+            .requests(120)
+            .threads(2)
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy", "lisa-risc"])
+            .axis("mode", &["none", "masa"])
+            .axis("policy", &["packed"]);
+        let clean = run(&spec, &base_opts).unwrap();
+        assert_eq!(
+            clean.stats,
+            CampaignStats { resumed: 0, cache_hits: 0, ran: 4 }
+        );
+
+        // Journal a run, then resume from the intact journal: all four
+        // jobs adopt, zero simulate, bytes identical.
+        let journal = dir.join("run.jsonl");
+        let journaled =
+            run(&spec, &base_opts.clone().journal(&journal)).unwrap();
+        assert_eq!(journaled.to_json(), clean.to_json());
+        let resumed = run(&spec, &base_opts.clone().resume(&journal)).unwrap();
+        assert_eq!(
+            resumed.stats,
+            CampaignStats { resumed: 4, cache_hits: 0, ran: 0 }
+        );
+        assert_eq!(resumed.to_json(), clean.to_json());
+        assert_eq!(resumed, clean, "stats stay out of equality");
+
+        // A journal from a *different* grid is matched (idx, key)
+        // pair by pair: dropping the "masa" mode keeps the old grid's
+        // point 0 at index 0 (resumes) but shifts "lisa-risc/none"
+        // from index 2 to 1, where the journaled key no longer
+        // matches — that point re-runs instead of resurrecting the
+        // wrong record. (Reshaped grids are the cache's job.)
+        let mut narrower = base_opts.clone();
+        narrower.axes.retain(|(n, _)| n != "mode");
+        let narrower = narrower.axis("mode", &["none"]);
+        let partial = run(&spec, &narrower.resume(&journal)).unwrap();
+        assert_eq!(partial.records.len(), 2);
+        assert_eq!(
+            partial.stats,
+            CampaignStats { resumed: 1, cache_hits: 0, ran: 1 }
+        );
+
+        // Cache: first run misses and fills, second hits everything,
+        // bytes identical to the uncached run.
+        let cache_dir = dir.join("cache");
+        let warmed =
+            run(&spec, &base_opts.clone().cache_dir(&cache_dir)).unwrap();
+        assert_eq!(warmed.stats.ran, 4);
+        assert_eq!(warmed.to_json(), clean.to_json());
+        let cached = run(&spec, &base_opts.clone().cache_dir(&cache_dir)).unwrap();
+        assert_eq!(
+            cached.stats,
+            CampaignStats { resumed: 0, cache_hits: 4, ran: 0 }
+        );
+        assert_eq!(cached.to_json(), clean.to_json());
+        assert_eq!(cached.stats.reuse_pct(), 100.0);
+        // A changed grid reuses the unchanged points via the cache.
+        let mut widened = base_opts.clone().cache_dir(&cache_dir);
+        widened.axes.retain(|(n, _)| n != "policy");
+        widened.axes.push(("policy".into(), vec!["packed".into(), "spread".into()]));
+        let wider = run(&spec, &widened).unwrap();
+        assert_eq!(wider.records.len(), 8);
+        assert_eq!(wider.stats.cache_hits, 4);
+        assert_eq!(wider.stats.ran, 4);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

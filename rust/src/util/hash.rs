@@ -1,0 +1,58 @@
+//! Stable content hashing (FNV-1a) for the campaign result cache and
+//! checkpoint journal. Built in-tree because the offline registry has
+//! no hashing crates, and `std`'s `DefaultHasher` explicitly does not
+//! promise stability across Rust versions — these keys become file
+//! names and journal match tokens that must survive toolchain bumps.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes` starting from an explicit basis. Distinct bases
+/// yield independent-enough streams for the composite key below.
+pub fn fnv1a_64(bytes: &[u8], basis: u64) -> u64 {
+    let mut h = basis;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 128-bit content key as 32 lowercase hex characters: two FNV-1a
+/// passes from different bases, with the input length folded into the
+/// second so prefix-extension collisions cannot alias both halves.
+/// Used as the content address of campaign jobs — at 10k-point grids
+/// the collision probability is negligible, and cache entries verify
+/// the stored key on read as a second guard.
+pub fn content_key(text: &str) -> String {
+    let bytes = text.as_bytes();
+    let a = fnv1a_64(bytes, FNV_OFFSET);
+    let mut b = fnv1a_64(bytes, FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15);
+    b ^= (bytes.len() as u64).wrapping_mul(FNV_PRIME);
+    format!("{a:016x}{b:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Published FNV-1a test vectors (64-bit).
+        assert_eq!(fnv1a_64(b"", FNV_OFFSET), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a", FNV_OFFSET), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64(b"foobar", FNV_OFFSET), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn content_key_is_stable_and_distinguishes() {
+        let k = content_key("workload=stream4;seed=1");
+        assert_eq!(k.len(), 32);
+        assert!(k.chars().all(|c| c.is_ascii_hexdigit()));
+        // Deterministic across calls (it names cache files).
+        assert_eq!(k, content_key("workload=stream4;seed=1"));
+        // One-character edits move the key.
+        assert_ne!(k, content_key("workload=stream4;seed=2"));
+        assert_ne!(content_key(""), content_key("\u{0}"));
+    }
+}

@@ -1,0 +1,374 @@
+//! Minimal JSON parser — the read half of the hand-rolled emitters in
+//! `metrics::json` (the offline registry has no serde). Used by the
+//! campaign checkpoint journal and the content-addressed result cache
+//! to round-trip finished records back into memory.
+//!
+//! Numbers keep their raw token text and are parsed on access, so u64
+//! counters re-read exactly and floats round-trip bit-exact through
+//! Rust's shortest-repr `Display` (what `metrics::json::number`
+//! emits). Object key order is preserved — the emitters write fixed
+//! field orders and byte-identical re-serialization depends on it.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Raw number token (e.g. `"-2.5e-3"`), parsed on access.
+    Number(String),
+    Str(String),
+    Array(Vec<Value>),
+    /// Key/value pairs in document order.
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object field lookup (first match); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Number(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Number-or-null accessor for the emitters' convention of writing
+    /// non-finite floats as `null` (JSON has no NaN/Infinity tokens):
+    /// `null` reads back as NaN, which re-serializes as `null`.
+    pub fn as_f64_or_nan(&self) -> Option<f64> {
+        match self {
+            Value::Null => Some(f64::NAN),
+            v => v.as_f64(),
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Object(fields) => Some(fields),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+}
+
+/// Parse one complete JSON document; trailing non-whitespace is an
+/// error (a torn journal line must not parse as its prefix).
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing characters at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            match b {
+                b' ' | b'\t' | b'\n' | b'\r' => self.pos += 1,
+                _ => break,
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos);
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos);
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            _ => bail!("unexpected input at byte {}", self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            fields.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Object(fields));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Array(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            match b {
+                b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E' => self.pos += 1,
+                _ => break,
+            }
+        }
+        let token = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("number bytes are ASCII");
+        if token.parse::<f64>().is_err() {
+            bail!("malformed number '{token}' at byte {start}");
+        }
+        Ok(Value::Number(token.to_string()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // Build as bytes so multi-byte UTF-8 passes through untouched;
+        // the input is a valid &str and every escape emits valid UTF-8.
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let Some(b) = self.peek() else {
+                bail!("unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => {
+                    return Ok(String::from_utf8(out).expect("escapes keep UTF-8"));
+                }
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        bail!("unterminated escape");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'u' => {
+                            let c = self.unicode_escape()?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+    }
+
+    /// The four hex digits after `\u`, including surrogate pairs.
+    fn unicode_escape(&mut self) -> Result<char> {
+        let first = self.hex4()?;
+        let code = if (0xd800..0xdc00).contains(&first) {
+            // High surrogate: a `\uXXXX` low surrogate must follow.
+            if self.peek() != Some(b'\\') {
+                bail!("lone high surrogate");
+            }
+            self.pos += 1;
+            if self.peek() != Some(b'u') {
+                bail!("lone high surrogate");
+            }
+            self.pos += 1;
+            let low = self.hex4()?;
+            if !(0xdc00..0xe000).contains(&low) {
+                bail!("invalid low surrogate");
+            }
+            0x10000 + ((first - 0xd800) << 10) + (low - 0xdc00)
+        } else {
+            first
+        };
+        char::from_u32(code).ok_or_else(|| anyhow::anyhow!("invalid \\u escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let end = self.pos + 4;
+        if end > self.bytes.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..end])
+            .map_err(|_| anyhow::anyhow!("non-ASCII \\u escape"))?;
+        let v = u32::from_str_radix(hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad \\u escape '{hex}'"))?;
+        self.pos = end;
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse(" [1, 2.5, -3e2] ").unwrap().as_array().unwrap().len(), 3);
+        let v = parse("{\"a\":1,\"b\":{\"c\":[]}}").unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_array(), Some(&[][..]));
+        assert!(v.get("missing").is_none());
+        assert_eq!(parse("{}").unwrap(), Value::Object(Vec::new()));
+    }
+
+    #[test]
+    fn numbers_keep_exactness() {
+        // u64 beyond f64's 2^53 integer range reads back exactly.
+        let v = parse("18446744073709551615").unwrap();
+        assert_eq!(v.as_u64(), Some(u64::MAX));
+        // Shortest-repr floats round-trip bit-exact through Display.
+        for x in [0.1f64, -2.5e-3, 1.0 / 3.0, f64::MIN_POSITIVE, 1e308] {
+            let text = format!("{x}");
+            let back = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{text}");
+        }
+        assert!(parse("1.2.3").is_err());
+        assert!(parse("--1").is_err());
+    }
+
+    #[test]
+    fn null_reads_back_as_nan_for_metrics() {
+        // metrics::json::number writes non-finite floats as null.
+        assert!(parse("null").unwrap().as_f64_or_nan().unwrap().is_nan());
+        assert_eq!(parse("2.5").unwrap().as_f64_or_nan(), Some(2.5));
+        assert_eq!(Value::Str("x".into()).as_f64_or_nan(), None);
+    }
+
+    #[test]
+    fn string_escapes_round_trip_with_the_emitter() {
+        // Everything metrics::json::string can emit parses back to the
+        // original text.
+        for s in ["a\"b\\c\n", "\r\t", "\u{1}\u{1f}", "héllo", "π≈3"] {
+            let emitted = crate::metrics::json::string(s);
+            assert_eq!(parse(&emitted).unwrap().as_str(), Some(s), "{emitted}");
+        }
+        // Surrogate pairs decode (other emitters may write them).
+        assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap().as_str(), Some("\u{1f600}"));
+        assert!(parse("\"\\ud83d\"").is_err(), "lone surrogate rejected");
+    }
+
+    #[test]
+    fn object_key_order_is_preserved() {
+        let v = parse("{\"z\":1,\"a\":2}").unwrap();
+        let keys: Vec<&str> =
+            v.as_object().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["z", "a"]);
+    }
+
+    #[test]
+    fn torn_documents_are_rejected() {
+        // A journal line cut mid-write must fail, not parse as a prefix.
+        let full = "{\"v\":1,\"idx\":3,\"records\":[{\"ws\":1.25}]}";
+        assert!(parse(full).is_ok());
+        for cut in 1..full.len() {
+            assert!(parse(&full[..cut]).is_err(), "cut at {cut} parsed");
+        }
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("").is_err());
+    }
+}

@@ -3,6 +3,8 @@
 //! `proptest`; see DESIGN.md §Deviations).
 
 pub mod bench;
+pub mod hash;
+pub mod json;
 pub mod log;
 pub mod proptest;
 pub mod rng;

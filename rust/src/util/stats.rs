@@ -62,11 +62,26 @@ impl Summary {
 
 /// Geometric mean of a sequence of positive values; the paper reports
 /// geometric-mean speedups (Fig. 3, Fig. 4).
+///
+/// Non-positive (or NaN) inputs have no geometric mean. A zero ratio —
+/// e.g. a −100% WS "improvement" — makes the whole mean 0.0, returned
+/// explicitly so the collapse is surfaced instead of being laundered
+/// through `ln(clamp)` into a plausible-looking tiny value (the old
+/// behavior clamped to 1e-300 and silently dragged the mean). Negative
+/// ratios are a caller bug: debug builds assert, release builds also
+/// return 0.0.
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    debug_assert!(
+        xs.iter().all(|x| *x >= 0.0 || x.is_nan()),
+        "geomean of negative ratios is undefined: {xs:?}"
+    );
+    if !xs.iter().all(|x| *x > 0.0) {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
     (s / xs.len() as f64).exp()
 }
 
@@ -173,6 +188,22 @@ mod tests {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+        // A zero ratio (a −100% WS improvement) zeroes the mean
+        // outright instead of being clamped to 1e-300 and quietly
+        // dragging it toward — but not to — zero.
+        assert_eq!(geomean(&[0.0, 4.0]), 0.0);
+        assert_eq!(geomean(&[2.0, 0.0, 2.0]), 0.0);
+        // NaN poison is surfaced the same way, not averaged in.
+        assert_eq!(geomean(&[f64::NAN, 2.0]), 0.0);
+        // Values below the old clamp still compute honestly.
+        assert!(geomean(&[1e-308, 1e-308]) > 0.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "geomean of negative ratios")]
+    fn geomean_rejects_negative_ratios_in_debug() {
+        geomean(&[1.0, -0.5]);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Resumable/cached campaign invariants, end to end through the
+//! public spec API: a journaled run killed at any record boundary (or
+//! mid-line) and resumed must be byte-identical to an uninterrupted
+//! run at any thread count, and an unchanged cached re-invocation must
+//! re-run zero points.
+
+use std::path::PathBuf;
+
+use lisa::sim::spec::{self, CampaignStats, RunOptions};
+use lisa::util::rng::Pcg32;
+
+/// Per-test scratch directory under the system temp dir; unique per
+/// process so parallel `cargo test` binaries never collide.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir()
+            .join(format!("lisa-campaign-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A small raw grid (4 jobs of one point each).
+fn raw_opts() -> RunOptions {
+    RunOptions::default()
+        .requests(120)
+        .threads(2)
+        .axis("workload", &["salp-pingpong4"])
+        .axis("mech", &["memcpy", "lisa-risc"])
+        .axis("mode", &["none", "masa"])
+        .axis("policy", &["packed"])
+}
+
+/// A small WS grid (2 jobs: one per workload, chunking 2 presets).
+fn ws_opts() -> RunOptions {
+    RunOptions::default()
+        .requests(200)
+        .threads(2)
+        .mixes(2)
+        .axis("preset", &["baseline", "risc-villa"])
+}
+
+#[test]
+fn truncated_journal_resumes_byte_identically_at_any_cut() {
+    // Property test: simulate `kill -9` by truncating the journal at a
+    // random byte — sometimes a record boundary, sometimes mid-line —
+    // and resume. Every cut, at every thread count, must reproduce the
+    // uninterrupted JSON byte for byte.
+    let scratch = Scratch::new("truncate");
+    let spec = spec::spec_by_name("e10-salp").unwrap();
+    let clean = spec::run(&spec, &raw_opts()).unwrap().to_json();
+
+    let journal = scratch.path("full.jsonl");
+    let full = spec::run(&spec, &raw_opts().journal(&journal)).unwrap();
+    assert_eq!(full.to_json(), clean);
+    let bytes = std::fs::read(&journal).unwrap();
+    let lines = bytes.split_inclusive(|b| *b == b'\n').count();
+    assert_eq!(lines, 4, "one journal line per job");
+
+    let mut rng = Pcg32::new(0xC0FFEE, 7);
+    for trial in 0..12 {
+        let cut = rng.below(bytes.len() as u64 + 1) as usize;
+        let threads = *rng.pick(&[1usize, 2, 8]);
+        let truncated = scratch.path("truncated.jsonl");
+        std::fs::write(&truncated, &bytes[..cut]).unwrap();
+        let resumed =
+            spec::run(&spec, &raw_opts().threads(threads).resume(&truncated))
+                .unwrap();
+        assert_eq!(
+            resumed.to_json(),
+            clean,
+            "trial {trial}: cut at byte {cut}/{} with {threads} threads",
+            bytes.len()
+        );
+        // Whole journaled lines resume; the torn tail (if any) re-runs.
+        let whole = bytes[..cut].split_inclusive(|b| *b == b'\n').filter(|l| {
+            l.last() == Some(&b'\n')
+        });
+        assert_eq!(resumed.stats.resumed, whole.count(), "cut at byte {cut}");
+        assert_eq!(resumed.stats.resumed + resumed.stats.ran, 4);
+        // And the resumed journal is itself complete: resuming it
+        // again simulates nothing.
+        let again = spec::run(&spec, &raw_opts().resume(&truncated)).unwrap();
+        assert_eq!(
+            again.stats,
+            CampaignStats { resumed: 4, cache_hits: 0, ran: 0 }
+        );
+        assert_eq!(again.to_json(), clean);
+    }
+}
+
+#[test]
+fn ws_campaign_resumes_and_caches_byte_identically() {
+    // The WS path journals per-workload jobs (records carry ws values
+    // and the alone-run methodology); resume and cache must both
+    // reproduce the fresh bytes.
+    let scratch = Scratch::new("ws");
+    let spec = spec::spec_by_name("fig3").unwrap();
+    let clean = spec::run(&spec, &ws_opts()).unwrap();
+    assert_eq!(clean.records.len(), 4, "2 workloads x 2 presets");
+    assert!(clean.records.iter().all(|r| r.ws.is_some()));
+
+    let journal = scratch.path("ws.jsonl");
+    spec::run(&spec, &ws_opts().journal(&journal)).unwrap();
+    // Keep only the first of the two job lines: one workload resumes,
+    // the other re-runs.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let first_line = &text[..text.find('\n').unwrap() + 1];
+    let half = scratch.path("half.jsonl");
+    std::fs::write(&half, first_line).unwrap();
+    for threads in [1, 2, 8] {
+        let resumed =
+            spec::run(&spec, &ws_opts().threads(threads).resume(&half)).unwrap();
+        assert_eq!(
+            resumed.stats,
+            CampaignStats { resumed: 1, cache_hits: 0, ran: 1 },
+            "threads={threads}"
+        );
+        assert_eq!(resumed.to_json(), clean.to_json(), "threads={threads}");
+    }
+
+    let cache = scratch.path("cache");
+    let warmed = spec::run(&spec, &ws_opts().cache_dir(&cache)).unwrap();
+    assert_eq!(warmed.stats.ran, 2);
+    assert_eq!(warmed.to_json(), clean.to_json());
+    for threads in [1, 8] {
+        let hit = spec::run(&spec, &ws_opts().threads(threads).cache_dir(&cache))
+            .unwrap();
+        assert_eq!(
+            hit.stats,
+            CampaignStats { resumed: 0, cache_hits: 2, ran: 0 },
+            "threads={threads}"
+        );
+        assert_eq!(hit.to_json(), clean.to_json(), "threads={threads}");
+    }
+}
+
+#[test]
+fn resume_journal_and_cache_compose() {
+    // A killed journaled+cached run leaves both artifacts; resuming
+    // with both adopts journal entries first, cache for the rest, and
+    // simulates only what neither covers.
+    let scratch = Scratch::new("compose");
+    let spec = spec::spec_by_name("e10-salp").unwrap();
+    let clean = spec::run(&spec, &raw_opts()).unwrap().to_json();
+
+    let journal = scratch.path("run.jsonl");
+    let cache = scratch.path("cache");
+    spec::run(
+        &spec,
+        &raw_opts().journal(&journal).cache_dir(&cache),
+    )
+    .unwrap();
+    // Keep two journal lines; the cache still holds all four jobs.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let cut = text.match_indices('\n').nth(1).unwrap().0 + 1;
+    std::fs::write(&journal, &text[..cut]).unwrap();
+    let mixed = spec::run(
+        &spec,
+        &raw_opts().resume(&journal).cache_dir(&cache),
+    )
+    .unwrap();
+    assert_eq!(
+        mixed.stats,
+        CampaignStats { resumed: 2, cache_hits: 2, ran: 0 }
+    );
+    assert_eq!(mixed.to_json(), clean);
+
+    // A changed grid invalidates the journal positionally but reuses
+    // matching points from the cache, and simulates only the new ones.
+    let mut wider = raw_opts().resume(&journal).cache_dir(&cache);
+    wider.axes.retain(|(n, _)| n != "policy");
+    let wider = wider.axis("policy", &["packed", "spread"]);
+    let report = spec::run(&spec, &wider).unwrap();
+    assert_eq!(report.records.len(), 8);
+    assert_eq!(report.stats.cache_hits + report.stats.resumed, 4);
+    assert_eq!(report.stats.ran, 4);
+}
+
+#[test]
+fn missing_resume_file_is_a_fresh_start() {
+    let scratch = Scratch::new("fresh");
+    let spec = spec::spec_by_name("e10-salp").unwrap();
+    let journal = scratch.path("never-written.jsonl");
+    let mut opts = raw_opts();
+    opts.axes.retain(|(n, _)| n != "mech");
+    let opts = opts.axis("mech", &["memcpy"]).resume(&journal);
+    let report = spec::run(&spec, &opts).unwrap();
+    assert_eq!(
+        report.stats,
+        CampaignStats { resumed: 0, cache_hits: 0, ran: 2 }
+    );
+    // ... and the journal now exists (resume implies journaling), so
+    // the next invocation adopts everything.
+    let resumed = spec::run(&spec, &opts.clone()).unwrap();
+    assert_eq!(
+        resumed.stats,
+        CampaignStats { resumed: 2, cache_hits: 0, ran: 0 }
+    );
+    assert_eq!(resumed.to_json(), report.to_json());
+}
