@@ -1,0 +1,49 @@
+//! Embeds a content fingerprint of the simulator sources as
+//! `LISA_BUILD_FINGERPRINT`, folded into `sim::cache::code_version`:
+//! the result-cache namespace (and every journal/cache content key)
+//! changes whenever the code does, so a rebuilt binary never serves
+//! results computed by different code — without anyone remembering to
+//! hand-bump `CACHE_SCHEMA` for behavioral changes.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(hash: &mut u64, bytes: &[u8]) {
+    for b in bytes {
+        *hash ^= u64::from(*b);
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn main() {
+    let mut files = Vec::new();
+    collect(Path::new("src"), &mut files);
+    // Deterministic order: read_dir order is filesystem-dependent.
+    files.sort();
+    let mut hash = FNV_OFFSET;
+    for file in &files {
+        fnv1a(&mut hash, file.to_string_lossy().as_bytes());
+        fnv1a(&mut hash, b"\0");
+        fnv1a(&mut hash, &fs::read(file).unwrap_or_default());
+        println!("cargo:rerun-if-changed={}", file.display());
+    }
+    // Directory-level watch catches files added or removed since the
+    // per-file list above was emitted.
+    println!("cargo:rerun-if-changed=src");
+    println!("cargo:rustc-env=LISA_BUILD_FINGERPRINT={hash:016x}");
+}

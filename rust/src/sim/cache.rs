@@ -6,9 +6,10 @@
 //! unchanged re-invocation re-runs zero points and a changed grid
 //! re-runs exactly the points whose inputs changed.
 //!
-//! The code version is part of the path *and* of the key text itself:
-//! a rebuilt simulator never resurrects results computed by different
-//! code. Writes go through a temp file + `rename` so a concurrent
+//! The code version (crate version + cache schema + the `build.rs`
+//! source fingerprint) is part of the path *and* of the key text
+//! itself: a rebuilt simulator never resurrects results computed by
+//! different code. Writes go through a temp file + `rename` so a concurrent
 //! campaign (or a `kill -9`) can never leave a half-written entry that
 //! later reads as a hit; the stored key is verified on read as a
 //! belt-and-braces check against renamed or corrupted files.
@@ -25,11 +26,20 @@ use crate::util::json::{self, Value};
 /// version) changes.
 pub const CACHE_SCHEMA: u64 = 1;
 
-/// The version component of the cache namespace: crate version plus
-/// cache schema. Folded into the job content key as well, so journals
-/// written by other versions fail their key check on resume.
+/// The version component of the cache namespace: crate version, cache
+/// schema, and the build fingerprint `build.rs` computes over the
+/// crate sources — so any code change renames the namespace without a
+/// hand bump. Folded into the job content key as well, so journals
+/// written by other builds fail their key check on resume. The "dev"
+/// fallback only appears when the crate is compiled without cargo
+/// (no build script ran).
 pub fn code_version() -> String {
-    format!("{}-s{}", env!("CARGO_PKG_VERSION"), CACHE_SCHEMA)
+    format!(
+        "{}-s{}-b{}",
+        env!("CARGO_PKG_VERSION"),
+        CACHE_SCHEMA,
+        option_env!("LISA_BUILD_FINGERPRINT").unwrap_or("dev")
+    )
 }
 
 /// Handle on one version-namespace directory of the cache.
@@ -73,9 +83,14 @@ impl ResultCache {
             records_json.join(",")
         );
         let path = self.entry_path(key);
-        // Unique temp name per process: concurrent campaigns writing
-        // the same key race only at the (atomic) rename.
-        let tmp = self.dir.join(format!("{key}.tmp.{}", std::process::id()));
+        // Unique temp name per call (pid + sequence), not just per
+        // process: two threads putting the same key — duplicate axis
+        // values, or concurrent library campaigns — must not
+        // interleave writes into one temp file. Writers race only at
+        // the (atomic) rename.
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = self.dir.join(format!("{key}.tmp.{}.{seq}", std::process::id()));
         std::fs::write(&tmp, body)
             .with_context(|| format!("writing cache entry {}", tmp.display()))?;
         std::fs::rename(&tmp, &path)
@@ -129,7 +144,13 @@ mod tests {
 
     #[test]
     fn cache_is_namespaced_by_code_version() {
-        assert!(code_version().contains(&format!("s{CACHE_SCHEMA}")));
+        let version = code_version();
+        assert!(version.contains(&format!("s{CACHE_SCHEMA}")));
+        // A real build carries the build.rs source fingerprint, so a
+        // changed simulator renames the namespace by itself.
+        let (_, fp) = version.rsplit_once("-b").unwrap();
+        assert_eq!(fp.len(), 16, "16-hex build fingerprint, got {fp:?}");
+        assert!(fp.chars().all(|c| c.is_ascii_hexdigit()));
         let dir = temp_cache("namespace");
         let _ = std::fs::remove_dir_all(&dir);
         let cache = ResultCache::open(&dir).unwrap();

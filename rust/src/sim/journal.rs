@@ -18,9 +18,11 @@
 //! results. The reader skips torn or malformed lines — the tail a
 //! `kill -9` leaves mid-write — and lets later entries for an index
 //! supersede earlier ones (a resumed run appends to the same file).
+//! The writer heals a torn tail on open by terminating it with a
+//! newline, so resumed appends never glue onto the fragment.
 
 use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -54,7 +56,11 @@ pub struct JournalWriter {
 impl JournalWriter {
     /// Open `path` for appending, creating it (and its parent
     /// directory) if missing. Appending — never truncating — is what
-    /// lets `--resume FILE` keep journaling into the same file.
+    /// lets `--resume FILE` keep journaling into the same file. If the
+    /// existing file ends mid-line (the tail a `kill -9` leaves), a
+    /// newline is written first: appending straight onto the torn
+    /// fragment would glue the next entry to it and make both
+    /// unreadable.
     pub fn append_to(path: &Path) -> Result<Self> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -62,11 +68,22 @@ impl JournalWriter {
                     .with_context(|| format!("creating journal dir {}", dir.display()))?;
             }
         }
-        let file = OpenOptions::new()
+        let mut file = OpenOptions::new()
             .create(true)
+            .read(true)
             .append(true)
             .open(path)
             .with_context(|| format!("opening journal {}", path.display()))?;
+        let len = file.metadata().context("statting journal")?.len();
+        if len > 0 {
+            let mut last = [0u8; 1];
+            file.seek(SeekFrom::End(-1)).context("seeking journal tail")?;
+            file.read_exact(&mut last).context("reading journal tail")?;
+            if last[0] != b'\n' {
+                // O_APPEND: this lands at EOF regardless of the seek.
+                file.write_all(b"\n").context("terminating torn journal tail")?;
+            }
+        }
         Ok(Self { file })
     }
 
@@ -86,14 +103,20 @@ impl JournalWriter {
 /// Read every well-formed entry of a journal, in file order. Torn and
 /// malformed lines (including whole-line garbage and wrong-version
 /// entries) are skipped, not errors: the common case is the half-line
-/// a killed run left at EOF.
+/// a killed run left at EOF. Only newline-terminated lines count —
+/// an unterminated final line is the tail of an interrupted append
+/// even when the cut happens to leave parseable JSON, so it re-runs
+/// (and the next writer heals it) instead of being trusted.
 pub fn read(path: &Path) -> Result<Vec<JournalEntry>> {
-    let file = File::open(path)
+    let bytes = std::fs::read(path)
         .with_context(|| format!("opening journal {}", path.display()))?;
     let mut entries = Vec::new();
-    for line in BufReader::new(file).lines() {
-        let line = line.context("reading journal")?;
-        if let Some(entry) = parse_line(&line) {
+    for line in bytes.split_inclusive(|b| *b == b'\n') {
+        if line.last() != Some(&b'\n') {
+            continue;
+        }
+        let Ok(line) = std::str::from_utf8(line) else { continue };
+        if let Some(entry) = parse_line(line) {
             entries.push(entry);
         }
     }
@@ -163,6 +186,45 @@ mod tests {
         assert_eq!(entries.len(), 1, "only the intact line survives");
         assert_eq!(entries[0].idx, 1);
         assert_eq!(entries[0].records[0].get("x").unwrap().as_u64(), Some(1));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn appending_to_a_torn_tail_heals_it_first() {
+        let path = temp_path("heal");
+        let good = format!(
+            "{{\"v\":{JOURNAL_VERSION},\"idx\":0,\"key\":\"ab\",\"records\":[{{\"x\":1}}]}}"
+        );
+        // Simulate a kill mid-append: a complete line plus a torn,
+        // newline-less fragment of the next one.
+        std::fs::write(&path, format!("{good}\n{}", &good[..good.len() / 2])).unwrap();
+        assert_eq!(read(&path).unwrap().len(), 1);
+        let mut w = JournalWriter::append_to(&path).unwrap();
+        w.append(1, "cd", &["{\"y\":2}".to_string()]).unwrap();
+        drop(w);
+        // The appended entry is readable: the fragment got its own
+        // newline instead of swallowing the new line.
+        let entries = read(&path).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!((entries[0].idx, entries[1].idx), (0, 1));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unterminated_final_line_is_torn_even_if_parseable() {
+        // A cut can land exactly between a record's closing brace and
+        // its newline; the reader still treats it as torn (re-run)
+        // rather than trusting an append the writer never finished.
+        let path = temp_path("unterminated");
+        let good = format!(
+            "{{\"v\":{JOURNAL_VERSION},\"idx\":3,\"key\":\"ef\",\"records\":[{{\"x\":1}}]}}"
+        );
+        std::fs::write(&path, &good).unwrap();
+        assert!(read(&path).unwrap().is_empty());
+        // Re-opening for append heals it into a complete (and now
+        // trusted) line.
+        drop(JournalWriter::append_to(&path).unwrap());
+        assert_eq!(read(&path).unwrap().len(), 1);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -715,7 +715,9 @@ pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
 }
 
 /// The campaign core: resume → cache → simulate, with completions
-/// streamed to the journal and cache as they happen.
+/// streamed to the journal and cache as they happen, and jobs one
+/// artifact satisfied written through to the other so journal and
+/// cache each end the run self-complete.
 fn run_campaign(
     eval: Eval,
     jobs: Vec<CampaignJob>,
@@ -745,12 +747,14 @@ fn run_campaign(
             stats.resumed = slots.iter().filter(|s| s.is_some()).count();
         }
     }
+    let resumed_idxs: Vec<usize> = (0..n).filter(|i| slots[*i].is_some()).collect();
 
     // 2. Consult the content-addressed cache for what's still open.
     let cache = match &opts.cache_dir {
         Some(dir) => Some(cache::ResultCache::open(dir)?),
         None => None,
     };
+    let mut hit_idxs: Vec<usize> = Vec::new();
     if let Some(cache) = &cache {
         for (i, job) in jobs.iter().enumerate() {
             if slots[i].is_some() {
@@ -762,6 +766,7 @@ fn run_campaign(
             }
             if let Ok(records) = parse_records(&raw) {
                 slots[i] = Some(records);
+                hit_idxs.push(i);
                 stats.cache_hits += 1;
             }
         }
@@ -777,6 +782,28 @@ fn run_campaign(
         None => None,
     };
     let keys: Vec<String> = jobs.iter().map(|j| j.key.clone()).collect();
+
+    // Write each artifact through to the other, so both are
+    // self-complete: journal-adopted jobs warm the cache, cache hits
+    // are journaled. A kill later in this run then leaves no journal
+    // missing cache-satisfied jobs (or vice versa). The round-trip
+    // re-serialization is byte-identical (see `Record::to_json`), so
+    // written-through entries equal what a fresh run would write.
+    if let Some(cache) = &cache {
+        for &i in &resumed_idxs {
+            let records = slots[i].as_ref().expect("resumed slot");
+            let json: Vec<String> = records.iter().map(Record::to_json).collect();
+            cache.put(&keys[i], &json)?;
+        }
+    }
+    if let Some(w) = &writer {
+        let mut w = w.lock().expect("journal writer");
+        for &i in &hit_idxs {
+            let records = slots[i].as_ref().expect("cache-hit slot");
+            let json: Vec<String> = records.iter().map(Record::to_json).collect();
+            w.append(i, &keys[i], &json)?;
+        }
+    }
     let sink_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let pending: Vec<(usize, _)> = jobs
         .into_iter()

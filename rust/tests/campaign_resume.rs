@@ -120,8 +120,11 @@ fn ws_campaign_resumes_and_caches_byte_identically() {
     let text = std::fs::read_to_string(&journal).unwrap();
     let first_line = &text[..text.find('\n').unwrap() + 1];
     let half = scratch.path("half.jsonl");
-    std::fs::write(&half, first_line).unwrap();
     for threads in [1, 2, 8] {
+        // Resuming keeps journaling into the same file, so each
+        // iteration appends the re-run job's entry; restore the
+        // one-line journal so every thread count starts equal.
+        std::fs::write(&half, first_line).unwrap();
         let resumed =
             spec::run(&spec, &ws_opts().threads(threads).resume(&half)).unwrap();
         assert_eq!(
