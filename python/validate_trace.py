@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event export from `lisa exp ... --trace-point
+IDX --trace-out FILE` (or a `.jsonl` line-delimited export).
+
+Checks, in order:
+  1. the file is well-formed JSON (one object with a `traceEvents`
+     array, or one JSON object per line for `.jsonl`);
+  2. every complete slice (`"ph":"X"`) carries numeric ts/dur/pid/tid
+     and a non-empty name, with dur >= 0;
+  3. timestamps are monotone non-decreasing per (pid, tid) track;
+  4. the trace is non-trivial: it has slices, at least two distinct
+     tracks, and row activity (an ACT slice).
+
+Exits non-zero with a message on the first violated invariant; prints a
+one-line summary on success. Stdlib only (CI runs it bare).
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load_slices(path):
+    """Return the slice records, normalizing both export formats."""
+    with open(path) as f:
+        text = f.read()
+    if path.endswith(".jsonl"):
+        # One flat event object per line; synthesize the slice fields
+        # the checks below expect from the JSONL schema.
+        slices = []
+        for i, line in enumerate(text.splitlines()):
+            if not line.strip():
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"line {i + 1} is not valid JSON: {e}")
+            slices.append(
+                {
+                    "ph": "X",
+                    "name": ev["kind"],
+                    "ts": ev["cycle"],
+                    "dur": max(0, ev["done"] - ev["cycle"]),
+                    "pid": ev["ch"],
+                    # Same track encoding as the Chrome exporter.
+                    "tid": ev["rank"] * 4096
+                    + (ev["bank"] + 1) * 64
+                    + (ev["sa"] + 1),
+                }
+            )
+        return slices
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError as e:
+        fail(f"not valid JSON: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("missing traceEvents array")
+    return events
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: validate_trace.py TRACE_FILE")
+    path = sys.argv[1]
+    events = load_slices(path)
+    if not events:
+        fail("empty trace")
+    last_ts = {}
+    kinds = {}
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            if e.get("name") not in ("process_name", "thread_name"):
+                fail(f"unexpected metadata record {e!r}")
+            continue
+        if ph != "X":
+            fail(f"unexpected phase {ph!r} in {e!r}")
+        name = e.get("name")
+        if not name:
+            fail(f"slice without a name: {e!r}")
+        for field in ("ts", "dur", "pid", "tid"):
+            if not isinstance(e.get(field), (int, float)):
+                fail(f"slice field {field!r} not numeric in {e!r}")
+        if e["dur"] < 0:
+            fail(f"negative duration in {e!r}")
+        track = (e["pid"], e["tid"])
+        if last_ts.get(track, e["ts"]) > e["ts"]:
+            fail(f"timestamps regressed on track {track} at ts={e['ts']}")
+        last_ts[track] = e["ts"]
+        kinds[name] = kinds.get(name, 0) + 1
+    if not kinds:
+        fail("no slices, only metadata")
+    if len(last_ts) < 2:
+        fail(f"expected >= 2 distinct tracks, got {sorted(last_ts)}")
+    if "ACT" not in kinds:
+        fail(f"no ACT slice (kinds seen: {sorted(kinds)})")
+    total = sum(kinds.values())
+    summary = " ".join(f"{k}:{v}" for k, v in sorted(kinds.items()))
+    print(
+        f"validate_trace: OK: {total} slices on {len(last_ts)} tracks ({summary})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -10,17 +10,33 @@ use anyhow::{bail, Result};
 pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
+    /// Count of `-v` occurrences (stackable: `-vv` counts twice).
+    pub verbose: u32,
+    /// Count of `-q` occurrences.
+    pub quiet: u32,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
+}
+
+/// A short verbosity token: `-v`, `-q`, or a stack like `-vvq`.
+/// Deliberately narrow so negative-number option values (`-3`) are
+/// never mistaken for it.
+fn is_verbosity(t: &str) -> bool {
+    t.len() > 1
+        && t.starts_with('-')
+        && !t.starts_with("--")
+        && t[1..].chars().all(|c| c == 'v' || c == 'q')
 }
 
 impl Args {
     /// Parse `argv[1..]`. The first non-option token is the
     /// subcommand; `--key value` and `--key=value` pairs become
-    /// options; a `--key` followed by another `--` token or
-    /// end-of-line is a flag. Values may be negative numbers (`--shift
-    /// -3`); a bare `--` ends option parsing, so negative-number
-    /// *positionals* can be passed after it.
+    /// options; a `--key` followed by another `--` token (or a
+    /// verbosity flag, or end-of-line) is a flag. Values may be
+    /// negative numbers (`--shift -3`); `-v`/`-q` anywhere before a
+    /// bare `--` raise/lower verbosity; a bare `--` ends option
+    /// parsing, so negative-number *positionals* can be passed after
+    /// it.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let tokens: Vec<String> = argv.into_iter().collect();
         let mut out = Args::default();
@@ -40,11 +56,26 @@ impl Args {
                         bail!("option '{t}' has an empty key");
                     }
                     out.options.insert(k.to_string(), v.to_string());
-                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                } else if i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                    && !is_verbosity(&tokens[i + 1])
+                {
                     out.options.insert(key.to_string(), tokens[i + 1].clone());
                     i += 1;
                 } else {
                     out.flags.push(key.to_string());
+                }
+            } else if !options_done && is_verbosity(t) {
+                // Short verbosity flags: `-v`, `-q`, stackable and
+                // combinable (`-vv`, `-vq`). Any other single-dash
+                // token (e.g. a negative number) falls through to the
+                // positional branches below.
+                for c in t[1..].chars() {
+                    if c == 'v' {
+                        out.verbose += 1;
+                    } else {
+                        out.quiet += 1;
+                    }
                 }
             } else if out.subcommand.is_none() && !options_done {
                 out.subcommand = Some(t.clone());
@@ -208,6 +239,41 @@ mod tests {
             assert_eq!(zero.opt_usize("threads").unwrap(), Some(0), "{cmd}");
         }
         assert!(parse("os --threads x").opt_usize("threads").is_err());
+    }
+
+    #[test]
+    fn short_verbosity_flags_count_and_stack() {
+        let a = parse("run -v --threads 2");
+        assert_eq!(a.verbose, 1);
+        assert_eq!(a.quiet, 0);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt_usize("threads").unwrap(), Some(2));
+
+        let a = parse("-vv exp -q");
+        assert_eq!(a.verbose, 2);
+        assert_eq!(a.quiet, 1);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert!(a.positional.is_empty());
+
+        // `-vq` combines; plain defaults to zero.
+        assert_eq!(parse("run -vq").verbose, 1);
+        assert_eq!(parse("run -vq").quiet, 1);
+        assert_eq!(parse("run").verbose, 0);
+
+        // A verbosity token never becomes a preceding flag's value.
+        let a = parse("run --ws -v --threads 2");
+        assert!(a.has_flag("ws"));
+        assert_eq!(a.verbose, 1);
+        assert_eq!(a.opt_usize("threads").unwrap(), Some(2));
+
+        // Negative numbers are not verbosity flags: as an option value,
+        // or as a positional after `--`.
+        let a = parse("sweep --shift -3");
+        assert_eq!(a.opt("shift"), Some("-3"));
+        assert_eq!(a.verbose, 0);
+        let a = parse("run -- -v -5");
+        assert_eq!(a.verbose, 0);
+        assert_eq!(a.positional, vec!["-v".to_string(), "-5".to_string()]);
     }
 
     #[test]

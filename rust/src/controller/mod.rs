@@ -19,6 +19,7 @@ use crate::dram::command::Command;
 use crate::dram::geometry::Address;
 use crate::dram::timing::Timing;
 use crate::lisa::villa::VillaManager;
+use crate::obs::{Attribution, Obs, ObsReport, Probe, TraceEvent, TraceKind};
 use crate::util::stats::Histogram;
 use mapping::{Mapper, MappingScheme};
 use queue::{BankedQueue, QueueLoc};
@@ -123,6 +124,10 @@ pub struct Controller {
     horizon: Vec<Cell<Option<u64>>>,
     pub stats: CtrlStats,
     pub now: u64,
+    /// Observability sinks (tracing probe and/or latency attribution).
+    /// `None` in normal runs: every emit site is a single branch on
+    /// this `Option`, and no event is ever constructed when it is off.
+    pub obs: Option<Box<Obs>>,
 }
 
 impl Controller {
@@ -172,7 +177,70 @@ impl Controller {
             horizon,
             stats: CtrlStats::default(),
             now: 0,
+            obs: None,
         }
+    }
+
+    /// Turn on latency attribution: every demand RD/WR gets its wait
+    /// window decomposed, aggregated into the report's `"obs"` block.
+    pub fn enable_attribution(&mut self) {
+        let d = &self.cfg.dram;
+        let a = Attribution::new(d.channels, d.ranks, d.banks, d.subarrays_per_bank);
+        self.obs_mut().attrib = Some(a);
+    }
+
+    /// Attach an external trace sink (e.g. a `SharedTraceRing`).
+    pub fn set_probe(&mut self, probe: Box<dyn Probe>) {
+        self.obs_mut().probe = Some(probe);
+    }
+
+    fn obs_mut(&mut self) -> &mut Obs {
+        self.obs.get_or_insert_with(Box::default)
+    }
+
+    /// The aggregated attribution block, when `--obs` enabled it.
+    pub fn obs_report(&self, cycles: u64) -> Option<ObsReport> {
+        self.obs
+            .as_ref()
+            .and_then(|o| o.attrib.as_ref())
+            .map(|a| a.finalize(cycles))
+    }
+
+    #[inline]
+    fn observing(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// Fan one event out to the attached sinks. Callers gate on
+    /// [`Self::observing`] so field gathering stays off the hot path.
+    fn observe(&mut self, ev: TraceEvent) {
+        if let Some(o) = self.obs.as_mut() {
+            o.observe(&ev);
+        }
+    }
+
+    /// Emit the trace event for an issued DRAM command, tagging it
+    /// with the owning request/copy when the caller knows it.
+    fn observe_cmd(
+        &mut self,
+        ch: usize,
+        cmd: &Command,
+        done: u64,
+        copy: bool,
+        id: i64,
+        arrive: u64,
+    ) {
+        let mut ev = TraceEvent::from_command(
+            ch,
+            cmd,
+            self.now,
+            done,
+            self.cfg.dram.rows_per_subarray,
+        );
+        ev.copy = ev.copy || copy;
+        ev.id = id;
+        ev.arrive = arrive;
+        self.observe(ev);
     }
 
     /// Drop channel `ch`'s cached horizon: some state consulted by
@@ -224,6 +292,9 @@ impl Controller {
             for c in copies {
                 self.stats.villa_copies += 1;
                 let cch = c.src.channel;
+                if self.observing() {
+                    self.observe(copy_enq_event(&c, self.now));
+                }
                 self.chans[cch].copy_q.push_back(c);
                 self.invalidate_horizon(cch);
             }
@@ -244,6 +315,19 @@ impl Controller {
             self.chans[ch].read_q.push_back(req);
         }
         self.invalidate_horizon(ch);
+        if self.observing() {
+            let c = &self.chans[ch];
+            let depth = if is_write { c.write_q.len() } else { c.read_q.len() };
+            let mut ev = TraceEvent::new(TraceKind::Enq, self.now, ch, addr.rank);
+            ev.bank = addr.bank as i64;
+            ev.sa = addr.subarray(&self.cfg.dram) as i64;
+            ev.row = addr.row as i64;
+            ev.col = addr.col as i64;
+            ev.id = id as i64;
+            ev.arrive = self.now;
+            ev.val = depth as i64;
+            self.observe(ev);
+        }
         true
     }
 
@@ -258,6 +342,9 @@ impl Controller {
             }
         }
         let ch = req.src.channel;
+        if self.observing() {
+            self.observe(copy_enq_event(&req, self.now));
+        }
         self.chans[ch].copy_q.push_back(req);
         self.invalidate_horizon(ch);
     }
@@ -408,6 +495,15 @@ impl Controller {
                 .sum_copy_latency
                 .checked_add(self.now - m.req.arrive)
                 .map(|v| self.stats.sum_copy_latency = v);
+            if self.observing() {
+                let mut ev =
+                    TraceEvent::new(TraceKind::CopyDone, self.now, ch, m.req.src.rank);
+                ev.bank = m.req.src.bank as i64;
+                ev.id = m.req.id as i64;
+                ev.arrive = m.req.arrive;
+                ev.copy = true;
+                self.observe(ev);
+            }
             self.finish_copy(Completion {
                 id: m.req.id,
                 core: m.req.core,
@@ -429,15 +525,21 @@ impl Controller {
             {
                 self.chans[ch].refresh_pending[rank] = true;
                 self.invalidate_horizon(ch);
+                if self.observing() {
+                    self.observe(TraceEvent::new(TraceKind::RefPend, now, ch, rank));
+                }
             }
             if self.chans[ch].refresh_pending[rank] {
                 let cmd = Command::Ref { rank };
                 if let Ok(e) = self.dev.earliest(ch, cmd, now) {
                     if e <= now {
-                        self.dev.issue(ch, cmd, now)?;
+                        let issued = self.dev.issue(ch, cmd, now)?;
                         self.chans[ch].refresh_pending[rank] = false;
                         self.chans[ch].next_refresh[rank] += self.dev.timing.t_refi;
                         self.invalidate_horizon(ch);
+                        if self.observing() {
+                            self.observe_cmd(ch, &cmd, issued.done_at, false, -1, 0);
+                        }
                         return Ok(());
                     }
                 } else {
@@ -447,8 +549,18 @@ impl Controller {
                             let pre = Command::Pre { rank, bank };
                             if let Ok(e) = self.dev.earliest(ch, pre, now) {
                                 if e <= now {
-                                    self.dev.issue(ch, pre, now)?;
+                                    let issued = self.dev.issue(ch, pre, now)?;
                                     self.invalidate_horizon(ch);
+                                    if self.observing() {
+                                        self.observe_cmd(
+                                            ch,
+                                            &pre,
+                                            issued.done_at,
+                                            false,
+                                            -1,
+                                            0,
+                                        );
+                                    }
                                     return Ok(());
                                 }
                             }
@@ -483,6 +595,25 @@ impl Controller {
                         // Sequence complete; completion at last step end.
                         let done_at = op.last_done.max(now);
                         self.stats.sum_copy_latency += done_at - op.req.arrive;
+                        if self.observing() {
+                            let rank = op.req.src.rank;
+                            let id = op.req.id as i64;
+                            for b in op.banks(&self.cfg.dram).into_iter().flatten() {
+                                let mut ev =
+                                    TraceEvent::new(TraceKind::CopyRelease, now, ch, rank);
+                                ev.bank = b as i64;
+                                ev.id = id;
+                                ev.copy = true;
+                                self.observe(ev);
+                            }
+                            let mut ev = TraceEvent::new(TraceKind::CopyDone, now, ch, rank);
+                            ev.done = done_at;
+                            ev.bank = op.req.src.bank as i64;
+                            ev.id = id;
+                            ev.arrive = op.req.arrive;
+                            ev.copy = true;
+                            self.observe(ev);
+                        }
                         self.inflight.push((
                             done_at,
                             Event::CopyDone(Completion {
@@ -514,6 +645,14 @@ impl Controller {
                     }
                     self.chans[ch].pending_cmd = None;
                     self.invalidate_horizon(ch);
+                    if self.observing() {
+                        let (id, arrive) = self.chans[ch]
+                            .active_copy
+                            .as_ref()
+                            .map(|op| (op.req.id as i64, op.req.arrive))
+                            .unwrap_or((-1, 0));
+                        self.observe_cmd(ch, &cmd, issued.done_at, true, id, arrive);
+                    }
                     return Ok(());
                 }
                 Ok(_) => {}
@@ -532,8 +671,18 @@ impl Controller {
                             let pre = Command::Pre { rank, bank };
                             if let Ok(e) = self.dev.earliest(ch, pre, now) {
                                 if e <= now {
-                                    self.dev.issue(ch, pre, now)?;
+                                    let issued = self.dev.issue(ch, pre, now)?;
                                     self.invalidate_horizon(ch);
+                                    if self.observing() {
+                                        self.observe_cmd(
+                                            ch,
+                                            &pre,
+                                            issued.done_at,
+                                            true,
+                                            -1,
+                                            0,
+                                        );
+                                    }
                                     return Ok(());
                                 }
                             }
@@ -567,6 +716,7 @@ impl Controller {
         let Some(req) = c.copy_q.pop_front() else {
             return;
         };
+        let start = (req.id, req.src, req.arrive, req.rows);
         if req.mechanism == CopyMechanism::MemcpyChannel {
             c.active_memcpy = Some(MemcpyState {
                 req,
@@ -578,6 +728,31 @@ impl Controller {
             c.active_copy = Some(CopyOp::new(req, &self.cfg.dram));
         }
         self.invalidate_horizon(ch);
+        if self.observing() {
+            let (id, src, arrive, rows) = start;
+            let banks = self.chans[ch]
+                .active_copy
+                .as_ref()
+                .map(|op| op.banks(&self.cfg.dram));
+            let mut ev = TraceEvent::new(TraceKind::CopyStart, self.now, ch, src.rank);
+            ev.bank = src.bank as i64;
+            ev.row = src.row as i64;
+            ev.id = id as i64;
+            ev.arrive = arrive;
+            ev.val = rows as i64;
+            ev.copy = true;
+            self.observe(ev);
+            // A CopyOp owns its banks for the whole sequence (the
+            // scheduler parks row preparation there); a memcpy uses
+            // the normal queues and owns nothing.
+            for b in banks.into_iter().flatten().flatten() {
+                let mut ev = TraceEvent::new(TraceKind::CopyOwn, self.now, ch, src.rank);
+                ev.bank = b as i64;
+                ev.id = id as i64;
+                ev.copy = true;
+                self.observe(ev);
+            }
+        }
     }
 
     fn generate_memcpy_reads(&mut self, ch: usize) {
@@ -839,6 +1014,16 @@ impl Controller {
                         }),
                     ));
                 }
+                if self.observing() {
+                    self.observe_cmd(
+                        ch,
+                        &cmd,
+                        issued.done_at,
+                        req.copy_id.is_some(),
+                        req.id as i64,
+                        req.arrive,
+                    );
+                }
             }
             Command::Wr { .. } => {
                 self.stats.row_hits += 1;
@@ -853,9 +1038,22 @@ impl Controller {
                     issued.done_at,
                     Event::WriteDone { copy_id: req.copy_id, ch },
                 ));
+                if self.observing() {
+                    self.observe_cmd(
+                        ch,
+                        &cmd,
+                        issued.done_at,
+                        req.copy_id.is_some(),
+                        req.id as i64,
+                        req.arrive,
+                    );
+                }
             }
             Command::Act { .. } | Command::Pre { .. } | Command::PreSa { .. } => {
                 self.stats.row_misses += 1;
+                if self.observing() {
+                    self.observe_cmd(ch, &cmd, issued.done_at, false, -1, 0);
+                }
             }
             _ => {}
         }
@@ -1074,6 +1272,18 @@ impl Controller {
             + c.active_copy.is_some() as usize
             + c.active_memcpy.is_some() as usize
     }
+}
+
+/// The COPY_ENQ event for a copy request entering a channel queue.
+fn copy_enq_event(req: &CopyRequest, now: u64) -> TraceEvent {
+    let mut ev = TraceEvent::new(TraceKind::CopyEnq, now, req.src.channel, req.src.rank);
+    ev.bank = req.src.bank as i64;
+    ev.row = req.src.row as i64;
+    ev.id = req.id as i64;
+    ev.arrive = req.arrive;
+    ev.val = req.rows as i64;
+    ev.copy = true;
+    ev
 }
 
 #[cfg(test)]

@@ -46,6 +46,7 @@ pub mod dram;
 pub mod energy;
 pub mod lisa;
 pub mod metrics;
+pub mod obs;
 pub mod os;
 #[cfg(feature = "runtime")]
 pub mod runtime;

@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 
 use lisa::cli::Args;
 use lisa::config::SimConfig;
+use lisa::obs::{self, DEFAULT_RING_CAP};
 use lisa::sim::campaign;
 use lisa::sim::engine::run_workload;
 use lisa::sim::experiments as exp;
@@ -47,6 +48,14 @@ jobs as they complete), [--resume FILE] (adopt a prior journal, then
 keep appending to it) and [--cache-dir DIR] / [--no-cache] (reuse
 finished jobs across invocations; default cache: target/lisa-cache).
 Resumed and cached runs are byte-identical to fresh ones.
+
+Observability (zero-cost when off): [--obs] attaches a latency
+attribution block to each report under \"obs\"; [--trace-point IDX
+--trace-out FILE] additionally re-runs one expanded grid point with
+the command probe attached and writes a Chrome trace-event file
+(Perfetto-viewable; use a .jsonl extension for line-delimited JSON
+instead). Global [-v|-q] flags — or LISA_LOG=error|warn|info|debug —
+set the stderr log level.
 
 ";
 
@@ -95,6 +104,11 @@ fn load_config(args: &Args) -> Result<SimConfig> {
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    lisa::util::log::set_level(lisa::util::log::resolve(
+        args.verbose,
+        args.quiet,
+        std::env::var("LISA_LOG").ok().as_deref(),
+    ));
     let Some(cmd) = args.check_subcommand(COMMANDS)?.map(str::to_string) else {
         print!("{}", usage());
         return Ok(());
@@ -289,7 +303,9 @@ fn run_experiment(s: &ExperimentSpec, args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let report = spec::run(s, &opts)?;
     // Provenance to stderr, never into the JSON: resumed/cached
-    // reports stay byte-identical to fresh ones (CI greps this line).
+    // reports stay byte-identical to fresh ones. The human line is
+    // followed by two stable machine-readable lines — the campaign
+    // reuse stats and the harness self-profile (CI greps the former).
     let st = report.stats;
     eprintln!(
         "{}: jobs {} = {} resumed + {} cache hits + {} ran ({:.1}% cached)",
@@ -300,8 +316,43 @@ fn run_experiment(s: &ExperimentSpec, args: &Args) -> Result<()> {
         st.ran,
         st.reuse_pct()
     );
+    eprintln!("{}", st.to_json_line(&s.name));
+    eprintln!("{}", report.profile.to_json());
     eprintln!("{}: done in {:.2} s", s.name, t0.elapsed().as_secs_f64());
-    emit_report(args, &report)
+    emit_report(args, &report)?;
+    maybe_trace(s, &opts, args)
+}
+
+/// `--trace-point IDX --trace-out FILE`: re-run one expanded grid
+/// point with the command probe attached and export the event ring.
+/// This is an *extra* run after the campaign — the campaign itself
+/// never sees a probe, so its reports (and the journal/cache bytes)
+/// are unchanged by tracing.
+fn maybe_trace(s: &ExperimentSpec, opts: &RunOptions, args: &Args) -> Result<()> {
+    let point = args.opt_usize("trace-point")?;
+    let out = args.opt("trace-out");
+    let (idx, path) = match (point, out) {
+        (None, None) => return Ok(()),
+        (Some(i), Some(p)) => (i, p),
+        (Some(_), None) => bail!("--trace-point requires --trace-out FILE"),
+        (None, Some(_)) => bail!("--trace-out requires --trace-point IDX"),
+    };
+    let (events, dropped) = spec::run_traced(s, opts, idx, DEFAULT_RING_CAP)?;
+    let body = if path.ends_with(".jsonl") {
+        obs::to_jsonl(&events)
+    } else {
+        obs::to_chrome_trace(&events)
+    };
+    std::fs::write(path, body)?;
+    eprintln!(
+        "{}: traced point {} -> {} ({} events, {} dropped)",
+        s.name,
+        idx,
+        path,
+        events.len(),
+        dropped
+    );
+    Ok(())
 }
 
 /// Shared report writing: JSON to `--out` (table + confirmation to

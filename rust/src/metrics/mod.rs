@@ -4,7 +4,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::CopyMechanism;
 use crate::energy::EnergyBreakdown;
+use crate::obs::ObsReport;
 use crate::util::json::Value;
 use crate::util::stats::geomean;
 
@@ -33,15 +35,33 @@ pub struct OsSummary {
 }
 
 impl OsSummary {
-    /// Index into `mech_pages` for a `CopyMechanism::name()`.
-    pub fn mech_index(name: &str) -> usize {
+    /// Index into `mech_pages` for a `CopyMechanism::name()`. Unknown
+    /// names are an error, not a panic — callers on a parse path
+    /// propagate context; hot-path callers that already hold the enum
+    /// use the infallible [`Self::mech_slot`] instead.
+    pub fn mech_index(name: &str) -> Result<usize> {
         match name {
-            "memcpy" => 0,
-            "rc-intra" => 1,
-            "rc-bank" => 2,
-            "rc-inter" => 3,
-            "lisa-risc" => 4,
-            other => panic!("unknown mechanism name '{other}'"),
+            "memcpy" => Ok(0),
+            "rc-intra" => Ok(1),
+            "rc-bank" => Ok(2),
+            "rc-inter" => Ok(3),
+            "lisa-risc" => Ok(4),
+            other => bail!(
+                "unknown copy mechanism name '{other}' (expected one of \
+                 memcpy, rc-intra, rc-bank, rc-inter, lisa-risc)"
+            ),
+        }
+    }
+
+    /// The `mech_pages` slot for a resolved mechanism — no string
+    /// lookup and no failure mode (the dispatch hot path).
+    pub fn mech_slot(mech: CopyMechanism) -> usize {
+        match mech {
+            CopyMechanism::MemcpyChannel => 0,
+            CopyMechanism::RowCloneIntraSa => 1,
+            CopyMechanism::RowCloneInterBank => 2,
+            CopyMechanism::RowCloneInterSa => 3,
+            CopyMechanism::LisaRisc => 4,
         }
     }
 
@@ -149,6 +169,10 @@ pub struct RunReport {
     pub energy: EnergyBreakdown,
     /// OS-layer statistics; `None` for workloads without bulk ops.
     pub os: Option<OsSummary>,
+    /// Latency attribution (`--obs` runs only). When `None` the
+    /// serialized report is byte-identical to a build without the
+    /// observability layer: the `"obs"` key is simply absent.
+    pub obs: Option<ObsReport>,
 }
 
 impl RunReport {
@@ -201,14 +225,16 @@ impl RunReport {
     }
 
     /// Serialize as a JSON object (hand-rolled: no serde offline).
+    /// The `"obs"` key appears only for `--obs` runs, so plain reports
+    /// serialize byte-identically to builds predating the key.
     pub fn to_json(&self) -> String {
-        format!(
+        let mut out = format!(
             "{{\"workload\":{},\"config\":{},\"ipc\":[{}],\"dram_cycles\":{},\
              \"reads\":{},\"writes\":{},\"copies\":{},\
              \"avg_read_latency_cycles\":{},\"row_hit_rate\":{},\
              \"villa_hit_rate\":{},\"lip_coverage\":{},\
              \"energy_uj\":{{\"total\":{},\"background\":{},\"rbm\":{}}},\
-             \"os\":{}}}",
+             \"os\":{}",
             json::string(&self.workload),
             json::string(&self.config_name),
             self.ipc.iter().map(|&x| json::number(x)).collect::<Vec<_>>().join(","),
@@ -226,7 +252,13 @@ impl RunReport {
             self.os
                 .as_ref()
                 .map_or_else(|| "null".to_string(), |o| o.to_json()),
-        )
+        );
+        if let Some(obs) = self.obs.as_ref() {
+            out.push_str(",\"obs\":");
+            out.push_str(&obs.to_json());
+        }
+        out.push('}');
+        out
     }
 
     /// Rebuild a report from the object [`Self::to_json`] emits — the
@@ -261,6 +293,10 @@ impl RunReport {
             None | Some(Value::Null) => None,
             Some(o) => Some(OsSummary::from_json(o)?),
         };
+        let obs = match v.get("obs") {
+            None | Some(Value::Null) => None,
+            Some(o) => Some(ObsReport::from_json(o)?),
+        };
         Ok(Self {
             workload: field_str(v, "workload")?,
             config_name: field_str(v, "config")?,
@@ -275,6 +311,7 @@ impl RunReport {
             lip_coverage: field_f64(v, "lip_coverage")?,
             energy,
             os,
+            obs,
         })
     }
 }
@@ -474,6 +511,7 @@ mod tests {
             lip_coverage: 0.0,
             energy: EnergyBreakdown::from_serialized(12.5, 3.25, 0.0625),
             os: Some(os),
+            obs: None,
         };
         let emitted = r.to_json();
         let parsed = crate::util::json::parse(&emitted).unwrap();
@@ -505,14 +543,55 @@ mod tests {
         assert!(o.to_json().contains("\"risc_hit_rate\":0"));
         o.pages_copied = 8;
         o.risc_hits = 6;
-        o.mech_pages[OsSummary::mech_index("lisa-risc")] = 6;
-        o.mech_pages[OsSummary::mech_index("memcpy")] = 2;
+        o.mech_pages[OsSummary::mech_index("lisa-risc").unwrap()] = 6;
+        o.mech_pages[OsSummary::mech_index("memcpy").unwrap()] = 2;
         assert!((o.risc_hit_rate() - 0.75).abs() < 1e-12);
         let j = o.to_json();
         assert!(j.contains("\"pages_copied\":8"), "{j}");
         assert!(j.contains("\"lisa_risc\":6"), "{j}");
         let r = RunReport { os: Some(o), ..Default::default() };
         assert!(r.to_json().contains("\"os\":{\"pages_copied\":8"));
+    }
+
+    #[test]
+    fn mech_index_errors_on_unknown_and_agrees_with_mech_slot() {
+        let err = OsSummary::mech_index("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus") && err.contains("lisa-risc"), "{err}");
+        for m in CopyMechanism::ALL {
+            assert_eq!(
+                OsSummary::mech_index(m.name()).unwrap(),
+                OsSummary::mech_slot(m),
+                "{}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn report_with_obs_block_round_trips_and_plain_reports_omit_it() {
+        let obs = ObsReport {
+            requests: 2,
+            sum_queueing: 5,
+            sum_service: 50,
+            lat_p50: 20.0,
+            bank_util: vec![0.5, 0.25],
+            ..Default::default()
+        };
+        let r = RunReport {
+            workload: "w".into(),
+            obs: Some(obs),
+            ..Default::default()
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"obs\":{\"requests\":2"), "{j}");
+        let back =
+            RunReport::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.to_json(), j);
+        assert!(back.obs.is_some());
+        // Without `--obs` the key is absent entirely — byte identity
+        // with pre-observability reports.
+        let plain = RunReport { obs: None, ..r };
+        assert!(!plain.to_json().contains("\"obs\""), "{}", plain.to_json());
     }
 
     #[test]

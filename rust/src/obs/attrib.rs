@@ -1,0 +1,609 @@
+//! Latency attribution: decompose each demand request's end-to-end
+//! latency into queueing / bank-conflict / refresh-blocked /
+//! copy-blocked / service components, plus per-bank utilization and
+//! queue-depth percentiles. Fed by the same [`TraceEvent`] stream the
+//! probe sees; only active under `--obs`.
+
+use anyhow::{anyhow, Result};
+
+use super::trace::{TraceEvent, TraceKind};
+use crate::metrics::json;
+use crate::util::json::Value;
+use crate::util::stats::percentile;
+
+/// Closed, non-overlapping, start-sorted windows plus at most one
+/// still-open window (refresh pending, copy ownership, open row —
+/// all strictly sequential per resource).
+#[derive(Debug, Clone, Default)]
+struct Spans {
+    done: Vec<(u64, u64)>,
+    open: Option<u64>,
+}
+
+impl Spans {
+    fn open_at(&mut self, t: u64) {
+        if self.open.is_none() {
+            self.open = Some(t);
+        }
+    }
+
+    fn close_at(&mut self, t: u64) {
+        if let Some(s) = self.open.take() {
+            if t > s {
+                self.done.push((s, t));
+            }
+        }
+    }
+
+    /// Is `t` inside a window? (half-open `[start, end)`.)
+    fn covers(&self, t: u64) -> bool {
+        if self.open.is_some_and(|s| s <= t) {
+            return true;
+        }
+        let i = self.done.partition_point(|&(s, _)| s <= t);
+        i > 0 && self.done[i - 1].1 > t
+    }
+
+    /// Push every window boundary that falls inside `[a, b)`.
+    fn boundaries_into(&self, a: u64, b: u64, cuts: &mut Vec<u64>) {
+        if let Some(s) = self.open {
+            if s < b {
+                cuts.push(s.max(a));
+            }
+        }
+        let start = self.done.partition_point(|&(_, e)| e <= a);
+        for &(s, e) in &self.done[start..] {
+            if s >= b {
+                break;
+            }
+            cuts.push(s.max(a));
+            cuts.push(e.min(b));
+        }
+    }
+}
+
+/// Like [`Spans`] but each window remembers which row was open, so a
+/// conflict query can ignore windows where the requested row itself
+/// was the open one (those are hits, not conflicts).
+#[derive(Debug, Clone, Default)]
+struct RowSpans {
+    done: Vec<(u64, u64, i64)>,
+    open: Option<(u64, i64)>,
+}
+
+impl RowSpans {
+    fn open_at(&mut self, t: u64, row: i64) {
+        // Defensive: an ACT over a still-open row (VILLA fast rows,
+        // copy restarts) closes the previous window first.
+        self.close_at(t);
+        self.open = Some((t, row));
+    }
+
+    fn close_at(&mut self, t: u64) {
+        if let Some((s, row)) = self.open.take() {
+            if t > s {
+                self.done.push((s, t, row));
+            }
+        }
+    }
+
+    /// Was a row *other than* `req_row` open at `t`?
+    fn conflicts_at(&self, t: u64, req_row: i64) -> bool {
+        if let Some((s, row)) = self.open {
+            if s <= t {
+                return row != req_row;
+            }
+        }
+        let i = self.done.partition_point(|&(s, _, _)| s <= t);
+        i > 0 && self.done[i - 1].1 > t && self.done[i - 1].2 != req_row
+    }
+
+    fn conflict_boundaries_into(&self, a: u64, b: u64, req_row: i64, cuts: &mut Vec<u64>) {
+        if let Some((s, row)) = self.open {
+            if s < b && row != req_row {
+                cuts.push(s.max(a));
+            }
+        }
+        let start = self.done.partition_point(|&(_, e, _)| e <= a);
+        for &(s, e, row) in &self.done[start..] {
+            if s >= b {
+                break;
+            }
+            if row != req_row {
+                cuts.push(s.max(a));
+                cuts.push(e.min(b));
+            }
+        }
+    }
+}
+
+/// Merge-accumulator for per-bank busy time. Events arrive in issue
+/// order, so overlapping occupancies (e.g. pipelined column bursts)
+/// only count the uncovered tail.
+#[derive(Debug, Clone, Copy, Default)]
+struct Busy {
+    acc: u64,
+    last_end: u64,
+}
+
+impl Busy {
+    fn merge(&mut self, start: u64, end: u64) {
+        let s = start.max(self.last_end);
+        if end > s {
+            self.acc += end - s;
+        }
+        self.last_end = self.last_end.max(end);
+    }
+}
+
+/// One demand request's latency decomposition. The five components sum
+/// exactly to `done - arrive` by construction (the wait window is
+/// partitioned by a single boundary sweep; the property test in
+/// `tests/observability.rs` pins this).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestLatency {
+    pub id: u64,
+    pub arrive: u64,
+    /// Cycle the RD/WR column command issued.
+    pub issue: u64,
+    pub done: u64,
+    /// Wait not explained by any blocker below (scheduler order, bus
+    /// contention, row preparation of the request's own row).
+    pub queueing: u64,
+    /// Wait while a *different* row was open in the request's subarray.
+    pub bank_conflict: u64,
+    /// Wait while the request's rank had a refresh pending/in flight.
+    pub refresh_blocked: u64,
+    /// Wait while the active copy owned the request's bank.
+    pub copy_blocked: u64,
+    /// Issue to data-burst completion.
+    pub service: u64,
+}
+
+impl RequestLatency {
+    pub fn total(&self) -> u64 {
+        self.done - self.arrive
+    }
+
+    pub fn components_sum(&self) -> u64 {
+        self.queueing
+            + self.bank_conflict
+            + self.refresh_blocked
+            + self.copy_blocked
+            + self.service
+    }
+}
+
+/// The attribution engine: replays the probe event stream into
+/// blocker windows and decomposes each demand RD/WR at issue time
+/// (all windows overlapping `[arrive, issue)` are already final).
+#[derive(Debug)]
+pub struct Attribution {
+    ranks: usize,
+    banks: usize,
+    sas: usize,
+    refresh: Vec<Spans>,
+    copy_own: Vec<Spans>,
+    rows: Vec<RowSpans>,
+    busy: Vec<Busy>,
+    queue_depth: Vec<f64>,
+    latency: Vec<f64>,
+    /// Per-request decompositions, in completion-issue order.
+    pub requests: Vec<RequestLatency>,
+    sums: [u64; 5],
+}
+
+impl Attribution {
+    pub fn new(channels: usize, ranks: usize, banks: usize, subarrays: usize) -> Self {
+        let nr = channels * ranks;
+        let nb = nr * banks;
+        Attribution {
+            ranks,
+            banks,
+            sas: subarrays,
+            refresh: vec![Spans::default(); nr],
+            copy_own: vec![Spans::default(); nb],
+            rows: vec![RowSpans::default(); nb * subarrays],
+            busy: vec![Busy::default(); nb],
+            queue_depth: Vec::new(),
+            latency: Vec::new(),
+            requests: Vec::new(),
+            sums: [0; 5],
+        }
+    }
+
+    fn rank_idx(&self, ev: &TraceEvent) -> usize {
+        ev.ch * self.ranks + ev.rank
+    }
+
+    fn bank_idx(&self, ev: &TraceEvent, bank: i64) -> usize {
+        self.rank_idx(ev) * self.banks + bank.max(0) as usize
+    }
+
+    fn sa_idx(&self, ev: &TraceEvent) -> usize {
+        self.bank_idx(ev, ev.bank) * self.sas + ev.sa.max(0) as usize
+    }
+
+    pub fn observe(&mut self, ev: &TraceEvent) {
+        match ev.kind {
+            TraceKind::Enq => self.queue_depth.push(ev.val as f64),
+            TraceKind::RefPend => {
+                let ri = self.rank_idx(ev);
+                self.refresh[ri].open_at(ev.cycle);
+            }
+            TraceKind::Ref => {
+                let ri = self.rank_idx(ev);
+                self.refresh[ri].close_at(ev.done);
+                for b in 0..self.banks {
+                    let bi = self.bank_idx(ev, b as i64);
+                    self.busy[bi].merge(ev.cycle, ev.done);
+                }
+            }
+            TraceKind::CopyOwn => {
+                let bi = self.bank_idx(ev, ev.bank);
+                self.copy_own[bi].open_at(ev.cycle);
+            }
+            TraceKind::CopyRelease => {
+                let bi = self.bank_idx(ev, ev.bank);
+                self.copy_own[bi].close_at(ev.cycle);
+            }
+            TraceKind::Act | TraceKind::ActCopy | TraceKind::ActStore => {
+                let si = self.sa_idx(ev);
+                self.rows[si].open_at(ev.cycle, ev.row);
+                let bi = self.bank_idx(ev, ev.bank);
+                self.busy[bi].merge(ev.cycle, ev.done);
+            }
+            TraceKind::Pre => {
+                let bi = self.bank_idx(ev, ev.bank);
+                for sa in 0..self.sas {
+                    self.rows[bi * self.sas + sa].close_at(ev.cycle);
+                }
+                self.busy[bi].merge(ev.cycle, ev.done);
+            }
+            TraceKind::PreSa => {
+                let si = self.sa_idx(ev);
+                self.rows[si].close_at(ev.cycle);
+                let bi = self.bank_idx(ev, ev.bank);
+                self.busy[bi].merge(ev.cycle, ev.done);
+            }
+            TraceKind::PreAll => {
+                for b in 0..self.banks {
+                    let bi = self.bank_idx(ev, b as i64);
+                    for sa in 0..self.sas {
+                        self.rows[bi * self.sas + sa].close_at(ev.cycle);
+                    }
+                    self.busy[bi].merge(ev.cycle, ev.done);
+                }
+            }
+            TraceKind::Rd | TraceKind::Wr => {
+                let bi = self.bank_idx(ev, ev.bank);
+                self.busy[bi].merge(ev.cycle, ev.done);
+                if !ev.copy && ev.id >= 0 {
+                    self.decompose(ev);
+                }
+            }
+            TraceKind::Rbm => {
+                let bi = self.bank_idx(ev, ev.bank);
+                self.busy[bi].merge(ev.cycle, ev.done);
+            }
+            TraceKind::Transfer => {
+                let src = self.bank_idx(ev, ev.bank);
+                self.busy[src].merge(ev.cycle, ev.done);
+                let dst = self.bank_idx(ev, ev.val);
+                self.busy[dst].merge(ev.cycle, ev.done);
+            }
+            TraceKind::CopyEnq
+            | TraceKind::CopyStart
+            | TraceKind::CopyDone => {}
+        }
+    }
+
+    /// Partition the wait window `[arrive, issue)` by a boundary sweep
+    /// with blocker priority refresh > copy > conflict; the remainder
+    /// is queueing. The row that the request itself needed does not
+    /// count as a conflict.
+    fn decompose(&mut self, ev: &TraceEvent) {
+        let (a, b) = (ev.arrive, ev.cycle);
+        let ri = self.rank_idx(ev);
+        let bi = self.bank_idx(ev, ev.bank);
+        let si = self.sa_idx(ev);
+        let mut refresh_blocked = 0u64;
+        let mut copy_blocked = 0u64;
+        let mut bank_conflict = 0u64;
+        let mut queueing = 0u64;
+        if b > a {
+            let mut cuts = vec![a, b];
+            self.refresh[ri].boundaries_into(a, b, &mut cuts);
+            self.copy_own[bi].boundaries_into(a, b, &mut cuts);
+            self.rows[si].conflict_boundaries_into(a, b, ev.row, &mut cuts);
+            cuts.sort_unstable();
+            cuts.dedup();
+            for w in cuts.windows(2) {
+                let (s, e) = (w[0], w[1]);
+                let len = e - s;
+                if self.refresh[ri].covers(s) {
+                    refresh_blocked += len;
+                } else if self.copy_own[bi].covers(s) {
+                    copy_blocked += len;
+                } else if self.rows[si].conflicts_at(s, ev.row) {
+                    bank_conflict += len;
+                } else {
+                    queueing += len;
+                }
+            }
+        }
+        let service = ev.done.saturating_sub(ev.cycle);
+        self.sums[0] += queueing;
+        self.sums[1] += bank_conflict;
+        self.sums[2] += refresh_blocked;
+        self.sums[3] += copy_blocked;
+        self.sums[4] += service;
+        self.latency.push((ev.done - ev.arrive) as f64);
+        self.requests.push(RequestLatency {
+            id: ev.id as u64,
+            arrive: a,
+            issue: b,
+            done: ev.done,
+            queueing,
+            bank_conflict,
+            refresh_blocked,
+            copy_blocked,
+            service,
+        });
+    }
+
+    /// Aggregate into the report block attached under `"obs"`.
+    pub fn finalize(&self, cycles: u64) -> ObsReport {
+        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+        let maxf = |xs: &[f64]| xs.iter().copied().fold(0.0f64, f64::max);
+        let denom = cycles.max(1) as f64;
+        ObsReport {
+            requests: self.requests.len() as u64,
+            sum_queueing: self.sums[0],
+            sum_bank_conflict: self.sums[1],
+            sum_refresh_blocked: self.sums[2],
+            sum_copy_blocked: self.sums[3],
+            sum_service: self.sums[4],
+            lat_p50: pct(&self.latency, 50.0),
+            lat_p90: pct(&self.latency, 90.0),
+            lat_p99: pct(&self.latency, 99.0),
+            lat_max: maxf(&self.latency),
+            qd_p50: pct(&self.queue_depth, 50.0),
+            qd_p90: pct(&self.queue_depth, 90.0),
+            qd_p99: pct(&self.queue_depth, 99.0),
+            qd_max: maxf(&self.queue_depth),
+            bank_util: self
+                .busy
+                .iter()
+                .map(|b| (b.acc as f64 / denom).min(1.0))
+                .collect(),
+        }
+    }
+}
+
+/// The `"obs"` block of a `RunReport`: aggregate latency attribution.
+/// Deterministic for a given run, so it participates in the campaign
+/// byte-identity contracts (journal/cache round trips, N-thread vs 1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsReport {
+    pub requests: u64,
+    pub sum_queueing: u64,
+    pub sum_bank_conflict: u64,
+    pub sum_refresh_blocked: u64,
+    pub sum_copy_blocked: u64,
+    pub sum_service: u64,
+    pub lat_p50: f64,
+    pub lat_p90: f64,
+    pub lat_p99: f64,
+    pub lat_max: f64,
+    pub qd_p50: f64,
+    pub qd_p90: f64,
+    pub qd_p99: f64,
+    pub qd_max: f64,
+    /// Busy fraction per (channel, rank, bank), bank-minor.
+    pub bank_util: Vec<f64>,
+}
+
+impl ObsReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"components\":{{\"queueing\":{},\
+             \"bank_conflict\":{},\"refresh_blocked\":{},\"copy_blocked\":{},\
+             \"service\":{}}},\"read_latency\":{{\"p50\":{},\"p90\":{},\
+             \"p99\":{},\"max\":{}}},\"queue_depth\":{{\"p50\":{},\"p90\":{},\
+             \"p99\":{},\"max\":{}}},\"bank_util\":[{}]}}",
+            self.requests,
+            self.sum_queueing,
+            self.sum_bank_conflict,
+            self.sum_refresh_blocked,
+            self.sum_copy_blocked,
+            self.sum_service,
+            json::number(self.lat_p50),
+            json::number(self.lat_p90),
+            json::number(self.lat_p99),
+            json::number(self.lat_max),
+            json::number(self.qd_p50),
+            json::number(self.qd_p90),
+            json::number(self.qd_p99),
+            json::number(self.qd_max),
+            self.bank_util
+                .iter()
+                .map(|&x| json::number(x))
+                .collect::<Vec<_>>()
+                .join(","),
+        )
+    }
+
+    /// Rebuild from the object [`Self::to_json`] emits (campaign
+    /// journal / result-cache read path; byte-stable round trip).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let num = |o: &Value, k: &str| -> Result<f64> {
+            o.get(k)
+                .and_then(Value::as_f64_or_nan)
+                .ok_or_else(|| anyhow!("obs field '{k}' is not a number"))
+        };
+        let int = |o: &Value, k: &str| -> Result<u64> {
+            o.get(k)
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow!("obs field '{k}' is not a u64"))
+        };
+        let comp = v
+            .get("components")
+            .ok_or_else(|| anyhow!("obs block missing 'components'"))?;
+        let lat = v
+            .get("read_latency")
+            .ok_or_else(|| anyhow!("obs block missing 'read_latency'"))?;
+        let qd = v
+            .get("queue_depth")
+            .ok_or_else(|| anyhow!("obs block missing 'queue_depth'"))?;
+        let bank_util = v
+            .get("bank_util")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("obs block missing 'bank_util'"))?
+            .iter()
+            .map(|x| {
+                x.as_f64_or_nan()
+                    .ok_or_else(|| anyhow!("non-numeric bank_util entry"))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(ObsReport {
+            requests: int(v, "requests")?,
+            sum_queueing: int(comp, "queueing")?,
+            sum_bank_conflict: int(comp, "bank_conflict")?,
+            sum_refresh_blocked: int(comp, "refresh_blocked")?,
+            sum_copy_blocked: int(comp, "copy_blocked")?,
+            sum_service: int(comp, "service")?,
+            lat_p50: num(lat, "p50")?,
+            lat_p90: num(lat, "p90")?,
+            lat_p99: num(lat, "p99")?,
+            lat_max: num(lat, "max")?,
+            qd_p50: num(qd, "p50")?,
+            qd_p90: num(qd, "p90")?,
+            qd_p99: num(qd, "p99")?,
+            qd_max: num(qd, "max")?,
+            bank_util,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd_ev(kind: TraceKind, cycle: u64, done: u64, bank: i64, sa: i64) -> TraceEvent {
+        let mut e = TraceEvent::new(kind, cycle, 0, 0);
+        e.done = done;
+        e.bank = bank;
+        e.sa = sa;
+        e
+    }
+
+    #[test]
+    fn spans_cover_and_cut_half_open() {
+        let mut s = Spans::default();
+        s.open_at(10);
+        s.close_at(20);
+        assert!(!s.covers(9));
+        assert!(s.covers(10));
+        assert!(s.covers(19));
+        assert!(!s.covers(20));
+        s.open_at(30);
+        assert!(s.covers(35), "open window extends to the query point");
+        let mut cuts = vec![];
+        s.boundaries_into(0, 100, &mut cuts);
+        cuts.sort_unstable();
+        assert_eq!(cuts, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn conflict_ignores_own_row() {
+        let mut r = RowSpans::default();
+        r.open_at(0, 7);
+        r.close_at(50);
+        assert!(r.conflicts_at(10, 9), "other row open = conflict");
+        assert!(!r.conflicts_at(10, 7), "own row open = hit, not conflict");
+        assert!(!r.conflicts_at(60, 9), "closed window");
+    }
+
+    #[test]
+    fn decomposition_partitions_the_window() {
+        let mut a = Attribution::new(1, 1, 2, 2);
+        // Refresh pending [5, 40), a conflicting row open [0, 30) in
+        // the request's subarray, copy owning the bank [20, 60).
+        let mut act = cmd_ev(TraceKind::Act, 0, 15, 0, 0);
+        act.row = 99;
+        a.observe(&act);
+        a.observe(&TraceEvent::new(TraceKind::RefPend, 5, 0, 0));
+        a.observe(&cmd_ev(TraceKind::Ref, 38, 40, -1, -1));
+        a.observe(&cmd_ev(TraceKind::CopyOwn, 20, 20, 0, -1));
+        a.observe(&cmd_ev(TraceKind::PreSa, 30, 42, 0, 0));
+        a.observe(&cmd_ev(TraceKind::CopyRelease, 60, 60, 0, -1));
+        // Request to row 7 of (bank 0, sa 0): arrived 0, issued 70,
+        // done 85.
+        let mut rd = cmd_ev(TraceKind::Rd, 70, 85, 0, 0);
+        rd.id = 1;
+        rd.arrive = 0;
+        rd.row = 7;
+        a.observe(&rd);
+        let r = a.requests[0];
+        assert_eq!(r.components_sum(), r.total(), "exact partition");
+        assert_eq!(r.service, 15);
+        // [5,40) refresh wins over both overlapping blockers.
+        assert_eq!(r.refresh_blocked, 35);
+        // Copy owns [20,60); refresh already claimed up to 40.
+        assert_eq!(r.copy_blocked, 20);
+        // Conflict [0,30) minus refresh [5,40) leaves [0,5).
+        assert_eq!(r.bank_conflict, 5);
+        // Remainder: [60,70).
+        assert_eq!(r.queueing, 10);
+    }
+
+    #[test]
+    fn busy_merge_ignores_overlap() {
+        let mut b = Busy::default();
+        b.merge(0, 10);
+        b.merge(5, 12);
+        b.merge(20, 25);
+        assert_eq!(b.acc, 17);
+    }
+
+    #[test]
+    fn obs_report_round_trips_byte_identically() {
+        let r = ObsReport {
+            requests: 3,
+            sum_queueing: 10,
+            sum_bank_conflict: 5,
+            sum_refresh_blocked: 2,
+            sum_copy_blocked: 0,
+            sum_service: 45,
+            lat_p50: 18.0,
+            lat_p90: 30.5,
+            lat_p99: 31.0,
+            lat_max: 31.0,
+            qd_p50: 1.0,
+            qd_p90: 2.0,
+            qd_p99: 2.0,
+            qd_max: 2.0,
+            bank_util: vec![0.25, 0.0],
+        };
+        let emitted = r.to_json();
+        let parsed = crate::util::json::parse(&emitted).unwrap();
+        let back = ObsReport::from_json(&parsed).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json(), emitted);
+        assert!(ObsReport::from_json(&Value::Null).is_err());
+    }
+
+    #[test]
+    fn empty_run_finalizes_without_nan() {
+        let a = Attribution::new(1, 1, 1, 1);
+        let rep = a.finalize(0);
+        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.lat_p50, 0.0);
+        assert_eq!(rep.qd_max, 0.0);
+        assert!(rep.bank_util.iter().all(|u| u.is_finite()));
+        // And it still round-trips.
+        let parsed = crate::util::json::parse(&rep.to_json()).unwrap();
+        assert_eq!(ObsReport::from_json(&parsed).unwrap(), rep);
+    }
+}

@@ -1,0 +1,44 @@
+//! Observability: cycle-level command/copy tracing, per-request
+//! latency attribution, and campaign-harness self-profiling. All three
+//! tiers are strictly opt-in; with no probe attached and no `--obs`
+//! flag, every controller hook is a single branch on a `None`.
+
+pub mod attrib;
+pub mod profile;
+pub mod trace;
+
+pub use attrib::{Attribution, ObsReport, RequestLatency};
+pub use profile::{CampaignProfile, WorkerStats};
+pub use trace::{
+    to_chrome_trace, to_jsonl, Probe, SharedTraceRing, TraceEvent, TraceKind, TraceRing,
+    DEFAULT_RING_CAP,
+};
+
+/// The controller's observability state: an optional external probe
+/// (tracing) and an optional attribution engine (`--obs`), both fed
+/// from the same event stream by one `observe` call.
+pub struct Obs {
+    pub probe: Option<Box<dyn Probe>>,
+    pub attrib: Option<Attribution>,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Obs { probe: None, attrib: None }
+    }
+
+    pub fn observe(&mut self, ev: &TraceEvent) {
+        if let Some(p) = self.probe.as_mut() {
+            p.record(ev);
+        }
+        if let Some(a) = self.attrib.as_mut() {
+            a.observe(ev);
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}

@@ -1,0 +1,89 @@
+//! Harness self-profiling: per-campaign phase timers and per-worker
+//! run/steal counters from the work-stealing scheduler, emitted as one
+//! machine-readable `{"profile":…}` stderr line per campaign.
+
+/// What one scheduler worker did: jobs popped from its own deque vs
+/// jobs stolen from a victim.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub ran: u64,
+    pub stolen: u64,
+}
+
+/// Where a campaign's wall time went. Phase times overlap-free except
+/// `sim_ms` (scheduler wall time), which contains the sink phases —
+/// serialization and journal/cache writes happen inside worker sinks.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignProfile {
+    pub threads: usize,
+    /// Grid expansion + job construction.
+    pub expand_ms: f64,
+    /// Wall time of the work-stealing scheduler call (simulation).
+    pub sim_ms: f64,
+    /// Report serialization (`to_json`) inside the result sink.
+    pub serialize_ms: f64,
+    /// Journal checkpoint writes inside the result sink.
+    pub journal_ms: f64,
+    /// Result-cache lookups + write-throughs.
+    pub cache_ms: f64,
+    /// End-to-end campaign wall time.
+    pub total_ms: f64,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl CampaignProfile {
+    /// The `{"profile":…}` stderr line. Times are wall-clock and vary
+    /// run to run; the shape (keys, worker count) is stable.
+    pub fn to_json(&self) -> String {
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| format!("{{\"ran\":{},\"stolen\":{}}}", w.ran, w.stolen))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"profile\":{{\"threads\":{},\"phases_ms\":{{\"expand\":{:.3},\
+             \"sim\":{:.3},\"serialize\":{:.3},\"journal\":{:.3},\
+             \"cache\":{:.3},\"total\":{:.3}}},\"workers\":[{}]}}}}",
+            self.threads,
+            self.expand_ms,
+            self.sim_ms,
+            self.serialize_ms,
+            self.journal_ms,
+            self.cache_ms,
+            self.total_ms,
+            workers,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_line_is_parseable_and_shaped() {
+        let p = CampaignProfile {
+            threads: 2,
+            expand_ms: 1.25,
+            sim_ms: 100.0,
+            serialize_ms: 3.0,
+            journal_ms: 0.5,
+            cache_ms: 2.0,
+            total_ms: 110.0,
+            workers: vec![
+                WorkerStats { ran: 5, stolen: 1 },
+                WorkerStats { ran: 3, stolen: 0 },
+            ],
+        };
+        let line = p.to_json();
+        let v = crate::util::json::parse(&line).unwrap();
+        let prof = v.get("profile").expect("profile key");
+        assert_eq!(prof.get("threads").and_then(|t| t.as_u64()), Some(2));
+        let phases = prof.get("phases_ms").expect("phases");
+        assert!(phases.get("sim").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        let workers = prof.get("workers").and_then(|w| w.as_array()).unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[0].get("stolen").and_then(|s| s.as_u64()), Some(1));
+    }
+}

@@ -1,0 +1,435 @@
+//! Cycle-stamped trace events, the `Probe` sink trait, a bounded ring
+//! buffer, and the two export formats (JSONL and Chrome trace-event
+//! JSON, viewable in Perfetto / `chrome://tracing`).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::dram::command::Command;
+
+/// What happened. Command kinds mirror [`Command::name`]; the rest are
+/// controller-internal transitions (queue admission, copy sequencing,
+/// refresh windows) that a command-only trace cannot show.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TraceKind {
+    Act,
+    ActCopy,
+    ActStore,
+    Pre,
+    PreSa,
+    PreAll,
+    Rd,
+    Wr,
+    Ref,
+    Rbm,
+    Transfer,
+    /// Refresh became due on a rank (queues park until REF completes).
+    RefPend,
+    /// A demand request entered its read/write queue.
+    Enq,
+    /// A bulk copy entered a channel's copy queue.
+    CopyEnq,
+    /// The copy engine picked up a queued copy.
+    CopyStart,
+    /// The active copy took ownership of a bank (scheduler pass 2
+    /// parks row preparation there until `CopyRelease`).
+    CopyOwn,
+    CopyRelease,
+    /// The copy's full command sequence retired.
+    CopyDone,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Act => "ACT",
+            TraceKind::ActCopy => "ACT_COPY",
+            TraceKind::ActStore => "ACT_STORE",
+            TraceKind::Pre => "PRE",
+            TraceKind::PreSa => "PRE_SA",
+            TraceKind::PreAll => "PREA",
+            TraceKind::Rd => "RD",
+            TraceKind::Wr => "WR",
+            TraceKind::Ref => "REF",
+            TraceKind::Rbm => "RBM",
+            TraceKind::Transfer => "TRANSFER",
+            TraceKind::RefPend => "REF_PEND",
+            TraceKind::Enq => "ENQ",
+            TraceKind::CopyEnq => "COPY_ENQ",
+            TraceKind::CopyStart => "COPY_START",
+            TraceKind::CopyOwn => "COPY_OWN",
+            TraceKind::CopyRelease => "COPY_RELEASE",
+            TraceKind::CopyDone => "COPY_DONE",
+        }
+    }
+}
+
+/// One flat, `Copy` trace record. `-1` marks "not applicable" for the
+/// signed fields so every kind shares one layout (the ring buffer
+/// stays a flat `Vec`, no per-kind allocation on the hot path).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Cycle the event was observed (command issue cycle).
+    pub cycle: u64,
+    /// Cycle the operation completes (`== cycle` for instantaneous
+    /// transitions like queue admission).
+    pub done: u64,
+    pub ch: usize,
+    pub rank: usize,
+    /// Bank, or -1 for rank-scope events (REF, PREA, REF_PEND).
+    pub bank: i64,
+    /// Subarray, or -1 for bank-/rank-scope events.
+    pub sa: i64,
+    pub row: i64,
+    pub col: i64,
+    /// Owning request or copy id (-1 when none is associated).
+    pub id: i64,
+    /// Arrival cycle of the owning request (0 when not applicable).
+    pub arrive: u64,
+    /// Kind-specific payload: queue depth after ENQ, `to_sa` for RBM,
+    /// destination bank for TRANSFER, row count for COPY_ENQ/START.
+    pub val: i64,
+    /// True when the event belongs to a bulk-copy operation.
+    pub copy: bool,
+}
+
+impl TraceEvent {
+    /// A bare event; fill the applicable fields at the emit site.
+    pub fn new(kind: TraceKind, cycle: u64, ch: usize, rank: usize) -> Self {
+        TraceEvent {
+            kind,
+            cycle,
+            done: cycle,
+            ch,
+            rank,
+            bank: -1,
+            sa: -1,
+            row: -1,
+            col: -1,
+            id: -1,
+            arrive: 0,
+            val: -1,
+            copy: false,
+        }
+    }
+
+    /// Map an issued DRAM command to its trace event. `rows_per_sa`
+    /// locates the subarray of row-addressed commands (rows are
+    /// bank-relative, subarray-major).
+    pub fn from_command(
+        ch: usize,
+        cmd: &Command,
+        cycle: u64,
+        done: u64,
+        rows_per_sa: usize,
+    ) -> Self {
+        let sa_of = |row: usize| (row / rows_per_sa.max(1)) as i64;
+        let mut ev = TraceEvent::new(TraceKind::Act, cycle, ch, cmd.rank());
+        ev.done = done;
+        match *cmd {
+            Command::Act { bank, row, .. } => {
+                ev.kind = TraceKind::Act;
+                ev.bank = bank as i64;
+                ev.sa = sa_of(row);
+                ev.row = row as i64;
+            }
+            Command::ActCopy { bank, row, .. } => {
+                ev.kind = TraceKind::ActCopy;
+                ev.bank = bank as i64;
+                ev.sa = sa_of(row);
+                ev.row = row as i64;
+                ev.copy = true;
+            }
+            Command::ActStore { bank, row, .. } => {
+                ev.kind = TraceKind::ActStore;
+                ev.bank = bank as i64;
+                ev.sa = sa_of(row);
+                ev.row = row as i64;
+                ev.copy = true;
+            }
+            Command::Pre { bank, .. } => {
+                ev.kind = TraceKind::Pre;
+                ev.bank = bank as i64;
+            }
+            Command::PreSa { bank, sa, .. } => {
+                ev.kind = TraceKind::PreSa;
+                ev.bank = bank as i64;
+                ev.sa = sa as i64;
+            }
+            Command::PreAll { .. } => ev.kind = TraceKind::PreAll,
+            Command::Rd { bank, sa, col, .. } => {
+                ev.kind = TraceKind::Rd;
+                ev.bank = bank as i64;
+                ev.sa = sa as i64;
+                ev.col = col as i64;
+            }
+            Command::Wr { bank, sa, col, .. } => {
+                ev.kind = TraceKind::Wr;
+                ev.bank = bank as i64;
+                ev.sa = sa as i64;
+                ev.col = col as i64;
+            }
+            Command::Ref { .. } => ev.kind = TraceKind::Ref,
+            Command::Rbm { bank, from_sa, to_sa, .. } => {
+                ev.kind = TraceKind::Rbm;
+                ev.bank = bank as i64;
+                ev.sa = from_sa as i64;
+                ev.val = to_sa as i64;
+                ev.copy = true;
+            }
+            Command::Transfer { src_bank, dst_bank, cols, .. } => {
+                ev.kind = TraceKind::Transfer;
+                ev.bank = src_bank as i64;
+                ev.val = dst_bank as i64;
+                ev.col = cols as i64;
+                ev.copy = true;
+            }
+        }
+        ev
+    }
+
+    /// One JSON object (a JSONL line, minus the newline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"kind\":\"{}\",\"cycle\":{},\"done\":{},\"ch\":{},\"rank\":{},\
+             \"bank\":{},\"sa\":{},\"row\":{},\"col\":{},\"id\":{},\
+             \"arrive\":{},\"val\":{},\"copy\":{}}}",
+            self.kind.name(),
+            self.cycle,
+            self.done,
+            self.ch,
+            self.rank,
+            self.bank,
+            self.sa,
+            self.row,
+            self.col,
+            self.id,
+            self.arrive,
+            self.val,
+            self.copy,
+        )
+    }
+}
+
+/// A sink for trace events. Implementations must be cheap: the
+/// controller calls `record` on every observable transition while a
+/// probe is attached (and never when none is).
+pub trait Probe: Send {
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// Bounded ring buffer of trace events: the newest `cap` events are
+/// kept, older ones are dropped (counted, so exports can say so).
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// Default ring capacity (~1M events; a flat 120-byte record each).
+pub const DEFAULT_RING_CAP: usize = 1 << 20;
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { cap: cap.max(1), events: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events oldest-first (the order they were recorded).
+    pub fn to_vec(&self) -> Vec<TraceEvent> {
+        self.events.iter().copied().collect()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl Probe for TraceRing {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.push(*ev);
+    }
+}
+
+/// A `TraceRing` behind `Arc<Mutex>`: hand one clone to the simulation
+/// as its probe, keep the other to snapshot the events afterwards.
+#[derive(Clone)]
+pub struct SharedTraceRing(Arc<Mutex<TraceRing>>);
+
+impl SharedTraceRing {
+    pub fn new(cap: usize) -> Self {
+        SharedTraceRing(Arc::new(Mutex::new(TraceRing::new(cap))))
+    }
+
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.0.lock().expect("trace ring lock").to_vec()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.0.lock().expect("trace ring lock").dropped()
+    }
+}
+
+impl Probe for SharedTraceRing {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.0.lock().expect("trace ring lock").push(*ev);
+    }
+}
+
+/// One JSON object per line, oldest event first.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json());
+        out.push('\n');
+    }
+    out
+}
+
+/// Encode a track id: one Perfetto "thread" per (rank, bank,
+/// subarray), with bank/sa = -1 collapsing to the enclosing scope's
+/// track (rank-wide REF, bank-wide PRE).
+fn track_id(ev: &TraceEvent) -> i64 {
+    ev.rank as i64 * 4096 + (ev.bank + 1) * 64 + (ev.sa + 1)
+}
+
+fn track_name(ev: &TraceEvent) -> String {
+    match (ev.bank, ev.sa) {
+        (-1, _) => format!("r{}", ev.rank),
+        (b, -1) => format!("r{} b{}", ev.rank, b),
+        (b, s) => format!("r{} b{} sa{}", ev.rank, b, s),
+    }
+}
+
+/// Chrome trace-event JSON (the `{"traceEvents":[...]}` object form):
+/// one process per channel, one thread per rank/bank/subarray track,
+/// every event a complete (`"ph":"X"`) slice at its issue cycle with
+/// its occupancy as the duration. Open the file in
+/// <https://ui.perfetto.dev> or `chrome://tracing`.
+pub fn to_chrome_trace(events: &[TraceEvent]) -> String {
+    let mut pids: BTreeSet<usize> = BTreeSet::new();
+    let mut tracks: BTreeMap<(usize, i64), String> = BTreeMap::new();
+    for ev in events {
+        pids.insert(ev.ch);
+        tracks.entry((ev.ch, track_id(ev))).or_insert_with(|| track_name(ev));
+    }
+    let mut lines: Vec<String> = Vec::with_capacity(events.len() + tracks.len() + 1);
+    for pid in &pids {
+        lines.push(format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\
+             \"args\":{{\"name\":\"ch{pid}\"}}}}"
+        ));
+    }
+    for ((pid, tid), name) in &tracks {
+        lines.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+             \"args\":{{\"name\":\"{name}\"}}}}"
+        ));
+    }
+    for ev in events {
+        lines.push(format!(
+            "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{},\
+             \"tid\":{},\"args\":{{\"row\":{},\"col\":{},\"id\":{},\"val\":{},\
+             \"copy\":{}}}}}",
+            ev.kind.name(),
+            ev.cycle,
+            ev.done.saturating_sub(ev.cycle),
+            ev.ch,
+            track_id(ev),
+            ev.row,
+            ev.col,
+            ev.id,
+            ev.val,
+            ev.copy,
+        ));
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", lines.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, cycle: u64, bank: i64, sa: i64) -> TraceEvent {
+        let mut e = TraceEvent::new(kind, cycle, 0, 0);
+        e.bank = bank;
+        e.sa = sa;
+        e.done = cycle + 10;
+        e
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let mut r = TraceRing::new(3);
+        for i in 0..5 {
+            r.push(ev(TraceKind::Act, i, 0, 0));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let v = r.to_vec();
+        assert_eq!(v[0].cycle, 2, "oldest surviving event first");
+        assert_eq!(v[2].cycle, 4);
+    }
+
+    #[test]
+    fn command_mapping_locates_subarray() {
+        let cmd = Command::Act { rank: 1, bank: 2, row: 700 };
+        let e = TraceEvent::from_command(0, &cmd, 5, 20, 512);
+        assert_eq!(e.kind, TraceKind::Act);
+        assert_eq!((e.rank, e.bank, e.sa, e.row), (1, 2, 1, 700));
+        let rbm = Command::Rbm { rank: 0, bank: 0, from_sa: 1, to_sa: 4 };
+        let e = TraceEvent::from_command(0, &rbm, 5, 30, 512);
+        assert_eq!((e.sa, e.val, e.copy), (1, 4, true));
+        let r = Command::Ref { rank: 1 };
+        let e = TraceEvent::from_command(0, &r, 5, 500, 512);
+        assert_eq!((e.bank, e.sa), (-1, -1));
+    }
+
+    #[test]
+    fn chrome_export_separates_tracks_and_parses() {
+        let events = vec![
+            ev(TraceKind::Act, 0, 0, 0),
+            ev(TraceKind::Act, 5, 0, 1),
+            ev(TraceKind::Ref, 9, -1, -1),
+        ];
+        let out = to_chrome_trace(&events);
+        let v = crate::util::json::parse(&out).expect("well-formed JSON");
+        let arr = v.get("traceEvents").and_then(|t| t.as_array()).unwrap();
+        // 1 process + 3 distinct tracks + 3 events.
+        assert_eq!(arr.len(), 7);
+        let tids: std::collections::BTreeSet<i64> = events.iter().map(track_id).collect();
+        assert_eq!(tids.len(), 3, "distinct (bank, sa) tracks");
+        assert!(out.contains("\"name\":\"r0 b0 sa1\""), "{out}");
+        assert!(out.contains("\"name\":\"r0\""), "{out}");
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let events = vec![ev(TraceKind::Enq, 1, 3, -1), ev(TraceKind::Rd, 2, 3, 0)];
+        let out = to_jsonl(&events);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let v = crate::util::json::parse(l).unwrap();
+            assert!(v.get("kind").is_some());
+            assert!(v.get("cycle").and_then(|c| c.as_u64()).is_some());
+        }
+    }
+}

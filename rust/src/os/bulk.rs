@@ -156,7 +156,7 @@ impl OsLayer {
         if zero {
             self.stats.pages_zeroed += 1;
         }
-        self.stats.mech_pages[OsSummary::mech_index(eff.name())] += 1;
+        self.stats.mech_pages[OsSummary::mech_slot(eff)] += 1;
         if src.same_bank(&dst) {
             self.stats.risc_hits += 1;
         }
@@ -542,7 +542,7 @@ mod tests {
         assert_eq!(os.mapped_pages(0), 8);
         // All page traffic under the memcpy system crosses the channel.
         assert_eq!(
-            os.stats.mech_pages[OsSummary::mech_index("memcpy")],
+            os.stats.mech_pages[OsSummary::mech_index("memcpy").unwrap()],
             os.stats.pages_copied
         );
     }

@@ -32,6 +32,7 @@ use std::sync::Mutex;
 
 use crate::config::SimConfig;
 use crate::metrics::RunReport;
+use crate::obs::WorkerStats;
 use crate::sim::engine::Simulation;
 use crate::workloads::Workload;
 
@@ -85,14 +86,33 @@ where
     F: FnOnce() -> T + Send,
     S: Fn(usize, &T) + Sync,
 {
+    run_jobs_sparse_profiled(jobs, threads, sink).0
+}
+
+/// [`run_jobs_sparse`] plus per-worker scheduler counters: how many
+/// jobs each worker executed and how many of those it stole from a
+/// victim's deque. The counters describe wall-clock scheduling, so —
+/// unlike the results — they vary run to run at `threads > 1`; the
+/// serial path reports one worker that ran everything and stole
+/// nothing.
+pub fn run_jobs_sparse_profiled<T, F, S>(
+    jobs: Vec<(usize, F)>,
+    threads: usize,
+    sink: S,
+) -> (Vec<(usize, T)>, Vec<WorkerStats>)
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+    S: Fn(usize, &T) + Sync,
+{
     let n = jobs.len();
     if n == 0 {
-        return Vec::new();
+        return (Vec::new(), Vec::new());
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
         // Serial fast path: same order, same sink calls, no pool.
-        return jobs
+        let out = jobs
             .into_iter()
             .map(|(idx, f)| {
                 let t = f();
@@ -100,6 +120,7 @@ where
                 (idx, t)
             })
             .collect();
+        return (out, vec![WorkerStats { ran: n as u64, stolen: 0 }]);
     }
     let slots: Vec<Mutex<Option<(usize, F)>>> =
         jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
@@ -108,48 +129,66 @@ where
     let deques: Vec<Mutex<VecDeque<usize>>> = (0..threads)
         .map(|w| Mutex::new((w..n).step_by(threads).collect()))
         .collect();
+    let worker_stats: Vec<Mutex<WorkerStats>> =
+        (0..threads).map(|_| Mutex::new(WorkerStats::default())).collect();
     let poisoned = AtomicBool::new(false);
     std::thread::scope(|s| {
         for w in 0..threads {
             let (slots, out, deques) = (&slots, &out, &deques);
             let (poisoned, sink) = (&poisoned, &sink);
-            s.spawn(move || loop {
-                // Checked at claim time: a panic elsewhere stops this
-                // worker before it starts another (possibly long) job.
-                if poisoned.load(Ordering::Acquire) {
-                    break;
-                }
-                let Some(slot) = claim(deques, w) else { break };
-                let (idx, job) =
-                    slots[slot].lock().expect("job slot").take().expect("claimed once");
-                match catch_unwind(AssertUnwindSafe(job)) {
-                    Ok(t) => {
-                        sink(idx, &t);
-                        *out[slot].lock().expect("result slot") = Some((idx, t));
+            let worker_stats = &worker_stats;
+            s.spawn(move || {
+                let mut local = WorkerStats::default();
+                loop {
+                    // Checked at claim time: a panic elsewhere stops
+                    // this worker before it starts another (possibly
+                    // long) job.
+                    if poisoned.load(Ordering::Acquire) {
+                        break;
                     }
-                    Err(payload) => {
-                        poisoned.store(true, Ordering::Release);
-                        resume_unwind(payload);
+                    let Some((slot, stole)) = claim(deques, w) else { break };
+                    local.ran += 1;
+                    local.stolen += stole as u64;
+                    let (idx, job) =
+                        slots[slot].lock().expect("job slot").take().expect("claimed once");
+                    match catch_unwind(AssertUnwindSafe(job)) {
+                        Ok(t) => {
+                            sink(idx, &t);
+                            *out[slot].lock().expect("result slot") = Some((idx, t));
+                        }
+                        Err(payload) => {
+                            poisoned.store(true, Ordering::Release);
+                            *worker_stats[w].lock().expect("worker stats") = local;
+                            resume_unwind(payload);
+                        }
                     }
                 }
+                *worker_stats[w].lock().expect("worker stats") = local;
             });
         }
     });
-    out.into_iter()
+    let results = out
+        .into_iter()
         .map(|m| m.into_inner().expect("result lock").expect("job completed"))
-        .collect()
+        .collect();
+    let stats = worker_stats
+        .into_iter()
+        .map(|m| m.into_inner().expect("worker stats lock"))
+        .collect();
+    (results, stats)
 }
 
 /// Claim the next slot for worker `w`: own deque front, else steal
-/// from the back of the next victim (cyclic scan).
-fn claim(deques: &[Mutex<VecDeque<usize>>], w: usize) -> Option<usize> {
+/// from the back of the next victim (cyclic scan). The flag says
+/// whether the claim was a steal.
+fn claim(deques: &[Mutex<VecDeque<usize>>], w: usize) -> Option<(usize, bool)> {
     if let Some(i) = deques[w].lock().expect("own deque").pop_front() {
-        return Some(i);
+        return Some((i, false));
     }
     for step in 1..deques.len() {
         let victim = (w + step) % deques.len();
         if let Some(i) = deques[victim].lock().expect("victim deque").pop_back() {
-            return Some(i);
+            return Some((i, true));
         }
     }
     None
@@ -295,6 +334,42 @@ mod tests {
         let mut seen = seen.into_inner().unwrap();
         seen.sort_unstable();
         assert_eq!(seen, vec![(3, 30), (7, 70), (12, 120), (40, 400)]);
+    }
+
+    #[test]
+    fn profiled_scheduler_accounts_for_every_job() {
+        // Serial: one worker, ran == jobs, nothing stolen.
+        let jobs: Vec<(usize, _)> = (0..5usize).map(|i| (i, move || i)).collect();
+        let (results, stats) = run_jobs_sparse_profiled(jobs, 1, |_, _: &usize| {});
+        assert_eq!(results.len(), 5);
+        assert_eq!(stats, vec![WorkerStats { ran: 5, stolen: 0 }]);
+        // Parallel: per-worker counts vary with scheduling, but they
+        // must sum to the job count, with steals a subset of runs.
+        let jobs: Vec<(usize, _)> = (0..32usize).map(|i| (i, move || i)).collect();
+        let (results, stats) = run_jobs_sparse_profiled(jobs, 4, |_, _: &usize| {});
+        assert_eq!(results.len(), 32);
+        assert_eq!(stats.len(), 4);
+        assert_eq!(stats.iter().map(|s| s.ran).sum::<u64>(), 32);
+        assert!(stats.iter().all(|s| s.stolen <= s.ran));
+        // The stacked-deque shape from `stealing_drains_a_stacked_deque`
+        // forces at least one steal: worker 0's hand is all heavy jobs.
+        let threads = 4;
+        let jobs: Vec<(usize, _)> = (0..64usize)
+            .map(|i| {
+                (i, move || {
+                    if i % threads == 0 {
+                        let mut acc = i as u64;
+                        for k in 0..20_000u64 {
+                            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+                        }
+                        std::hint::black_box(acc);
+                    }
+                    i
+                })
+            })
+            .collect();
+        let (_, stats) = run_jobs_sparse_profiled(jobs, threads, |_, _: &usize| {});
+        assert_eq!(stats.iter().map(|s| s.ran).sum::<u64>(), 64);
     }
 
     #[test]

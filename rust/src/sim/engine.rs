@@ -11,6 +11,7 @@ use crate::cpu::core::{Core, CoreWake};
 use crate::energy::EnergyModel;
 use crate::lisa::lip::lip_coverage;
 use crate::metrics::RunReport;
+use crate::obs::Probe;
 use crate::os::OsLayer;
 use crate::workloads::Workload;
 
@@ -49,6 +50,20 @@ impl Simulation {
             os,
             workload_name: workload.name,
         }
+    }
+
+    /// Turn on latency attribution: the report gains an `"obs"` block
+    /// decomposing every demand request's latency. Attribution is an
+    /// observer — simulated behavior and every other report field stay
+    /// bit-identical (pinned by `tests/engine_equivalence.rs`).
+    pub fn enable_obs(&mut self) {
+        self.ctrl.enable_attribution();
+    }
+
+    /// Attach a trace probe (e.g. a `SharedTraceRing`) to the
+    /// controller. Probes observe; they never change behavior.
+    pub fn set_probe(&mut self, probe: Box<dyn Probe>) {
+        self.ctrl.set_probe(probe);
     }
 
     /// Build a simulation where only `active_core` executes its trace
@@ -197,6 +212,7 @@ impl Simulation {
             lip_coverage: lip_coverage(&self.ctrl.dev.stats),
             energy: energy_model.breakdown_uj(&self.ctrl.dev.stats, cycles, tck),
             os: self.os.as_ref().map(|o| o.summary()),
+            obs: self.ctrl.obs_report(cycles),
         }
     }
 }
@@ -228,6 +244,17 @@ pub fn config_name(cfg: &SimConfig) -> String {
 /// Run a workload on a config.
 pub fn run_workload(cfg: &SimConfig, workload: &Workload) -> RunReport {
     Simulation::new(cfg.clone(), workload.clone()).run()
+}
+
+/// [`run_workload`] with latency attribution optionally enabled (the
+/// campaign path for `--obs`; `obs == false` is byte-identical to
+/// `run_workload`).
+pub fn run_workload_obs(cfg: &SimConfig, workload: &Workload, obs: bool) -> RunReport {
+    let mut sim = Simulation::new(cfg.clone(), workload.clone());
+    if obs {
+        sim.enable_obs();
+    }
+    sim.run()
 }
 
 /// Alone-run IPCs for every core of a workload on a config (the

@@ -14,7 +14,9 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,7 +27,8 @@ use crate::config::{
 };
 use crate::dram::timing::SpeedBin;
 use crate::metrics::{json, Comparison, RunReport};
-use crate::sim::engine::{alone_ipcs, run_workload};
+use crate::obs::{CampaignProfile, SharedTraceRing, TraceEvent};
+use crate::sim::engine::{alone_ipcs, run_workload_obs, Simulation};
 use crate::sim::{cache, campaign, journal};
 use crate::util::bench::Table;
 use crate::util::hash;
@@ -177,6 +180,10 @@ pub struct RunOptions {
     pub resume: Option<PathBuf>,
     /// Result-cache directory; `None` disables caching.
     pub cache_dir: Option<PathBuf>,
+    /// `--obs` — run with latency attribution; every record's report
+    /// gains an `"obs"` block. Off by default: plain reports stay
+    /// byte-identical to builds without the observability layer.
+    pub obs: bool,
 }
 
 impl RunOptions {
@@ -221,6 +228,11 @@ impl RunOptions {
         self
     }
 
+    pub fn obs(mut self, on: bool) -> Self {
+        self.obs = on;
+        self
+    }
+
     /// Extract overrides from parsed CLI arguments: `--requests`,
     /// `--threads`, `--mixes`, the campaign flags (`--journal`,
     /// `--resume`, `--cache-dir`, `--no-cache`), plus one
@@ -252,6 +264,7 @@ impl RunOptions {
             journal: args.opt("journal").map(PathBuf::from),
             resume: args.opt("resume").map(PathBuf::from),
             cache_dir,
+            obs: args.has_flag("obs"),
         };
         for axis in &spec.axes {
             if let Some(values) = args.opt_list(&axis.flag) {
@@ -479,6 +492,22 @@ impl CampaignStats {
             (self.resumed + self.cache_hits) as f64 * 100.0 / self.total() as f64
         }
     }
+
+    /// Stable one-line JSON for scripts and CI (the human-readable
+    /// stderr summary is free to change; this line is not). A fully
+    /// reused campaign shows `"ran":0` and `"reuse_pct":100`.
+    pub fn to_json_line(&self, experiment: &str) -> String {
+        format!(
+            "{{\"campaign\":{{\"experiment\":{},\"jobs\":{},\"resumed\":{},\
+             \"cache_hits\":{},\"ran\":{},\"reuse_pct\":{}}}}}",
+            json::string(experiment),
+            self.total(),
+            self.resumed,
+            self.cache_hits,
+            self.ran,
+            json::number(self.reuse_pct()),
+        )
+    }
 }
 
 /// The unified result document: every experiment — built-in or
@@ -494,6 +523,11 @@ pub struct Report {
     /// resumed or fully-cached report must stay byte-identical (and
     /// equal) to a fresh one. `main` prints them to stderr instead.
     pub stats: CampaignStats,
+    /// Harness self-profile for this invocation (phase timers +
+    /// per-worker scheduler counters). Wall-clock, so — like `stats` —
+    /// outside both `to_json` and `==`; `main` emits it as one
+    /// machine-readable stderr line.
+    pub profile: CampaignProfile,
 }
 
 /// Content equality only — see the `stats` field doc.
@@ -611,14 +645,16 @@ struct CampaignJob {
 }
 
 /// Content key of one campaign job: a hash over everything its records
-/// depend on — code version, evaluation mode, the *base* config TOML
-/// (workload suites are generated from the base config, so the same
-/// workload name can mean different traces under a different base),
-/// and per point its axis coordinates, workload name and fully-built
-/// config. Two invocations agree on a job's key iff the job would
-/// produce the same records, which is what makes journal resume and
-/// cache hits safe.
-fn job_key(eval: Eval, base_toml: &str, points: &[GridPoint]) -> String {
+/// depend on — code version, evaluation mode (plus the `--obs` switch:
+/// an attributed report has an extra block, so it must never satisfy a
+/// plain campaign or vice versa), the *base* config TOML (workload
+/// suites are generated from the base config, so the same workload
+/// name can mean different traces under a different base), and per
+/// point its axis coordinates, workload name and fully-built config.
+/// Two invocations agree on a job's key iff the job would produce the
+/// same records, which is what makes journal resume and cache hits
+/// safe.
+fn job_key(eval: Eval, obs: bool, base_toml: &str, points: &[GridPoint]) -> String {
     let mut text = String::new();
     text.push_str(&cache::code_version());
     text.push('\n');
@@ -626,6 +662,9 @@ fn job_key(eval: Eval, base_toml: &str, points: &[GridPoint]) -> String {
         Eval::Raw => "raw",
         Eval::WeightedSpeedup => "ws",
     });
+    if obs {
+        text.push_str("+obs");
+    }
     text.push('\n');
     text.push_str(base_toml);
     for p in points {
@@ -647,23 +686,25 @@ fn job_key(eval: Eval, base_toml: &str, points: &[GridPoint]) -> String {
 /// multiprogrammed methodology (SALP / TL-DRAM / RowClone): the alone
 /// runs are measured once on the chunk's first point (the baseline
 /// preset) and shared by every preset's shared run.
-fn eval_job(eval: Eval, points: &[GridPoint]) -> Result<Vec<Record>> {
+fn eval_job(eval: Eval, obs: bool, points: &[GridPoint]) -> Result<Vec<Record>> {
     match eval {
         Eval::Raw => Ok(points
             .iter()
             .map(|p| Record {
                 axes: p.axes.clone(),
                 ws: None,
-                report: run_workload(&p.cfg, &p.workload),
+                report: run_workload_obs(&p.cfg, &p.workload, obs),
             })
             .collect()),
         Eval::WeightedSpeedup => {
             let baseline = &points[0];
+            // Alone runs only feed the WS denominator; attribution on
+            // them would be thrown away, so only shared runs get it.
             let alone = alone_ipcs(&baseline.cfg, &baseline.workload);
             points
                 .iter()
                 .map(|p| {
-                    let shared = run_workload(&p.cfg, &p.workload);
+                    let shared = run_workload_obs(&p.cfg, &p.workload, obs);
                     let ws = shared.try_weighted_speedup(&alone).with_context(|| {
                         format!("grid point {:?}", p.axes)
                     })?;
@@ -682,8 +723,10 @@ fn eval_job(eval: Eval, points: &[GridPoint]) -> Result<Vec<Record>> {
 /// determinism: results are keyed by grid index, never by completion
 /// order).
 pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
+    let t_total = Instant::now();
     let requests = opts.requests.unwrap_or(spec.requests);
     let threads = campaign::resolve_threads(Some(opts.threads));
+    let t_expand = Instant::now();
     let points = expand(spec, opts)?;
     let chunk = match spec.eval {
         Eval::Raw => 1,
@@ -706,12 +749,57 @@ pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
     let jobs: Vec<CampaignJob> = points
         .chunks(chunk)
         .map(|c| CampaignJob {
-            key: job_key(spec.eval, &base_toml, c),
+            key: job_key(spec.eval, opts.obs, &base_toml, c),
             points: c.to_vec(),
         })
         .collect();
-    let (records, stats) = run_campaign(spec.eval, jobs, threads, opts)?;
-    Ok(Report { experiment: spec.name.clone(), requests, records, stats })
+    let expand_ms = ms_since(t_expand);
+    let (records, stats, mut profile) = run_campaign(spec.eval, jobs, threads, opts)?;
+    profile.expand_ms = expand_ms;
+    profile.total_ms = ms_since(t_total);
+    Ok(Report { experiment: spec.name.clone(), requests, records, stats, profile })
+}
+
+/// Trace one grid point of an experiment: run it alone with a
+/// [`SharedTraceRing`] probe attached (and attribution, if `--obs` is
+/// also on) and return the recorded events plus how many fell out of
+/// the ring. The campaign itself is untouched — tracing is an extra
+/// run, so `--trace-point` can never perturb the report.
+pub fn run_traced(
+    spec: &ExperimentSpec,
+    opts: &RunOptions,
+    point_idx: usize,
+    ring_cap: usize,
+) -> Result<(Vec<TraceEvent>, u64)> {
+    let points = expand(spec, opts)?;
+    let n = points.len();
+    let Some(p) = points.into_iter().nth(point_idx) else {
+        bail!(
+            "--trace-point {point_idx} is out of range: experiment '{}' expands to {n} points",
+            spec.name
+        );
+    };
+    let ring = SharedTraceRing::new(ring_cap.max(1));
+    let mut sim = Simulation::new(p.cfg, p.workload);
+    sim.set_probe(Box::new(ring.clone()));
+    if opts.obs {
+        sim.enable_obs();
+    }
+    sim.run();
+    Ok((ring.snapshot(), ring.dropped()))
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+/// Nanosecond accumulator for phases timed inside worker sinks.
+fn add_elapsed(acc: &AtomicU64, t: Instant) {
+    acc.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+}
+
+fn ns_to_ms(acc: &AtomicU64) -> f64 {
+    acc.load(Ordering::Relaxed) as f64 / 1e6
 }
 
 /// The campaign core: resume → cache → simulate, with completions
@@ -723,10 +811,16 @@ fn run_campaign(
     jobs: Vec<CampaignJob>,
     threads: usize,
     opts: &RunOptions,
-) -> Result<(Vec<Record>, CampaignStats)> {
+) -> Result<(Vec<Record>, CampaignStats, CampaignProfile)> {
     let n = jobs.len();
     let mut slots: Vec<Option<Vec<Record>>> = (0..n).map(|_| None).collect();
     let mut stats = CampaignStats::default();
+    // Phase accumulators. Serialize/journal/cache tick inside worker
+    // sinks (and the main-thread adopt/write-through paths), so they
+    // are atomics; their sum can exceed `sim_ms` at threads > 1.
+    let serialize_ns = AtomicU64::new(0);
+    let journal_ns = AtomicU64::new(0);
+    let cache_ns = AtomicU64::new(0);
 
     // 1. Adopt finished jobs from a prior journal. Only entries whose
     // key matches what *this* invocation computes for that index are
@@ -750,6 +844,7 @@ fn run_campaign(
     let resumed_idxs: Vec<usize> = (0..n).filter(|i| slots[*i].is_some()).collect();
 
     // 2. Consult the content-addressed cache for what's still open.
+    let t_consult = Instant::now();
     let cache = match &opts.cache_dir {
         Some(dir) => Some(cache::ResultCache::open(dir)?),
         None => None,
@@ -770,6 +865,7 @@ fn run_campaign(
                 stats.cache_hits += 1;
             }
         }
+        add_elapsed(&cache_ns, t_consult);
     }
 
     // 3. Simulate the rest on the work-stealing pool, streaming each
@@ -792,44 +888,62 @@ fn run_campaign(
     if let Some(cache) = &cache {
         for &i in &resumed_idxs {
             let records = slots[i].as_ref().expect("resumed slot");
+            let t = Instant::now();
             let json: Vec<String> = records.iter().map(Record::to_json).collect();
+            add_elapsed(&serialize_ns, t);
+            let t = Instant::now();
             cache.put(&keys[i], &json)?;
+            add_elapsed(&cache_ns, t);
         }
     }
     if let Some(w) = &writer {
         let mut w = w.lock().expect("journal writer");
         for &i in &hit_idxs {
             let records = slots[i].as_ref().expect("cache-hit slot");
+            let t = Instant::now();
             let json: Vec<String> = records.iter().map(Record::to_json).collect();
+            add_elapsed(&serialize_ns, t);
+            let t = Instant::now();
             w.append(i, &keys[i], &json)?;
+            add_elapsed(&journal_ns, t);
         }
     }
     let sink_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let obs = opts.obs;
     let pending: Vec<(usize, _)> = jobs
         .into_iter()
         .enumerate()
         .filter(|(i, _)| slots[*i].is_none())
-        .map(|(i, job)| (i, move || eval_job(eval, &job.points)))
+        .map(|(i, job)| (i, move || eval_job(eval, obs, &job.points)))
         .collect();
     stats.ran = pending.len();
     let sink = |idx: usize, result: &Result<Vec<Record>>| {
         let Ok(records) = result else { return };
+        let t = Instant::now();
         let json: Vec<String> = records.iter().map(Record::to_json).collect();
+        add_elapsed(&serialize_ns, t);
+        let t = Instant::now();
         let journaled = match &writer {
             Some(w) => {
                 w.lock().expect("journal writer").append(idx, &keys[idx], &json)
             }
             None => Ok(()),
         };
+        add_elapsed(&journal_ns, t);
+        let t = Instant::now();
         let cached = match &cache {
             Some(c) => c.put(&keys[idx], &json),
             None => Ok(()),
         };
+        add_elapsed(&cache_ns, t);
         if let Err(e) = journaled.and(cached) {
             sink_err.lock().expect("sink error slot").get_or_insert(e);
         }
     };
-    let results = campaign::run_jobs_sparse(pending, threads, sink);
+    let t_sim = Instant::now();
+    let (results, workers) =
+        campaign::run_jobs_sparse_profiled(pending, threads, sink);
+    let sim_ms = ms_since(t_sim);
     if let Some(e) = sink_err.into_inner().expect("sink error slot") {
         return Err(e.context("campaign checkpointing failed"));
     }
@@ -838,7 +952,17 @@ fn run_campaign(
     }
     let records =
         slots.into_iter().flat_map(|s| s.expect("every job resolved")).collect();
-    Ok((records, stats))
+    let profile = CampaignProfile {
+        threads,
+        expand_ms: 0.0, // filled by `run`
+        sim_ms,
+        serialize_ms: ns_to_ms(&serialize_ns),
+        journal_ms: ns_to_ms(&journal_ns),
+        cache_ms: ns_to_ms(&cache_ns),
+        total_ms: 0.0, // filled by `run`
+        workers,
+    };
+    Ok((records, stats, profile))
 }
 
 /// Parse one journal/cache entry's record array.
@@ -1290,22 +1414,24 @@ mod tests {
             .axis("policy", &["packed"]);
         let base = SimConfig::default().to_toml();
         let points = expand(&spec, &opts).unwrap();
-        let k0 = job_key(Eval::Raw, &base, &points[..1]);
+        let k0 = job_key(Eval::Raw, false, &base, &points[..1]);
         assert_eq!(k0.len(), 32, "32-hex content key");
         // Deterministic across invocations...
         let again = expand(&spec, &opts).unwrap();
-        assert_eq!(k0, job_key(Eval::Raw, &base, &again[..1]));
+        assert_eq!(k0, job_key(Eval::Raw, false, &base, &again[..1]));
         // ...and sensitive to every input: the point, the eval mode,
         // the base config, the code version's inputs.
-        assert_ne!(k0, job_key(Eval::Raw, &base, &points[1..2]));
-        assert_ne!(k0, job_key(Eval::WeightedSpeedup, &base, &points[..1]));
+        assert_ne!(k0, job_key(Eval::Raw, false, &base, &points[1..2]));
+        assert_ne!(k0, job_key(Eval::WeightedSpeedup, false, &base, &points[..1]));
+        // --obs reports carry an extra block, so the key must move.
+        assert_ne!(k0, job_key(Eval::Raw, true, &base, &points[..1]));
         let mut other_base = SimConfig::default();
         other_base.cpu.cores = 2;
-        assert_ne!(k0, job_key(Eval::Raw, &other_base.to_toml(), &points[..1]));
+        assert_ne!(k0, job_key(Eval::Raw, false, &other_base.to_toml(), &points[..1]));
         // A --requests override changes the per-point config, not just
         // the base, and must move the key.
         let more = expand(&spec, &opts.clone().requests(999)).unwrap();
-        assert_ne!(k0, job_key(Eval::Raw, &base, &more[..1]));
+        assert_ne!(k0, job_key(Eval::Raw, false, &base, &more[..1]));
     }
 
     #[test]
@@ -1458,6 +1584,72 @@ mod tests {
         }
         assert!(spec_for_alias("table1").is_err());
         assert!(spec_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn campaign_stats_json_line_is_stable() {
+        let s = CampaignStats { resumed: 0, cache_hits: 4, ran: 0 };
+        assert_eq!(
+            s.to_json_line("e10-salp"),
+            "{\"campaign\":{\"experiment\":\"e10-salp\",\"jobs\":4,\
+             \"resumed\":0,\"cache_hits\":4,\"ran\":0,\"reuse_pct\":100}}"
+        );
+        let mixed = CampaignStats { resumed: 1, cache_hits: 0, ran: 3 };
+        let v = crate::util::json::parse(&mixed.to_json_line("x")).unwrap();
+        let c = v.get("campaign").expect("campaign key");
+        assert_eq!(c.get("jobs").and_then(|x| x.as_u64()), Some(4));
+        assert_eq!(c.get("ran").and_then(|x| x.as_u64()), Some(3));
+        assert_eq!(c.get("reuse_pct").and_then(|x| x.as_f64()), Some(25.0));
+    }
+
+    #[test]
+    fn obs_runs_attach_attribution_and_leave_plain_reports_untouched() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let opts = RunOptions::default()
+            .requests(120)
+            .threads(2)
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["lisa-risc"])
+            .axis("mode", &["masa"])
+            .axis("policy", &["packed"]);
+        let plain = run(&spec, &opts).unwrap();
+        let attributed = run(&spec, &opts.clone().obs(true)).unwrap();
+        assert!(plain.records[0].report.obs.is_none());
+        let obs = attributed.records[0].report.obs.as_ref().expect("obs block");
+        assert!(obs.requests > 0, "demand reads were decomposed");
+        assert!(!obs.bank_util.is_empty());
+        // Attribution observes; it never changes simulated behavior —
+        // stripping the obs block recovers the plain report bytes.
+        let mut stripped = attributed.clone();
+        for r in &mut stripped.records {
+            r.report.obs = None;
+        }
+        assert_eq!(stripped.to_json(), plain.to_json());
+        // The profile came along: phase timers and a parseable line.
+        assert_eq!(attributed.profile.threads, 2);
+        assert!(attributed.profile.total_ms >= attributed.profile.sim_ms);
+        let v = crate::util::json::parse(&attributed.profile.to_json()).unwrap();
+        assert!(v.get("profile").is_some());
+    }
+
+    #[test]
+    fn traced_point_yields_ordered_events_and_respects_the_grid() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let opts = RunOptions::default()
+            .requests(120)
+            .threads(1)
+            .axis("workload", &["salp-copy-conflict4"])
+            .axis("mech", &["lisa-risc"])
+            .axis("mode", &["masa"])
+            .axis("policy", &["packed"]);
+        let (events, dropped) = run_traced(&spec, &opts, 0, 1 << 16).unwrap();
+        assert_eq!(dropped, 0);
+        assert!(!events.is_empty());
+        // Events are recorded in global cycle order.
+        assert!(events.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+        // An out-of-range point errors with grid context.
+        let err = run_traced(&spec, &opts, 99, 64).unwrap_err().to_string();
+        assert!(err.contains("99") && err.contains("1 points"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,25 @@ pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Resolve the effective level from CLI verbosity counts and the
+/// `LISA_LOG` environment value (pure, so it is unit-testable):
+/// `-q` wins over `-v`, both win over the environment, and an
+/// unrecognized environment string falls back to `Info`.
+pub fn resolve(verbose: u32, quiet: u32, env: Option<&str>) -> Level {
+    if quiet > 0 {
+        return Level::Error;
+    }
+    if verbose > 0 {
+        return Level::Debug;
+    }
+    match env.map(str::trim).map(str::to_ascii_lowercase).as_deref() {
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        _ => Level::Info,
+    }
+}
+
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)*) => {
@@ -71,5 +90,21 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn resolve_precedence_and_env_fallback() {
+        // Flags beat the environment; quiet beats verbose.
+        assert_eq!(resolve(1, 0, Some("error")), Level::Debug);
+        assert_eq!(resolve(0, 1, Some("debug")), Level::Error);
+        assert_eq!(resolve(2, 1, None), Level::Error);
+        // Environment fallback, case/whitespace-insensitive.
+        assert_eq!(resolve(0, 0, Some("warn")), Level::Warn);
+        assert_eq!(resolve(0, 0, Some(" DEBUG ")), Level::Debug);
+        assert_eq!(resolve(0, 0, Some("error")), Level::Error);
+        assert_eq!(resolve(0, 0, Some("info")), Level::Info);
+        // Unrecognized or absent -> Info.
+        assert_eq!(resolve(0, 0, Some("chatty")), Level::Info);
+        assert_eq!(resolve(0, 0, None), Level::Info);
     }
 }

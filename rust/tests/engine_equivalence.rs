@@ -7,6 +7,7 @@
 use lisa::config::{CopyMechanism, SalpMode, SimConfig};
 use lisa::dram::timing::SpeedBin;
 use lisa::metrics::RunReport;
+use lisa::obs::SharedTraceRing;
 use lisa::sim::engine::Simulation;
 use lisa::workloads::mixes;
 
@@ -200,6 +201,59 @@ fn equivalence_under_indexed_scheduler_stress_geometry() {
         let r = assert_equivalent(&cfg, wl);
         assert!(r.reads > 0, "{wl}: no reads exercised");
     }
+}
+
+#[test]
+fn observability_never_perturbs_the_simulation() {
+    // The whole observability tier is a pure *reader*: attaching a
+    // probe and enabling attribution must not change a single byte of
+    // the simulated outcome. Run the same point three ways — plain,
+    // probe-only, probe+attribution — and compare reports after
+    // stripping the optional "obs" block. Also check fast-forward vs
+    // the reference loop stay equivalent with observers attached.
+    let mut cfg = matrix_cfg(
+        CopyMechanism::LisaRisc,
+        SalpMode::Masa,
+        false,
+        SpeedBin::Ddr3_1600,
+        250,
+    );
+    cfg.lisa.lip = true;
+    let wl = mixes::workload_by_name("salp-copy-conflict4", &cfg).unwrap();
+
+    let plain = Simulation::new(cfg.clone(), wl.clone()).run();
+    assert!(plain.obs.is_none(), "plain runs must not carry an obs block");
+
+    let ring = SharedTraceRing::new(1 << 18);
+    let mut probed = Simulation::new(cfg.clone(), wl.clone());
+    probed.set_probe(Box::new(ring.clone()));
+    let probed_report = probed.run();
+    assert!(!ring.snapshot().is_empty(), "probe recorded nothing");
+    assert_eq!(
+        plain.to_json(),
+        probed_report.to_json(),
+        "attaching a probe changed the report bytes"
+    );
+
+    let mut full = Simulation::new(cfg.clone(), wl.clone());
+    full.set_probe(Box::new(SharedTraceRing::new(1 << 18)));
+    full.enable_obs();
+    let mut full_report = full.run();
+    let obs = full_report.obs.take().expect("obs block present with --obs");
+    assert!(obs.requests > 0, "attribution saw no requests");
+    assert_eq!(
+        plain.to_json(),
+        full_report.to_json(),
+        "attribution changed the report bytes"
+    );
+
+    // The reference loop with observers attached still matches the
+    // fast-forward engine (both with obs stripped).
+    let mut reference = Simulation::new(cfg.clone(), wl);
+    reference.enable_obs();
+    let mut reference_report = reference.reference_run();
+    reference_report.obs = None;
+    assert_eq!(plain, reference_report);
 }
 
 #[test]

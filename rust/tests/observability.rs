@@ -1,0 +1,266 @@
+//! Observability-tier tests: the attribution partition is *exact*
+//! (components sum to end-to-end latency, pinned by a property test
+//! over random request soups), trace streams are cycle-monotone per
+//! track, the MASA copy-conflict point shows copy hops across distinct
+//! subarray tracks, and both export formats emit well-formed JSON.
+
+use lisa::config::{CopyMechanism, SalpMode, SimConfig};
+use lisa::dram::timing::SpeedBin;
+use lisa::obs::{
+    to_chrome_trace, to_jsonl, Attribution, SharedTraceRing, TraceEvent, TraceKind,
+};
+use lisa::sim::engine::Simulation;
+use lisa::util::json::{self, Value};
+use lisa::util::proptest::check;
+use lisa::workloads::mixes;
+
+const BANKS: usize = 4;
+const SAS: usize = 4;
+
+#[test]
+fn prop_attribution_components_sum_exactly_to_latency() {
+    // Random soups of blocker windows (refresh, copy ownership, open
+    // rows) interleaved with demand RD/WRs at random offsets: every
+    // request's five components must sum *exactly* to `done - arrive`,
+    // and the aggregate sums must equal the per-request sums.
+    check("attribution exact partition", 100, |g| {
+        let mut a = Attribution::new(1, 1, BANKS, SAS);
+        let mut now = 0u64;
+        let mut expect: Vec<(u64, u64)> = Vec::new(); // (arrive, done)
+        let mut sums = [0u64; 5];
+        for id in 0..40i64 {
+            now += g.u64(25);
+            let bank = g.usize(BANKS) as i64;
+            let sa = g.usize(SAS) as i64;
+            match g.u64(8) {
+                0 => {
+                    // A refresh window on the rank.
+                    a.observe(&TraceEvent::new(TraceKind::RefPend, now, 0, 0));
+                    now += g.u64(30);
+                    let mut r = TraceEvent::new(TraceKind::Ref, now, 0, 0);
+                    r.done = now + 1 + g.u64(50);
+                    a.observe(&r);
+                    now = r.done;
+                }
+                1 => {
+                    // A copy owning a bank for a while.
+                    let mut own = TraceEvent::new(TraceKind::CopyOwn, now, 0, 0);
+                    own.bank = bank;
+                    a.observe(&own);
+                    now += 1 + g.u64(60);
+                    let mut rel = TraceEvent::new(TraceKind::CopyRelease, now, 0, 0);
+                    rel.bank = bank;
+                    a.observe(&rel);
+                }
+                2 => {
+                    // Open a row in some subarray.
+                    let mut act = TraceEvent::new(TraceKind::Act, now, 0, 0);
+                    act.bank = bank;
+                    act.sa = sa;
+                    act.row = g.u64(64) as i64;
+                    act.done = now + 1 + g.u64(15);
+                    a.observe(&act);
+                }
+                3 => {
+                    let mut pre = TraceEvent::new(
+                        *g.pick(&[TraceKind::Pre, TraceKind::PreSa, TraceKind::PreAll]),
+                        now,
+                        0,
+                        0,
+                    );
+                    pre.bank = bank;
+                    pre.sa = sa;
+                    pre.done = now + 1 + g.u64(10);
+                    a.observe(&pre);
+                }
+                _ => {
+                    // A demand access: arrive <= issue <= done.
+                    let wait = g.u64(80);
+                    let mut rd = TraceEvent::new(
+                        *g.pick(&[TraceKind::Rd, TraceKind::Wr]),
+                        now,
+                        0,
+                        0,
+                    );
+                    rd.bank = bank;
+                    rd.sa = sa;
+                    rd.row = g.u64(64) as i64;
+                    rd.id = id;
+                    rd.arrive = now.saturating_sub(wait);
+                    rd.done = now + 1 + g.u64(30);
+                    a.observe(&rd);
+                    expect.push((rd.arrive, rd.done));
+                }
+            }
+        }
+        assert_eq!(a.requests.len(), expect.len());
+        for (r, &(arrive, done)) in a.requests.iter().zip(&expect) {
+            assert_eq!(r.arrive, arrive);
+            assert_eq!(r.done, done);
+            assert_eq!(
+                r.components_sum(),
+                r.total(),
+                "partition not exact: {r:?}"
+            );
+            sums[0] += r.queueing;
+            sums[1] += r.bank_conflict;
+            sums[2] += r.refresh_blocked;
+            sums[3] += r.copy_blocked;
+            sums[4] += r.service;
+        }
+        let rep = a.finalize(now.max(1));
+        assert_eq!(
+            [
+                rep.sum_queueing,
+                rep.sum_bank_conflict,
+                rep.sum_refresh_blocked,
+                rep.sum_copy_blocked,
+                rep.sum_service,
+            ],
+            sums,
+            "aggregate sums drifted from the per-request decompositions"
+        );
+        assert!(rep.bank_util.iter().all(|u| u.is_finite() && *u <= 1.0));
+    });
+}
+
+/// One MASA copy-conflict run with the probe attached; shared by the
+/// stream- and export-shape tests below.
+fn conflict_trace() -> Vec<TraceEvent> {
+    let mut cfg = SimConfig::default();
+    cfg.requests_per_core = 200;
+    cfg.max_cycles = 30_000_000;
+    cfg.copy_mechanism = CopyMechanism::LisaRisc;
+    cfg.lisa.risc = true;
+    cfg.dram.salp = SalpMode::Masa;
+    cfg.dram.speed = SpeedBin::Ddr3_1600;
+    let wl = mixes::workload_by_name("salp-copy-conflict4", &cfg).unwrap();
+    let ring = SharedTraceRing::new(1 << 20);
+    let mut sim = Simulation::new(cfg.clone(), wl);
+    sim.set_probe(Box::new(ring.clone()));
+    sim.enable_obs();
+    let report = sim.run();
+    assert_eq!(ring.dropped(), 0, "ring overflowed on a small run");
+
+    // Replaying the probe stream through a fresh Attribution must
+    // reproduce the engine's own obs block bit-for-bit: the probe and
+    // the attribution engine see the same events, in the same order.
+    let events = ring.snapshot();
+    let d = &cfg.dram;
+    let mut replay = Attribution::new(d.channels, d.ranks, d.banks, d.subarrays_per_bank);
+    for ev in &events {
+        replay.observe(ev);
+    }
+    let obs = report.obs.expect("obs enabled");
+    assert!(obs.requests > 0, "no demand requests attributed");
+    assert_eq!(replay.finalize(report.dram_cycles), obs);
+    events
+}
+
+#[test]
+fn masa_conflict_stream_is_monotone_and_spans_subarray_tracks() {
+    let events = conflict_trace();
+    assert!(!events.is_empty());
+    // Cycle-monotone globally (and therefore per track — a track is a
+    // subset of the stream).
+    assert!(
+        events.windows(2).all(|w| w[0].cycle <= w[1].cycle),
+        "trace stream is not cycle-monotone"
+    );
+    // The interesting kinds of the copy-vs-open-row conflict point are
+    // all present: row activity, subarray-scoped precharge (MASA), and
+    // LISA-RISC copy hops.
+    for kind in [
+        TraceKind::Act,
+        TraceKind::PreSa,
+        TraceKind::Rbm,
+        TraceKind::Rd,
+        TraceKind::Enq,
+        TraceKind::CopyStart,
+        TraceKind::CopyDone,
+    ] {
+        assert!(
+            events.iter().any(|e| e.kind == kind),
+            "no {} event in the conflict trace",
+            kind.name()
+        );
+    }
+    // Copy hops are flagged as copy traffic and land on >= 2 distinct
+    // subarray tracks (an RBM moves a row between neighbouring
+    // subarrays, so source subarrays vary across hops).
+    let hop_tracks: std::collections::BTreeSet<(usize, usize, i64, i64)> = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Rbm)
+        .inspect(|e| assert!(e.copy, "RBM not flagged as copy traffic"))
+        .map(|e| (e.ch, e.rank, e.bank, e.sa))
+        .collect();
+    let sa_tracks: std::collections::BTreeSet<(usize, usize, i64, i64)> = events
+        .iter()
+        .filter(|e| e.sa >= 0)
+        .map(|e| (e.ch, e.rank, e.bank, e.sa))
+        .collect();
+    assert!(!hop_tracks.is_empty(), "no RBM hops traced");
+    assert!(
+        sa_tracks.len() >= 2,
+        "expected >= 2 distinct subarray tracks, got {sa_tracks:?}"
+    );
+}
+
+#[test]
+fn chrome_trace_export_is_well_formed_and_monotone_per_track() {
+    let events = conflict_trace();
+    let doc = json::parse(&to_chrome_trace(&events)).unwrap();
+    let slices = doc
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .expect("traceEvents array");
+    assert!(!slices.is_empty());
+    let mut last_ts: std::collections::BTreeMap<(u64, u64), f64> =
+        std::collections::BTreeMap::new();
+    let mut n_slices = 0usize;
+    for e in slices {
+        let ph = e.get("ph").and_then(Value::as_str).expect("ph");
+        match ph {
+            "M" => {
+                // Metadata: names a process or a thread (track).
+                let name = e.get("name").and_then(Value::as_str).unwrap();
+                assert!(
+                    name == "process_name" || name == "thread_name",
+                    "unexpected metadata record {name}"
+                );
+            }
+            "X" => {
+                n_slices += 1;
+                let pid = e.get("pid").and_then(Value::as_u64).expect("pid");
+                let tid = e.get("tid").and_then(Value::as_u64).expect("tid");
+                let ts = e.get("ts").and_then(Value::as_f64).expect("ts");
+                let dur = e.get("dur").and_then(Value::as_f64).expect("dur");
+                assert!(dur >= 0.0);
+                assert!(e.get("name").and_then(Value::as_str).is_some());
+                let prev = last_ts.insert((pid, tid), ts);
+                assert!(
+                    prev.map_or(true, |p| p <= ts),
+                    "timestamps regressed on track ({pid},{tid})"
+                );
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(n_slices, events.len(), "every event exports one slice");
+}
+
+#[test]
+fn jsonl_export_parses_line_by_line() {
+    let events = conflict_trace();
+    let body = to_jsonl(&events);
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for (line, ev) in lines.iter().zip(&events) {
+        let v = json::parse(line).unwrap();
+        assert_eq!(
+            v.get("kind").and_then(Value::as_str),
+            Some(ev.kind.name())
+        );
+        assert_eq!(v.get("cycle").and_then(Value::as_u64), Some(ev.cycle));
+    }
+}
