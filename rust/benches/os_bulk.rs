@@ -50,7 +50,7 @@ fn main() {
             let wall = t0.elapsed().as_secs_f64();
             let os = r.os.as_ref().expect("OS summary");
             assert!(os.pages_copied > 0, "{scenario}/{mech:?}: no pages copied");
-            let sim_secs = r.dram_cycles as f64 * sim.ctrl.dev.timing.tck_ns * 1e-9;
+            let sim_secs = r.dram_cycles as f64 * sim.memory().tck_ns() * 1e-9;
             t.row(&[
                 scenario.to_string(),
                 mech.name().to_string(),

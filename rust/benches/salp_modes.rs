@@ -37,7 +37,7 @@ fn main() {
             let wl = mixes::workload_by_name(wl_name, &cfg).unwrap();
             let mut sim = Simulation::new(cfg, wl);
             let r = sim.run();
-            let s = &sim.ctrl.dev.stats;
+            let s = sim.memory().command_stats();
             t.row(&[
                 wl_name.to_string(),
                 mode.name().to_string(),

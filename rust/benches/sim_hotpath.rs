@@ -19,10 +19,14 @@
 
 use std::time::Instant;
 
+use lisa::backend::analytical::AnalyticalModel;
+use lisa::backend::{Access, MemoryModel};
 use lisa::config::minitoml::Document;
-use lisa::config::{CopyMechanism, SalpMode, SimConfig};
+use lisa::config::{BackendKind, CopyMechanism, SalpMode, SimConfig};
+use lisa::controller::Controller;
+use lisa::dram::geometry::Address;
 use lisa::metrics::json;
-use lisa::sim::engine::Simulation;
+use lisa::sim::engine::{run_workload, Simulation};
 use lisa::sim::spec::{self, RunOptions};
 use lisa::util::bench::Table;
 use lisa::workloads::mixes;
@@ -106,6 +110,117 @@ fn bench_workload(
     }
 }
 
+/// The fleet-sweep economics of the two memory-model backends
+/// (DESIGN.md §MemoryModel backends), measured two ways:
+///
+/// * **Model-level** — both backends driven directly through the
+///   `MemoryModel` trait on a serialized same-bank row-conflict read
+///   stream (the controller's worst case, and the strongest test of
+///   the analytical busy-until chains). The cycle backend runs its
+///   cycle-exact semantics — one `tick` per DRAM cycle; the analytical
+///   backend event-skips between completions, exactly how campaigns
+///   consume it. The ratio is the gated `min_analytical_model_speedup`
+///   floor: machine-independent (same process, same stream).
+/// * **End-to-end** — one full grid point (`run_workload`, CPU model
+///   included) per backend. Informational only: both backends share
+///   the identical trace-driven CPU/cache model, so Amdahl bounds this
+///   ratio far below the model-level one.
+struct BackendDrive {
+    reads: u64,
+    cycle_req_per_sec: f64,
+    analytical_req_per_sec: f64,
+    cycle_pts_per_sec: f64,
+    analytical_pts_per_sec: f64,
+}
+
+impl BackendDrive {
+    fn model_speedup(&self) -> f64 {
+        self.analytical_req_per_sec / self.cycle_req_per_sec
+    }
+
+    fn e2e_speedup(&self) -> f64 {
+        self.analytical_pts_per_sec / self.cycle_pts_per_sec
+    }
+}
+
+/// Push `n` reads through a memory model via the trait interface and
+/// return the wall seconds to drain them. `skip` fast-forwards over
+/// the gaps below `next_event_cycle` (the analytical backend's natural
+/// mode); without it every DRAM cycle is ticked (the cycle backend's
+/// cycle-exact semantics). The stream alternates rows within one bank,
+/// so every access is a row conflict and the drain is fully
+/// serialized.
+fn drive_reads(mem: &mut dyn MemoryModel, n: u64, skip: bool) -> f64 {
+    const ROWS: usize = 4096;
+    let t0 = Instant::now();
+    let (mut issued, mut done, mut guard) = (0u64, 0u64, 0u64);
+    while done < n {
+        while issued < n && mem.can_accept(0, false) {
+            issued += 1;
+            let addr = Address {
+                channel: 0,
+                rank: 0,
+                bank: 0,
+                row: (issued as usize * 3) % ROWS,
+                col: issued as usize % 64,
+            };
+            mem.enqueue(Access::read(issued, 0, addr));
+        }
+        mem.tick().expect("backend tick");
+        done += mem.drain_completions().len() as u64;
+        if skip {
+            let next = mem.next_event_cycle();
+            if next != u64::MAX {
+                let gap = next.saturating_sub(mem.now()).saturating_sub(1);
+                if gap > 0 {
+                    mem.fast_forward(gap);
+                }
+            }
+        }
+        guard += 1;
+        assert!(guard < 1_000_000_000, "backend drive failed to drain");
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn bench_backends(requests: u64) -> BackendDrive {
+    let n = requests.max(500);
+    let cfg = SimConfig::default();
+    let mut ctrl = Controller::new(cfg.clone());
+    let cycle_secs = drive_reads(&mut ctrl, n, false);
+    // The analytical drive is orders of magnitude faster; average over
+    // repeats (fresh model each time) for a measurable interval.
+    const ITERS: u64 = 20;
+    let mut secs = 0.0;
+    for _ in 0..ITERS {
+        let mut model = AnalyticalModel::new(cfg.clone());
+        secs += drive_reads(&mut model, n, true);
+    }
+    let analytical_secs = secs / ITERS as f64;
+
+    // End-to-end grid points/sec: identical workload, CPU model and
+    // engine — only the backend differs.
+    let mut cycle_cfg = cfg;
+    cycle_cfg.requests_per_core = n;
+    let wl = mixes::workload_by_name("stream4", &cycle_cfg).unwrap();
+    let mut analytical_cfg = cycle_cfg.clone();
+    analytical_cfg.backend = BackendKind::Analytical;
+    let t0 = Instant::now();
+    run_workload(&cycle_cfg, &wl);
+    let cycle_pt_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    run_workload(&analytical_cfg, &wl);
+    let analytical_pt_secs = t0.elapsed().as_secs_f64();
+
+    BackendDrive {
+        reads: n,
+        cycle_req_per_sec: n as f64 / cycle_secs,
+        analytical_req_per_sec: n as f64 / analytical_secs,
+        cycle_pts_per_sec: 1.0 / cycle_pt_secs,
+        analytical_pts_per_sec: 1.0 / analytical_pt_secs,
+    }
+}
+
 /// Grid-expansion overhead of the declarative experiment API: how
 /// many times per second the FULL built-in registry (every spec's
 /// default grid — several hundred `SimConfig`s + workload clones) can
@@ -154,7 +269,12 @@ fn aggregates(measurements: &[Measurement]) -> (f64, f64) {
     (total_cycles as f64 / total_ff_secs, worst)
 }
 
-fn summary_json(requests: u64, measurements: &[Measurement], exp: &Expansion) -> String {
+fn summary_json(
+    requests: u64,
+    measurements: &[Measurement],
+    exp: &Expansion,
+    bd: &BackendDrive,
+) -> String {
     let (agg_rate, worst) = aggregates(measurements);
     let rows: Vec<String> = measurements
         .iter()
@@ -170,16 +290,30 @@ fn summary_json(requests: u64, measurements: &[Measurement], exp: &Expansion) ->
             )
         })
         .collect();
+    let backend = format!(
+        "{{\"reads\":{},\"cycle_req_per_sec\":{},\
+         \"analytical_req_per_sec\":{},\"model_speedup\":{},\
+         \"cycle_pts_per_sec\":{},\"analytical_pts_per_sec\":{},\
+         \"e2e_speedup\":{}}}",
+        bd.reads,
+        json::number(bd.cycle_req_per_sec),
+        json::number(bd.analytical_req_per_sec),
+        json::number(bd.model_speedup()),
+        json::number(bd.cycle_pts_per_sec),
+        json::number(bd.analytical_pts_per_sec),
+        json::number(bd.e2e_speedup()),
+    );
     format!(
-        "{{\"bench\":\"sim_hotpath\",\"schema\":3,\"requests\":{requests},\
+        "{{\"bench\":\"sim_hotpath\",\"schema\":4,\"requests\":{requests},\
          \"workloads\":[\n{}\n],\"aggregate_ff_cyc_per_sec\":{},\
          \"worst_ff_speedup\":{},\"grid_points\":{},\
-         \"grid_expansions_per_sec\":{}}}\n",
+         \"grid_expansions_per_sec\":{},\"backend\":{}}}\n",
         rows.join(",\n"),
         json::number(agg_rate),
         json::number(worst),
         exp.points_per_registry,
         json::number(exp.registries_per_sec),
+        backend,
     )
 }
 
@@ -188,6 +322,7 @@ fn check_gate(
     path: &str,
     measurements: &[Measurement],
     exp: &Expansion,
+    bd: &BackendDrive,
 ) -> Result<(), Vec<String>> {
     let text = std::fs::read_to_string(path)
         .unwrap_or_else(|e| panic!("perf baseline {path}: {e}"));
@@ -248,6 +383,22 @@ fn check_gate(
             "registry grid expansion {:.2}/s < baseline floor {min_expansions:.2}/s \
              ({} points) — spec expansion must stay off the simulated hot path",
             exp.registries_per_sec, exp.points_per_registry
+        ));
+    }
+    // The analytical backend's whole reason to exist is being orders of
+    // magnitude cheaper per request than the cycle-exact controller; the
+    // floor pins the ratio (same process, same address stream, so this
+    // one is machine-independent).
+    let min_model_speedup = doc
+        .get_f64("sim_hotpath", "min_analytical_model_speedup")
+        .expect("min_analytical_model_speedup type")
+        .expect("min_analytical_model_speedup present");
+    let model_speedup = bd.model_speedup();
+    if model_speedup < min_model_speedup {
+        violations.push(format!(
+            "analytical backend only {model_speedup:.0}x the cycle-exact model rate \
+             < floor {min_model_speedup:.0}x (min_analytical_model_speedup, {} reads)",
+            bd.reads
         ));
     }
     if violations.is_empty() {
@@ -330,13 +481,35 @@ fn main() {
         expansion.points_per_registry, expansion.registries_per_sec
     );
 
+    let backends = bench_backends(requests);
+    println!(
+        "\nmemory-model backends ({} serialized row-conflict reads):",
+        backends.reads
+    );
+    println!(
+        "  model-level: cycle {:.2} Kreq/s, analytical {:.0} Kreq/s => {:.0}x (gated)",
+        backends.cycle_req_per_sec / 1e3,
+        backends.analytical_req_per_sec / 1e3,
+        backends.model_speedup()
+    );
+    println!(
+        "  end-to-end grid point (stream4): cycle {:.2} pts/s, analytical {:.2} pts/s \
+         => {:.1}x (informational; shared CPU model bounds this)",
+        backends.cycle_pts_per_sec,
+        backends.analytical_pts_per_sec,
+        backends.e2e_speedup()
+    );
+
     if let Some(path) = json_out {
-        std::fs::write(&path, summary_json(requests, &measurements, &expansion))
-            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        std::fs::write(
+            &path,
+            summary_json(requests, &measurements, &expansion, &backends),
+        )
+        .unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("wrote {path}");
     }
     if let Some(path) = gate {
-        match check_gate(&path, &measurements, &expansion) {
+        match check_gate(&path, &measurements, &expansion, &backends) {
             Ok(()) => println!("perf gate: PASS ({path})"),
             Err(violations) => {
                 eprintln!("perf gate: FAIL ({path})");

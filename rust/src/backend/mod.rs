@@ -1,0 +1,160 @@
+//! The engine↔memory boundary: `MemoryModel` is the trait
+//! `sim/engine.rs` (and the CPU/OS layers) consume instead of the
+//! concrete cycle-exact `controller::Controller`. Two implementations
+//! exist:
+//!
+//! - [`crate::controller::Controller`] — the cycle-exact controller +
+//!   device model, the ground truth (`BackendKind::Cycle`, default).
+//! - [`analytical::AnalyticalModel`] — a calibrated event-count model
+//!   (`BackendKind::Analytical`) that is orders of magnitude faster
+//!   per grid point and cross-validated against the cycle backend
+//!   within a stated tolerance (`tests/backend_twin.rs`).
+//!
+//! The boundary is everything the simulation loop actually needs:
+//! typed request admission ([`Access`]), copy admission, the clock
+//! (`tick`/`fast_forward`/`next_event_cycle`), completion drain, and
+//! the report/observability hooks. Anything else on `Controller` is
+//! implementation detail the engine can no longer reach.
+
+pub mod analytical;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, SimConfig};
+use crate::controller::request::{Completion, CopyRequest};
+use crate::dram::bank::CommandStats;
+use crate::dram::geometry::Address;
+use crate::metrics::EnergyBreakdown;
+use crate::obs::{ObsReport, Probe};
+
+/// Kind of a demand access (the typed replacement for the old
+/// `is_write: bool` flags of `enqueue_mem` / `enqueue_mem_mapped`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+/// One demand access headed into the memory model: the single typed
+/// entry point that replaced the `enqueue_mem`/`enqueue_mem_mapped`
+/// duo. Addresses arrive pre-mapped (`MemoryModel::map`); VILLA
+/// redirection still happens inside the model.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    pub id: u64,
+    pub core: usize,
+    pub addr: Address,
+    pub kind: AccessKind,
+}
+
+impl Access {
+    pub fn read(id: u64, core: usize, addr: Address) -> Self {
+        Self { id, core, addr, kind: AccessKind::Read }
+    }
+
+    pub fn write(id: u64, core: usize, addr: Address) -> Self {
+        Self { id, core, addr, kind: AccessKind::Write }
+    }
+
+    #[inline]
+    pub fn is_write(&self) -> bool {
+        self.kind == AccessKind::Write
+    }
+}
+
+/// Everything a run report needs from the memory side, in one hook:
+/// `Simulation::report` used to reach into `ctrl.stats` / `ctrl.dev` /
+/// `ctrl.villa` directly, which would have pinned the engine to one
+/// backend forever.
+#[derive(Debug, Clone)]
+pub struct ReportParts {
+    pub reads: u64,
+    pub writes: u64,
+    pub copies: u64,
+    pub avg_read_latency_cycles: f64,
+    pub row_hit_rate: f64,
+    pub villa_hit_rate: f64,
+    pub lip_coverage: f64,
+    pub energy: EnergyBreakdown,
+    pub obs: Option<ObsReport>,
+}
+
+/// The memory side of the simulation, as the engine sees it. One DRAM
+/// cycle per `tick`; `fast_forward(n)` must be exactly equivalent to
+/// `n` ticks during which the model provably does nothing (the engine
+/// only calls it for gaps below `next_event_cycle`).
+pub trait MemoryModel {
+    /// The configuration the model was built from.
+    fn cfg(&self) -> &SimConfig;
+
+    /// Current DRAM cycle.
+    fn now(&self) -> u64;
+
+    /// DRAM clock period in nanoseconds.
+    fn tck_ns(&self) -> f64;
+
+    /// Map a physical byte address to device coordinates.
+    fn map(&self, byte_addr: u64) -> Address;
+
+    /// Room for another read/write on channel `ch`?
+    fn can_accept(&self, ch: usize, is_write: bool) -> bool;
+
+    /// Admit one demand access; false when the target queue is full
+    /// (the caller re-sends later).
+    fn enqueue(&mut self, access: Access) -> bool;
+
+    /// Admit a bulk copy (trace-level `TraceOp::Copy`).
+    fn enqueue_copy(&mut self, req: CopyRequest);
+
+    /// Admit a page-granularity copy from the OS layer (flow-controlled
+    /// separately from demand traffic).
+    fn enqueue_page_copy(&mut self, req: CopyRequest);
+
+    /// Advance one DRAM cycle.
+    fn tick(&mut self) -> Result<()>;
+
+    /// Jump `cycles` ahead in one step (only sound below the horizon).
+    fn fast_forward(&mut self, cycles: u64);
+
+    /// Earliest future cycle at which the model could deliver an event
+    /// or issue work; `u64::MAX` when fully idle.
+    fn next_event_cycle(&self) -> u64;
+
+    /// Take completed requests (reads and copies).
+    fn drain_completions(&mut self) -> Vec<Completion>;
+
+    /// Nothing queued or in flight?
+    fn idle(&self) -> bool;
+
+    /// Aggregate DRAM command counts (energy accounting, benches).
+    fn command_stats(&self) -> &CommandStats;
+
+    /// Everything the run report needs from the memory side.
+    fn report_parts(&self, cycles: u64) -> ReportParts;
+
+    /// Turn on latency attribution (`--obs`). Models without a
+    /// command-level pipeline may ignore this; their reports simply
+    /// carry no `"obs"` block.
+    fn enable_attribution(&mut self) {}
+
+    /// Attach an external trace sink. Same opt-out as attribution.
+    fn set_probe(&mut self, _probe: Box<dyn Probe>) {}
+
+    /// The aggregated attribution block, when attribution ran.
+    fn obs_report(&self, _cycles: u64) -> Option<ObsReport> {
+        None
+    }
+}
+
+/// The one construction path from configuration to memory model: every
+/// simulation (including the `run_workload*` free functions and the
+/// whole experiment/campaign stack above them) selects its backend
+/// here, from `cfg.backend`.
+pub fn build(cfg: &SimConfig) -> Box<dyn MemoryModel> {
+    match cfg.backend {
+        BackendKind::Cycle => Box::new(crate::controller::Controller::new(cfg.clone())),
+        BackendKind::Analytical => {
+            Box::new(analytical::AnalyticalModel::new(cfg.clone()))
+        }
+    }
+}

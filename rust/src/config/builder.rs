@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use super::{CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
+use super::{BackendKind, CopyMechanism, PlacementPolicy, SalpMode, SimConfig};
 use crate::dram::timing::SpeedBin;
 
 /// The named LISA feature combinations of the paper's system-level
@@ -126,6 +126,12 @@ impl SimConfigBuilder {
         if m == CopyMechanism::LisaRisc {
             self.cfg.lisa.risc = true;
         }
+        self
+    }
+
+    /// Select the memory-model backend (cycle-exact vs analytical).
+    pub fn backend(mut self, b: BackendKind) -> Self {
+        self.cfg.backend = b;
         self
     }
 
@@ -323,6 +329,7 @@ mod tests {
                 .mechanism(*g.pick(&mechs))
                 .salp(*g.pick(&SalpMode::ALL))
                 .placement(*g.pick(&PlacementPolicy::ALL))
+                .backend(*g.pick(&BackendKind::ALL))
                 .speed(*g.pick(&[SpeedBin::Ddr3_1600, SpeedBin::Ddr4_2400]));
             if g.bool() {
                 b = b.cores(1 << g.usize(4));

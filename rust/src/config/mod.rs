@@ -189,6 +189,40 @@ impl PlacementPolicy {
     }
 }
 
+/// Which memory-model backend executes a configuration's grid point.
+/// The engine↔memory boundary is the `MemoryModel` trait
+/// (`backend/mod.rs`); this enum selects the implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// Cycle-exact controller + device model (`controller::Controller`).
+    /// The ground truth every other backend is calibrated against.
+    #[default]
+    Cycle,
+    /// Calibrated analytical event-count model (`backend/analytical.rs`):
+    /// orders of magnitude faster per point, validated against the
+    /// cycle backend within a stated tolerance (tests/backend_twin.rs).
+    Analytical,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 2] = [BackendKind::Cycle, BackendKind::Analytical];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cycle" => Self::Cycle,
+            "analytical" => Self::Analytical,
+            _ => bail!("unknown backend '{s}' (cycle|analytical)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Cycle => "cycle",
+            Self::Analytical => "analytical",
+        }
+    }
+}
+
 /// OS-layer (virtual memory + bulk-operation subsystem) configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OsConfig {
@@ -389,6 +423,8 @@ pub struct SimConfig {
     pub cpu: CpuConfig,
     pub os: OsConfig,
     pub calibration: Calibration,
+    /// Memory-model backend executing this configuration.
+    pub backend: BackendKind,
     pub copy_mechanism: CopyMechanism,
     /// Memory requests simulated per core before the run ends.
     pub requests_per_core: u64,
@@ -407,6 +443,7 @@ impl Default for SimConfig {
             cpu: CpuConfig::default(),
             os: OsConfig::default(),
             calibration: Calibration::default(),
+            backend: BackendKind::Cycle,
             copy_mechanism: CopyMechanism::MemcpyChannel,
             requests_per_core: 50_000,
             warmup_frac: 0.1,
@@ -504,6 +541,10 @@ impl SimConfig {
         set!(self.calibration.e_rbm_fj, get_f64, "calibration", "e_rbm_fj");
         set!(self.calibration.from_artifacts, get_bool, "calibration", "from_artifacts");
 
+        if let Some(s) = doc.get_str("backend", "kind")? {
+            self.backend = BackendKind::parse(&s)?;
+        }
+
         if let Some(s) = doc.get_str("sim", "copy_mechanism")? {
             self.copy_mechanism = CopyMechanism::parse(&s)?;
         }
@@ -593,6 +634,8 @@ impl SimConfig {
              llc_kb = {}\n\
              \n[os]\n\
              placement = \"{}\"\n\
+             \n[backend]\n\
+             kind = \"{}\"\n\
              \n{}\
              \n[sim]\n\
              copy_mechanism = \"{}\"\n\
@@ -625,6 +668,7 @@ impl SimConfig {
             self.cpu.l2_kb,
             self.cpu.llc_kb,
             self.os.placement.name(),
+            self.backend.name(),
             Self::calibration_toml(&self.calibration),
             self.copy_mechanism.name(),
             self.requests_per_core,
@@ -710,12 +754,14 @@ mod tests {
         assert_eq!(a.content_hash().len(), 32);
         // ... and every cache-relevant knob moves it, including the
         // ones that silently shared config *names* before PR 4.
-        let edits: [fn(&mut SimConfig); 5] = [
+        let edits: [fn(&mut SimConfig); 6] = [
             |c| c.seed = 2,
             |c| c.requests_per_core += 1,
             |c| c.dram.salp = SalpMode::Masa,
             |c| c.os.placement = PlacementPolicy::SubarrayPacked,
             |c| c.calibration.t_rbm_ns += 0.5,
+            // Journal/cache keys must never mix backends.
+            |c| c.backend = BackendKind::Analytical,
         ];
         for (i, edit) in edits.iter().enumerate() {
             let mut cfg = SimConfig::default();
@@ -802,6 +848,19 @@ mod tests {
         assert!(SalpMode::Salp1.per_subarray());
         assert!(!SalpMode::Salp1.has_sa_select());
         assert!(SalpMode::Masa.has_sa_select());
+    }
+
+    #[test]
+    fn backend_kind_parse_round_trip() {
+        for b in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(b.name()).unwrap(), b);
+        }
+        let err = BackendKind::parse("quantum").unwrap_err().to_string();
+        assert!(err.contains("cycle|analytical"), "error lists choices: {err}");
+        let cfg = SimConfig::from_toml("[backend]\nkind = \"analytical\"\n").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Analytical);
+        // The default is (and must stay) the cycle-exact controller.
+        assert_eq!(SimConfig::default().backend, BackendKind::Cycle);
     }
 
     #[test]

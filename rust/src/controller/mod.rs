@@ -12,12 +12,15 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
+use crate::backend::{Access, AccessKind, MemoryModel, ReportParts};
 use crate::config::{CopyMechanism, SimConfig};
 use crate::copy::CopyOp;
-use crate::dram::bank::{Bank, DramDevice};
+use crate::dram::bank::{Bank, CommandStats, DramDevice};
 use crate::dram::command::Command;
 use crate::dram::geometry::Address;
 use crate::dram::timing::Timing;
+use crate::energy::EnergyModel;
+use crate::lisa::lip::lip_coverage;
 use crate::lisa::villa::VillaManager;
 use crate::obs::{Attribution, Obs, ObsReport, Probe, TraceEvent, TraceKind};
 use crate::util::stats::Histogram;
@@ -263,19 +266,33 @@ impl Controller {
 
     /// Enqueue a cache-line request by physical byte address. Returns
     /// false (rejecting the request) when the target queue is full.
+    #[deprecated(note = "use the typed `enqueue(Access)` entry point (map() the address)")]
     pub fn enqueue_mem(&mut self, id: u64, core: usize, byte_addr: u64, is_write: bool) -> bool {
         let addr = self.mapper.map(byte_addr);
-        self.enqueue_mem_mapped(id, core, addr, is_write)
+        let kind = if is_write { AccessKind::Write } else { AccessKind::Read };
+        self.enqueue(Access { id, core, addr, kind })
     }
 
     /// Enqueue a pre-mapped request (VILLA translation still applies).
+    #[deprecated(note = "use the typed `enqueue(Access)` entry point")]
     pub fn enqueue_mem_mapped(
         &mut self,
         id: u64,
         core: usize,
-        mut addr: Address,
+        addr: Address,
         is_write: bool,
     ) -> bool {
+        let kind = if is_write { AccessKind::Write } else { AccessKind::Read };
+        self.enqueue(Access { id, core, addr, kind })
+    }
+
+    /// Admit one demand access (the `MemoryModel` entry point that
+    /// collapsed the `enqueue_mem` / `enqueue_mem_mapped` duo). VILLA
+    /// translation applies to the pre-mapped address. Returns false
+    /// (rejecting the request) when the target queue is full.
+    pub fn enqueue(&mut self, access: Access) -> bool {
+        let Access { id, core, mut addr, .. } = access;
+        let is_write = access.is_write();
         if !self.can_accept(addr.channel, is_write) {
             return false;
         }
@@ -1272,6 +1289,106 @@ impl Controller {
             + c.active_copy.is_some() as usize
             + c.active_memcpy.is_some() as usize
     }
+
+    /// Everything `Simulation::report` needs from the memory side (the
+    /// `MemoryModel` report hook; the engine no longer reaches into
+    /// `stats` / `dev` / `villa` directly).
+    pub fn report_parts(&self, cycles: u64) -> ReportParts {
+        let energy_model = EnergyModel::from_calibration(&self.cfg.calibration);
+        let tck = self.dev.timing.tck_ns;
+        ReportParts {
+            reads: self.stats.reads_done,
+            writes: self.stats.writes_done,
+            copies: self.stats.copies_done,
+            avg_read_latency_cycles: self.stats.avg_read_latency(),
+            row_hit_rate: self.stats.row_hit_rate(),
+            villa_hit_rate: self
+                .villa
+                .as_ref()
+                .map(|v| v.stats.hit_rate())
+                .unwrap_or(0.0),
+            lip_coverage: lip_coverage(&self.dev.stats),
+            energy: energy_model.breakdown_uj(&self.dev.stats, cycles, tck),
+            obs: self.obs_report(cycles),
+        }
+    }
+}
+
+/// The cycle-exact controller is the ground-truth `MemoryModel`
+/// implementation. Pure delegation to the inherent methods — behavior
+/// through the trait is bit-identical to direct calls.
+impl MemoryModel for Controller {
+    fn cfg(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    fn now(&self) -> u64 {
+        self.now
+    }
+
+    fn tck_ns(&self) -> f64 {
+        self.dev.timing.tck_ns
+    }
+
+    fn map(&self, byte_addr: u64) -> Address {
+        self.mapper.map(byte_addr)
+    }
+
+    fn can_accept(&self, ch: usize, is_write: bool) -> bool {
+        Controller::can_accept(self, ch, is_write)
+    }
+
+    fn enqueue(&mut self, access: Access) -> bool {
+        Controller::enqueue(self, access)
+    }
+
+    fn enqueue_copy(&mut self, req: CopyRequest) {
+        Controller::enqueue_copy(self, req)
+    }
+
+    fn enqueue_page_copy(&mut self, req: CopyRequest) {
+        Controller::enqueue_page_copy(self, req)
+    }
+
+    fn tick(&mut self) -> Result<()> {
+        Controller::tick(self)
+    }
+
+    fn fast_forward(&mut self, cycles: u64) {
+        Controller::fast_forward(self, cycles)
+    }
+
+    fn next_event_cycle(&self) -> u64 {
+        Controller::next_event_cycle(self)
+    }
+
+    fn drain_completions(&mut self) -> Vec<Completion> {
+        Controller::drain_completions(self)
+    }
+
+    fn idle(&self) -> bool {
+        Controller::idle(self)
+    }
+
+    fn command_stats(&self) -> &CommandStats {
+        &self.dev.stats
+    }
+
+    fn report_parts(&self, cycles: u64) -> ReportParts {
+        Controller::report_parts(self, cycles)
+    }
+
+    fn enable_attribution(&mut self) {
+        Controller::enable_attribution(self)
+    }
+
+    fn set_probe(&mut self, probe: Box<dyn Probe>) {
+        Controller::set_probe(self, probe)
+    }
+
+    fn obs_report(&self, cycles: u64) -> Option<ObsReport> {
+        Controller::obs_report(self, cycles)
+    }
 }
 
 /// The COPY_ENQ event for a copy request entering a channel queue.
@@ -1309,10 +1426,36 @@ mod tests {
         out
     }
 
+    /// Map a byte address and enqueue through the typed entry point.
+    fn enq(c: &mut Controller, id: u64, byte_addr: u64, is_write: bool) -> bool {
+        let a = c.mapper.map(byte_addr);
+        let access =
+            if is_write { Access::write(id, 0, a) } else { Access::read(id, 0, a) };
+        c.enqueue(access)
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_enqueue() {
+        // The old duo must stay exact aliases of map() + enqueue().
+        let mut a = ctrl(|_| {});
+        let mut b = ctrl(|_| {});
+        assert!(a.enqueue_mem(1, 0, 0x10040, false));
+        let mapped = b.mapper.map(0x10040);
+        assert!(b.enqueue_mem_mapped(1, 0, mapped, false));
+        assert!(enq(&mut a, 2, 0x200c0, true));
+        assert!(b.enqueue_mem(2, 0, 0x200c0, true));
+        let da = run_until_idle(&mut a, 100_000);
+        let db = run_until_idle(&mut b, 100_000);
+        assert_eq!(da, db);
+        assert_eq!(a.stats.reads_done, b.stats.reads_done);
+        assert_eq!(a.stats.writes_done, b.stats.writes_done);
+    }
+
     #[test]
     fn single_read_completes_with_act_latency() {
         let mut c = ctrl(|_| {});
-        assert!(c.enqueue_mem(1, 0, 0x10000, false));
+        assert!(enq(&mut c, 1, 0x10000, false));
         let done = run_until_idle(&mut c, 10_000);
         assert_eq!(done.len(), 1);
         let t = &c.dev.timing;
@@ -1329,9 +1472,9 @@ mod tests {
         // Two requests to the same row + one to a different row of the
         // same bank, arriving together: the same-row pair must both be
         // served before the conflicting one forces a PRE.
-        assert!(c.enqueue_mem(1, 0, 0x0, false)); // row R col 0
-        assert!(c.enqueue_mem(2, 0, 0x40000, false)); // same bank, diff row
-        assert!(c.enqueue_mem(3, 0, 0x40, false)); // row R col 1
+        assert!(enq(&mut c, 1, 0x0, false)); // row R col 0
+        assert!(enq(&mut c, 2, 0x40000, false)); // same bank, diff row
+        assert!(enq(&mut c, 3, 0x40, false)); // row R col 1
         let done = run_until_idle(&mut c, 100_000);
         assert_eq!(done.len(), 3);
         let pos =
@@ -1344,7 +1487,7 @@ mod tests {
     fn writes_drain_and_complete() {
         let mut c = ctrl(|_| {});
         for i in 0..30 {
-            assert!(c.enqueue_mem(i, 0, i * 64, true));
+            assert!(enq(&mut c, i, i * 64, true));
         }
         run_until_idle(&mut c, 100_000);
         assert_eq!(c.stats.writes_done, 30);
@@ -1429,12 +1572,11 @@ mod tests {
             arrive: 0,
         });
         // Read to bank 1 (address 0x2000 has bank bits -> bank 1).
-        assert!(c.enqueue_mem_mapped(
+        assert!(c.enqueue(Access::read(
             2,
             0,
             Address { channel: 0, rank: 0, bank: 1, row: 40, col: 0 },
-            false
-        ));
+        )));
         let done = run_until_idle(&mut c, 100_000);
         let read_done = done.iter().find(|c| c.id == 2).unwrap().at;
         let copy_done = done.iter().find(|c| c.id == 1).unwrap().at;
@@ -1497,7 +1639,7 @@ mod tests {
         assert!(h0 > c.now, "idle controller horizon must be ahead");
         // An enqueue must drop the cached horizon on the spot: a fresh
         // request to a precharged bank is schedulable immediately.
-        assert!(c.enqueue_mem(1, 0, 0x10000, false));
+        assert!(enq(&mut c, 1, 0x10000, false));
         let h1 = c.next_event_cycle();
         assert_eq!(h1, c.next_event_cycle_uncached(), "stale cache after enqueue");
         assert_eq!(h1, c.now, "a fresh request is schedulable now");
@@ -1607,7 +1749,7 @@ mod tests {
             });
             for i in 0..(1 + g.usize(16)) {
                 let addr = g.u64(32 << 20) & !63;
-                let _ = c.enqueue_mem(i as u64 + 1, 0, addr, g.chance(0.3));
+                let _ = enq(&mut c, i as u64 + 1, addr, g.chance(0.3));
             }
             if g.chance(0.7) {
                 let src = g.usize(4000);
@@ -1719,7 +1861,7 @@ mod tests {
                 // competes with open-row traffic.
                 if c.now % 131 == 0 {
                     let addr = g.u64(32 << 20) & !63;
-                    let _ = c.enqueue_mem(next_id, 0, addr, g.chance(0.3));
+                    let _ = enq(&mut c, next_id, addr, g.chance(0.3));
                     next_id += 1;
                 }
                 if c.now % 977 == 0 && g.chance(0.5) {
@@ -1775,12 +1917,11 @@ mod tests {
             for round in 0..16usize {
                 for row in [10usize, 700usize] {
                     id += 1;
-                    assert!(c.enqueue_mem_mapped(
+                    assert!(c.enqueue(Access::read(
                         id,
                         0,
                         Address { channel: 0, rank: 0, bank: 0, row, col: round },
-                        false,
-                    ));
+                    )));
                     for _ in 0..10_000u64 {
                         c.tick().unwrap();
                         done += c.drain_completions().len();
@@ -1812,7 +1953,7 @@ mod tests {
         let mut id = 0;
         for round in 0..60 {
             id += 1;
-            c.enqueue_mem_mapped(id, 0, addr, false);
+            c.enqueue(Access::read(id, 0, addr));
             for _ in 0..100 {
                 c.tick().unwrap();
             }

@@ -12,9 +12,9 @@
 
 use std::collections::VecDeque;
 
+use crate::backend::{Access, MemoryModel};
 use crate::config::CpuConfig;
 use crate::controller::request::CopyRequest;
-use crate::controller::Controller;
 use crate::cpu::cache::Hierarchy;
 use crate::cpu::trace::{Trace, TraceCursor, TraceOp};
 use crate::os::{OsLayer, OsOutcome};
@@ -176,7 +176,7 @@ impl Core {
     pub fn cycle(
         &mut self,
         hier: &mut Hierarchy,
-        ctrl: &mut Controller,
+        mem: &mut dyn MemoryModel,
         mut os: Option<&mut OsLayer>,
     ) {
         if self.finished() {
@@ -188,7 +188,8 @@ impl Core {
         // Drain lazy writebacks (not program-ordered).
         while let Some(&wb) = self.wb_queue.front() {
             let id = self.alloc_id();
-            if ctrl.enqueue_mem(id, self.id, wb, true) {
+            let addr = mem.map(wb);
+            if mem.enqueue(Access::write(id, self.id, addr)) {
                 self.wb_queue.pop_front();
             } else {
                 self.next_id -= 1;
@@ -222,7 +223,7 @@ impl Core {
             // Re-send a previously rejected demand access first (the
             // cache lookup for it is already done).
             if let Some(d) = self.pending_demand {
-                if !self.send_demand(d, ctrl, now) {
+                if !self.send_demand(d, mem, now) {
                     break;
                 }
                 self.pending_demand = None;
@@ -237,7 +238,7 @@ impl Core {
             }
             // Current op's action is due.
             if let Some(op) = self.cur_op.take() {
-                if !self.do_action(op, hier, ctrl, os.as_deref_mut(), now) {
+                if !self.do_action(op, hier, mem, os.as_deref_mut(), now) {
                     break; // demand parked in pending_demand
                 }
                 issued += 1;
@@ -267,7 +268,7 @@ impl Core {
     /// (`At`: the front ROB slot's ready time) or an external
     /// completion (`Blocked`). While inert, `cycle()` is a pure
     /// `cpu_cycles += 1`, which `advance_idle` replays in bulk.
-    pub fn next_wake(&self, ctrl: &Controller) -> CoreWake {
+    pub fn next_wake(&self, mem: &dyn MemoryModel) -> CoreWake {
         if self.finished() {
             return CoreWake::Blocked; // never runs again (drive loop exits)
         }
@@ -278,7 +279,7 @@ impl Core {
         // change until the controller's write queue drains — a
         // controller-side event.
         if let Some(&wb) = self.wb_queue.front() {
-            if ctrl.can_accept(ctrl.mapper.map(wb).channel, true) {
+            if mem.can_accept(mem.map(wb).channel, true) {
                 return CoreWake::Active;
             }
         }
@@ -299,11 +300,11 @@ impl Core {
             return wake_or_blocked(wake);
         }
         if let Some(d) = self.pending_demand {
-            let ch = ctrl.mapper.map(d.addr).channel;
+            let ch = mem.map(d.addr).channel;
             let sendable = if d.is_write {
-                ctrl.can_accept(ch, true)
+                mem.can_accept(ch, true)
             } else {
-                self.outstanding < self.mshrs && ctrl.can_accept(ch, false)
+                self.outstanding < self.mshrs && mem.can_accept(ch, false)
             };
             return if sendable {
                 CoreWake::Active
@@ -329,11 +330,12 @@ impl Core {
 
     /// Try to send a demand access to the controller; false if it must
     /// be re-sent later (the caller parks it in `pending_demand`).
-    fn send_demand(&mut self, d: Demand, ctrl: &mut Controller, now: u64) -> bool {
+    fn send_demand(&mut self, d: Demand, mem: &mut dyn MemoryModel, now: u64) -> bool {
         if d.is_write {
             // Stores are posted: retire once the write is accepted.
             let id = self.alloc_id();
-            if !ctrl.enqueue_mem(id, self.id, d.addr, true) {
+            let addr = mem.map(d.addr);
+            if !mem.enqueue(Access::write(id, self.id, addr)) {
                 self.next_id -= 1;
                 return false;
             }
@@ -344,7 +346,8 @@ impl Core {
             return false;
         }
         let id = self.alloc_id();
-        if !ctrl.enqueue_mem(id, self.id, d.addr, false) {
+        let addr = mem.map(d.addr);
+        if !mem.enqueue(Access::read(id, self.id, addr)) {
             self.next_id -= 1;
             return false;
         }
@@ -364,7 +367,7 @@ impl Core {
         is_write: bool,
         dependent: bool,
         hier: &mut Hierarchy,
-        ctrl: &mut Controller,
+        mem: &mut dyn MemoryModel,
         now: u64,
     ) -> bool {
         // The cache lookup happens exactly once per op.
@@ -378,7 +381,7 @@ impl Core {
             return true;
         }
         let d = Demand { addr, is_write, dependent, latency: acc.latency };
-        if self.send_demand(d, ctrl, now) {
+        if self.send_demand(d, mem, now) {
             true
         } else {
             self.pending_demand = Some(d);
@@ -392,17 +395,17 @@ impl Core {
         &mut self,
         op: TraceOp,
         hier: &mut Hierarchy,
-        ctrl: &mut Controller,
+        mem: &mut dyn MemoryModel,
         os: Option<&mut OsLayer>,
         now: u64,
     ) -> bool {
         match op {
             TraceOp::Mem { addr, is_write, dependent, .. } => {
-                self.mem_action(addr, is_write, dependent, hier, ctrl, now)
+                self.mem_action(addr, is_write, dependent, hier, mem, now)
             }
             TraceOp::Bulk { op, .. } => {
                 let outcome = match os {
-                    Some(os) => os.execute(self.id, op, ctrl),
+                    Some(os) => os.execute(self.id, op, mem),
                     // No OS layer wired up: the primitive is a no-op
                     // (non-OS harnesses replaying an OS trace).
                     None => OsOutcome::Done,
@@ -420,7 +423,7 @@ impl Core {
                         true
                     }
                     OsOutcome::Access { addr, is_write } => {
-                        self.mem_action(addr, is_write, false, hier, ctrl, now)
+                        self.mem_action(addr, is_write, false, hier, mem, now)
                     }
                     OsOutcome::FaultThenAccess { copies, addr, is_write } => {
                         // The faulting instruction stalls on the page
@@ -441,23 +444,23 @@ impl Core {
             TraceOp::Copy { src, dst, rows, .. } => {
                 let id = self.alloc_id();
                 let src_a = {
-                    let mut a = ctrl.mapper.map(src);
+                    let mut a = mem.map(src);
                     a.col = 0;
                     a
                 };
                 let dst_a = {
-                    let mut a = ctrl.mapper.map(dst);
+                    let mut a = mem.map(dst);
                     a.col = 0;
                     a
                 };
-                ctrl.enqueue_copy(CopyRequest {
+                mem.enqueue_copy(CopyRequest {
                     id,
                     core: self.id,
                     src: src_a,
                     dst: dst_a,
                     rows: rows as usize,
-                    mechanism: ctrl.cfg.copy_mechanism,
-                    arrive: ctrl.now,
+                    mechanism: mem.cfg().copy_mechanism,
+                    arrive: mem.now(),
                 });
                 self.window.push_back(Slot::ReadyAt(now + 1));
                 self.wait_copies = vec![id];
@@ -472,6 +475,7 @@ impl Core {
 mod tests {
     use super::*;
     use crate::config::SimConfig;
+    use crate::controller::Controller;
     use crate::cpu::trace::TraceOp;
 
     fn mk(trace: Vec<TraceOp>, budget: u64) -> (Core, Hierarchy, Controller) {

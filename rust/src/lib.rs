@@ -37,6 +37,7 @@
 //! println!("IPC sum: {:.3} over {} DRAM cycles", report.ipc_sum(), report.dram_cycles);
 //! ```
 
+pub mod backend;
 pub mod cli;
 pub mod config;
 pub mod controller;

@@ -30,6 +30,10 @@ COMMANDS
   calibrate   --artifacts DIR [--out FILE]   run the circuit model via PJRT,
                                              write calibration.toml
                                              (needs the `runtime` feature)
+  calibrate-backend  [--out FILE]            probe the cycle-exact controller
+                                             and write the analytical backend's
+                                             calibration table
+                                             (src/backend/analytical_cal.toml)
   run         --workload NAME [--config F] [--requests N] [--threads N] [--ws]
   list-workloads
   table1      [--config F]                   E1: 8 KB copy latency/energy
@@ -61,6 +65,7 @@ set the stderr log level.
 
 const COMMANDS: &[&str] = &[
     "calibrate",
+    "calibrate-backend",
     "run",
     "sweep",
     "list-workloads",
@@ -115,6 +120,7 @@ fn main() -> Result<()> {
     };
     match cmd.as_str() {
         "calibrate" => cmd_calibrate(&args),
+        "calibrate-backend" => cmd_calibrate_backend(&args),
         "run" => cmd_run(&args),
         "list-workloads" => {
             let cfg = SimConfig::default();
@@ -188,6 +194,25 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     );
     std::fs::write(out, SimConfig::calibration_toml(&cal))?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `lisa calibrate-backend [--out FILE]` — regenerate the analytical
+/// backend's calibration table by probing the cycle-exact controller
+/// (isolated single-request and single-copy runs per speed bin). With
+/// `--out src/backend/analytical_cal.toml` the probed table is baked
+/// into the next build; without `--out` it goes to stdout for
+/// inspection. Needs no PJRT artifacts — the probes run the in-tree
+/// simulator, so this works on any checkout.
+fn cmd_calibrate_backend(args: &Args) -> Result<()> {
+    let toml = lisa::backend::analytical::calibration_toml();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, &toml)?;
+            println!("wrote {path}");
+        }
+        None => print!("{toml}"),
+    }
     Ok(())
 }
 

@@ -18,7 +18,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::config::{CopyMechanism, SimConfig};
 use crate::controller::mapping::{Mapper, MappingScheme};
 use crate::controller::request::CopyRequest;
-use crate::controller::Controller;
+use crate::backend::MemoryModel;
 use crate::copy::effective_mechanism;
 use crate::cpu::trace::BulkOp;
 use crate::lisa::villa::VillaManager;
@@ -139,7 +139,7 @@ impl OsLayer {
         src_frame: u32,
         dst_frame: u32,
         zero: bool,
-        ctrl: &mut Controller,
+        mem: &mut dyn MemoryModel,
     ) -> u64 {
         let src = self.frames.addr_of(src_frame);
         let dst = self.frames.addr_of(dst_frame);
@@ -162,41 +162,41 @@ impl OsLayer {
         }
         let id = self.next_copy_id;
         self.next_copy_id += 1;
-        ctrl.enqueue_page_copy(CopyRequest {
+        mem.enqueue_page_copy(CopyRequest {
             id,
             core,
             src,
             dst,
             rows: 1,
             mechanism: req_mech,
-            arrive: ctrl.now,
+            arrive: mem.now(),
         });
         id
     }
 
     /// Copy the bank-local zero row into `frame` (in-DRAM zeroing).
-    fn dispatch_zero(&mut self, core: usize, frame: u32, ctrl: &mut Controller) -> u64 {
+    fn dispatch_zero(&mut self, core: usize, frame: u32, mem: &mut dyn MemoryModel) -> u64 {
         let z = self.zero_frames[self.frames.bank_of(frame)];
-        self.dispatch(core, z, frame, true, ctrl)
+        self.dispatch(core, z, frame, true, mem)
     }
 
     /// Execute one bulk primitive for `core`. Deterministic in the
     /// (config, op-sequence) pair: every data structure walks in vpn
     /// order and the allocator RNG is seeded from the config.
-    pub fn execute(&mut self, core: usize, op: BulkOp, ctrl: &mut Controller) -> OsOutcome {
+    pub fn execute(&mut self, core: usize, op: BulkOp, mem: &mut dyn MemoryModel) -> OsOutcome {
         match op {
-            BulkOp::Touch { va, is_write } => self.touch(core, va, is_write, ctrl),
-            BulkOp::Zero { va, pages } => self.zero(core, va, pages, ctrl),
+            BulkOp::Touch { va, is_write } => self.touch(core, va, is_write, mem),
+            BulkOp::Zero { va, pages } => self.zero(core, va, pages, mem),
             BulkOp::Memcpy { src_va, dst_va, pages } => {
-                self.memcpy(core, src_va, dst_va, pages, ctrl)
+                self.memcpy(core, src_va, dst_va, pages, mem)
             }
             BulkOp::Fork => self.fork(core),
-            BulkOp::Checkpoint => self.checkpoint(core, ctrl),
-            BulkOp::Promote { va } => self.promote(core, va, ctrl),
+            BulkOp::Checkpoint => self.checkpoint(core, mem),
+            BulkOp::Promote { va } => self.promote(core, va, mem),
         }
     }
 
-    fn touch(&mut self, core: usize, va: u64, is_write: bool, ctrl: &mut Controller) -> OsOutcome {
+    fn touch(&mut self, core: usize, va: u64, is_write: bool, mem: &mut dyn MemoryModel) -> OsOutcome {
         let vpn = va / self.page_bytes;
         match self.procs[core].pt.translate(vpn) {
             Some(e) if !(is_write && e.cow) => {
@@ -223,7 +223,7 @@ impl OsLayer {
                         };
                     }
                 };
-                let id = self.dispatch(core, e.frame, new, false, ctrl);
+                let id = self.dispatch(core, e.frame, new, false, mem);
                 self.frames.release(e.frame);
                 self.procs[core].pt.remap(vpn, new);
                 self.procs[core].dirty.insert(vpn);
@@ -239,7 +239,7 @@ impl OsLayer {
                 let Some(f) = self.frames.alloc() else {
                     return OsOutcome::Done; // out of memory: drop the access
                 };
-                let id = self.dispatch_zero(core, f, ctrl);
+                let id = self.dispatch_zero(core, f, mem);
                 self.procs[core].pt.map(vpn, f, false);
                 if is_write {
                     self.procs[core].dirty.insert(vpn);
@@ -253,7 +253,7 @@ impl OsLayer {
         }
     }
 
-    fn zero(&mut self, core: usize, va: u64, pages: u32, ctrl: &mut Controller) -> OsOutcome {
+    fn zero(&mut self, core: usize, va: u64, pages: u32, mem: &mut dyn MemoryModel) -> OsOutcome {
         let base = va / self.page_bytes;
         let mut ids = Vec::with_capacity(pages as usize);
         for i in 0..pages as u64 {
@@ -274,7 +274,7 @@ impl OsLayer {
                     f
                 }
             };
-            ids.push(self.dispatch_zero(core, frame, ctrl));
+            ids.push(self.dispatch_zero(core, frame, mem));
             self.procs[core].dirty.insert(vpn);
         }
         if ids.is_empty() {
@@ -290,7 +290,7 @@ impl OsLayer {
         src_va: u64,
         dst_va: u64,
         pages: u32,
-        ctrl: &mut Controller,
+        mem: &mut dyn MemoryModel,
     ) -> OsOutcome {
         let src_base = src_va / self.page_bytes;
         let dst_base = dst_va / self.page_bytes;
@@ -314,7 +314,7 @@ impl OsLayer {
                     f
                 }
             };
-            ids.push(self.dispatch(core, src_e.frame, dst_frame, false, ctrl));
+            ids.push(self.dispatch(core, src_e.frame, dst_frame, false, mem));
             self.procs[core].dirty.insert(dst_vpn);
         }
         if ids.is_empty() {
@@ -340,7 +340,7 @@ impl OsLayer {
         OsOutcome::Done
     }
 
-    fn checkpoint(&mut self, core: usize, ctrl: &mut Controller) -> OsOutcome {
+    fn checkpoint(&mut self, core: usize, mem: &mut dyn MemoryModel) -> OsOutcome {
         self.stats.checkpoints += 1;
         let dirty: Vec<u64> = std::mem::take(&mut self.procs[core].dirty)
             .into_iter()
@@ -352,7 +352,7 @@ impl OsLayer {
             if let Some(old) = self.procs[core].shadow.insert(vpn, shadow) {
                 self.frames.release(old);
             }
-            ids.push(self.dispatch(core, e.frame, shadow, false, ctrl));
+            ids.push(self.dispatch(core, e.frame, shadow, false, mem));
         }
         if ids.is_empty() {
             OsOutcome::Done
@@ -361,7 +361,7 @@ impl OsLayer {
         }
     }
 
-    fn promote(&mut self, core: usize, va: u64, ctrl: &mut Controller) -> OsOutcome {
+    fn promote(&mut self, core: usize, va: u64, mem: &mut dyn MemoryModel) -> OsOutcome {
         let vpn = va / self.page_bytes;
         let Some(e) = self.procs[core].pt.translate(vpn) else {
             return OsOutcome::Done; // nothing mapped to promote
@@ -372,7 +372,7 @@ impl OsLayer {
         let Some(zone) = self.frames.alloc_zone(e.frame) else {
             return OsOutcome::Done; // zone full: skip
         };
-        let id = self.dispatch(core, e.frame, zone, false, ctrl);
+        let id = self.dispatch(core, e.frame, zone, false, mem);
         // The old frame stays allocated until the copy has read it.
         self.pending_free.push((id, e.frame));
         self.procs[core].pt.remap(vpn, zone);
@@ -390,6 +390,7 @@ impl OsLayer {
 mod tests {
     use super::*;
     use crate::config::PlacementPolicy;
+    use crate::controller::Controller;
 
     fn setup(mech: CopyMechanism, placement: PlacementPolicy) -> (OsLayer, Controller) {
         let mut cfg = SimConfig::default();
@@ -397,10 +398,10 @@ mod tests {
         cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
         cfg.os.placement = placement;
         let ctrl = Controller::new(cfg.clone());
-        (OsLayer::new(&cfg), ctrl)
+        (OsLayer::new(&cfg), mem)
     }
 
-    fn drain(ctrl: &mut Controller) -> Vec<u64> {
+    fn drain(mem: &mut dyn MemoryModel) -> Vec<u64> {
         let mut done = vec![];
         for _ in 0..2_000_000u64 {
             ctrl.tick().unwrap();

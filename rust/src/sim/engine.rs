@@ -4,21 +4,21 @@
 
 use anyhow::Result;
 
-use crate::config::SimConfig;
-use crate::controller::Controller;
+use crate::backend::{self, MemoryModel};
+use crate::config::{BackendKind, SimConfig};
 use crate::cpu::cache::Hierarchy;
 use crate::cpu::core::{Core, CoreWake};
-use crate::energy::EnergyModel;
-use crate::lisa::lip::lip_coverage;
 use crate::metrics::RunReport;
 use crate::obs::Probe;
 use crate::os::OsLayer;
 use crate::workloads::Workload;
 
-/// One simulation instance (one workload on one configuration).
+/// One simulation instance (one workload on one configuration). The
+/// memory side is a [`MemoryModel`] trait object selected from
+/// `cfg.backend` — the engine never names a concrete backend.
 pub struct Simulation {
     pub cfg: SimConfig,
-    pub ctrl: Controller,
+    mem: Box<dyn MemoryModel>,
     pub hier: Hierarchy,
     pub cores: Vec<Core>,
     /// OS layer (page tables + frame allocator + bulk engine); present
@@ -30,12 +30,23 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig, workload: Workload) -> Self {
+        let mem = backend::build(&cfg);
+        Self::with_model(cfg, workload, mem)
+    }
+
+    /// Build a simulation around an explicitly constructed memory
+    /// model (the injection point backend cross-validation tests use;
+    /// `new` is this plus [`backend::build`]).
+    pub fn with_model(
+        cfg: SimConfig,
+        workload: Workload,
+        mem: Box<dyn MemoryModel>,
+    ) -> Self {
         // Trace length: enough distinct ops before cycling to defeat
         // trivial trace-level caching, bounded to keep memory sane.
         let n_ops = (cfg.requests_per_core as usize).clamp(1_000, 200_000);
         let traces = workload.traces(&cfg, n_ops);
         let os = traces.iter().any(|t| t.needs_os()).then(|| OsLayer::new(&cfg));
-        let ctrl = Controller::new(cfg.clone());
         let hier = Hierarchy::new(&cfg.cpu);
         let cores = traces
             .into_iter()
@@ -44,7 +55,7 @@ impl Simulation {
             .collect();
         Self {
             cfg,
-            ctrl,
+            mem,
             hier,
             cores,
             os,
@@ -52,18 +63,24 @@ impl Simulation {
         }
     }
 
+    /// Read access to the memory model (stats/diagnostics; benches and
+    /// integration tests that used to reach into `sim.ctrl`).
+    pub fn memory(&self) -> &dyn MemoryModel {
+        &*self.mem
+    }
+
     /// Turn on latency attribution: the report gains an `"obs"` block
     /// decomposing every demand request's latency. Attribution is an
     /// observer — simulated behavior and every other report field stay
     /// bit-identical (pinned by `tests/engine_equivalence.rs`).
     pub fn enable_obs(&mut self) {
-        self.ctrl.enable_attribution();
+        self.mem.enable_attribution();
     }
 
     /// Attach a trace probe (e.g. a `SharedTraceRing`) to the
-    /// controller. Probes observe; they never change behavior.
+    /// memory model. Probes observe; they never change behavior.
     pub fn set_probe(&mut self, probe: Box<dyn Probe>) {
-        self.ctrl.set_probe(probe);
+        self.mem.set_probe(probe);
     }
 
     /// Build a simulation where only `active_core` executes its trace
@@ -111,9 +128,9 @@ impl Simulation {
         // of paying for it every cycle.
         let mut cooldown: u32 = 0;
         while cycles < self.cfg.max_cycles {
-            self.ctrl.tick()?;
+            self.mem.tick()?;
             cycles += 1;
-            for c in self.ctrl.drain_completions() {
+            for c in self.mem.drain_completions() {
                 if c.was_copy {
                     // The OS layer may hold a frame alive until its
                     // migration copy has read it.
@@ -128,7 +145,7 @@ impl Simulation {
             let mut all_done = true;
             for core in self.cores.iter_mut() {
                 for _ in 0..ratio {
-                    core.cycle(&mut self.hier, &mut self.ctrl, self.os.as_mut());
+                    core.cycle(&mut self.hier, &mut *self.mem, self.os.as_mut());
                 }
                 all_done &= core.finished();
             }
@@ -141,7 +158,7 @@ impl Simulation {
                 } else {
                     let gap = self.idle_gap(ratio).min(self.cfg.max_cycles - cycles);
                     if gap > 0 {
-                        self.ctrl.fast_forward(gap);
+                        self.mem.fast_forward(gap);
                         for core in self.cores.iter_mut() {
                             core.advance_idle(gap * ratio);
                         }
@@ -168,13 +185,13 @@ impl Simulation {
     /// partial jumps while the DRAM side is frozen — no longer re-walks
     /// the queues, refresh deadlines and copy sequences each time.
     fn idle_gap(&self, ratio: u64) -> u64 {
-        let now = self.ctrl.now;
-        let mut horizon = self.ctrl.next_event_cycle();
+        let now = self.mem.now();
+        let mut horizon = self.mem.next_event_cycle();
         if horizon <= now {
             return 0;
         }
         for core in &self.cores {
-            match core.next_wake(&self.ctrl) {
+            match core.next_wake(&*self.mem) {
                 CoreWake::Active => return 0,
                 CoreWake::Blocked => {}
                 CoreWake::At(t_cpu) => {
@@ -191,28 +208,22 @@ impl Simulation {
     }
 
     fn report(&self, cycles: u64) -> RunReport {
-        let energy_model = EnergyModel::from_calibration(&self.cfg.calibration);
-        let tck = self.ctrl.dev.timing.tck_ns;
+        let parts = self.mem.report_parts(cycles);
         RunReport {
             workload: self.workload_name.clone(),
             config_name: config_name(&self.cfg),
             ipc: self.cores.iter().map(|c| c.ipc()).collect(),
             dram_cycles: cycles,
-            reads: self.ctrl.stats.reads_done,
-            writes: self.ctrl.stats.writes_done,
-            copies: self.ctrl.stats.copies_done,
-            avg_read_latency_cycles: self.ctrl.stats.avg_read_latency(),
-            row_hit_rate: self.ctrl.stats.row_hit_rate(),
-            villa_hit_rate: self
-                .ctrl
-                .villa
-                .as_ref()
-                .map(|v| v.stats.hit_rate())
-                .unwrap_or(0.0),
-            lip_coverage: lip_coverage(&self.ctrl.dev.stats),
-            energy: energy_model.breakdown_uj(&self.ctrl.dev.stats, cycles, tck),
+            reads: parts.reads,
+            writes: parts.writes,
+            copies: parts.copies,
+            avg_read_latency_cycles: parts.avg_read_latency_cycles,
+            row_hit_rate: parts.row_hit_rate,
+            villa_hit_rate: parts.villa_hit_rate,
+            lip_coverage: parts.lip_coverage,
+            energy: parts.energy,
             os: self.os.as_ref().map(|o| o.summary()),
-            obs: self.ctrl.obs_report(cycles),
+            obs: parts.obs,
         }
     }
 }
@@ -237,6 +248,13 @@ pub fn config_name(cfg: &SimConfig) -> String {
     let default_placement = crate::config::OsConfig::default().placement;
     if cfg.os.placement != default_placement {
         parts.push(format!("place:{}", cfg.os.placement.name()));
+    }
+    // The backend folds into the label (and therefore into journal and
+    // cache keys, which embed `config_name`) so cycle-exact and
+    // analytical results can never alias. Default (cycle) is elided:
+    // pre-existing labels stay byte-identical.
+    if cfg.backend != BackendKind::Cycle {
+        parts.push(format!("backend:{}", cfg.backend.name()));
     }
     parts.join("+")
 }

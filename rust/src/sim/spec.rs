@@ -20,10 +20,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::backend::analytical::{IPC_TOLERANCE_PCT, WS_TOLERANCE_PCT};
 use crate::cli::Args;
 use crate::config::builder::LisaPreset;
 use crate::config::{
-    CopyMechanism, PlacementPolicy, SalpMode, SimConfig, SimConfigBuilder,
+    BackendKind, CopyMechanism, PlacementPolicy, SalpMode, SimConfig,
+    SimConfigBuilder,
 };
 use crate::dram::timing::SpeedBin;
 use crate::metrics::{json, Comparison, RunReport};
@@ -49,6 +51,12 @@ pub enum AxisKind {
     /// Named LISA feature combination — the config axis of the
     /// weighted-speedup experiments.
     Preset,
+    /// Which [`MemoryModel`](crate::backend::MemoryModel) evaluates the
+    /// point. Never part of a spec's declared axes: every spec gains it
+    /// implicitly (outermost) when `--backend` is given, and default
+    /// runs carry no backend coordinate at all — their records stay
+    /// byte-identical to builds that predate backend plurality.
+    Backend,
 }
 
 impl AxisKind {
@@ -61,6 +69,7 @@ impl AxisKind {
             Self::Placement => "random|packed|spread|villa-aware",
             Self::Speed => "ddr3-1600|ddr4-2400",
             Self::Preset => "baseline|risc|risc-villa|all|villa-rc|lip",
+            Self::Backend => "cycle|analytical",
         }
     }
 
@@ -74,6 +83,7 @@ impl AxisKind {
             Self::Placement => PlacementPolicy::parse(v).map(|_| ()),
             Self::Speed => SpeedBin::parse(v).map(|_| ()),
             Self::Preset => LisaPreset::parse(v).map(|_| ()),
+            Self::Backend => BackendKind::parse(v).map(|_| ()),
         }
     }
 }
@@ -171,6 +181,12 @@ pub struct RunOptions {
     pub mixes: Option<usize>,
     /// Explicit per-axis value overrides, keyed by axis *name*.
     pub axes: Vec<(String, Vec<String>)>,
+    /// `--backend cycle,analytical` — evaluate the grid under these
+    /// memory-model backends. Empty means the config default (cycle)
+    /// with *no* backend axis: default records and their JSON stay
+    /// byte-identical to pre-backend builds. Non-empty prepends an
+    /// implicit outermost `backend` axis to every spec.
+    pub backend: Vec<String>,
     /// `--journal FILE` — checkpoint finished jobs here as they
     /// complete.
     pub journal: Option<PathBuf>,
@@ -204,6 +220,11 @@ impl RunOptions {
 
     pub fn base(mut self, cfg: SimConfig) -> Self {
         self.base = Some(cfg);
+        self
+    }
+
+    pub fn backend(mut self, values: &[&str]) -> Self {
+        self.backend = values.iter().map(|s| s.to_string()).collect();
         self
     }
 
@@ -261,6 +282,7 @@ impl RunOptions {
             threads: campaign::resolve_threads(args.opt_usize("threads")?),
             mixes: args.opt_usize("mixes")?,
             axes: Vec::new(),
+            backend: args.opt_list("backend").unwrap_or_default(),
             journal: args.opt("journal").map(PathBuf::from),
             resume: args.opt("resume").map(PathBuf::from),
             cache_dir,
@@ -289,14 +311,28 @@ impl RunOptions {
     }
 }
 
+/// The implicit `backend` axis definition — shared by every spec, so
+/// its record key, flag and usage line cannot drift between them.
+fn backend_axis() -> AxisDef {
+    AxisDef::new("backend", "backend", AxisKind::Backend, strings(&["cycle"]))
+}
+
 /// The effective value list of each axis under `opts`: explicit
-/// override > `--mixes` re-derivation > spec default. Values are
-/// parse-validated here so a typo fails before any simulation runs.
+/// override > `--mixes` re-derivation > spec default. A `--backend`
+/// override prepends the implicit [`backend_axis`] outermost (so
+/// cycle/analytical twins of the whole grid sit side by side); without
+/// it no backend axis exists and records are byte-identical to
+/// pre-backend builds. Values are parse-validated here — with the
+/// axis's [`AxisKind::choices`] in the error — so a typo fails with
+/// the valid value list before any simulation runs.
 pub fn effective_axes(
     spec: &ExperimentSpec,
     opts: &RunOptions,
 ) -> Result<Vec<(AxisDef, Vec<String>)>> {
-    let mut out = Vec::with_capacity(spec.axes.len());
+    let mut out = Vec::with_capacity(spec.axes.len() + 1);
+    if !opts.backend.is_empty() {
+        out.push((backend_axis(), opts.backend.clone()));
+    }
     for axis in &spec.axes {
         let values: Vec<String> =
             if let Some(explicit) = opts.axis_override(&axis.name) {
@@ -306,15 +342,22 @@ pub fn effective_axes(
             } else {
                 axis.values.clone()
             };
+        out.push((axis.clone(), values));
+    }
+    for (axis, values) in &out {
         if values.is_empty() {
             bail!("experiment '{}': axis '{}' has no values", spec.name, axis.name);
         }
-        for v in &values {
-            axis.kind
-                .validate(v)
-                .with_context(|| format!("axis '{}'", axis.name))?;
+        for v in values {
+            axis.kind.validate(v).with_context(|| {
+                format!(
+                    "axis '{}' (--{}): valid values are {}",
+                    axis.name,
+                    axis.flag,
+                    axis.kind.choices()
+                )
+            })?;
         }
-        out.push((axis.clone(), values));
     }
     Ok(out)
 }
@@ -371,6 +414,9 @@ pub fn expand(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Vec<GridPoint>
                 }
                 AxisKind::Speed => builder = builder.speed(SpeedBin::parse(v)?),
                 AxisKind::Preset => builder = builder.preset(LisaPreset::parse(v)?),
+                AxisKind::Backend => {
+                    builder = builder.backend(BackendKind::parse(v)?);
+                }
             }
         }
         let Some(workload) = workload else {
@@ -542,12 +588,27 @@ impl PartialEq for Report {
 impl Report {
     /// The single JSON serializer of the experiment surface:
     /// `{"experiment", "schema", "requests", "records": [{config,
-    /// axes, ws, report}]}` with `report` a full `RunReport`.
+    /// axes, ws, report}]}` with `report` a full `RunReport`. Grids
+    /// run with an explicit `--backend` axis additionally carry the
+    /// cross-validation contract as a `backend_tolerance` object (the
+    /// IPC / weighted-speedup error bands the analytical twin is held
+    /// to); default runs omit the key so their bytes never move.
     pub fn to_json(&self) -> String {
         let body: Vec<String> = self.records.iter().map(Record::to_json).collect();
+        let tolerance = if self.records.iter().any(|r| r.axis("backend").is_some())
+        {
+            format!(
+                "\"backend_tolerance\":{{\"ipc_pct\":{},\"ws_pct\":{}}},",
+                json::number(IPC_TOLERANCE_PCT),
+                json::number(WS_TOLERANCE_PCT)
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{{\"experiment\":{},\"schema\":1,\"requests\":{},\"records\":[\n{}\n]}}\n",
+            "{{\"experiment\":{},\"schema\":1,{}\"requests\":{},\"records\":[\n{}\n]}}\n",
             json::string(&self.experiment),
+            tolerance,
             self.requests,
             body.join(",\n")
         )
@@ -740,9 +801,16 @@ pub fn run(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Report> {
                     spec.name
                 );
             }
-            // Points arrive workload-major; chunk them back into
-            // per-workload jobs.
-            effective_axes(spec, opts)?[1].1.len()
+            // Points arrive workload-major (backend-major above that,
+            // if `--backend` added the implicit axis); chunk them back
+            // into per-workload jobs by preset count — looked up by
+            // kind, not position, so the implicit backend axis can
+            // never shift it.
+            effective_axes(spec, opts)?
+                .iter()
+                .find(|(a, _)| a.kind == AxisKind::Preset)
+                .map(|(_, v)| v.len())
+                .expect("WS spec has a preset axis (validated above)")
         }
     };
     let base_toml = opts.base.clone().unwrap_or_default().to_toml();
@@ -1212,7 +1280,7 @@ pub fn spec_for_alias(alias: &str) -> Result<ExperimentSpec> {
 pub fn usage() -> String {
     let mut out = String::from(
         "lisa exp <name> [--requests N] [--threads N] [--mixes N] [--seed N]\n\
-         \x20        [--config FILE] [--out FILE]\n\
+         \x20        [--config FILE] [--out FILE] [--backend cycle,analytical]\n\
          \x20        [--journal FILE] [--resume FILE] [--cache-dir DIR] [--no-cache]\n\
          lisa exp --list\n\nEXPERIMENTS\n",
     );
@@ -1243,7 +1311,14 @@ pub fn usage() -> String {
          adopts a\nprior journal's finished jobs (and keeps appending to it), \
          byte-identical\nto an uninterrupted run. Results are cached under \
          target/lisa-cache\n(--cache-dir overrides, --no-cache disables): an \
-         unchanged re-invocation\nre-runs zero points.\n",
+         unchanged re-invocation\nre-runs zero points.\n\
+         \nEvery experiment also takes --backend cycle,analytical \
+         (cycle|analytical):\nan implicit outermost axis selecting the memory \
+         model. The default is the\ncycle-exact controller with no backend \
+         column; `--backend analytical` runs\nthe calibrated event-count twin \
+         (~100x faster, held to the tolerance band\nthe report states), and \
+         listing both runs the grid under each for\nside-by-side \
+         cross-validation.\n",
     );
     out
 }
@@ -1303,6 +1378,95 @@ mod tests {
         assert!(expand(&spec, &bad_mode).is_err());
         let bad_wl = RunOptions::default().axis("workload", &["no-such-workload"]);
         assert!(expand(&spec, &bad_wl).is_err());
+    }
+
+    #[test]
+    fn unknown_axis_values_error_with_the_valid_choices() {
+        // The validation error leads with the axis, its flag, and the
+        // exact `AxisKind::choices()` list — a typo'd `--backend` (or
+        // any axis value) tells the user what would have worked.
+        let spec = spec_by_name("e10-salp").unwrap();
+        let err = expand(&spec, &RunOptions::default().backend(&["quantum"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 'backend' (--backend)"), "{err}");
+        assert!(err.contains(AxisKind::Backend.choices()), "{err}");
+        let err = expand(&spec, &RunOptions::default().axis("mode", &["salp9"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 'mode' (--modes)"), "{err}");
+        assert!(err.contains(AxisKind::SalpMode.choices()), "{err}");
+    }
+
+    #[test]
+    fn backend_axis_is_implicit_outermost_and_off_by_default() {
+        let spec = spec_by_name("e10-salp").unwrap();
+        let narrow = RunOptions::default()
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy"])
+            .axis("mode", &["none"])
+            .axis("policy", &["packed"]);
+        // Default: no backend coordinate anywhere, cycle-exact config —
+        // records (and their JSON) are indistinguishable from builds
+        // that predate backend plurality.
+        let points = expand(&spec, &narrow).unwrap();
+        assert_eq!(points.len(), 1);
+        assert!(points[0].axes.iter().all(|(n, _)| n != "backend"));
+        assert_eq!(points[0].cfg.backend, BackendKind::Cycle);
+        // --backend cycle,analytical doubles the grid, backend-major
+        // (outermost), and the coordinate drives the built config.
+        let both =
+            expand(&spec, &narrow.clone().backend(&["cycle", "analytical"]))
+                .unwrap();
+        assert_eq!(both.len(), 2);
+        assert_eq!(both[0].axes[0].0, "backend");
+        assert_eq!(both[0].axes[0].1, "cycle");
+        assert_eq!(both[0].cfg.backend, BackendKind::Cycle);
+        assert_eq!(both[1].axes[0].1, "analytical");
+        assert_eq!(both[1].cfg.backend, BackendKind::Analytical);
+        // The twins differ only in backend, so their content hashes —
+        // and therefore every journal/cache key built from them — must
+        // differ.
+        assert_ne!(both[0].cfg.content_hash(), both[1].cfg.content_hash());
+    }
+
+    #[test]
+    fn options_from_args_reads_the_backend_flag() {
+        let spec = spec_by_name("e9-os").unwrap();
+        let parse = |line: &str| {
+            let args =
+                Args::parse(line.split_whitespace().map(str::to_string)).unwrap();
+            RunOptions::from_args(&spec, &args).unwrap()
+        };
+        assert_eq!(
+            parse("os --backend cycle,analytical").backend,
+            vec!["cycle".to_string(), "analytical".to_string()]
+        );
+        // Absent flag: empty list, so no implicit axis is added.
+        assert!(parse("os --requests 10").backend.is_empty());
+    }
+
+    #[test]
+    fn backend_runs_record_the_tolerance_band_in_report_json() {
+        let mk = |axes: Vec<(String, String)>| Report {
+            experiment: "x".into(),
+            requests: 1,
+            records: vec![Record { axes, ws: None, report: RunReport::default() }],
+            stats: CampaignStats::default(),
+            profile: CampaignProfile::default(),
+        };
+        let plain = mk(vec![("workload".into(), "os-fork".into())]);
+        assert!(!plain.to_json().contains("backend_tolerance"));
+        let twin = mk(vec![
+            ("backend".into(), "analytical".into()),
+            ("workload".into(), "os-fork".into()),
+        ]);
+        let j = twin.to_json();
+        assert!(j.contains("\"backend_tolerance\""), "{j}");
+        let ipc = format!("\"ipc_pct\":{}", json::number(IPC_TOLERANCE_PCT));
+        let ws = format!("\"ws_pct\":{}", json::number(WS_TOLERANCE_PCT));
+        assert!(j.contains(&ipc), "{j}");
+        assert!(j.contains(&ws), "{j}");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Cross-validation contract between the memory-model backends: the
+//! calibrated analytical twin must track the cycle-exact controller
+//! within the stated IPC / weighted-speedup error bands and agree on
+//! every decisive mechanism ranking, over (trimmed) registry grids.
+//! The flip side is pinned too: `backend=cycle` — explicit or default
+//! — must stay byte-identical to the pre-backend single-controller
+//! engine.
+
+use lisa::backend::analytical::{IPC_TOLERANCE_PCT, WS_TOLERANCE_PCT};
+use lisa::config::SimConfig;
+use lisa::controller::Controller;
+use lisa::sim::engine::{run_workload, Simulation};
+use lisa::sim::spec::{registry, run, spec_by_name, Record, Report, RunOptions};
+use lisa::workloads::mixes::workload_by_name;
+
+/// Relative error of `twin` against ground truth `exact`, in percent.
+fn rel_err_pct(twin: f64, exact: f64) -> f64 {
+    if exact == 0.0 {
+        if twin == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        ((twin - exact) / exact).abs() * 100.0
+    }
+}
+
+/// Per-spec trimmed option sets: every registry spec is covered, with
+/// axis values cut down so the cycle-exact half of each twin campaign
+/// stays test-suite sized. The analytical half is cheap by design.
+fn trimmed_opts(name: &str) -> RunOptions {
+    let base = RunOptions::default().requests(200);
+    match name {
+        "fig3" => base.mixes(2).axis("preset", &["baseline", "risc-villa"]),
+        "fig4" => base.mixes(2).axis("preset", &["baseline", "risc"]),
+        "lip-system" => base.mixes(2),
+        "e9-os" => base
+            .axis("workload", &["os-fork", "os-zero"])
+            .axis("mech", &["memcpy", "lisa-risc"])
+            .axis("policy", &["packed"]),
+        "e10-salp" => base
+            .axis("workload", &["salp-pingpong4"])
+            .axis("mech", &["memcpy", "lisa-risc"])
+            .axis("mode", &["none", "masa"])
+            .axis("policy", &["packed"]),
+        "sweep" => base
+            .axis("workload", &["stream4", "hotspot4"])
+            .axis("mech", &["memcpy", "lisa-risc"]),
+        other => panic!("trimmed_opts misses registry spec '{other}'"),
+    }
+}
+
+/// Split a `--backend cycle,analytical` report into its halves. The
+/// implicit backend axis is outermost, so the cycle twin of record `i`
+/// in the analytical half is record `i` of the cycle half.
+fn halves(report: &Report) -> (&[Record], &[Record]) {
+    let n = report.records.len();
+    assert_eq!(n % 2, 0, "twin grid must be even, got {n}");
+    let (cycle, analytical) = report.records.split_at(n / 2);
+    for (c, a) in cycle.iter().zip(analytical) {
+        assert_eq!(c.axis("backend"), Some("cycle"));
+        assert_eq!(a.axis("backend"), Some("analytical"));
+        // Twins agree on every other coordinate.
+        assert_eq!(c.axes[1..], a.axes[1..]);
+    }
+    (cycle, analytical)
+}
+
+/// All non-backend, non-mech coordinates of a record, as a grouping
+/// key for ranking comparisons.
+fn group_key(r: &Record) -> String {
+    r.axes
+        .iter()
+        .filter(|(n, _)| n != "backend" && n != "mech")
+        .map(|(n, v)| format!("{n}={v};"))
+        .collect()
+}
+
+#[test]
+fn analytical_twin_tracks_cycle_within_tolerance_across_registry() {
+    for spec in registry() {
+        let opts = trimmed_opts(&spec.name)
+            .threads(2)
+            .backend(&["cycle", "analytical"]);
+        let report = run(&spec, &opts).unwrap_or_else(|e| {
+            panic!("{}: twin campaign failed: {e:#}", spec.name)
+        });
+        // The report carries the contract it is being held to.
+        assert!(
+            report.to_json().contains("\"backend_tolerance\""),
+            "{}: tolerance band missing from twin report",
+            spec.name
+        );
+        let (cycle, analytical) = halves(&report);
+        for (c, a) in cycle.iter().zip(analytical) {
+            let ipc_err = rel_err_pct(a.report.ipc_sum(), c.report.ipc_sum());
+            assert!(
+                ipc_err <= IPC_TOLERANCE_PCT,
+                "{} {:?}: analytical IPC {:.4} vs cycle {:.4} = {:.1}% > {}%",
+                spec.name,
+                c.axes,
+                a.report.ipc_sum(),
+                c.report.ipc_sum(),
+                ipc_err,
+                IPC_TOLERANCE_PCT
+            );
+            if let (Some(cw), Some(aw)) = (c.ws, a.ws) {
+                let ws_err = rel_err_pct(aw, cw);
+                assert!(
+                    ws_err <= WS_TOLERANCE_PCT,
+                    "{} {:?}: analytical WS {:.4} vs cycle {:.4} = {:.1}% > {}%",
+                    spec.name,
+                    c.axes,
+                    aw,
+                    cw,
+                    ws_err,
+                    WS_TOLERANCE_PCT
+                );
+            }
+        }
+        // Mechanism ranking: wherever the ground truth is decisive
+        // (>15% apart on a mech axis with everything else fixed), the
+        // twin must order the pair the same way. Near-ties are the
+        // cycle model's own noise floor and carry no ranking signal.
+        if spec.axes.iter().any(|a| a.name == "mech") {
+            for (i, ci) in cycle.iter().enumerate() {
+                for (j, cj) in cycle.iter().enumerate() {
+                    if i == j || group_key(ci) != group_key(cj) {
+                        continue;
+                    }
+                    let (ei, ej) = (ci.report.ipc_sum(), cj.report.ipc_sum());
+                    if ei <= ej * 1.15 {
+                        continue; // not decisive (or wrong direction)
+                    }
+                    let (ai, aj) =
+                        (analytical[i].report.ipc_sum(), analytical[j].report.ipc_sum());
+                    assert!(
+                        ai > aj,
+                        "{}: ranking flip — cycle has {:?} ({ei:.4}) > {:?} \
+                         ({ej:.4}) decisively, analytical says {ai:.4} vs {aj:.4}",
+                        spec.name,
+                        ci.axes,
+                        cj.axes
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn twin_campaigns_are_deterministic_at_1_2_8_threads() {
+    let spec = spec_by_name("e10-salp").unwrap();
+    let opts = trimmed_opts("e10-salp").backend(&["cycle", "analytical"]);
+    let reference = run(&spec, &opts.clone().threads(1)).unwrap().to_json();
+    for threads in [2, 8] {
+        let j = run(&spec, &opts.clone().threads(threads)).unwrap().to_json();
+        assert_eq!(j, reference, "twin campaign diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn cycle_backend_is_byte_identical_to_the_direct_controller() {
+    // The trait seam is pure delegation: driving the engine through
+    // `backend::build` (default cycle config) and through an
+    // explicitly injected `Controller` produces the same report bytes.
+    let cfg = SimConfig::default();
+    let wl = workload_by_name("salp-pingpong4", &cfg).unwrap();
+    let via_build = run_workload(&cfg, &wl);
+    let mut sim = Simulation::with_model(
+        cfg.clone(),
+        wl.clone(),
+        Box::new(Controller::new(cfg.clone())),
+    );
+    let via_injection = sim.run();
+    assert_eq!(via_build.to_json(), via_injection.to_json());
+    assert_eq!(via_build, via_injection);
+    // The default config name carries no backend marker — labels (and
+    // everything keyed off them) are unchanged from pre-backend builds.
+    assert!(!via_build.config_name.contains("backend"), "{}", via_build.config_name);
+}
+
+#[test]
+fn explicit_cycle_backend_changes_only_the_coordinates() {
+    // `--backend cycle` must not perturb any simulated result: the
+    // per-record reports are byte-identical to a default run; only the
+    // record coordinates (and the report-level tolerance block) show
+    // that a backend was chosen.
+    let spec = spec_by_name("e10-salp").unwrap();
+    let opts = trimmed_opts("e10-salp").threads(2);
+    let plain = run(&spec, &opts).unwrap();
+    let explicit = run(&spec, &opts.clone().backend(&["cycle"])).unwrap();
+    assert_eq!(plain.records.len(), explicit.records.len());
+    for (p, e) in plain.records.iter().zip(&explicit.records) {
+        assert_eq!(p.report.to_json(), e.report.to_json());
+        assert_eq!(p.ws, e.ws);
+        assert_eq!(e.axes[0].0, "backend");
+        assert_eq!(p.axes[..], e.axes[1..]);
+    }
+    // Default reports advertise no backend anywhere in their JSON.
+    let j = plain.to_json();
+    assert!(!j.contains("\"backend\""), "default JSON leaks a backend key");
+    assert!(!j.contains("backend_tolerance"));
+}

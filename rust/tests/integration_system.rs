@@ -217,7 +217,7 @@ fn copies_preserve_data_under_full_system_load() {
         // equals the "never written" default in destinations of the
         // completed copies is hard to track externally, so instead we
         // assert the device executed the expected command classes.
-        let stats = &sim.ctrl.dev.stats;
+        let stats = sim.memory().command_stats();
         match mech {
             CopyMechanism::LisaRisc => {
                 assert!(stats.n_rbm_hops > 0, "no RBM hops recorded");
@@ -348,7 +348,7 @@ fn every_salp_mode_runs_the_conflict_workload() {
         let r = sim.run();
         assert!(r.reads > 0, "{mode:?}: no DRAM reads");
         assert!(r.dram_cycles > 0);
-        acts.push((mode, sim.ctrl.dev.stats.n_act));
+        acts.push((mode, sim.memory().command_stats().n_act));
     }
     let act_of = |m: SalpMode| acts.iter().find(|(x, _)| *x == m).unwrap().1;
     assert!(

@@ -2,6 +2,7 @@
 //! engines (using the in-tree proptest harness; replay failures with
 //! LISA_PROPTEST_SEED=<seed> cargo test).
 
+use lisa::backend::Access;
 use lisa::config::{Calibration, CopyMechanism, DramConfig, LisaConfig, SalpMode, SimConfig};
 use lisa::controller::request::CopyRequest;
 use lisa::controller::Controller;
@@ -168,7 +169,13 @@ fn prop_controller_never_stalls_forever() {
         for i in 0..n_req {
             let addr = g.u64(64 << 20) & !63;
             let is_write = g.chance(0.3);
-            if ctrl.enqueue_mem(i as u64 + 1, 0, addr, is_write) && !is_write {
+            let mapped = ctrl.mapper.map(addr);
+            let access = if is_write {
+                Access::write(i as u64 + 1, 0, mapped)
+            } else {
+                Access::read(i as u64 + 1, 0, mapped)
+            };
+            if ctrl.enqueue(access) && !is_write {
                 expected += 1;
             }
         }
@@ -222,7 +229,7 @@ fn prop_timing_invariants_from_stats() {
         let wl = lisa::workloads::mixes::copy_mixes(4)[g.usize(50)].clone();
         let mut sim = lisa::sim::engine::Simulation::new(cfg, wl);
         let r = sim.run();
-        let s = &sim.ctrl.dev.stats;
+        let s = sim.memory().command_stats();
         assert!(s.n_pre_lip <= s.n_pre);
         assert!(s.n_act >= 1);
         assert!(r.dram_cycles > 0);
