@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Validate a binary op-trace file written by `lisa trace record` /
+`lisa trace convert` (the v1 format in DESIGN.md §Trace subsystem).
+
+An independent, stdlib-only decoder — it shares no code with the Rust
+reader, so a format bug that the Rust round trip reproduces on both
+sides still fails here. Checks, in order:
+
+  1. magic, version, plausible core count and name length;
+  2. the directory: every stream's [offset, offset+len) lies past the
+     header and inside the file, streams do not overlap, op_count >= 1;
+  3. every stream decodes to exactly op_count ops consuming exactly
+     len bytes — valid tags, terminated minimal-progress varints
+     (<= 10 bytes, 10th-byte payload <= 1), flag bytes <= 3;
+  4. the streams tile the file: no gap or trailing garbage after the
+     last stream.
+
+Exits non-zero with a message on the first violated invariant; prints
+a one-line summary on success. Stdlib only (CI runs it bare).
+"""
+
+import struct
+import sys
+
+MAGIC = b"LISATRCE"
+VERSION = 1
+MAX_CORES = 4096
+MAX_NAME = 4096
+FIXED_HEADER = 20
+DESC = 24
+
+# tag -> (name, has_flags byte, number of varint fields *excluding*
+# nonmem, number of address-delta fields)
+TAGS = {
+    0: ("mem", True, 0, 1),
+    1: ("copy", False, 1, 2),
+    2: ("bulk:memcpy", False, 1, 2),
+    3: ("bulk:zero", False, 1, 1),
+    4: ("bulk:fork", False, 0, 0),
+    5: ("bulk:touch", True, 0, 1),
+    6: ("bulk:checkpoint", False, 0, 0),
+    7: ("bulk:promote", False, 0, 1),
+}
+
+
+def fail(msg):
+    print(f"validate_tracefile: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def read_varint(buf, pos, what):
+    v = 0
+    shift = 0
+    for i in range(10):
+        if pos >= len(buf):
+            fail(f"{what}: varint truncated at stream byte {pos}")
+        b = buf[pos]
+        pos += 1
+        payload = b & 0x7F
+        if i == 9 and payload > 1:
+            fail(f"{what}: over-long varint (10th byte 0x{b:02x})")
+        v |= payload << shift
+        if not (b & 0x80):
+            return v, pos
+        shift += 7
+    fail(f"{what}: over-long varint (no terminator in 10 bytes)")
+
+
+def decode_stream(buf, core, op_count):
+    """Decode one stream buffer completely; returns the op-kind
+    histogram."""
+    pos = 0
+    hist = {}
+    for op_idx in range(op_count):
+        where = f"core {core} op {op_idx}"
+        if pos >= len(buf):
+            fail(f"{where}: stream truncated")
+        tag = buf[pos]
+        pos += 1
+        if tag not in TAGS:
+            fail(f"{where}: unknown tag 0x{tag:02x}")
+        name, has_flags, n_varints, n_addrs = TAGS[tag]
+        _, pos = read_varint(buf, pos, f"{where} nonmem")
+        if has_flags:
+            if pos >= len(buf):
+                fail(f"{where}: flags byte truncated")
+            if buf[pos] > 3:
+                fail(f"{where}: invalid flags byte 0x{buf[pos]:02x}")
+            pos += 1
+        for k in range(n_varints):
+            v, pos = read_varint(buf, pos, f"{where} field {k}")
+            if v > 0xFFFFFFFF:
+                fail(f"{where}: count field {v} exceeds u32")
+        for k in range(n_addrs):
+            _, pos = read_varint(buf, pos, f"{where} addr {k}")
+        hist[name] = hist.get(name, 0) + 1
+    if pos != len(buf):
+        fail(f"core {core}: {len(buf) - pos} trailing bytes after "
+             f"{op_count} declared ops")
+    return hist
+
+
+def main():
+    if len(sys.argv) != 2:
+        fail("usage: validate_tracefile.py TRACE_FILE")
+    path = sys.argv[1]
+    with open(path, "rb") as f:
+        data = f.read()
+    if len(data) < FIXED_HEADER:
+        fail(f"file is {len(data)} bytes, smaller than the fixed header")
+    if data[:8] != MAGIC:
+        fail(f"bad magic {data[:8]!r}")
+    version, cores, name_len = struct.unpack_from("<III", data, 8)
+    if version != VERSION:
+        fail(f"unsupported version {version}")
+    if not 1 <= cores <= MAX_CORES:
+        fail(f"implausible core count {cores}")
+    if name_len > MAX_NAME:
+        fail(f"implausible name length {name_len}")
+    header_end = FIXED_HEADER + name_len + cores * DESC
+    if len(data) < header_end:
+        fail(f"truncated header: file {len(data)} < header {header_end}")
+    try:
+        name = data[FIXED_HEADER:FIXED_HEADER + name_len].decode("utf-8")
+    except UnicodeDecodeError:
+        fail("workload name is not UTF-8")
+
+    streams = []
+    for core in range(cores):
+        op_count, offset, length = struct.unpack_from(
+            "<QQQ", data, FIXED_HEADER + name_len + core * DESC
+        )
+        if op_count == 0:
+            fail(f"core {core}: empty stream (op_count = 0)")
+        if offset < header_end:
+            fail(f"core {core}: stream offset {offset} overlaps the header")
+        if offset + length > len(data):
+            fail(f"core {core}: stream [{offset}, {offset + length}) runs "
+                 f"past end of file ({len(data)} bytes)")
+        streams.append((core, op_count, offset, length))
+
+    # Streams must tile the file contiguously after the header.
+    expect = header_end
+    for core, _, offset, length in sorted(streams, key=lambda s: s[2]):
+        if offset != expect:
+            fail(f"core {core}: gap or overlap at offset {offset} "
+                 f"(expected {expect})")
+        expect = offset + length
+    if expect != len(data):
+        fail(f"{len(data) - expect} trailing bytes after the last stream")
+
+    hist = {}
+    total = 0
+    for core, op_count, offset, length in streams:
+        for kind, n in decode_stream(
+            data[offset:offset + length], core, op_count
+        ).items():
+            hist[kind] = hist.get(kind, 0) + n
+        total += op_count
+    summary = " ".join(f"{k}:{v}" for k, v in sorted(hist.items()))
+    print(
+        f"validate_tracefile: OK: \"{name}\" v{version}, {cores} cores, "
+        f"{total} ops, {len(data)} bytes ({summary})"
+    )
+
+
+if __name__ == "__main__":
+    main()

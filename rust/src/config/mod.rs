@@ -585,6 +585,35 @@ impl SimConfig {
         if self.cpu.rob_size == 0 || self.cpu.mshrs == 0 {
             bail!("cpu.rob_size and cpu.mshrs must be >= 1");
         }
+        // The OS layer carries frame numbers — and the trace format /
+        // bulk ops carry page counts — as u32, and workload generators
+        // multiply geometry fields before casting down. Reject
+        // configurations whose products leave u32 range instead of
+        // letting them wrap into silent address aliasing.
+        let rows_per_bank = self.dram.subarrays_per_bank as u128
+            * self.dram.rows_per_subarray as u128;
+        if rows_per_bank > u32::MAX as u128 {
+            bail!(
+                "subarrays_per_bank * rows_per_subarray = {rows_per_bank} \
+                 exceeds u32 (row indices would wrap)"
+            );
+        }
+        let frames = rows_per_bank
+            * self.dram.channels as u128
+            * self.dram.ranks as u128
+            * self.dram.banks as u128;
+        if frames > u32::MAX as u128 {
+            bail!(
+                "total row count {frames} exceeds u32 (OS frame numbers \
+                 and bulk-op page counts are u32)"
+            );
+        }
+        if self.dram.columns as u128 * 64 > u32::MAX as u128 {
+            bail!("columns = {} makes a row wider than u32 bytes", self.dram.columns);
+        }
+        if frames * (self.dram.columns as u128 * 64) > usize::MAX as u128 {
+            bail!("dram capacity overflows usize on this platform");
+        }
         if self.lisa.villa
             && self.lisa.fast_subarrays_per_bank >= self.dram.subarrays_per_bank
         {
@@ -774,6 +803,34 @@ mod tests {
     fn invalid_geometry_rejected() {
         assert!(SimConfig::from_toml("[dram]\nbanks = 7\n").is_err());
         assert!(SimConfig::from_toml("[cpu]\ncores = 0\n").is_err());
+    }
+
+    #[test]
+    fn u32_overflowing_geometry_rejected_at_the_boundary() {
+        // Frame numbers and bulk-op page counts are u32 throughout the
+        // OS layer and the trace format; geometry products past u32
+        // used to wrap silently in the generators. The largest
+        // power-of-two grid that still fits must validate, one doubling
+        // past it must not.
+        let mut cfg = SimConfig::default();
+        cfg.dram.subarrays_per_bank = 1 << 16;
+        cfg.dram.rows_per_subarray = 1 << 16;
+        // rows_per_bank = 2^32 > u32::MAX: rejected.
+        assert!(cfg.validate().is_err());
+        cfg.dram.rows_per_subarray = 1 << 15;
+        cfg.dram.channels = 1;
+        cfg.dram.ranks = 1;
+        cfg.dram.banks = 1;
+        cfg.dram.columns = 1;
+        // rows_per_bank = 2^31, total frames = 2^31: fits.
+        cfg.validate().unwrap();
+        // One more doubling anywhere pushes the *total* past u32.
+        cfg.dram.banks = 4;
+        assert!(cfg.validate().is_err());
+        // Row wider than u32 bytes is rejected independently.
+        let mut cfg = SimConfig::default();
+        cfg.dram.columns = 1 << 27;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

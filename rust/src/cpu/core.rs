@@ -422,10 +422,10 @@ impl Core {
                         self.copies_done += 1;
                         true
                     }
-                    OsOutcome::Access { addr, is_write } => {
-                        self.mem_action(addr, is_write, false, hier, mem, now)
+                    OsOutcome::Access { addr, is_write, dependent } => {
+                        self.mem_action(addr, is_write, dependent, hier, mem, now)
                     }
-                    OsOutcome::FaultThenAccess { copies, addr, is_write } => {
+                    OsOutcome::FaultThenAccess { copies, addr, is_write, dependent } => {
                         // The faulting instruction stalls on the page
                         // copies; the translated access then replays as
                         // a synthetic Mem op (cache lookup included).
@@ -435,7 +435,7 @@ impl Core {
                             nonmem: 0,
                             addr,
                             is_write,
-                            dependent: false,
+                            dependent,
                         });
                         true
                     }
@@ -586,7 +586,10 @@ mod tests {
         let trace = vec![
             TraceOp::Bulk { nonmem: 0, op: BulkOp::Zero { va: 0, pages: 2 } },
             TraceOp::Bulk { nonmem: 0, op: BulkOp::Fork },
-            TraceOp::Bulk { nonmem: 0, op: BulkOp::Touch { va: 64, is_write: true } },
+            TraceOp::Bulk {
+                nonmem: 0,
+                op: BulkOp::Touch { va: 64, is_write: true, dependent: false },
+            },
         ];
         let cfg = SimConfig::default();
         let mut core = Core::new(0, Trace::new(trace), &cfg.cpu, 3);

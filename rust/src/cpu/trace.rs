@@ -19,7 +19,14 @@ pub enum BulkOp {
     Fork,
     /// One load/store at a *virtual* address: page-table translation,
     /// demand-zero fill on unmapped pages, CoW break on shared pages.
-    Touch { va: u64, is_write: bool },
+    /// `dependent` marks the access as being on the critical path
+    /// (pointer chasing through the heap): the issue window stalls on
+    /// it just like a dependent `TraceOp::Mem` load.
+    Touch {
+        va: u64,
+        is_write: bool,
+        dependent: bool,
+    },
     /// Checkpoint epoch: bulk-copy every page dirtied since the last
     /// checkpoint to its shadow frame.
     Checkpoint,
@@ -170,7 +177,10 @@ mod tests {
     fn bulk_ops_mark_the_trace_as_os() {
         let t = Trace::new(vec![
             TraceOp::Bulk { nonmem: 5, op: BulkOp::Fork },
-            TraceOp::Bulk { nonmem: 2, op: BulkOp::Touch { va: 8192, is_write: true } },
+            TraceOp::Bulk {
+                nonmem: 2,
+                op: BulkOp::Touch { va: 8192, is_write: true, dependent: false },
+            },
         ]);
         assert!(t.needs_os());
         assert_eq!(t.bulk_ops_per_pass(), 2);

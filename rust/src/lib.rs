@@ -52,5 +52,6 @@ pub mod os;
 #[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workloads;

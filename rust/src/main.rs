@@ -41,6 +41,17 @@ COMMANDS
   lip         E3: linked precharge latency
   area        E8: die area overhead
   exp         declarative experiment grids — see below
+  trace       binary op-trace files (record / convert / info / replay):
+                trace record  --workload NAME --out FILE [--report FILE]
+                trace convert IN OUT [--to jsonl|binary]
+                trace info    FILE
+                trace replay  FILE [--out FILE]
+              record dumps a workload's per-core op streams (any --config /
+              --requests / --seed combination); replay re-drives a simulation
+              from the file, byte-identical to the direct run. Recorded files
+              are also first-class experiment workloads: pass
+              `--workloads trace:FILE` to any `lisa exp` grid (cache keys fold
+              in a digest of the file's content).
 
 Every experiment subcommand accepts [--requests N] [--threads N]
 [--out FILE]; `--threads 0` (or omitting --threads) auto-detects the
@@ -79,6 +90,7 @@ const COMMANDS: &[&str] = &[
     "os",
     "salp",
     "exp",
+    "trace",
 ];
 
 fn usage() -> String {
@@ -164,6 +176,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "exp" => cmd_exp(&args),
+        "trace" => cmd_trace(&args),
         // Legacy experiment subcommands: thin aliases onto the spec
         // registry — same option flags, same pipeline, byte-identical
         // JSON to `lisa exp <spec>`.
@@ -313,6 +326,173 @@ fn cmd_exp(args: &Args) -> Result<()> {
     }
     let s = spec::spec_by_name(name.unwrap())?;
     run_experiment(&s, args)
+}
+
+/// `lisa trace <record|convert|info|replay>` — the trace subsystem's
+/// CLI surface (DESIGN.md §Trace subsystem).
+fn cmd_trace(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("record") => cmd_trace_record(args),
+        Some("convert") => cmd_trace_convert(args),
+        Some("info") => cmd_trace_info(args),
+        Some("replay") => cmd_trace_replay(args),
+        Some(other) => bail!("unknown trace verb '{other}' (record|convert|info|replay)"),
+        None => bail!("usage: lisa trace <record|convert|info|replay> — see `lisa` for details"),
+    }
+}
+
+/// `lisa trace record --workload NAME --out FILE [--report FILE]`:
+/// generate the workload's per-core op streams exactly as a direct
+/// simulation would (same config/requests/seed handling, same op
+/// count) and write them as a binary trace file. With `--report`,
+/// also run the direct simulation and save its report JSON — the
+/// oracle `trace replay --out` output is compared against.
+fn cmd_trace_record(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.opt_or("workload", "stream4");
+    let Some(out) = args.opt("out") else {
+        bail!("trace record needs --out FILE");
+    };
+    let wl = mixes::workload_by_name(name, &cfg)?;
+    let n_ops = lisa::sim::engine::trace_ops_per_core(cfg.requests_per_core);
+    let traces = wl.traces(&cfg, n_ops);
+    lisa::trace::write_trace(Path::new(out), &wl.name, &traces)?;
+    let total: usize = traces.iter().map(|t| t.len()).sum();
+    eprintln!("recorded {} cores / {} ops -> {}", traces.len(), total, out);
+    if let Some(report_path) = args.opt("report") {
+        let report = run_workload(&cfg, &wl);
+        std::fs::write(report_path, report.to_json())?;
+        eprintln!("direct-run report -> {report_path}");
+    }
+    Ok(())
+}
+
+/// `lisa trace convert IN OUT [--to jsonl|binary]`: JSONL ⇄ binary,
+/// direction inferred from the file extensions unless `--to` forces
+/// it. The binary encoder is canonical, so binary → jsonl → binary is
+/// byte-identical (the CI drill `cmp`s exactly that).
+fn cmd_trace_convert(args: &Args) -> Result<()> {
+    let (Some(input), Some(output)) =
+        (args.positional.get(1), args.positional.get(2))
+    else {
+        bail!("usage: lisa trace convert IN OUT [--to jsonl|binary]");
+    };
+    let to_jsonl = match args.opt("to") {
+        Some("jsonl") => true,
+        Some("binary") => false,
+        Some(other) => bail!("--to must be 'jsonl' or 'binary', got '{other}'"),
+        None if output.ends_with(".jsonl") => true,
+        None if input.ends_with(".jsonl") => false,
+        None => bail!(
+            "cannot infer conversion direction from '{input}' -> '{output}'; \
+             pass --to jsonl|binary"
+        ),
+    };
+    if to_jsonl {
+        lisa::trace::jsonl::to_jsonl(Path::new(input), Path::new(output))?;
+    } else {
+        lisa::trace::jsonl::from_jsonl(Path::new(input), Path::new(output))?;
+    }
+    eprintln!("converted {input} -> {output}");
+    Ok(())
+}
+
+/// `lisa trace info FILE`: header + per-core stream stats + an op-kind
+/// histogram, computed streaming — a million-op file is summarized in
+/// one bounded chunk buffer, never materialized.
+fn cmd_trace_info(args: &Args) -> Result<()> {
+    use lisa::cpu::trace::{BulkOp, TraceOp};
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: lisa trace info FILE");
+    };
+    let mut rd = lisa::trace::TraceReader::open(Path::new(path))?;
+    let header = rd.header().clone();
+    println!(
+        "trace: \"{}\"  (format v1, {} cores)",
+        header.name,
+        header.streams.len()
+    );
+    let mut t = Table::new(&["core", "ops", "bytes", "mem", "copy", "bulk", "dependent"]);
+    let mut hist: std::collections::BTreeMap<&'static str, u64> = Default::default();
+    let (mut total_ops, mut total_insts) = (0u64, 0u64);
+    for core in 0..header.streams.len() {
+        let (mut mem, mut copy, mut bulk, mut dep) = (0u64, 0u64, 0u64, 0u64);
+        let mut it = rd.ops(core)?;
+        let mut prev = 0u64;
+        while let Some(op) = it.next_op(&mut prev) {
+            let op = op?;
+            total_ops += 1;
+            total_insts += 1;
+            let kind = match op {
+                TraceOp::Mem { nonmem, dependent, .. } => {
+                    mem += 1;
+                    dep += dependent as u64;
+                    total_insts += nonmem as u64;
+                    "mem"
+                }
+                TraceOp::Copy { nonmem, .. } => {
+                    copy += 1;
+                    total_insts += nonmem as u64;
+                    "copy"
+                }
+                TraceOp::Bulk { nonmem, op } => {
+                    bulk += 1;
+                    total_insts += nonmem as u64;
+                    match op {
+                        BulkOp::Memcpy { .. } => "bulk:memcpy",
+                        BulkOp::Zero { .. } => "bulk:zero",
+                        BulkOp::Fork => "bulk:fork",
+                        BulkOp::Touch { dependent, .. } => {
+                            dep += dependent as u64;
+                            "bulk:touch"
+                        }
+                        BulkOp::Checkpoint => "bulk:checkpoint",
+                        BulkOp::Promote { .. } => "bulk:promote",
+                    }
+                }
+            };
+            *hist.entry(kind).or_default() += 1;
+        }
+        let desc = header.streams[core];
+        t.row(&[
+            format!("{core}"),
+            format!("{}", desc.op_count),
+            format!("{}", desc.len),
+            format!("{mem}"),
+            format!("{copy}"),
+            format!("{bulk}"),
+            format!("{dep}"),
+        ]);
+    }
+    t.print();
+    let parts: Vec<String> =
+        hist.iter().map(|(k, n)| format!("{k}={n}")).collect();
+    println!("op histogram: {}", parts.join("  "));
+    println!(
+        "{total_ops} ops / {total_insts} instructions per pass; reader high water {} bytes",
+        rd.high_water()
+    );
+    Ok(())
+}
+
+/// `lisa trace replay FILE [--out FILE]`: drive a simulation from a
+/// recorded trace. With the same config flags as the recording run,
+/// the report is byte-identical to the direct run's.
+fn cmd_trace_replay(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: lisa trace replay FILE [--out FILE]");
+    };
+    let cfg = load_config(args)?;
+    let wl = lisa::trace::workload_from_file(Path::new(path))?;
+    let report = run_workload(&cfg, &wl);
+    match args.opt("out") {
+        Some(out) => {
+            std::fs::write(out, report.to_json())?;
+            eprintln!("replay report -> {out}");
+        }
+        None => print_report(&report),
+    }
+    Ok(())
 }
 
 /// The one experiment pipeline behind `lisa exp <name>` and every

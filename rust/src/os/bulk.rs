@@ -39,11 +39,22 @@ pub enum OsOutcome {
     /// copy completes (synchronous bulk-op semantics).
     Stall(Vec<u64>),
     /// The primitive is a translated memory access: issue it at the
-    /// returned physical address.
-    Access { addr: u64, is_write: bool },
+    /// returned physical address. `dependent` carries the trace's
+    /// pointer-chase marker through translation so the core stalls its
+    /// window on the access exactly as it would for a dependent load.
+    Access {
+        addr: u64,
+        is_write: bool,
+        dependent: bool,
+    },
     /// A fault (CoW break / demand-zero fill): stall on the copies,
     /// then perform the access at the returned physical address.
-    FaultThenAccess { copies: Vec<u64>, addr: u64, is_write: bool },
+    FaultThenAccess {
+        copies: Vec<u64>,
+        addr: u64,
+        is_write: bool,
+        dependent: bool,
+    },
 }
 
 /// Per-process (= per-core) OS state.
@@ -185,7 +196,9 @@ impl OsLayer {
     /// order and the allocator RNG is seeded from the config.
     pub fn execute(&mut self, core: usize, op: BulkOp, mem: &mut dyn MemoryModel) -> OsOutcome {
         match op {
-            BulkOp::Touch { va, is_write } => self.touch(core, va, is_write, mem),
+            BulkOp::Touch { va, is_write, dependent } => {
+                self.touch(core, va, is_write, dependent, mem)
+            }
             BulkOp::Zero { va, pages } => self.zero(core, va, pages, mem),
             BulkOp::Memcpy { src_va, dst_va, pages } => {
                 self.memcpy(core, src_va, dst_va, pages, mem)
@@ -196,14 +209,25 @@ impl OsLayer {
         }
     }
 
-    fn touch(&mut self, core: usize, va: u64, is_write: bool, mem: &mut dyn MemoryModel) -> OsOutcome {
+    fn touch(
+        &mut self,
+        core: usize,
+        va: u64,
+        is_write: bool,
+        dependent: bool,
+        mem: &mut dyn MemoryModel,
+    ) -> OsOutcome {
         let vpn = va / self.page_bytes;
         match self.procs[core].pt.translate(vpn) {
             Some(e) if !(is_write && e.cow) => {
                 if is_write {
                     self.procs[core].dirty.insert(vpn);
                 }
-                OsOutcome::Access { addr: self.phys(e.frame, va), is_write }
+                OsOutcome::Access {
+                    addr: self.phys(e.frame, va),
+                    is_write,
+                    dependent,
+                }
             }
             Some(e) => {
                 // Write to a CoW page: break the sharing with a page
@@ -220,6 +244,7 @@ impl OsLayer {
                         return OsOutcome::Access {
                             addr: self.phys(e.frame, va),
                             is_write,
+                            dependent,
                         };
                     }
                 };
@@ -231,6 +256,7 @@ impl OsLayer {
                     copies: vec![id],
                     addr: self.phys(new, va),
                     is_write,
+                    dependent,
                 }
             }
             None => {
@@ -248,6 +274,7 @@ impl OsLayer {
                     copies: vec![id],
                     addr: self.phys(f, va),
                     is_write,
+                    dependent,
                 }
             }
         }
@@ -398,10 +425,10 @@ mod tests {
         cfg.lisa.risc = mech == CopyMechanism::LisaRisc;
         cfg.os.placement = placement;
         let ctrl = Controller::new(cfg.clone());
-        (OsLayer::new(&cfg), mem)
+        (OsLayer::new(&cfg), ctrl)
     }
 
-    fn drain(mem: &mut dyn MemoryModel) -> Vec<u64> {
+    fn drain(ctrl: &mut Controller) -> Vec<u64> {
         let mut done = vec![];
         for _ in 0..2_000_000u64 {
             ctrl.tick().unwrap();
@@ -418,7 +445,8 @@ mod tests {
     fn touch_demand_zeroes_then_hits() {
         let (mut os, mut ctrl) =
             setup(CopyMechanism::LisaRisc, PlacementPolicy::SubarrayPacked);
-        let out = os.execute(0, BulkOp::Touch { va: 8192 * 5 + 64, is_write: false }, &mut ctrl);
+        let touch = BulkOp::Touch { va: 8192 * 5 + 64, is_write: false, dependent: false };
+        let out = os.execute(0, touch, &mut ctrl);
         let (copies, addr) = match out {
             OsOutcome::FaultThenAccess { copies, addr, .. } => (copies, addr),
             other => panic!("first touch must demand-fault, got {other:?}"),
@@ -429,8 +457,8 @@ mod tests {
         let done = drain(&mut ctrl);
         assert_eq!(done, copies);
         // Second touch to the same page: plain access, same line.
-        let out2 = os.execute(0, BulkOp::Touch { va: 8192 * 5 + 64, is_write: false }, &mut ctrl);
-        assert_eq!(out2, OsOutcome::Access { addr, is_write: false });
+        let out2 = os.execute(0, touch, &mut ctrl);
+        assert_eq!(out2, OsOutcome::Access { addr, is_write: false, dependent: false });
         assert_eq!(os.mapped_pages(0), 1);
     }
 
@@ -446,16 +474,28 @@ mod tests {
         assert_eq!(os.stats.forks, 1);
         // Read: no fault.
         assert!(matches!(
-            os.execute(0, BulkOp::Touch { va: 0, is_write: false }, &mut ctrl),
+            os.execute(
+                0,
+                BulkOp::Touch { va: 0, is_write: false, dependent: false },
+                &mut ctrl
+            ),
             OsOutcome::Access { .. }
         ));
         // Write: one CoW copy; the repeat write does not fault again.
-        let w = os.execute(0, BulkOp::Touch { va: 0, is_write: true }, &mut ctrl);
+        let w = os.execute(
+            0,
+            BulkOp::Touch { va: 0, is_write: true, dependent: false },
+            &mut ctrl,
+        );
         assert!(matches!(w, OsOutcome::FaultThenAccess { .. }), "{w:?}");
         assert_eq!(os.stats.cow_faults, 1);
         drain(&mut ctrl);
         assert!(matches!(
-            os.execute(0, BulkOp::Touch { va: 0, is_write: true }, &mut ctrl),
+            os.execute(
+                0,
+                BulkOp::Touch { va: 0, is_write: true, dependent: false },
+                &mut ctrl
+            ),
             OsOutcome::Access { .. }
         ));
         assert_eq!(os.stats.cow_faults, 1);
@@ -473,7 +513,11 @@ mod tests {
         drain(&mut ctrl);
         // Touch-write 2 pages; next checkpoint copies exactly 2.
         for p in [1u64, 6] {
-            os.execute(0, BulkOp::Touch { va: p * 8192, is_write: true }, &mut ctrl);
+            os.execute(
+                0,
+                BulkOp::Touch { va: p * 8192, is_write: true, dependent: false },
+                &mut ctrl,
+            );
             drain(&mut ctrl);
         }
         let out = os.execute(0, BulkOp::Checkpoint, &mut ctrl);
@@ -515,7 +559,11 @@ mod tests {
             drain(&mut ctrl);
             os.execute(0, BulkOp::Fork, &mut ctrl);
             for p in 0..32u64 {
-                os.execute(0, BulkOp::Touch { va: p * 8192, is_write: true }, &mut ctrl);
+                os.execute(
+                    0,
+                    BulkOp::Touch { va: p * 8192, is_write: true, dependent: false },
+                    &mut ctrl,
+                );
                 drain(&mut ctrl);
             }
             // Exclude the 32 (always same-bank) zero fills.

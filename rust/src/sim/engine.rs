@@ -42,9 +42,7 @@ impl Simulation {
         workload: Workload,
         mem: Box<dyn MemoryModel>,
     ) -> Self {
-        // Trace length: enough distinct ops before cycling to defeat
-        // trivial trace-level caching, bounded to keep memory sane.
-        let n_ops = (cfg.requests_per_core as usize).clamp(1_000, 200_000);
+        let n_ops = trace_ops_per_core(cfg.requests_per_core);
         let traces = workload.traces(&cfg, n_ops);
         let os = traces.iter().any(|t| t.needs_os()).then(|| OsLayer::new(&cfg));
         let hier = Hierarchy::new(&cfg.cpu);
@@ -89,6 +87,12 @@ impl Simulation {
         let solo = Workload {
             name: format!("{}@core{active_core}", workload.name),
             cores: vec![workload.cores[active_core]],
+            // Trace-backed workloads decompose the same way: the alone
+            // run replays only the active core's recorded stream.
+            source: workload.source.clone().map(|mut s| {
+                s.only_core = Some(active_core);
+                s
+            }),
         };
         Self::new(cfg, solo)
     }
@@ -257,6 +261,15 @@ pub fn config_name(cfg: &SimConfig) -> String {
         parts.push(format!("backend:{}", cfg.backend.name()));
     }
     parts.join("+")
+}
+
+/// Ops generated per core before the trace cycles: enough distinct
+/// ops to defeat trivial trace-level caching, bounded to keep memory
+/// sane. Shared by `Simulation::with_model` and `lisa trace record`,
+/// so a recorded file captures exactly what a direct run feeds the
+/// cores — the record→replay byte-identity contract depends on it.
+pub fn trace_ops_per_core(requests_per_core: u64) -> usize {
+    (requests_per_core as usize).clamp(1_000, 200_000)
 }
 
 /// Run a workload on a config.

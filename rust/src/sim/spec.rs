@@ -8,7 +8,8 @@
 //! the points across the campaign runner and returns a [`Report`] —
 //! one record per point, one JSON serializer for every experiment.
 //! The built-in registry covers the paper's system-level experiments
-//! (`fig3`, `fig4`, `lip-system`, `e9-os`, `e10-salp`, `sweep`); the
+//! (`fig3`, `fig4`, `lip-system`, `e9-os`, `e10-salp`, `e11-gc`,
+//! `sweep`); the
 //! legacy CLI subcommands are thin aliases onto it, and a new scenario
 //! is one more [`ExperimentSpec`] value — no CLI surgery required.
 
@@ -63,7 +64,9 @@ impl AxisKind {
     /// The value set, for generated usage text.
     pub fn choices(&self) -> &'static str {
         match self {
-            Self::Workload => "any suite workload (see `lisa list-workloads`)",
+            Self::Workload => {
+                "any suite workload (see `lisa list-workloads`) or trace:<file>"
+            }
             Self::Mechanism => "memcpy|rc-intra|rc-bank|rc-inter|lisa-risc",
             Self::SalpMode => "none|salp1|salp2|masa",
             Self::Placement => "random|packed|spread|villa-aware",
@@ -381,10 +384,28 @@ pub fn expand(spec: &ExperimentSpec, opts: &RunOptions) -> Result<Vec<GridPoint>
     let base = opts.base.clone().unwrap_or_default();
     // Workloads scale with the base config's core count; the suite is
     // built once and shared by every grid point.
-    let suite: BTreeMap<String, Workload> = mixes::all_mixes(&base)
+    let mut suite: BTreeMap<String, Workload> = mixes::all_mixes(&base)
         .into_iter()
         .map(|w| (w.name.clone(), w))
         .collect();
+    // `trace:<path>` axis values resolve to trace-backed workloads.
+    // Each file is opened, fully validated and digested exactly once
+    // per expansion, keyed by its axis spelling (the path): two grid
+    // points naming the same file share one Workload.
+    for (axis, values) in &axes {
+        if axis.kind != AxisKind::Workload {
+            continue;
+        }
+        for v in values {
+            if let Some(path) = v.strip_prefix("trace:") {
+                if !suite.contains_key(v) {
+                    let wl = crate::trace::workload_from_file(Path::new(path))
+                        .with_context(|| format!("workload '{v}'"))?;
+                    suite.insert(v.clone(), wl);
+                }
+            }
+        }
+    }
     let n_points: usize = axes.iter().map(|(_, v)| v.len()).product();
     let mut points = Vec::with_capacity(n_points);
     let mut idx = vec![0usize; axes.len()];
@@ -737,6 +758,14 @@ fn job_key(eval: Eval, obs: bool, base_toml: &str, points: &[GridPoint]) -> Stri
             text.push(';');
         }
         text.push_str(&p.workload.name);
+        // Trace-backed points fold in the trace file's *content*
+        // digest: editing the file in place changes the key (and so
+        // invalidates journal/cache entries) even though its path —
+        // and therefore the axis coordinates — did not move.
+        if let Some(src) = &p.workload.source {
+            text.push('#');
+            text.push_str(&src.digest);
+        }
         text.push('\n');
         text.push_str(&p.cfg.content_hash());
     }
@@ -1208,6 +1237,39 @@ pub fn registry() -> Vec<ExperimentSpec> {
                     "policies",
                     AxisKind::Placement,
                     strings(&["random", "packed", "spread", "villa-aware"]),
+                ),
+            ],
+        },
+        ExperimentSpec {
+            name: "e11-gc".into(),
+            title: "E11: GC/pointer-chase family (traverse/semispace/mark/generational) × mechanism × placement × SALP"
+                .into(),
+            requests: 2_000,
+            eval: Eval::Raw,
+            axes: vec![
+                AxisDef::new(
+                    "workload",
+                    "workloads",
+                    AxisKind::Workload,
+                    strings(&["gc-chase", "gc-semispace", "gc-mark", "gc-gen"]),
+                ),
+                AxisDef::new(
+                    "mech",
+                    "mechs",
+                    AxisKind::Mechanism,
+                    strings(&["memcpy", "rc-inter", "lisa-risc"]),
+                ),
+                AxisDef::new(
+                    "policy",
+                    "policies",
+                    AxisKind::Placement,
+                    strings(&["random", "packed"]),
+                ),
+                AxisDef::new(
+                    "mode",
+                    "modes",
+                    AxisKind::SalpMode,
+                    strings(&["none", "masa"]),
                 ),
             ],
         },

@@ -1,0 +1,517 @@
+//! The compact binary trace format, version 1.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset 0   magic       b"LISATRCE"                       (8 bytes)
+//!        8   version     u32 = 1                           (4 bytes)
+//!       12   core_count  u32                               (4 bytes)
+//!       16   name_len    u32                               (4 bytes)
+//!       20   name        UTF-8 workload name     (name_len bytes)
+//!        .   directory   core_count x StreamDesc      (24 bytes each)
+//!        .   streams     per-core varint-encoded op streams
+//! ```
+//!
+//! Each `StreamDesc` is `{ op_count: u64, offset: u64, len: u64 }`:
+//! the op count, absolute file offset and byte length of that core's
+//! stream. The directory is fixed-width so the header can be written
+//! before the streams and patched afterwards, and so a reader can
+//! seek straight to any core.
+//!
+//! Ops are encoded as a tag byte followed by LEB128 varints. All
+//! addresses (`addr`, `src`/`dst`, `va`) are zigzag-encoded deltas
+//! against the previous address in the same stream — trace addresses
+//! have strong spatial locality, so deltas keep most addresses to 1-3
+//! bytes. Varints longer than 10 bytes (or with payload bits beyond
+//! the 64th) are rejected as over-long rather than silently wrapped.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cpu::trace::{BulkOp, TraceOp};
+
+pub const MAGIC: [u8; 8] = *b"LISATRCE";
+pub const VERSION: u32 = 1;
+/// Bytes before the (variable-length) name: magic + version +
+/// core_count + name_len.
+pub const FIXED_HEADER_BYTES: u64 = 20;
+pub const STREAM_DESC_BYTES: u64 = 24;
+/// Sanity bounds: a header claiming more is corrupt, not big.
+pub const MAX_CORES: u32 = 4096;
+pub const MAX_NAME_BYTES: u32 = 4096;
+
+/// Op tag bytes.
+pub const TAG_MEM: u8 = 0;
+pub const TAG_COPY: u8 = 1;
+pub const TAG_BULK_MEMCPY: u8 = 2;
+pub const TAG_BULK_ZERO: u8 = 3;
+pub const TAG_BULK_FORK: u8 = 4;
+pub const TAG_BULK_TOUCH: u8 = 5;
+pub const TAG_BULK_CHECKPOINT: u8 = 6;
+pub const TAG_BULK_PROMOTE: u8 = 7;
+
+/// One core stream's directory entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamDesc {
+    pub op_count: u64,
+    /// Absolute file offset of the stream's first byte.
+    pub offset: u64,
+    /// Stream length in bytes.
+    pub len: u64,
+}
+
+/// The decoded file header.
+#[derive(Debug, Clone)]
+pub struct TraceHeader {
+    pub name: String,
+    pub streams: Vec<StreamDesc>,
+}
+
+impl TraceHeader {
+    /// Total header bytes (fixed part + name + directory) for a
+    /// header with this name and core count.
+    pub fn byte_len(name: &str, cores: usize) -> u64 {
+        FIXED_HEADER_BYTES + name.len() as u64 + cores as u64 * STREAM_DESC_BYTES
+    }
+
+    /// Serialize the full header (directory included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            Self::byte_len(&self.name, self.streams.len()) as usize,
+        );
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.streams.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.name.as_bytes());
+        for s in &self.streams {
+            out.extend_from_slice(&s.op_count.to_le_bytes());
+            out.extend_from_slice(&s.offset.to_le_bytes());
+            out.extend_from_slice(&s.len.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and validate the fixed 20-byte prefix; returns
+    /// `(core_count, name_len)`.
+    pub fn decode_fixed(prefix: &[u8; 20]) -> Result<(u32, u32)> {
+        if prefix[0..8] != MAGIC {
+            bail!(
+                "bad magic {:02x?} (expected {:02x?}: not a LISA trace file)",
+                &prefix[0..8],
+                MAGIC
+            );
+        }
+        let version = u32::from_le_bytes(prefix[8..12].try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported trace format version {version} (this build reads {VERSION})");
+        }
+        let core_count = u32::from_le_bytes(prefix[12..16].try_into().unwrap());
+        if core_count == 0 || core_count > MAX_CORES {
+            bail!("implausible core count {core_count} (limit {MAX_CORES})");
+        }
+        let name_len = u32::from_le_bytes(prefix[16..20].try_into().unwrap());
+        if name_len > MAX_NAME_BYTES {
+            bail!("implausible workload name length {name_len} (limit {MAX_NAME_BYTES})");
+        }
+        Ok((core_count, name_len))
+    }
+
+    /// Parse the variable part (name + directory) given the fixed
+    /// prefix results, validating every stream against `file_len`.
+    pub fn decode_tail(
+        core_count: u32,
+        name_len: u32,
+        tail: &[u8],
+        file_len: u64,
+    ) -> Result<TraceHeader> {
+        let need = name_len as usize + (core_count as u64 * STREAM_DESC_BYTES) as usize;
+        if tail.len() != need {
+            bail!("truncated header: {} of {need} bytes", tail.len());
+        }
+        let name = std::str::from_utf8(&tail[..name_len as usize])
+            .context("workload name is not UTF-8")?
+            .to_string();
+        let header_end = FIXED_HEADER_BYTES + need as u64;
+        let mut streams = Vec::with_capacity(core_count as usize);
+        let mut dir = &tail[name_len as usize..];
+        for core in 0..core_count {
+            let op_count = u64::from_le_bytes(dir[0..8].try_into().unwrap());
+            let offset = u64::from_le_bytes(dir[8..16].try_into().unwrap());
+            let len = u64::from_le_bytes(dir[16..24].try_into().unwrap());
+            dir = &dir[24..];
+            if offset < header_end {
+                bail!("core {core} stream offset {offset} overlaps the header");
+            }
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| anyhow!("core {core} stream offset+len overflows"))?;
+            if end > file_len {
+                bail!(
+                    "core {core} stream [{offset}, {end}) runs past end of file ({file_len} bytes)"
+                );
+            }
+            streams.push(StreamDesc { op_count, offset, len });
+        }
+        Ok(TraceHeader { name, streams })
+    }
+}
+
+/// A pull source of bytes for the decoder (a slice, or the reader's
+/// chunked file buffer).
+pub(crate) trait ByteSource {
+    fn next_byte(&mut self) -> Result<u8>;
+}
+
+pub(crate) struct SliceSource<'a> {
+    pub buf: &'a [u8],
+    pub pos: usize,
+}
+
+impl ByteSource for SliceSource<'_> {
+    fn next_byte(&mut self) -> Result<u8> {
+        let b = self
+            .buf
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of data at byte {}", self.pos))?;
+        self.pos += 1;
+        Ok(b)
+    }
+}
+
+/// Append a LEB128 varint (canonical: minimal length).
+pub fn push_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Read a LEB128 varint; over-long encodings (an 11th byte, or
+/// payload bits beyond the 64th) are an error, never a wrap.
+pub(crate) fn read_varint(src: &mut dyn ByteSource) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for i in 0..10 {
+        let b = src.next_byte().context("inside a varint")?;
+        let payload = (b & 0x7f) as u64;
+        if i == 9 && payload > 1 {
+            bail!("over-long varint (10th byte 0x{b:02x} overflows u64)");
+        }
+        v |= payload << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+    bail!("over-long varint (no terminator within 10 bytes)")
+}
+
+pub fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+pub fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+/// Append an address as a zigzag delta against (and updating) `prev`.
+fn push_addr(buf: &mut Vec<u8>, addr: u64, prev: &mut u64) {
+    push_varint(buf, zigzag(addr.wrapping_sub(*prev) as i64));
+    *prev = addr;
+}
+
+fn read_addr(src: &mut dyn ByteSource, prev: &mut u64) -> Result<u64> {
+    let d = unzigzag(read_varint(src)?);
+    let addr = prev.wrapping_add(d as u64);
+    *prev = addr;
+    Ok(addr)
+}
+
+fn flags(is_write: bool, dependent: bool) -> u8 {
+    (is_write as u8) | ((dependent as u8) << 1)
+}
+
+fn read_flags(src: &mut dyn ByteSource) -> Result<(bool, bool)> {
+    let f = src.next_byte().context("inside an access-flags byte")?;
+    if f > 3 {
+        bail!("invalid access-flags byte 0x{f:02x}");
+    }
+    Ok((f & 1 != 0, f & 2 != 0))
+}
+
+fn read_u32(src: &mut dyn ByteSource, what: &str) -> Result<u32> {
+    let v = read_varint(src)?;
+    u32::try_from(v).map_err(|_| anyhow!("{what} {v} exceeds u32"))
+}
+
+/// Encode one op into `buf`, threading the stream's previous-address
+/// state.
+pub fn encode_op(buf: &mut Vec<u8>, op: &TraceOp, prev: &mut u64) {
+    match *op {
+        TraceOp::Mem { nonmem, addr, is_write, dependent } => {
+            buf.push(TAG_MEM);
+            push_varint(buf, nonmem as u64);
+            buf.push(flags(is_write, dependent));
+            push_addr(buf, addr, prev);
+        }
+        TraceOp::Copy { nonmem, src, dst, rows } => {
+            buf.push(TAG_COPY);
+            push_varint(buf, nonmem as u64);
+            push_varint(buf, rows as u64);
+            push_addr(buf, src, prev);
+            push_addr(buf, dst, prev);
+        }
+        TraceOp::Bulk { nonmem, op } => match op {
+            BulkOp::Memcpy { src_va, dst_va, pages } => {
+                buf.push(TAG_BULK_MEMCPY);
+                push_varint(buf, nonmem as u64);
+                push_varint(buf, pages as u64);
+                push_addr(buf, src_va, prev);
+                push_addr(buf, dst_va, prev);
+            }
+            BulkOp::Zero { va, pages } => {
+                buf.push(TAG_BULK_ZERO);
+                push_varint(buf, nonmem as u64);
+                push_varint(buf, pages as u64);
+                push_addr(buf, va, prev);
+            }
+            BulkOp::Fork => {
+                buf.push(TAG_BULK_FORK);
+                push_varint(buf, nonmem as u64);
+            }
+            BulkOp::Touch { va, is_write, dependent } => {
+                buf.push(TAG_BULK_TOUCH);
+                push_varint(buf, nonmem as u64);
+                buf.push(flags(is_write, dependent));
+                push_addr(buf, va, prev);
+            }
+            BulkOp::Checkpoint => {
+                buf.push(TAG_BULK_CHECKPOINT);
+                push_varint(buf, nonmem as u64);
+            }
+            BulkOp::Promote { va } => {
+                buf.push(TAG_BULK_PROMOTE);
+                push_varint(buf, nonmem as u64);
+                push_addr(buf, va, prev);
+            }
+        },
+    }
+}
+
+/// Decode one op, threading the stream's previous-address state.
+pub(crate) fn decode_op(src: &mut dyn ByteSource, prev: &mut u64) -> Result<TraceOp> {
+    let tag = src.next_byte().context("at an op tag")?;
+    let op = match tag {
+        TAG_MEM => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let (is_write, dependent) = read_flags(src)?;
+            let addr = read_addr(src, prev)?;
+            TraceOp::Mem { nonmem, addr, is_write, dependent }
+        }
+        TAG_COPY => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let rows = read_u32(src, "rows")?;
+            let src_a = read_addr(src, prev)?;
+            let dst_a = read_addr(src, prev)?;
+            TraceOp::Copy { nonmem, src: src_a, dst: dst_a, rows }
+        }
+        TAG_BULK_MEMCPY => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let pages = read_u32(src, "pages")?;
+            let src_va = read_addr(src, prev)?;
+            let dst_va = read_addr(src, prev)?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Memcpy { src_va, dst_va, pages } }
+        }
+        TAG_BULK_ZERO => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let pages = read_u32(src, "pages")?;
+            let va = read_addr(src, prev)?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Zero { va, pages } }
+        }
+        TAG_BULK_FORK => {
+            let nonmem = read_u32(src, "nonmem")?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Fork }
+        }
+        TAG_BULK_TOUCH => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let (is_write, dependent) = read_flags(src)?;
+            let va = read_addr(src, prev)?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Touch { va, is_write, dependent } }
+        }
+        TAG_BULK_CHECKPOINT => {
+            let nonmem = read_u32(src, "nonmem")?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Checkpoint }
+        }
+        TAG_BULK_PROMOTE => {
+            let nonmem = read_u32(src, "nonmem")?;
+            let va = read_addr(src, prev)?;
+            TraceOp::Bulk { nonmem, op: BulkOp::Promote { va } }
+        }
+        other => bail!("unknown op tag 0x{other:02x}"),
+    };
+    Ok(op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_one(v: u64) {
+        let mut buf = Vec::new();
+        push_varint(&mut buf, v);
+        assert!(buf.len() <= 10);
+        let mut s = SliceSource { buf: &buf, pos: 0 };
+        assert_eq!(read_varint(&mut s).unwrap(), v);
+        assert_eq!(s.pos, buf.len(), "varint for {v} left trailing bytes");
+    }
+
+    #[test]
+    fn varints_round_trip() {
+        for v in [0u64, 1, 127, 128, 300, 1 << 20, u32::MAX as u64, u64::MAX] {
+            roundtrip_one(v);
+        }
+    }
+
+    #[test]
+    fn over_long_varints_are_rejected() {
+        // 11 continuation bytes: no terminator within the limit.
+        let buf = [0x80u8; 11];
+        let mut s = SliceSource { buf: &buf, pos: 0 };
+        let err = read_varint(&mut s).unwrap_err().to_string();
+        assert!(err.contains("over-long"), "{err}");
+        // 10 bytes but the last one carries payload beyond bit 63.
+        let mut buf = vec![0x80u8; 9];
+        buf.push(0x02);
+        let mut s = SliceSource { buf: &buf, pos: 0 };
+        let err = read_varint(&mut s).unwrap_err().to_string();
+        assert!(err.contains("over-long"), "{err}");
+        // u64::MAX itself is fine (10th byte is 0x01).
+        roundtrip_one(u64::MAX);
+    }
+
+    #[test]
+    fn zigzag_round_trips_extremes() {
+        for d in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(d)), d);
+        }
+        // Small magnitudes get small codes (the point of zigzag).
+        assert!(zigzag(-1) < 8 && zigzag(1) < 8);
+    }
+
+    #[test]
+    fn every_op_kind_round_trips() {
+        let ops = vec![
+            TraceOp::Mem { nonmem: 3, addr: 0xdead_beef, is_write: true, dependent: false },
+            TraceOp::Mem { nonmem: 0, addr: 0xdead_bf4f, is_write: false, dependent: true },
+            TraceOp::Copy { nonmem: 10, src: 8192, dst: 1 << 30, rows: 4 },
+            TraceOp::Bulk {
+                nonmem: 20,
+                op: BulkOp::Memcpy { src_va: 0, dst_va: 1 << 40, pages: 16 },
+            },
+            TraceOp::Bulk { nonmem: 20, op: BulkOp::Zero { va: 64, pages: 64 } },
+            TraceOp::Bulk { nonmem: 60, op: BulkOp::Fork },
+            TraceOp::Bulk {
+                nonmem: 4,
+                op: BulkOp::Touch { va: 12288, is_write: true, dependent: true },
+            },
+            TraceOp::Bulk { nonmem: 20, op: BulkOp::Checkpoint },
+            TraceOp::Bulk { nonmem: 20, op: BulkOp::Promote { va: u64::MAX - 63 } },
+        ];
+        let mut buf = Vec::new();
+        let mut prev = 0u64;
+        for op in &ops {
+            encode_op(&mut buf, op, &mut prev);
+        }
+        let mut s = SliceSource { buf: &buf, pos: 0 };
+        let mut prev = 0u64;
+        let back: Vec<TraceOp> =
+            (0..ops.len()).map(|_| decode_op(&mut s, &mut prev).unwrap()).collect();
+        assert_eq!(back, ops);
+        assert_eq!(s.pos, buf.len(), "decoder left trailing bytes");
+    }
+
+    #[test]
+    fn nearby_addresses_encode_compactly() {
+        // A 64-byte-stride stream: after the first op, each Mem op is
+        // tag + nonmem + flags + 1-2 byte delta.
+        let mut buf = Vec::new();
+        let mut prev = 0u64;
+        for i in 0..100u64 {
+            encode_op(
+                &mut buf,
+                &TraceOp::Mem {
+                    nonmem: 4,
+                    addr: (40 << 30) + i * 64,
+                    is_write: false,
+                    dependent: false,
+                },
+                &mut prev,
+            );
+        }
+        assert!(buf.len() < 100 * 6, "{} bytes for 100 strided ops", buf.len());
+    }
+
+    #[test]
+    fn header_encodes_and_decodes() {
+        let h = TraceHeader {
+            name: "gc-chase".into(),
+            streams: vec![
+                StreamDesc { op_count: 10, offset: 76, len: 40 },
+                StreamDesc { op_count: 5, offset: 116, len: 21 },
+            ],
+        };
+        let bytes = h.encode();
+        assert_eq!(bytes.len() as u64, TraceHeader::byte_len("gc-chase", 2));
+        let fixed: [u8; 20] = bytes[..20].try_into().unwrap();
+        let (cores, name_len) = TraceHeader::decode_fixed(&fixed).unwrap();
+        assert_eq!((cores, name_len), (2, 8));
+        let back = TraceHeader::decode_tail(cores, name_len, &bytes[20..], 137).unwrap();
+        assert_eq!(back.name, h.name);
+        assert_eq!(back.streams, h.streams);
+    }
+
+    #[test]
+    fn corrupt_headers_are_contextual_errors() {
+        let h = TraceHeader {
+            name: "x".into(),
+            streams: vec![StreamDesc { op_count: 1, offset: 45, len: 5 }],
+        };
+        let good = h.encode();
+        let file_len = 50u64;
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        let fixed: [u8; 20] = bad[..20].try_into().unwrap();
+        let err = TraceHeader::decode_fixed(&fixed).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        // Wrong version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        let fixed: [u8; 20] = bad[..20].try_into().unwrap();
+        let err = TraceHeader::decode_fixed(&fixed).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+
+        // Stream running past EOF.
+        let fixed: [u8; 20] = good[..20].try_into().unwrap();
+        let (c, n) = TraceHeader::decode_fixed(&fixed).unwrap();
+        let err = TraceHeader::decode_tail(c, n, &good[20..], 47).unwrap_err().to_string();
+        assert!(err.contains("past end of file"), "{err}");
+
+        // Stream overlapping the header.
+        let mut bad = good.clone();
+        // offset field of stream 0 lives at 20 + name_len(1) + 8.
+        bad[29..37].copy_from_slice(&3u64.to_le_bytes());
+        let err = TraceHeader::decode_tail(c, n, &bad[20..], file_len)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overlaps the header"), "{err}");
+    }
+}

@@ -1,0 +1,266 @@
+//! JSONL ⇄ binary trace conversion.
+//!
+//! The JSONL form is the human-readable / toolable view: a header
+//! line followed by one op per line. The binary→JSONL direction
+//! streams (one op resident at a time); JSONL→binary groups ops per
+//! core in memory before writing — acceptable because only the binary
+//! reader carries the memory-bounded contract.
+//!
+//! The binary encoder is canonical (minimal varints, fixed field
+//! order), so binary → JSONL → binary reproduces the original file
+//! byte for byte.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cpu::trace::{BulkOp, Trace, TraceOp};
+use crate::metrics::json::string as jstr;
+use crate::trace::format::{MAX_CORES, VERSION};
+use crate::trace::reader::TraceReader;
+use crate::trace::writer::write_trace;
+use crate::util::json::{self, Value};
+
+fn op_line(core: usize, op: &TraceOp) -> String {
+    match *op {
+        TraceOp::Mem { nonmem, addr, is_write, dependent } => format!(
+            "{{\"core\":{core},\"op\":\"mem\",\"nonmem\":{nonmem},\"addr\":{addr},\"write\":{is_write},\"dep\":{dependent}}}"
+        ),
+        TraceOp::Copy { nonmem, src, dst, rows } => format!(
+            "{{\"core\":{core},\"op\":\"copy\",\"nonmem\":{nonmem},\"src\":{src},\"dst\":{dst},\"rows\":{rows}}}"
+        ),
+        TraceOp::Bulk { nonmem, op } => match op {
+            BulkOp::Memcpy { src_va, dst_va, pages } => format!(
+                "{{\"core\":{core},\"op\":\"memcpy\",\"nonmem\":{nonmem},\"src_va\":{src_va},\"dst_va\":{dst_va},\"pages\":{pages}}}"
+            ),
+            BulkOp::Zero { va, pages } => format!(
+                "{{\"core\":{core},\"op\":\"zero\",\"nonmem\":{nonmem},\"va\":{va},\"pages\":{pages}}}"
+            ),
+            BulkOp::Fork => {
+                format!("{{\"core\":{core},\"op\":\"fork\",\"nonmem\":{nonmem}}}")
+            }
+            BulkOp::Touch { va, is_write, dependent } => format!(
+                "{{\"core\":{core},\"op\":\"touch\",\"nonmem\":{nonmem},\"va\":{va},\"write\":{is_write},\"dep\":{dependent}}}"
+            ),
+            BulkOp::Checkpoint => {
+                format!("{{\"core\":{core},\"op\":\"checkpoint\",\"nonmem\":{nonmem}}}")
+            }
+            BulkOp::Promote { va } => format!(
+                "{{\"core\":{core},\"op\":\"promote\",\"nonmem\":{nonmem},\"va\":{va}}}"
+            ),
+        },
+    }
+}
+
+/// Convert a binary trace file to JSONL, streaming op by op.
+pub fn to_jsonl(src: &Path, dst: &Path) -> Result<()> {
+    let mut rd = TraceReader::open(src)?;
+    let out = File::create(dst)
+        .with_context(|| format!("creating {}", dst.display()))?;
+    let mut w = BufWriter::new(out);
+    writeln!(
+        w,
+        "{{\"trace\":{},\"version\":{VERSION},\"cores\":{}}}",
+        jstr(&rd.header().name),
+        rd.header().streams.len()
+    )?;
+    let cores = rd.header().streams.len();
+    for core in 0..cores {
+        let mut it = rd.ops(core)?;
+        let mut prev = 0u64;
+        while let Some(op) = it.next_op(&mut prev) {
+            let op = op?;
+            writeln!(w, "{}", op_line(core, &op))?;
+        }
+    }
+    w.into_inner()
+        .map_err(|e| anyhow!("flushing {}: {e}", dst.display()))?;
+    Ok(())
+}
+
+fn field<'a>(v: &'a Value, key: &str, line_no: usize) -> Result<&'a Value> {
+    v.get(key)
+        .ok_or_else(|| anyhow!("line {line_no}: missing field \"{key}\""))
+}
+
+fn field_u64(v: &Value, key: &str, line_no: usize) -> Result<u64> {
+    field(v, key, line_no)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("line {line_no}: field \"{key}\" is not a u64"))
+}
+
+fn field_u32(v: &Value, key: &str, line_no: usize) -> Result<u32> {
+    let n = field_u64(v, key, line_no)?;
+    u32::try_from(n).map_err(|_| anyhow!("line {line_no}: field \"{key}\" = {n} exceeds u32"))
+}
+
+fn field_bool(v: &Value, key: &str, line_no: usize) -> Result<bool> {
+    field(v, key, line_no)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("line {line_no}: field \"{key}\" is not a bool"))
+}
+
+fn parse_op(v: &Value, line_no: usize) -> Result<TraceOp> {
+    let kind = field(v, "op", line_no)?
+        .as_str()
+        .ok_or_else(|| anyhow!("line {line_no}: field \"op\" is not a string"))?;
+    let nonmem = field_u32(v, "nonmem", line_no)?;
+    let op = match kind {
+        "mem" => TraceOp::Mem {
+            nonmem,
+            addr: field_u64(v, "addr", line_no)?,
+            is_write: field_bool(v, "write", line_no)?,
+            dependent: field_bool(v, "dep", line_no)?,
+        },
+        "copy" => TraceOp::Copy {
+            nonmem,
+            src: field_u64(v, "src", line_no)?,
+            dst: field_u64(v, "dst", line_no)?,
+            rows: field_u32(v, "rows", line_no)?,
+        },
+        "memcpy" => TraceOp::Bulk {
+            nonmem,
+            op: BulkOp::Memcpy {
+                src_va: field_u64(v, "src_va", line_no)?,
+                dst_va: field_u64(v, "dst_va", line_no)?,
+                pages: field_u32(v, "pages", line_no)?,
+            },
+        },
+        "zero" => TraceOp::Bulk {
+            nonmem,
+            op: BulkOp::Zero {
+                va: field_u64(v, "va", line_no)?,
+                pages: field_u32(v, "pages", line_no)?,
+            },
+        },
+        "fork" => TraceOp::Bulk { nonmem, op: BulkOp::Fork },
+        "touch" => TraceOp::Bulk {
+            nonmem,
+            op: BulkOp::Touch {
+                va: field_u64(v, "va", line_no)?,
+                is_write: field_bool(v, "write", line_no)?,
+                dependent: field_bool(v, "dep", line_no)?,
+            },
+        },
+        "checkpoint" => TraceOp::Bulk { nonmem, op: BulkOp::Checkpoint },
+        "promote" => TraceOp::Bulk {
+            nonmem,
+            op: BulkOp::Promote { va: field_u64(v, "va", line_no)? },
+        },
+        other => bail!("line {line_no}: unknown op kind \"{other}\""),
+    };
+    Ok(op)
+}
+
+/// Convert a JSONL trace to the binary format.
+pub fn from_jsonl(src: &Path, dst: &Path) -> Result<()> {
+    let file = File::open(src)
+        .with_context(|| format!("opening {}", src.display()))?;
+    let mut lines = BufReader::new(file).lines();
+
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow!("{}: empty file (expected a header line)", src.display()))?
+        .context("reading JSONL header line")?;
+    let header = json::parse(&header_line)
+        .with_context(|| format!("{}: line 1 is not valid JSON", src.display()))?;
+    let name = field(&header, "trace", 1)?
+        .as_str()
+        .ok_or_else(|| anyhow!("line 1: field \"trace\" is not a string"))?
+        .to_string();
+    let version = field_u64(&header, "version", 1)?;
+    if version != VERSION as u64 {
+        bail!("{}: unsupported trace version {version} (this build reads {VERSION})", src.display());
+    }
+    let cores = field_u64(&header, "cores", 1)?;
+    if cores == 0 || cores > MAX_CORES as u64 {
+        bail!("{}: implausible core count {cores} (limit {MAX_CORES})", src.display());
+    }
+
+    let mut per_core: Vec<Vec<TraceOp>> = vec![Vec::new(); cores as usize];
+    for (i, line) in lines.enumerate() {
+        let line_no = i + 2;
+        let line = line.with_context(|| format!("reading line {line_no}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(&line)
+            .with_context(|| format!("{}: line {line_no} is not valid JSON", src.display()))?;
+        let core = field_u64(&v, "core", line_no)? as usize;
+        if core >= per_core.len() {
+            bail!("line {line_no}: core {core} out of range (header declares {cores})");
+        }
+        per_core[core].push(parse_op(&v, line_no)?);
+    }
+
+    let traces: Vec<Trace> = per_core.into_iter().map(Trace::new).collect();
+    for (core, t) in traces.iter().enumerate() {
+        if t.ops.is_empty() {
+            bail!("{}: core {core} has no ops", src.display());
+        }
+    }
+    write_trace(dst, &name, &traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lisa-trace-jsonl-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn binary_jsonl_binary_is_byte_identical() {
+        let t0 = Trace::new(vec![
+            TraceOp::Mem { nonmem: 4, addr: 1 << 33, is_write: false, dependent: true },
+            TraceOp::Bulk {
+                nonmem: 20,
+                op: BulkOp::Memcpy { src_va: 0, dst_va: 1 << 20, pages: 8 },
+            },
+            TraceOp::Bulk { nonmem: 60, op: BulkOp::Fork },
+            TraceOp::Bulk { nonmem: 20, op: BulkOp::Checkpoint },
+        ]);
+        let t1 = Trace::new(vec![
+            TraceOp::Copy { nonmem: 10, src: 8192, dst: 16384, rows: 2 },
+            TraceOp::Bulk { nonmem: 4, op: BulkOp::Promote { va: 1 << 21 } },
+            TraceOp::Bulk { nonmem: 4, op: BulkOp::Zero { va: 0, pages: 64 } },
+            TraceOp::Bulk {
+                nonmem: 4,
+                op: BulkOp::Touch { va: 4096, is_write: true, dependent: false },
+            },
+        ]);
+        let bin1 = tmp("a.trc");
+        let jsonl = tmp("a.jsonl");
+        let bin2 = tmp("a2.trc");
+        write_trace(&bin1, "mix \"quoted\"", &[t0, t1]).unwrap();
+        to_jsonl(&bin1, &jsonl).unwrap();
+        from_jsonl(&jsonl, &bin2).unwrap();
+        let b1 = std::fs::read(&bin1).unwrap();
+        let b2 = std::fs::read(&bin2).unwrap();
+        assert_eq!(b1, b2, "binary -> jsonl -> binary changed bytes");
+        for p in [&bin1, &jsonl, &bin2] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn malformed_jsonl_is_a_contextual_error() {
+        let p = tmp("bad.jsonl");
+        std::fs::write(
+            &p,
+            "{\"trace\":\"x\",\"version\":1,\"cores\":1}\n{\"core\":0,\"op\":\"warp\",\"nonmem\":1}\n",
+        )
+        .unwrap();
+        let err = format!("{:#}", from_jsonl(&p, &tmp("bad.trc")).unwrap_err());
+        assert!(err.contains("unknown op kind"), "{err}");
+        std::fs::write(&p, "{\"trace\":\"x\",\"version\":7,\"cores\":1}\n").unwrap();
+        let err = format!("{:#}", from_jsonl(&p, &tmp("bad.trc")).unwrap_err());
+        assert!(err.contains("version 7"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,203 @@
+//! Trace subsystem: a versioned compact binary format for recorded
+//! `TraceOp` streams, with a streaming memory-bounded reader, a
+//! writer, and JSONL conversion (DESIGN.md §Trace subsystem).
+//!
+//! A trace file captures the per-core op streams a workload feeds the
+//! simulator, so any run can be recorded once and replayed exactly —
+//! under either backend, any mechanism/placement/SALP configuration —
+//! or shipped between machines as a compact artifact. Trace-backed
+//! workloads are first-class: `trace:<path>` is a valid workload axis
+//! value, and cache/journal keys fold in a digest of the file's
+//! *content* (not its path), so editing a trace in place invalidates
+//! cached results.
+
+pub mod format;
+pub mod jsonl;
+pub mod reader;
+pub mod writer;
+
+use std::fs::File;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cpu::trace::Trace;
+use crate::util::hash::StreamDigest;
+use crate::workloads::generators::{CoreSpec, WorkloadKind};
+use crate::workloads::Workload;
+
+pub use reader::TraceReader;
+pub use writer::write_trace;
+
+/// A validated, content-addressed reference to a trace file, carried
+/// by trace-backed `Workload`s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSource {
+    pub path: PathBuf,
+    /// Content digest of the whole file (folds into cache/journal
+    /// keys so results are keyed by what the trace *is*, not where it
+    /// lives).
+    pub digest: String,
+    /// Set by alone-run decomposition: load only this core's stream.
+    pub only_core: Option<usize>,
+}
+
+impl TraceSource {
+    /// Decode the per-core op streams (or just `only_core`'s). The
+    /// file was validated at workload-build time, so errors here mean
+    /// it changed underfoot.
+    pub fn load_traces(&self) -> Result<Vec<Trace>> {
+        let mut rd = TraceReader::open(&self.path)?;
+        let cores = rd.header().streams.len();
+        let picked: Vec<usize> = match self.only_core {
+            Some(c) => {
+                if c >= cores {
+                    bail!(
+                        "core {c} out of range ({} has {cores} streams)",
+                        self.path.display()
+                    );
+                }
+                vec![c]
+            }
+            None => (0..cores).collect(),
+        };
+        picked
+            .into_iter()
+            .map(|core| Ok(Trace::new(rd.ops(core)?.collect_ops()?)))
+            .collect()
+    }
+}
+
+/// Content digest of any file, streamed in bounded chunks.
+/// `util::hash::StreamDigest` is chunking-invariant, so this equals a
+/// single-shot digest of the whole file.
+pub fn file_digest(path: &Path) -> Result<String> {
+    let mut f = File::open(path)
+        .with_context(|| format!("opening {} for digest", path.display()))?;
+    let mut digest = StreamDigest::new();
+    let mut buf = vec![0u8; 64 << 10];
+    loop {
+        let n = f
+            .read(&mut buf)
+            .with_context(|| format!("digesting {}", path.display()))?;
+        if n == 0 {
+            break;
+        }
+        digest.update(&buf[..n]);
+    }
+    Ok(digest.finish())
+}
+
+/// Build a trace-backed `Workload` from a file: validate the whole
+/// file up front (header, every op of every stream, no empty
+/// streams), then digest its content. Core specs are placeholders —
+/// the recorded streams themselves carry all behaviour.
+pub fn workload_from_file(path: &Path) -> Result<Workload> {
+    let mut rd = TraceReader::open(path)?;
+    let cores = rd.header().streams.len();
+    let name = rd.header().name.clone();
+    for core in 0..cores {
+        if rd.header().streams[core].op_count == 0 {
+            bail!(
+                "{}: core {core} has an empty op stream (replay cycles over ops)",
+                path.display()
+            );
+        }
+        let mut it = rd.ops(core)?;
+        let mut prev = 0u64;
+        let mut n = 0u64;
+        while let Some(op) = it.next_op(&mut prev) {
+            op.with_context(|| format!("validating {}", path.display()))?;
+            n += 1;
+        }
+        debug_assert_eq!(n, rd.header().streams[core].op_count);
+    }
+    let digest = file_digest(path)?;
+    let placeholder =
+        CoreSpec { kind: WorkloadKind::Random, wss: 0, nonmem: 0, write_frac: 0.0 };
+    Ok(Workload {
+        name,
+        cores: vec![placeholder; cores],
+        source: Some(TraceSource { path: path.to_path_buf(), digest, only_core: None }),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::trace::{BulkOp, TraceOp};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lisa-trace-mod-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Vec<Trace> {
+        vec![
+            Trace::new(vec![
+                TraceOp::Mem { nonmem: 4, addr: 64, is_write: false, dependent: false },
+                TraceOp::Bulk {
+                    nonmem: 4,
+                    op: BulkOp::Touch { va: 8192, is_write: true, dependent: true },
+                },
+            ]),
+            Trace::new(vec![TraceOp::Copy { nonmem: 10, src: 0, dst: 8192, rows: 1 }]),
+        ]
+    }
+
+    #[test]
+    fn workload_from_file_validates_and_digests() {
+        let p = tmp("wl.trc");
+        write_trace(&p, "sample", &sample()).unwrap();
+        let wl = workload_from_file(&p).unwrap();
+        assert_eq!(wl.name, "sample");
+        assert_eq!(wl.cores.len(), 2);
+        let src = wl.source.as_ref().unwrap();
+        // The chunked file digest must equal a single-shot digest of
+        // the same bytes (StreamDigest is chunking-invariant).
+        let mut oneshot = StreamDigest::new();
+        oneshot.update(&std::fs::read(&p).unwrap());
+        assert_eq!(src.digest, oneshot.finish());
+        assert_eq!(src.digest.len(), 32);
+        assert_eq!(src.only_core, None);
+        // only_core narrows the load to one stream.
+        let mut narrowed = src.clone();
+        narrowed.only_core = Some(1);
+        let traces = narrowed.load_traces().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].ops, sample()[1].ops);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_files_never_build_workloads() {
+        let p = tmp("bad.trc");
+        write_trace(&p, "sample", &sample()).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // Truncated mid-stream.
+        std::fs::write(&p, &good[..good.len() - 1]).unwrap();
+        let err = format!("{:#}", workload_from_file(&p).unwrap_err());
+        assert!(
+            err.contains("past end of file") || err.contains("truncated"),
+            "{err}"
+        );
+
+        // Truncated mid-header.
+        std::fs::write(&p, &good[..10]).unwrap();
+        let err = format!("{:#}", workload_from_file(&p).unwrap_err());
+        assert!(err.contains("header"), "{err}");
+
+        // Garbage op bytes inside a stream (flip a tag to an unknown
+        // value). Stream 0 starts right after the header.
+        let mut bad = good.clone();
+        let stream0 = (format::TraceHeader::byte_len("sample", 2)) as usize;
+        bad[stream0] = 0xee;
+        std::fs::write(&p, &bad).unwrap();
+        let err = format!("{:#}", workload_from_file(&p).unwrap_err());
+        assert!(err.contains("unknown op tag"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+}

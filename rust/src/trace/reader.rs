@@ -1,0 +1,191 @@
+//! Streaming trace reader.
+//!
+//! The reader never materializes a stream: ops are decoded out of a
+//! fixed-size chunk buffer (64 KiB) refilled from the file on demand,
+//! so a million-op trace costs the same resident memory as a
+//! hundred-op one. `high_water()` reports the largest number of bytes
+//! the reader ever held at once (header + chunk buffer) and is what
+//! the memory-bound regression test asserts on.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cpu::trace::TraceOp;
+use crate::trace::format::{self, ByteSource, StreamDesc, TraceHeader, FIXED_HEADER_BYTES};
+
+/// Chunk buffer size. The memory-bound contract: resident bytes never
+/// exceed the header plus one chunk.
+pub const CHUNK_BYTES: usize = 64 << 10;
+
+pub struct TraceReader {
+    file: File,
+    header: TraceHeader,
+    /// Largest resident byte count (header + chunk buffer) observed.
+    high_water: usize,
+    header_bytes: usize,
+}
+
+impl TraceReader {
+    pub fn open(path: &Path) -> Result<TraceReader> {
+        let mut file = File::open(path)
+            .with_context(|| format!("opening trace file {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        let mut fixed = [0u8; FIXED_HEADER_BYTES as usize];
+        file.read_exact(&mut fixed).with_context(|| {
+            format!("truncated trace file {} (no header)", path.display())
+        })?;
+        let (core_count, name_len) = TraceHeader::decode_fixed(&fixed)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let tail_len = TraceHeader::byte_len("", core_count as usize) as usize
+            - FIXED_HEADER_BYTES as usize
+            + name_len as usize;
+        let mut tail = vec![0u8; tail_len];
+        file.read_exact(&mut tail).with_context(|| {
+            format!("truncated trace file {} (header cut short)", path.display())
+        })?;
+        let header = TraceHeader::decode_tail(core_count, name_len, &tail, file_len)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let header_bytes = FIXED_HEADER_BYTES as usize + tail_len;
+        Ok(TraceReader { file, header, high_water: header_bytes, header_bytes })
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Iterate core `core`'s ops, decoding out of a bounded chunk
+    /// buffer. The iterator yields exactly `op_count` results (fusing
+    /// after the first error) and verifies the stream consumes
+    /// exactly its directory-declared byte length.
+    pub fn ops(&mut self, core: usize) -> Result<OpIter<'_>> {
+        let n = self.header.streams.len();
+        if core >= n {
+            bail!("core {core} out of range (trace has {n} streams)");
+        }
+        let desc = self.header.streams[core];
+        self.file
+            .seek(SeekFrom::Start(desc.offset))
+            .with_context(|| format!("seeking to core {core} stream"))?;
+        Ok(OpIter {
+            rd: self,
+            desc,
+            core,
+            buf: Vec::new(),
+            pos: 0,
+            consumed: 0,
+            emitted: 0,
+            failed: false,
+        })
+    }
+}
+
+pub struct OpIter<'a> {
+    rd: &'a mut TraceReader,
+    desc: StreamDesc,
+    core: usize,
+    buf: Vec<u8>,
+    /// Cursor within `buf`.
+    pos: usize,
+    /// Stream bytes consumed so far (across all refills), including
+    /// the unread remainder of the current buffer's fill.
+    consumed: u64,
+    emitted: u64,
+    failed: bool,
+}
+
+impl OpIter<'_> {
+    /// Address-delta state lives in the iterator between ops.
+    fn decode_next(&mut self, prev: &mut u64) -> Result<TraceOp> {
+        format::decode_op(self, prev)
+    }
+}
+
+impl ByteSource for OpIter<'_> {
+    fn next_byte(&mut self) -> Result<u8> {
+        if self.pos == self.buf.len() {
+            let remaining = self.desc.len - self.consumed;
+            if remaining == 0 {
+                bail!(
+                    "core {} stream truncated: op {} of {} cut short",
+                    self.core,
+                    self.emitted + 1,
+                    self.desc.op_count
+                );
+            }
+            let take = remaining.min(CHUNK_BYTES as u64) as usize;
+            self.buf.resize(take, 0);
+            self.rd.file.read_exact(&mut self.buf).with_context(|| {
+                format!("reading core {} stream (file shorter than its directory claims)", self.core)
+            })?;
+            self.consumed += take as u64;
+            self.pos = 0;
+            let resident = self.rd.header_bytes + self.buf.len();
+            if resident > self.rd.high_water {
+                self.rd.high_water = resident;
+            }
+        }
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+}
+
+impl OpIter<'_> {
+    /// Pull the next op; `None` once `op_count` ops have been decoded
+    /// and the stream verified to end exactly on its declared length.
+    pub fn next_op(&mut self, prev: &mut u64) -> Option<Result<TraceOp>> {
+        if self.failed {
+            return None;
+        }
+        if self.emitted == self.desc.op_count {
+            // Exact-length check: no trailing bytes allowed.
+            let left_in_buf = (self.buf.len() - self.pos) as u64;
+            let unread = self.desc.len - self.consumed + left_in_buf;
+            if unread > 0 {
+                self.failed = true;
+                return Some(Err(anyhow::anyhow!(
+                    "core {} stream has {unread} trailing bytes after its {} declared ops",
+                    self.core,
+                    self.desc.op_count
+                )));
+            }
+            return None;
+        }
+        let idx = self.emitted;
+        match self.decode_next(prev) {
+            Ok(op) => {
+                self.emitted += 1;
+                Some(Ok(op))
+            }
+            Err(e) => {
+                self.failed = true;
+                Some(Err(e.context(format!(
+                    "decoding core {} op {idx} (of {})",
+                    self.core, self.desc.op_count
+                ))))
+            }
+        }
+    }
+
+    /// Convenience: drain the whole stream into a Vec (used by the
+    /// replay loader, which needs materialized per-core traces
+    /// anyway — the simulator's cores cycle over them).
+    pub fn collect_ops(mut self) -> Result<Vec<TraceOp>> {
+        let mut out = Vec::with_capacity(self.desc.op_count.min(1 << 20) as usize);
+        let mut prev = 0u64;
+        while let Some(op) = self.next_op(&mut prev) {
+            out.push(op?);
+        }
+        Ok(out)
+    }
+}

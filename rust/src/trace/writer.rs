@@ -1,0 +1,150 @@
+//! Trace file writer.
+//!
+//! Streams each core's ops through a bounded buffer (flushed every 64
+//! KiB) while tracking stream offsets, then seeks back and patches
+//! the fixed-width directory. Writing is as memory-bounded as
+//! reading.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cpu::trace::Trace;
+use crate::trace::format::{
+    self, StreamDesc, TraceHeader, MAX_CORES, MAX_NAME_BYTES,
+};
+use crate::trace::reader::CHUNK_BYTES;
+
+/// Write `traces` (one per core) as a binary trace file named `name`.
+pub fn write_trace(path: &Path, name: &str, traces: &[Trace]) -> Result<()> {
+    if traces.is_empty() || traces.len() > MAX_CORES as usize {
+        bail!("trace must have 1..={MAX_CORES} core streams, got {}", traces.len());
+    }
+    if name.len() > MAX_NAME_BYTES as usize {
+        bail!("workload name is {} bytes (limit {MAX_NAME_BYTES})", name.len());
+    }
+    for (core, t) in traces.iter().enumerate() {
+        if t.ops.is_empty() {
+            bail!("core {core} has an empty op stream (replay cycles over ops, so every core needs at least one)");
+        }
+    }
+
+    let file = File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+
+    // Placeholder header: correct fixed part + name, zeroed directory,
+    // patched once stream offsets are known.
+    let mut header = TraceHeader {
+        name: name.to_string(),
+        streams: vec![StreamDesc { op_count: 0, offset: 0, len: 0 }; traces.len()],
+    };
+    w.write_all(&header.encode()).context("writing trace header")?;
+
+    let mut offset = TraceHeader::byte_len(name, traces.len());
+    let mut buf: Vec<u8> = Vec::with_capacity(CHUNK_BYTES + 64);
+    for (core, t) in traces.iter().enumerate() {
+        let mut len = 0u64;
+        let mut prev = 0u64;
+        for op in &t.ops {
+            format::encode_op(&mut buf, op, &mut prev);
+            if buf.len() >= CHUNK_BYTES {
+                len += buf.len() as u64;
+                w.write_all(&buf)
+                    .with_context(|| format!("writing core {core} stream"))?;
+                buf.clear();
+            }
+        }
+        len += buf.len() as u64;
+        w.write_all(&buf).with_context(|| format!("writing core {core} stream"))?;
+        buf.clear();
+        header.streams[core] =
+            StreamDesc { op_count: t.ops.len() as u64, offset, len };
+        offset += len;
+    }
+
+    // Patch the real directory in place.
+    w.seek(SeekFrom::Start(0)).context("seeking back to the trace header")?;
+    w.write_all(&header.encode()).context("patching the trace directory")?;
+    let file = w
+        .into_inner()
+        .map_err(|e| anyhow!("flushing trace file: {e}"))?;
+    file.sync_all()
+        .with_context(|| format!("syncing trace file {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::trace::{BulkOp, TraceOp};
+    use crate::trace::reader::TraceReader;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("lisa-trace-writer-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let t0 = Trace::new(vec![
+            TraceOp::Mem { nonmem: 4, addr: 4096, is_write: false, dependent: false },
+            TraceOp::Copy { nonmem: 10, src: 0, dst: 8192, rows: 1 },
+            TraceOp::Bulk { nonmem: 60, op: BulkOp::Fork },
+        ]);
+        let t1 = Trace::new(vec![TraceOp::Bulk {
+            nonmem: 4,
+            op: BulkOp::Touch { va: 12288, is_write: true, dependent: true },
+        }]);
+        let path = tmp("roundtrip.trc");
+        write_trace(&path, "mix-a", &[t0.clone(), t1.clone()]).unwrap();
+
+        let mut rd = TraceReader::open(&path).unwrap();
+        assert_eq!(rd.header().name, "mix-a");
+        assert_eq!(rd.header().streams.len(), 2);
+        assert_eq!(rd.header().streams[0].op_count, 3);
+        let ops0 = rd.ops(0).unwrap().collect_ops().unwrap();
+        let ops1 = rd.ops(1).unwrap().collect_ops().unwrap();
+        assert_eq!(ops0, t0.ops);
+        assert_eq!(ops1, t1.ops);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_streams_are_rejected() {
+        let path = tmp("empty.trc");
+        let err = write_trace(&path, "x", &[Trace::new(vec![])]).unwrap_err().to_string();
+        assert!(err.contains("empty op stream"), "{err}");
+        assert!(write_trace(&path, "x", &[]).is_err());
+    }
+
+    #[test]
+    fn streams_larger_than_one_chunk_flush_incrementally() {
+        // ~200k ops is several chunks of encoded bytes.
+        let ops: Vec<TraceOp> = (0..200_000u64)
+            .map(|i| TraceOp::Mem {
+                nonmem: 2,
+                addr: i * 64,
+                is_write: i % 7 == 0,
+                dependent: false,
+            })
+            .collect();
+        let t = Trace::new(ops);
+        let path = tmp("big.trc");
+        write_trace(&path, "big", &[t.clone()]).unwrap();
+        let mut rd = TraceReader::open(&path).unwrap();
+        let back = rd.ops(0).unwrap().collect_ops().unwrap();
+        assert_eq!(back.len(), t.ops.len());
+        assert_eq!(back[199_999], t.ops[199_999]);
+        // The reader stayed within its chunk budget the whole way.
+        assert!(
+            rd.high_water() <= CHUNK_BYTES + 4096,
+            "high water {} exceeds chunk budget",
+            rd.high_water()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

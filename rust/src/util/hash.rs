@@ -32,6 +32,47 @@ pub fn content_key(text: &str) -> String {
     format!("{a:016x}{b:016x}")
 }
 
+/// Incremental version of [`content_key`] for byte streams fed in
+/// chunks: two FNV-1a states advanced per chunk, with the total length
+/// folded into the second half at the end. Feeding the whole input as
+/// one chunk yields exactly `content_key(input)`. Used to digest trace
+/// files into cache keys without reading them into memory at once.
+#[derive(Debug, Clone)]
+pub struct StreamDigest {
+    a: u64,
+    b: u64,
+    len: u64,
+}
+
+impl StreamDigest {
+    pub fn new() -> Self {
+        Self {
+            a: FNV_OFFSET,
+            b: FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15,
+            len: 0,
+        }
+    }
+
+    pub fn update(&mut self, chunk: &[u8]) {
+        self.a = fnv1a_64(chunk, self.a);
+        self.b = fnv1a_64(chunk, self.b);
+        self.len += chunk.len() as u64;
+    }
+
+    /// Finish into the 32-hex key. Non-consuming so a digest can be
+    /// snapshotted mid-stream if ever needed.
+    pub fn finish(&self) -> String {
+        let b = self.b ^ self.len.wrapping_mul(FNV_PRIME);
+        format!("{:016x}{b:016x}", self.a)
+    }
+}
+
+impl Default for StreamDigest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,5 +95,19 @@ mod tests {
         // One-character edits move the key.
         assert_ne!(k, content_key("workload=stream4;seed=2"));
         assert_ne!(content_key(""), content_key("\u{0}"));
+    }
+
+    #[test]
+    fn stream_digest_matches_content_key_regardless_of_chunking() {
+        let text = "the quick brown fox jumps over the lazy dog";
+        let whole = content_key(text);
+        for chunk in [1usize, 2, 7, 44] {
+            let mut d = StreamDigest::new();
+            for piece in text.as_bytes().chunks(chunk) {
+                d.update(piece);
+            }
+            assert_eq!(d.finish(), whole, "chunk size {chunk}");
+        }
+        assert_eq!(StreamDigest::new().finish(), content_key(""));
     }
 }

@@ -1,0 +1,433 @@
+//! GC / heap-traversal trace generators: the E11 workload family.
+//!
+//! Garbage collection is the data-movement-bound pattern the paper's
+//! bulk-copy substrate targets: long dependent pointer chases over a
+//! large heap (MLP = 1, raw DRAM latency on the critical path)
+//! punctuated by bulk evacuation phases that move whole pages. Every
+//! access is a `BulkOp` at the *virtual* address level, so the OS
+//! layer's frame placement policy decides how evacuation copies land
+//! on subarrays — the knob E11 sweeps against the copy mechanism.
+//!
+//! * `Traverse`       — pure marking chase, no collection: the
+//!                      low-MLP baseline.
+//! * `Semispace`      — chase then bulk evacuation: live pages are
+//!                      `Memcpy`d from-space to-space each cycle and
+//!                      the spaces swap (Cheney-style copying GC).
+//! * `ConcurrentMark` — `Fork` snapshots the heap for the marker;
+//!                      mutator writes break CoW pages one
+//!                      fault-copy at a time during the mark phase.
+//! * `Generational`   — nursery chase; minor collections `Memcpy`
+//!                      survivors into the old generation and
+//!                      `Promote` the hottest survivor page into the
+//!                      bank's fast zone (tenuring as migration).
+//!
+//! Allocation-site locality is the shared layout knob: the heap is
+//! partitioned into `sites` equal regions (objects allocated together
+//! sit together), and a chase step stays inside its current site
+//! unless it follows a cross-site pointer. More sites = smaller,
+//! tighter clusters; `CROSS_SITE` controls how often the chase leaves
+//! one.
+
+use crate::config::SimConfig;
+use crate::cpu::trace::{BulkOp, TraceOp};
+use crate::util::rng::Pcg32;
+
+/// Syscall-ish overheads, matching the E9 scenarios' scale.
+const GC_CALL_NONMEM: u32 = 20;
+const FORK_NONMEM: u32 = 60;
+/// Probability a chase step follows a pointer out of its site.
+const CROSS_SITE: f64 = 0.25;
+/// Mutation writes interleaved with the chase (forwarding pointers,
+/// mark bits); kept read-mostly so the chase stays latency-bound.
+const CHASE_WRITE: f64 = 0.1;
+/// Pages zeroed per `Zero` call in heap prologues: large heaps are
+/// mapped in syscall-sized chunks, not one giant op.
+const ZERO_CHUNK: u32 = 64;
+/// Pages moved per `Memcpy` call in evacuation phases.
+const EVAC_CHUNK: u32 = 16;
+
+/// One core's GC scenario (sizes in pages of one DRAM row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GcScenario {
+    /// Dependent pointer chase over a `pages`-page heap laid out
+    /// across `sites` allocation sites; no collection.
+    Traverse { pages: u32, sites: u32 },
+    /// Two `pages`-page semispaces: `period` chase ops in from-space,
+    /// then `evac_pages` survivors are bulk-copied to to-space and
+    /// the spaces swap.
+    Semispace {
+        pages: u32,
+        sites: u32,
+        period: u32,
+        evac_pages: u32,
+    },
+    /// Snapshot-at-the-beginning marking: `Fork` pins the snapshot,
+    /// then `period` ops of marker chase mixed with mutator writes
+    /// that break CoW pages.
+    ConcurrentMark { pages: u32, sites: u32, period: u32 },
+    /// Nursery chase with minor collections: every `period` ops,
+    /// `survivors` nursery pages are evacuated into the old
+    /// generation and the hottest one is promoted to the fast zone.
+    Generational {
+        nursery_pages: u32,
+        old_pages: u32,
+        period: u32,
+        survivors: u32,
+    },
+}
+
+/// Dependent-chase cursor over a sited heap region.
+struct Chase {
+    base_page: u64,
+    pages: u64,
+    pages_per_site: u64,
+    cur: u64,
+}
+
+impl Chase {
+    fn new(base_page: u64, pages: u32, sites: u32) -> Self {
+        let pages = pages.max(1) as u64;
+        let sites = (sites.max(1) as u64).min(pages);
+        Self {
+            base_page,
+            pages,
+            pages_per_site: (pages / sites).max(1),
+            cur: 0,
+        }
+    }
+
+    /// Follow one pointer: within the current allocation site, or a
+    /// cross-site edge. Returns the heap-relative page index.
+    fn step(&mut self, rng: &mut Pcg32) -> u64 {
+        self.cur = if rng.chance(CROSS_SITE) {
+            rng.below(self.pages)
+        } else {
+            let site_base = self.cur - self.cur % self.pages_per_site;
+            (site_base + rng.below(self.pages_per_site)) % self.pages
+        };
+        self.cur
+    }
+
+    /// A chase touch: a dependent read (or a rare mutation write) at
+    /// a random line of the next pointed-to page.
+    fn touch(&mut self, rng: &mut Pcg32, page_bytes: u64, nonmem: u32) -> TraceOp {
+        let page = self.base_page + self.step(rng);
+        let is_write = rng.chance(CHASE_WRITE);
+        TraceOp::Bulk {
+            nonmem,
+            op: BulkOp::Touch {
+                va: page * page_bytes + rng.below(page_bytes / 64) * 64,
+                is_write,
+                // Mutation writes are off the chase's critical path.
+                dependent: !is_write,
+            },
+        }
+    }
+}
+
+/// Map `[base_page, base_page + pages)` with chunked demand-zero calls.
+fn zero_region(ops: &mut Vec<TraceOp>, base_page: u64, pages: u32, page_bytes: u64) {
+    let mut done = 0u32;
+    while done < pages {
+        let chunk = ZERO_CHUNK.min(pages - done);
+        ops.push(TraceOp::Bulk {
+            nonmem: GC_CALL_NONMEM,
+            op: BulkOp::Zero {
+                va: (base_page + done as u64) * page_bytes,
+                pages: chunk,
+            },
+        });
+        done += chunk;
+    }
+}
+
+/// Evacuate `pages` pages `src_page -> dst_page` in syscall-sized
+/// bulk copies.
+fn evacuate(ops: &mut Vec<TraceOp>, src_page: u64, dst_page: u64, pages: u32, page_bytes: u64) {
+    let mut done = 0u32;
+    while done < pages {
+        let chunk = EVAC_CHUNK.min(pages - done);
+        ops.push(TraceOp::Bulk {
+            nonmem: GC_CALL_NONMEM,
+            op: BulkOp::Memcpy {
+                src_va: (src_page + done as u64) * page_bytes,
+                dst_va: (dst_page + done as u64) * page_bytes,
+                pages: chunk,
+            },
+        });
+        done += chunk;
+    }
+}
+
+/// Generate `n_ops` trace operations for one core. Deterministic in
+/// (scenario, seed, core); virtual addresses are process-local (each
+/// core is its own process, like the E9 scenarios).
+pub fn generate(
+    scn: GcScenario,
+    cfg: &SimConfig,
+    core: usize,
+    n_ops: usize,
+    seed: u64,
+    nonmem: u32,
+) -> Vec<TraceOp> {
+    let page = cfg.dram.row_bytes() as u64;
+    let mut rng = Pcg32::new(seed, core as u64 + 0x6C_0000);
+    let mut ops = Vec::with_capacity(n_ops + 128);
+    match scn {
+        GcScenario::Traverse { pages, sites } => {
+            zero_region(&mut ops, 0, pages, page);
+            let mut chase = Chase::new(0, pages, sites);
+            while ops.len() < n_ops {
+                ops.push(chase.touch(&mut rng, page, nonmem));
+            }
+        }
+        GcScenario::Semispace { pages, sites, period, evac_pages } => {
+            let pages = pages.max(1);
+            let evac = evac_pages.min(pages);
+            // Map both spaces up front; `from` flips each cycle.
+            zero_region(&mut ops, 0, pages, page);
+            zero_region(&mut ops, pages as u64, pages, page);
+            let mut from = 0u64;
+            while ops.len() < n_ops {
+                let mut chase = Chase::new(from, pages, sites);
+                for _ in 0..period.max(1) {
+                    ops.push(chase.touch(&mut rng, page, nonmem));
+                }
+                // Survivors start at a random offset: evacuation
+                // source pages vary cycle to cycle.
+                let to = pages as u64 - from;
+                let start = rng.below((pages - evac + 1) as u64);
+                evacuate(&mut ops, from + start, to + start, evac, page);
+                from = to;
+            }
+        }
+        GcScenario::ConcurrentMark { pages, sites, period } => {
+            zero_region(&mut ops, 0, pages, page);
+            let mut chase = Chase::new(0, pages, sites);
+            while ops.len() < n_ops {
+                ops.push(TraceOp::Bulk { nonmem: FORK_NONMEM, op: BulkOp::Fork });
+                for _ in 0..period.max(1) {
+                    if rng.chance(0.3) {
+                        // Mutator write during the mark: breaks the
+                        // snapshot's CoW page.
+                        let p = rng.below(pages.max(1) as u64);
+                        ops.push(TraceOp::Bulk {
+                            nonmem,
+                            op: BulkOp::Touch {
+                                va: p * page + rng.below(page / 64) * 64,
+                                is_write: true,
+                                dependent: false,
+                            },
+                        });
+                    } else {
+                        ops.push(chase.touch(&mut rng, page, nonmem));
+                    }
+                }
+            }
+        }
+        GcScenario::Generational { nursery_pages, old_pages, period, survivors } => {
+            let nursery = nursery_pages.max(1);
+            let old = old_pages.max(1);
+            let survivors = survivors.min(nursery);
+            // Layout: nursery at 0, old generation above it.
+            zero_region(&mut ops, 0, nursery, page);
+            zero_region(&mut ops, nursery as u64, old, page);
+            let mut young = Chase::new(0, nursery, 4);
+            let mut tenured = Chase::new(nursery as u64, old, 8);
+            let mut old_cursor = 0u64;
+            while ops.len() < n_ops {
+                for _ in 0..period.max(1) {
+                    // Young-generation hypothesis: most traffic stays
+                    // in the nursery.
+                    let c = if rng.chance(0.8) { &mut young } else { &mut tenured };
+                    ops.push(c.touch(&mut rng, page, nonmem));
+                }
+                // Minor collection: copy survivors into the old gen
+                // and promote the first (hottest) one to the fast zone.
+                if survivors > 0 {
+                    let start = rng.below((nursery - survivors + 1) as u64);
+                    let dst = nursery as u64 + old_cursor;
+                    evacuate(&mut ops, start, dst, survivors, page);
+                    old_cursor = (old_cursor + survivors as u64) % old as u64;
+                    ops.push(TraceOp::Bulk {
+                        nonmem: GC_CALL_NONMEM,
+                        op: BulkOp::Promote { va: dst * page },
+                    });
+                }
+            }
+        }
+    }
+    ops.truncate(n_ops.max(1));
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    const ALL: [GcScenario; 4] = [
+        GcScenario::Traverse { pages: 192, sites: 12 },
+        GcScenario::Semispace { pages: 96, sites: 8, period: 96, evac_pages: 24 },
+        GcScenario::ConcurrentMark { pages: 128, sites: 8, period: 96 },
+        GcScenario::Generational {
+            nursery_pages: 48,
+            old_pages: 96,
+            period: 96,
+            survivors: 8,
+        },
+    ];
+
+    #[test]
+    fn scenarios_are_deterministic_and_bulk_bearing() {
+        let c = cfg();
+        for scn in ALL {
+            let a = generate(scn, &c, 0, 900, 7, 4);
+            let b = generate(scn, &c, 0, 900, 7, 4);
+            assert_eq!(a, b, "{scn:?} not deterministic");
+            assert_eq!(a.len(), 900);
+            let d = generate(scn, &c, 0, 900, 8, 4);
+            assert_ne!(a, d, "{scn:?} ignores the seed");
+            assert!(
+                a.iter().all(|o| matches!(o, TraceOp::Bulk { .. })),
+                "{scn:?}: everything routes through the OS layer"
+            );
+        }
+    }
+
+    #[test]
+    fn chases_are_dominated_by_dependent_reads() {
+        let c = cfg();
+        for scn in ALL {
+            let ops = generate(scn, &c, 0, 1000, 3, 4);
+            let dep = ops
+                .iter()
+                .filter(|o| {
+                    matches!(
+                        o,
+                        TraceOp::Bulk { op: BulkOp::Touch { dependent: true, .. }, .. }
+                    )
+                })
+                .count();
+            assert!(dep > 500, "{scn:?}: only {dep}/1000 dependent touches");
+        }
+    }
+
+    #[test]
+    fn semispace_evacuates_between_the_spaces() {
+        let c = cfg();
+        let pages = 96u64;
+        let scn = GcScenario::Semispace {
+            pages: pages as u32,
+            sites: 8,
+            period: 40,
+            evac_pages: 24,
+        };
+        let ops = generate(scn, &c, 0, 1200, 1, 4);
+        let mut copies = 0usize;
+        for o in &ops {
+            if let TraceOp::Bulk { op: BulkOp::Memcpy { src_va, dst_va, pages: p }, .. } = o {
+                copies += 1;
+                assert!(*p > 0 && *p as u64 <= pages);
+                // Every evacuation crosses the semispace boundary.
+                let boundary = pages * 8192;
+                assert_ne!(*src_va < boundary, *dst_va < boundary, "copy stayed in-space");
+            }
+        }
+        assert!(copies >= 10, "{copies} evacuation copies in 1200 ops");
+    }
+
+    #[test]
+    fn concurrent_mark_forks_and_writes() {
+        let ops = generate(
+            GcScenario::ConcurrentMark { pages: 64, sites: 8, period: 50 },
+            &cfg(),
+            1,
+            800,
+            2,
+            4,
+        );
+        let forks = ops
+            .iter()
+            .filter(|o| matches!(o, TraceOp::Bulk { op: BulkOp::Fork, .. }))
+            .count();
+        assert!((10..=20).contains(&forks), "{forks} forks in 800 ops");
+        assert!(ops.iter().any(|o| {
+            matches!(
+                o,
+                TraceOp::Bulk { op: BulkOp::Touch { is_write: true, .. }, .. }
+            )
+        }));
+    }
+
+    #[test]
+    fn generational_promotes_into_the_old_generation() {
+        let nursery = 48u64;
+        let old = 96u64;
+        let ops = generate(
+            GcScenario::Generational {
+                nursery_pages: nursery as u32,
+                old_pages: old as u32,
+                period: 60,
+                survivors: 8,
+            },
+            &cfg(),
+            0,
+            900,
+            5,
+            4,
+        );
+        let mut promotes = 0usize;
+        for o in &ops {
+            if let TraceOp::Bulk { op: BulkOp::Promote { va }, .. } = o {
+                promotes += 1;
+                let p = va / 8192;
+                assert!(
+                    p >= nursery && p < nursery + old,
+                    "promote target page {p} outside the old generation"
+                );
+            }
+        }
+        assert!(promotes >= 5, "{promotes} promotions in 900 ops");
+    }
+
+    #[test]
+    fn site_locality_keeps_most_steps_within_a_site() {
+        let c = cfg();
+        let pages = 192u64;
+        let sites = 12u64;
+        let ops = generate(
+            GcScenario::Traverse { pages: pages as u32, sites: sites as u32 },
+            &c,
+            0,
+            2000,
+            9,
+            4,
+        );
+        let per_site = pages / sites;
+        let mut same = 0usize;
+        let mut total = 0usize;
+        let mut prev: Option<u64> = None;
+        for o in &ops {
+            if let TraceOp::Bulk { op: BulkOp::Touch { va, .. }, .. } = o {
+                let site = (va / 8192) / per_site;
+                if let Some(p) = prev {
+                    total += 1;
+                    if p == site {
+                        same += 1;
+                    }
+                }
+                prev = Some(site);
+            }
+        }
+        // CROSS_SITE = 0.25, and a cross-site jump sometimes lands in
+        // the same site anyway: well over half the steps stay local.
+        assert!(
+            same * 100 > total * 60,
+            "only {same}/{total} steps stayed within an allocation site"
+        );
+    }
+}

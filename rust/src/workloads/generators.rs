@@ -18,6 +18,7 @@
 use crate::config::SimConfig;
 use crate::cpu::trace::{Trace, TraceOp};
 use crate::util::rng::Pcg32;
+use crate::workloads::gc::{self, GcScenario};
 use crate::workloads::os_scenarios::{self, OsScenario};
 
 /// What one core runs.
@@ -66,6 +67,10 @@ pub enum WorkloadKind {
     /// OS-level scenario (virtual addresses through the OS layer's
     /// page tables and frame allocator; see `workloads/os_scenarios`).
     Os(OsScenario),
+    /// GC / heap-traversal scenario: dependent pointer chases with
+    /// bulk evacuation phases, also virtual-address level (see
+    /// `workloads/gc`).
+    Gc(GcScenario),
 }
 
 /// A core's workload: kind + working set + intensity.
@@ -89,6 +94,17 @@ impl CoreSpec {
             // OS scenarios are virtual-address traces; the OS layer
             // resolves placement at run time.
             return Trace::new(os_scenarios::generate(
+                scn,
+                cfg,
+                core,
+                n_ops,
+                seed ^ cfg.seed,
+                self.nonmem,
+            ));
+        }
+        if let WorkloadKind::Gc(scn) = self.kind {
+            // GC scenarios are virtual-address traces too.
+            return Trace::new(gc::generate(
                 scn,
                 cfg,
                 core,
@@ -187,8 +203,14 @@ impl CoreSpec {
                         let n_bank_rows = (cfg.dram.rows_per_bank()
                             - cfg.dram.rows_per_subarray)
                             as u64;
-                        let hop = hop_rows.max(1).min(n_bank_rows / 2);
-                        let src_row = rng.below(n_bank_rows - hop - rows as u64 - 1);
+                        let hop = hop_rows.max(1).min(n_bank_rows / 2).max(1);
+                        // Saturating span: tiny geometries (few rows
+                        // per bank) must clamp to a 1-row span rather
+                        // than underflow into a u64-sized one.
+                        let span = n_bank_rows
+                            .saturating_sub(hop + rows as u64 + 1)
+                            .max(1);
+                        let src_row = rng.below(span);
                         let dst_row = src_row + hop;
                         let bank_off = bank * row_bytes;
                         let src = src_row * same_bank_row_stride + bank_off;
@@ -238,7 +260,7 @@ impl CoreSpec {
                         dependent: false,
                     });
                 }
-                WorkloadKind::Os(_) => unreachable!("handled above"),
+                WorkloadKind::Os(_) | WorkloadKind::Gc(_) => unreachable!("handled above"),
             }
         }
         Trace::new(ops)

@@ -13,20 +13,38 @@ use anyhow::{bail, Result};
 
 use crate::config::SimConfig;
 use crate::cpu::trace::Trace;
+use crate::trace::TraceSource;
 use crate::util::rng::Pcg32;
+use crate::workloads::gc::GcScenario;
 use crate::workloads::generators::{CoreSpec, WorkloadKind};
 use crate::workloads::os_scenarios::OsScenario;
 
-/// A named multi-core workload.
+/// A named multi-core workload. Synthetic workloads carry per-core
+/// generator specs; trace-backed workloads (`source`) replay recorded
+/// op streams from a trace file instead.
 #[derive(Debug, Clone)]
 pub struct Workload {
     pub name: String,
     pub cores: Vec<CoreSpec>,
+    /// When set, `traces()` decodes the recorded per-core streams from
+    /// this file; `cores` then only fixes the core count (placeholder
+    /// specs). Built via `crate::trace::workload_from_file`, which
+    /// validates the whole file up front.
+    pub source: Option<TraceSource>,
 }
 
 impl Workload {
-    /// Generate per-core traces (n_ops each).
+    /// Generate per-core traces (n_ops each; recorded traces keep
+    /// their recorded length — cores replay them cyclically).
     pub fn traces(&self, cfg: &SimConfig, n_ops: usize) -> Vec<Trace> {
+        if let Some(src) = &self.source {
+            // The file was fully validated when the workload was
+            // built, so a decode failure here means it changed or
+            // vanished mid-run — fail loudly, never simulate garbage.
+            return src.load_traces().unwrap_or_else(|e| {
+                panic!("trace workload '{}': {e:#}", self.name)
+            });
+        }
         self.cores
             .iter()
             .enumerate()
@@ -91,7 +109,7 @@ pub fn copy_mixes(cores: usize) -> Vec<Workload> {
             while specs.len() < cores {
                 specs.push(background(&mut rng));
             }
-            Workload { name: format!("copy-mix-{i:02}"), cores: specs }
+            Workload { name: format!("copy-mix-{i:02}"), cores: specs, source: None }
         })
         .collect()
 }
@@ -125,7 +143,7 @@ pub fn villa_mixes(cores: usize) -> Vec<Workload> {
                     write_frac: 0.15,
                 })
                 .collect();
-            Workload { name: format!("villa-{name}"), cores: specs }
+            Workload { name: format!("villa-{name}"), cores: specs, source: None }
         })
         .collect()
 }
@@ -137,6 +155,7 @@ pub fn micro_workloads(cores: usize) -> Vec<Workload> {
         cores: (0..cores)
             .map(|_| CoreSpec { kind, wss: 24 << 20, nonmem, write_frac: 0.2 })
             .collect(),
+        source: None,
     };
     vec![
         mk("stream4", WorkloadKind::Stream { stride: 1 }, 4),
@@ -173,6 +192,7 @@ pub fn salp_mixes(cores: usize) -> Vec<Workload> {
         Workload {
             name: "salp-pingpong4".into(),
             cores: (0..cores).map(|_| pingpong(2, 4, 16, 8, None)).collect(),
+            source: None,
         },
         // All cores share bank 0 in disjoint subarray ranges: the
         // cross-core version of the same conflict (the MASA headline).
@@ -181,6 +201,7 @@ pub fn salp_mixes(cores: usize) -> Vec<Workload> {
             cores: (0..cores)
                 .map(|i| pingpong(2 + 3 * (i as u32 % 4), 3, 32, 4, Some(0)))
                 .collect(),
+            source: None,
         },
         // Bulk copies and subarray ping-pong fighting over the same
         // banks: exercises the copy-vs-open-row exclusion rules and
@@ -205,6 +226,7 @@ pub fn salp_mixes(cores: usize) -> Vec<Workload> {
                     }
                 })
                 .collect(),
+            source: None,
         },
     ]
 }
@@ -226,6 +248,7 @@ pub fn os_workloads(cores: usize) -> Vec<Workload> {
                 write_frac: 0.0,
             })
             .collect(),
+        source: None,
     };
     vec![
         mk("os-fork", OsScenario::ForkServer { pages: 64, period: 96 }, 4),
@@ -239,6 +262,48 @@ pub fn os_workloads(cores: usize) -> Vec<Workload> {
     ]
 }
 
+/// The GC / heap-traversal workloads of experiment E11 (every core
+/// runs its own collector instance; see `workloads/gc`).
+pub fn gc_workloads(cores: usize) -> Vec<Workload> {
+    // Like the OS workloads, `wss`/`write_frac` are scenario-internal
+    // (page counts and chase write rates), so the spec zeroes them.
+    let mk = |name: &str, scn: GcScenario, nonmem: u32| Workload {
+        name: name.to_string(),
+        cores: (0..cores)
+            .map(|_| CoreSpec {
+                kind: WorkloadKind::Gc(scn),
+                wss: 0,
+                nonmem,
+                write_frac: 0.0,
+            })
+            .collect(),
+        source: None,
+    };
+    vec![
+        mk("gc-chase", GcScenario::Traverse { pages: 192, sites: 12 }, 6),
+        mk(
+            "gc-semispace",
+            GcScenario::Semispace { pages: 96, sites: 8, period: 96, evac_pages: 24 },
+            4,
+        ),
+        mk(
+            "gc-mark",
+            GcScenario::ConcurrentMark { pages: 128, sites: 8, period: 96 },
+            4,
+        ),
+        mk(
+            "gc-gen",
+            GcScenario::Generational {
+                nursery_pages: 48,
+                old_pages: 96,
+                period: 96,
+                survivors: 8,
+            },
+            4,
+        ),
+    ]
+}
+
 /// Every named workload in the suite.
 pub fn all_mixes(cfg: &SimConfig) -> Vec<Workload> {
     let cores = cfg.cpu.cores;
@@ -246,6 +311,7 @@ pub fn all_mixes(cfg: &SimConfig) -> Vec<Workload> {
     out.extend(villa_mixes(cores));
     out.extend(salp_mixes(cores));
     out.extend(os_workloads(cores));
+    out.extend(gc_workloads(cores));
     out.extend(copy_mixes(cores));
     out
 }
@@ -323,6 +389,20 @@ mod tests {
     fn os_workloads_registered_and_bulk_bearing() {
         let cfg = SimConfig::default();
         for name in ["os-fork", "os-zero", "os-checkpoint", "os-promote"] {
+            let w = workload_by_name(name, &cfg).unwrap();
+            assert_eq!(w.cores.len(), 4);
+            let traces = w.traces(&cfg, 300);
+            assert!(
+                traces.iter().all(|t| t.needs_os()),
+                "{name}: every core must carry OS bulk ops"
+            );
+        }
+    }
+
+    #[test]
+    fn gc_workloads_registered_and_bulk_bearing() {
+        let cfg = SimConfig::default();
+        for name in ["gc-chase", "gc-semispace", "gc-mark", "gc-gen"] {
             let w = workload_by_name(name, &cfg).unwrap();
             assert_eq!(w.cores.len(), 4);
             let traces = w.traces(&cfg, 300);

@@ -1,12 +1,15 @@
 //! Synthetic workload substrate: trace generators reproducing the
 //! memory-behaviour classes of the paper's Pin-based SPEC/TBB/copy
-//! workloads (DESIGN.md substitution map row 3), and the 50 four-core
-//! mixes the evaluation sweeps over.
+//! workloads (DESIGN.md substitution map row 3), the 50 four-core
+//! mixes the evaluation sweeps over, the E9 OS scenarios and the E11
+//! GC / heap-traversal family.
 
+pub mod gc;
 pub mod generators;
 pub mod mixes;
 pub mod os_scenarios;
 
+pub use gc::GcScenario;
 pub use generators::{CoreSpec, WorkloadKind};
 pub use mixes::{all_mixes, workload_by_name, Workload};
 pub use os_scenarios::OsScenario;

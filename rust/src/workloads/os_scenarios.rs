@@ -55,6 +55,7 @@ pub fn generate(
         op: BulkOp::Touch {
             va: page_idx * page + rng.below(page / 64) * 64,
             is_write: write,
+            dependent: false,
         },
     };
     match scn {

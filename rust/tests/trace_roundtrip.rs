@@ -1,0 +1,224 @@
+//! Trace subsystem contracts: record→replay byte-identity against
+//! direct runs, trace-backed experiment grids deterministic at any
+//! thread count, the streaming reader's memory bound, and rejection
+//! of hand-corrupted files.
+
+use std::path::PathBuf;
+
+use lisa::config::SimConfig;
+use lisa::cpu::trace::TraceOp;
+use lisa::sim::engine::{run_workload, trace_ops_per_core};
+use lisa::sim::spec::{self, RunOptions};
+use lisa::trace::reader::CHUNK_BYTES;
+use lisa::trace::{format, workload_from_file, write_trace, TraceReader};
+use lisa::workloads::mixes;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("lisa-trace-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.requests_per_core = 400;
+    cfg
+}
+
+/// Record a workload to `path` exactly as `lisa trace record` does.
+fn record(cfg: &SimConfig, workload: &str, path: &PathBuf) {
+    let wl = mixes::workload_by_name(workload, cfg).unwrap();
+    let traces = wl.traces(cfg, trace_ops_per_core(cfg.requests_per_core));
+    write_trace(path, &wl.name, &traces).unwrap();
+}
+
+#[test]
+fn record_then_replay_is_byte_identical_to_the_direct_run() {
+    // A trimmed grid over the synthetic families: a plain mix, an OS
+    // scenario, a SALP conflict mix and a GC workload — recorded,
+    // reloaded and re-run, the replay report must serialize to the
+    // exact bytes of the direct run's.
+    for (i, name) in ["stream4", "os-fork", "salp-copy-conflict4", "gc-chase"]
+        .iter()
+        .enumerate()
+    {
+        let cfg = small_cfg();
+        let wl = mixes::workload_by_name(name, &cfg).unwrap();
+        let direct = run_workload(&cfg, &wl);
+
+        let path = tmp(&format!("oracle-{i}.trc"));
+        record(&cfg, name, &path);
+        let replayed_wl = workload_from_file(&path).unwrap();
+        assert_eq!(replayed_wl.name, *name);
+        let replayed = run_workload(&cfg, &replayed_wl);
+        assert_eq!(
+            direct.to_json(),
+            replayed.to_json(),
+            "replay of '{name}' diverged from the direct run"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn e11_gc_grid_is_byte_identical_across_thread_counts_and_backends() {
+    let s = spec::spec_by_name("e11-gc").unwrap();
+    let opts = RunOptions::default()
+        .requests(300)
+        .axis("workload", &["gc-chase", "gc-gen"])
+        .axis("mech", &["memcpy", "lisa-risc"])
+        .axis("policy", &["random"])
+        .axis("mode", &["none", "masa"])
+        .backend(&["cycle", "analytical"]);
+    let serial = spec::run(&s, &opts.clone().threads(1)).unwrap();
+    assert_eq!(serial.records.len(), 16);
+    // Backend-major (implicit outermost axis), then workload-major.
+    assert!(serial.records[..8]
+        .iter()
+        .all(|r| r.axis("backend") == Some("cycle")));
+    assert!(serial.records[8..]
+        .iter()
+        .all(|r| r.axis("backend") == Some("analytical")));
+    // GC workloads are OS-backed (bulk ops) and actually chase.
+    assert!(serial
+        .records
+        .iter()
+        .all(|r| r.report.os.is_some()));
+    let json1 = serial.to_json();
+    for threads in [2, 8] {
+        let rows = spec::run(&s, &opts.clone().threads(threads)).unwrap();
+        assert_eq!(serial, rows, "threads={threads}");
+        assert_eq!(json1, rows.to_json(), "threads={threads}");
+    }
+}
+
+#[test]
+fn trace_files_are_first_class_experiment_workloads() {
+    // Record one point, then run an e11 grid whose workload axis is
+    // the trace file. The grid must expand (digest folded into the
+    // workload), run under both backends, and stay byte-identical
+    // across thread counts.
+    let cfg = small_cfg();
+    let path = tmp("axis.trc");
+    record(&cfg, "gc-semispace", &path);
+    let axis_value = format!("trace:{}", path.display());
+
+    let s = spec::spec_by_name("e11-gc").unwrap();
+    let opts = RunOptions::default()
+        .requests(300)
+        .axis("workload", &[axis_value.as_str()])
+        .axis("mech", &["memcpy"])
+        .axis("policy", &["random"])
+        .axis("mode", &["none"])
+        .backend(&["cycle", "analytical"]);
+
+    // Expansion resolves the file once and carries its content digest.
+    let points = spec::expand(&s, &opts).unwrap();
+    assert_eq!(points.len(), 2);
+    for p in &points {
+        assert_eq!(p.workload.name, "gc-semispace");
+        let src = p.workload.source.as_ref().expect("trace-backed workload");
+        assert_eq!(src.digest.len(), 32);
+    }
+
+    let serial = spec::run(&s, &opts.clone().threads(1)).unwrap();
+    assert_eq!(serial.records.len(), 2);
+    assert!(serial
+        .records
+        .iter()
+        .all(|r| r.axis("workload") == Some(axis_value.as_str())));
+    for threads in [2, 8] {
+        let rows = spec::run(&s, &opts.clone().threads(threads)).unwrap();
+        assert_eq!(serial, rows, "threads={threads}");
+    }
+
+    // A missing file fails expansion with context, never a panic.
+    let gone = format!("trace:{}", tmp("nonexistent.trc").display());
+    let bad = RunOptions::default()
+        .axis("workload", &[gone.as_str()])
+        .axis("mech", &["memcpy"])
+        .axis("policy", &["random"])
+        .axis("mode", &["none"]);
+    assert!(spec::expand(&s, &bad).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn million_op_replay_stays_within_the_reader_chunk_budget() {
+    // ~1M strided Mem ops: the writer streams them out, and the
+    // reader must stream them back without ever holding more than the
+    // header plus one chunk. The assertion is on the reader's own
+    // high-water accounting, deliberately not on process RSS.
+    const N: u64 = 1_000_000;
+    let ops: Vec<TraceOp> = (0..N)
+        .map(|i| TraceOp::Mem {
+            nonmem: 3,
+            addr: (i * 64) % (1 << 28),
+            is_write: i % 5 == 0,
+            dependent: false,
+        })
+        .collect();
+    let path = tmp("million.trc");
+    write_trace(&path, "million", &[lisa::cpu::trace::Trace::new(ops)]).unwrap();
+
+    let mut rd = TraceReader::open(&path).unwrap();
+    assert_eq!(rd.header().streams[0].op_count, N);
+    let mut it = rd.ops(0).unwrap();
+    let mut prev = 0u64;
+    let mut count = 0u64;
+    while let Some(op) = it.next_op(&mut prev) {
+        op.unwrap();
+        count += 1;
+    }
+    assert_eq!(count, N);
+    assert!(
+        rd.high_water() <= CHUNK_BYTES + 4096,
+        "reader high water {} exceeds the {CHUNK_BYTES}-byte chunk budget",
+        rd.high_water()
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hand_corrupted_streams_error_instead_of_panicking() {
+    // An over-long varint inside a stream, reached through the real
+    // file path (the unit tests cover the decoder in isolation).
+    let header = format::TraceHeader {
+        name: "bad".into(),
+        streams: vec![format::StreamDesc {
+            op_count: 1,
+            offset: format::TraceHeader::byte_len("bad", 1),
+            len: 12,
+        }],
+    };
+    let mut bytes = header.encode();
+    bytes.push(format::TAG_MEM);
+    bytes.extend_from_slice(&[0x80; 11]); // nonmem varint never terminates
+    let path = tmp("overlong.trc");
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", workload_from_file(&path).unwrap_err());
+    assert!(err.contains("over-long varint"), "{err}");
+
+    // A directory whose stream points past EOF.
+    let header = format::TraceHeader {
+        name: "bad".into(),
+        streams: vec![format::StreamDesc {
+            op_count: 1,
+            offset: format::TraceHeader::byte_len("bad", 1),
+            len: 10_000,
+        }],
+    };
+    std::fs::write(&path, header.encode()).unwrap();
+    let err = format!("{:#}", workload_from_file(&path).unwrap_err());
+    assert!(err.contains("past end of file"), "{err}");
+
+    // Empty file and bad magic.
+    std::fs::write(&path, b"").unwrap();
+    let err = format!("{:#}", workload_from_file(&path).unwrap_err());
+    assert!(err.contains("truncated") || err.contains("header"), "{err}");
+    std::fs::write(&path, b"NOTATRACEFILE-------------------").unwrap();
+    let err = format!("{:#}", workload_from_file(&path).unwrap_err());
+    assert!(err.contains("bad magic"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
