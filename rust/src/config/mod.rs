@@ -337,14 +337,14 @@ pub struct CpuConfig {
     /// Retire width (instructions per CPU cycle).
     pub issue_width: u64,
     pub l1_kb: usize,
-    pub l1_ways: usize,
-    pub l1_latency: u64,
+    pub l1_ways: usize, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
+    pub l1_latency: u64, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
     pub l2_kb: usize,
-    pub l2_ways: usize,
-    pub l2_latency: u64,
+    pub l2_ways: usize, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
+    pub l2_latency: u64, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
     pub llc_kb: usize,
-    pub llc_ways: usize,
-    pub llc_latency: u64,
+    pub llc_ways: usize, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
+    pub llc_latency: u64, // lint: allow(config-coverage) reason=fixed cache geometry, no TOML surface
 }
 
 impl Default for CpuConfig {

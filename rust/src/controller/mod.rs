@@ -10,7 +10,7 @@ pub mod request;
 use std::cell::Cell;
 use std::collections::VecDeque;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::backend::{Access, AccessKind, MemoryModel, ReportParts};
 use crate::config::{CopyMechanism, SimConfig};
@@ -243,6 +243,7 @@ impl Controller {
         ev.copy = ev.copy || copy;
         ev.id = id;
         ev.arrive = arrive;
+        // lint: allow(probe-gating) reason=helper shared by gated call sites; observe() re-checks obs presence
         self.observe(ev);
     }
 
@@ -290,6 +291,7 @@ impl Controller {
     /// collapsed the `enqueue_mem` / `enqueue_mem_mapped` duo). VILLA
     /// translation applies to the pre-mapped address. Returns false
     /// (rejecting the request) when the target queue is full.
+    // lint: mutates-channel-state
     pub fn enqueue(&mut self, access: Access) -> bool {
         let Access { id, core, mut addr, .. } = access;
         let is_write = access.is_write();
@@ -350,6 +352,7 @@ impl Controller {
 
     /// Enqueue a bulk copy. The destination row is invalidated in the
     /// VILLA cache (its cached copy would go stale).
+    // lint: mutates-channel-state
     pub fn enqueue_copy(&mut self, req: CopyRequest) {
         if let Some(v) = self.villa.as_mut() {
             for r in 0..req.rows {
@@ -382,6 +385,7 @@ impl Controller {
             if self.copies_pending(req.src.channel) >= PAGE_COPY_WINDOW {
                 break;
             }
+            // lint: allow(panic) reason=front() returned Some above and nothing popped since
             let req = self.page_copy_q.pop_front().expect("head present");
             self.enqueue_copy(req);
         }
@@ -394,6 +398,7 @@ impl Controller {
 
     /// Advance one DRAM cycle: deliver due events, then let every
     /// channel issue at most one command.
+    // lint: mutates-channel-state
     pub fn tick(&mut self) -> Result<()> {
         let now = self.now;
         // Deliver due events. swap_remove keeps this O(n) per tick.
@@ -442,7 +447,10 @@ impl Controller {
             Event::MemcpyReadDone { ch, col, row_idx } => {
                 // The CPU turns the line around and writes it to dst.
                 let (dst, copy_id) = {
-                    let m = self.chans[ch].active_memcpy.as_ref().expect("memcpy live");
+                    let m = self.chans[ch]
+                        .active_memcpy
+                        .as_ref()
+                        .context("memcpy read completed with no live memcpy")?;
                     let mut d = m.req.dst;
                     d.row += row_idx;
                     d.col = col;
@@ -497,6 +505,7 @@ impl Controller {
                 };
                 let tag = self.dev.row_tag(src.channel, src.rank, src.bank, src.row);
                 self.dev.set_row_tag(dst.channel, dst.rank, dst.bank, dst.row, tag);
+                // lint: allow(panic) reason=checked Some at fn entry and not mutated since
                 let m = self.chans[ch].active_memcpy.as_mut().unwrap();
                 m.row_idx += 1;
                 m.writes_done = 0;
@@ -507,6 +516,7 @@ impl Controller {
             }
         };
         if finished {
+            // lint: allow(panic) reason=finished implies the memcpy was live this tick
             let m = self.chans[ch].active_memcpy.take().unwrap();
             self.stats
                 .sum_copy_latency
@@ -532,6 +542,7 @@ impl Controller {
     }
 
     /// Issue at most one command on channel `ch` this cycle.
+    // lint: mutates-channel-state
     fn tick_channel(&mut self, ch: usize) -> Result<()> {
         let now = self.now;
 
@@ -725,6 +736,7 @@ impl Controller {
         self.schedule_requests(ch)
     }
 
+    // lint: mutates-channel-state
     fn activate_next_copy(&mut self, ch: usize) {
         let c = &mut self.chans[ch];
         if c.active_copy.is_some() || c.active_memcpy.is_some() {
@@ -772,6 +784,7 @@ impl Controller {
         }
     }
 
+    // lint: mutates-channel-state
     fn generate_memcpy_reads(&mut self, ch: usize) {
         let cols = self.cfg.dram.columns;
         let c = &mut self.chans[ch];
@@ -987,11 +1000,13 @@ impl Controller {
                 .subarrays
                 .iter()
                 .position(|s| !s.is_precharged())
+                // lint: allow(panic) reason=open_subarrays() == cap implies one is open
                 .expect("bank at cap has a non-precharged subarray");
             Command::PreSa { rank: a.rank, bank: a.bank, sa: victim }
         }
     }
 
+    // lint: mutates-channel-state
     fn issue_for_request(
         &mut self,
         ch: usize,
@@ -1004,10 +1019,16 @@ impl Controller {
         match cmd {
             Command::Rd { .. } => {
                 self.stats.row_hits += 1;
-                let req = self.chans[ch].read_q.remove(loc).expect("read present");
+                let req = self.chans[ch]
+                    .read_q
+                    .remove(loc)
+                    .context("issued Rd for a read no longer at its queue slot")?;
                 let lat = issued.done_at - req.arrive;
                 if let Some(copy_id) = req.copy_id {
-                    let m = self.chans[ch].active_memcpy.as_ref().expect("memcpy");
+                    let m = self.chans[ch]
+                        .active_memcpy
+                        .as_ref()
+                        .context("memcpy read issued with no live memcpy")?;
                     let _ = copy_id;
                     self.inflight.push((
                         issued.done_at,
@@ -1049,7 +1070,9 @@ impl Controller {
                 } else {
                     &mut self.chans[ch].read_q
                 };
-                let req = q.remove(loc).expect("write present");
+                let req = q
+                    .remove(loc)
+                    .context("issued Wr for a write no longer at its queue slot")?;
                 debug_assert!(req.is_write);
                 self.inflight.push((
                     issued.done_at,

@@ -1,0 +1,876 @@
+//! A line-oriented Rust source lexer for `lisa lint` — stdlib-only,
+//! like `minitoml`: no `syn`, no proc-macro machinery. It does three
+//! jobs the rules build on:
+//!
+//! 1. **Strip comments and literals**: every line gets a `code` form
+//!    with comments removed and string/char literal *contents* blanked
+//!    (the delimiting quotes survive so downstream pattern matching
+//!    never fires inside a literal). Handles `//`, nested `/* */`,
+//!    raw strings `r#"…"#`, byte strings, escapes, and multi-line
+//!    strings. String-literal content is preserved separately, split
+//!    per source line, for the JSON-key rule.
+//! 2. **Parse `// lint:` directives**: `allow(rule[: args]) reason=…`
+//!    suppressions and the `mutates-channel-state` marker. Malformed
+//!    directives are themselves diagnostics — a typo must not
+//!    silently disable a rule.
+//! 3. **Track nesting**: a scope stack over braces recognises
+//!    `struct`/`enum`/`impl`/`fn`/`mod` items (with `#[derive]` lists,
+//!    struct fields, and the enclosing `impl` type for methods) and
+//!    propagates `#[cfg(test)]` scoping so rules can skip test code.
+
+use std::path::Path;
+
+/// A suppression or marker parsed from a `// lint: …` comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DirectiveKind {
+    /// `// lint: allow(rule[: arg, arg]) reason=text` — suppress
+    /// `rule` on the attached line (args narrow the suppression for
+    /// rules with sub-targets, e.g. JSON key names).
+    Allow { rule: String, args: Vec<String>, reason: String },
+    /// `// lint: mutates-channel-state` — marks the next `fn` as a
+    /// channel-state mutator for the horizon-invalidate rule.
+    MutatesChannelState,
+}
+
+#[derive(Debug, Clone)]
+pub struct Directive {
+    /// 1-based source line the comment sits on.
+    pub line: usize,
+    /// 1-based line the directive governs: its own line when it
+    /// trails code, otherwise the next line carrying code.
+    pub attach: usize,
+    pub kind: DirectiveKind,
+}
+
+/// One source line after lexing.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked.
+    pub code: String,
+    /// Raw string-literal fragments appearing on this line (escape
+    /// sequences kept verbatim, so `\"key\":` is searchable).
+    pub strings: Vec<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemKind {
+    Struct,
+    Enum,
+    Fn,
+    Impl,
+    Mod,
+}
+
+#[derive(Debug, Clone)]
+pub struct Field {
+    pub name: String,
+    pub ty: String,
+    /// 1-based line of the field declaration.
+    pub line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub kind: ItemKind,
+    /// Item name; for `impl` blocks, the `Self` type's last path
+    /// segment (`impl Probe for TraceRing` → `TraceRing`).
+    pub name: String,
+    /// For `fn` items: the enclosing `impl` block's type, if any.
+    pub impl_type: Option<String>,
+    /// For `impl` items: this is a trait impl (`impl Trait for T`);
+    /// for `fn` items: the enclosing impl is a trait impl. Rules use
+    /// this to restrict seeded allowlists to inherent methods (trait
+    /// impls are typically one-line delegation shims).
+    pub trait_impl: bool,
+    /// 1-based line where the item's header starts.
+    pub line: usize,
+    /// 1-based lines of the `{` … matching `}` span.
+    pub body_start: usize,
+    pub body_end: usize,
+    /// Inside `#[cfg(test)]` (own attribute or any enclosing scope).
+    pub is_test: bool,
+    /// Struct fields (named-struct items only).
+    pub fields: Vec<Field>,
+    /// Traits listed in a `#[derive(…)]` attribute on the item.
+    pub derives: Vec<String>,
+}
+
+/// A fully lexed file, ready for the rules.
+#[derive(Debug)]
+pub struct FileScan {
+    /// Path relative to the lint root, forward slashes.
+    pub rel: String,
+    pub lines: Vec<Line>,
+    pub directives: Vec<Directive>,
+    pub items: Vec<Item>,
+    /// Lexer-level problems (malformed `lint:` directives).
+    pub errors: Vec<(usize, String)>,
+}
+
+/// Rule names a directive may reference, plus accepted aliases.
+pub const RULE_NAMES: &[&str] = &[
+    "config-coverage",
+    "horizon-invalidate",
+    "json-key-drift",
+    "probe-gating",
+    "no-panic-hot-path",
+];
+
+fn canonical_rule(name: &str) -> Option<&'static str> {
+    match name {
+        "panic" | "no-panic-hot-path" => Some("no-panic-hot-path"),
+        _ => RULE_NAMES.iter().find(|r| **r == name).copied(),
+    }
+}
+
+/// Lexer mode carried across lines.
+enum Mode {
+    Code,
+    /// Nested block comment depth.
+    Block(u32),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string literal terminated by `"` + n `#`s.
+    RawStr(u32),
+}
+
+impl FileScan {
+    pub fn scan(rel_path: &Path, text: &str) -> FileScan {
+        let rel = rel_path
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let mut lines = Vec::new();
+        let mut raw_directives: Vec<(usize, DirectiveKind)> = Vec::new();
+        let mut errors = Vec::new();
+        let mut mode = Mode::Code;
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let mut line = Line::default();
+            let mut frag = String::new();
+            let bytes: Vec<char> = raw.chars().collect();
+            let mut j = 0;
+            while j < bytes.len() {
+                match mode {
+                    Mode::Block(depth) => {
+                        if starts(&bytes, j, "*/") {
+                            j += 2;
+                            mode = if depth > 1 { Mode::Block(depth - 1) } else { Mode::Code };
+                        } else if starts(&bytes, j, "/*") {
+                            j += 2;
+                            mode = Mode::Block(depth + 1);
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    Mode::Str => {
+                        if bytes[j] == '\\' && j + 1 < bytes.len() {
+                            frag.push(bytes[j]);
+                            frag.push(bytes[j + 1]);
+                            j += 2;
+                        } else if bytes[j] == '"' {
+                            line.code.push('"');
+                            j += 1;
+                            mode = Mode::Code;
+                            // Close out the fragment here so several
+                            // literals on one line stay distinct.
+                            if !frag.is_empty() {
+                                line.strings.push(std::mem::take(&mut frag));
+                            }
+                        } else {
+                            frag.push(bytes[j]);
+                            j += 1;
+                        }
+                    }
+                    Mode::RawStr(hashes) => {
+                        if bytes[j] == '"' && has_hashes(&bytes, j + 1, hashes) {
+                            line.code.push('"');
+                            j += 1 + hashes as usize;
+                            mode = Mode::Code;
+                            if !frag.is_empty() {
+                                line.strings.push(std::mem::take(&mut frag));
+                            }
+                        } else {
+                            frag.push(bytes[j]);
+                            j += 1;
+                        }
+                    }
+                    Mode::Code => {
+                        if starts(&bytes, j, "//") {
+                            let comment: String = bytes[j + 2..].iter().collect();
+                            parse_directive_comment(
+                                &comment,
+                                lineno,
+                                &mut raw_directives,
+                                &mut errors,
+                            );
+                            j = bytes.len();
+                        } else if starts(&bytes, j, "/*") {
+                            mode = Mode::Block(1);
+                            j += 2;
+                        } else if let Some(h) = raw_string_start(&bytes, j) {
+                            // r"…", r#"…"#, br#"…"# — skip the prefix,
+                            // keep one quote in the code form.
+                            let prefix = bytes[j..]
+                                .iter()
+                                .take_while(|c| **c != '"')
+                                .count();
+                            line.code.push('"');
+                            j += prefix + 1;
+                            mode = Mode::RawStr(h);
+                        } else if bytes[j] == '"' {
+                            line.code.push('"');
+                            j += 1;
+                            mode = Mode::Str;
+                        } else if bytes[j] == '\'' {
+                            if let Some(end) = char_literal_end(&bytes, j) {
+                                line.code.push_str("''");
+                                j = end;
+                            } else {
+                                // A lifetime: keep the tick.
+                                line.code.push('\'');
+                                j += 1;
+                            }
+                        } else {
+                            line.code.push(bytes[j]);
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            // Close out this line's string fragment; a still-open
+            // string continues on the next line (a fresh fragment).
+            if !frag.is_empty() {
+                line.strings.push(frag);
+            }
+            lines.push(line);
+        }
+
+        // Attach each directive: its own line when that line carries
+        // code, else the next line that does.
+        let directives = raw_directives
+            .into_iter()
+            .map(|(line, kind)| {
+                let own = lines
+                    .get(line - 1)
+                    .is_some_and(|l| !l.code.trim().is_empty());
+                let attach = if own {
+                    line
+                } else {
+                    (line..lines.len())
+                        .find(|&n| !lines[n].code.trim().is_empty())
+                        .map_or(line, |n| n + 1)
+                };
+                Directive { line, attach, kind }
+            })
+            .collect();
+
+        let items = build_items(&lines);
+        FileScan { rel, lines, directives, items, errors }
+    }
+
+    /// Is `rule` suppressed on `line` (exact attach match)?
+    pub fn allows(&self, line: usize, rule: &str) -> bool {
+        self.directives.iter().any(|d| {
+            d.attach == line
+                && matches!(&d.kind, DirectiveKind::Allow { rule: r, .. } if r == rule)
+        })
+    }
+
+    /// Is `rule` suppressed anywhere in `[lo, hi]`? (Item-scope
+    /// suppressions: the attach line must fall inside the item.)
+    pub fn allows_in(&self, lo: usize, hi: usize, rule: &str) -> bool {
+        self.directives.iter().any(|d| {
+            (lo..=hi).contains(&d.attach)
+                && matches!(&d.kind, DirectiveKind::Allow { rule: r, .. } if r == rule)
+        })
+    }
+
+    /// All args of `allow(rule: …)` directives attached in `[lo, hi]`.
+    pub fn allow_args_in(&self, lo: usize, hi: usize, rule: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        for d in &self.directives {
+            if !(lo..=hi).contains(&d.attach) {
+                continue;
+            }
+            if let DirectiveKind::Allow { rule: r, args, .. } = &d.kind {
+                if r == rule {
+                    out.extend(args.iter().cloned());
+                }
+            }
+        }
+        out
+    }
+
+    /// Marker directives (`mutates-channel-state`) attached at or
+    /// inside the given span.
+    pub fn has_marker_in(&self, lo: usize, hi: usize) -> bool {
+        self.directives.iter().any(|d| {
+            (lo..=hi).contains(&d.attach)
+                && d.kind == DirectiveKind::MutatesChannelState
+        })
+    }
+
+    /// The joined `code` text of an item's full span (header + body).
+    pub fn item_text(&self, it: &Item) -> String {
+        let lo = it.line.saturating_sub(1);
+        let hi = it.body_end.min(self.lines.len());
+        self.lines[lo..hi]
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+fn starts(b: &[char], j: usize, pat: &str) -> bool {
+    pat.chars().enumerate().all(|(k, c)| b.get(j + k) == Some(&c))
+}
+
+fn has_hashes(b: &[char], j: usize, n: u32) -> bool {
+    (0..n as usize).all(|k| b.get(j + k) == Some(&'#'))
+}
+
+/// Detect `r"`, `r#"`, `br##"` … at `j`; returns the hash count.
+fn raw_string_start(b: &[char], j: usize) -> Option<u32> {
+    // Must not be the tail of an identifier (`for r"` vs `attr"`).
+    if j > 0 && (b[j - 1].is_alphanumeric() || b[j - 1] == '_') {
+        return None;
+    }
+    let mut k = j;
+    if b.get(k) == Some(&'b') {
+        k += 1;
+    }
+    if b.get(k) != Some(&'r') {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0;
+    while b.get(k) == Some(&'#') {
+        hashes += 1;
+        k += 1;
+    }
+    (b.get(k) == Some(&'"')).then_some(hashes)
+}
+
+/// If a char literal starts at `j` (a `'`), return the index just
+/// past its closing quote; `None` means it's a lifetime.
+fn char_literal_end(b: &[char], j: usize) -> Option<usize> {
+    if b.get(j + 1) == Some(&'\\') {
+        // Escaped char: scan to the closing quote (handles \u{…}).
+        let mut k = j + 2;
+        while k < b.len() && k < j + 12 {
+            if b[k] == '\'' {
+                return Some(k + 1);
+            }
+            k += 1;
+        }
+        None
+    } else if b.get(j + 2) == Some(&'\'') && b.get(j + 1) != Some(&'\'') {
+        Some(j + 3)
+    } else {
+        None
+    }
+}
+
+fn parse_directive_comment(
+    comment: &str,
+    line: usize,
+    out: &mut Vec<(usize, DirectiveKind)>,
+    errors: &mut Vec<(usize, String)>,
+) {
+    // Doc comments start with an extra `/` or `!`.
+    let t = comment.trim_start_matches(['/', '!']).trim();
+    let Some(rest) = t.strip_prefix("lint:") else { return };
+    let rest = rest.trim();
+    if rest == "mutates-channel-state" {
+        out.push((line, DirectiveKind::MutatesChannelState));
+        return;
+    }
+    if let Some(body) = rest.strip_prefix("allow(") {
+        let Some(close) = body.find(')') else {
+            errors.push((line, "lint directive: unclosed 'allow('".into()));
+            return;
+        };
+        let inner = &body[..close];
+        let (rule_raw, args_raw) = match inner.split_once(':') {
+            Some((r, a)) => (r.trim(), Some(a)),
+            None => (inner.trim(), None),
+        };
+        let Some(rule) = canonical_rule(rule_raw) else {
+            errors.push((
+                line,
+                format!(
+                    "lint directive: unknown rule '{rule_raw}' (expected one of: {})",
+                    RULE_NAMES.join(", ")
+                ),
+            ));
+            return;
+        };
+        let args: Vec<String> = args_raw
+            .map(|a| {
+                a.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let tail = body[close + 1..].trim();
+        let Some(reason) = tail.strip_prefix("reason=") else {
+            errors.push((
+                line,
+                "lint directive: allow(…) needs a non-empty 'reason=…'".into(),
+            ));
+            return;
+        };
+        let reason = reason.trim();
+        if reason.is_empty() {
+            errors.push((
+                line,
+                "lint directive: allow(…) needs a non-empty 'reason=…'".into(),
+            ));
+            return;
+        }
+        out.push((
+            line,
+            DirectiveKind::Allow {
+                rule: rule.to_string(),
+                args,
+                reason: reason.to_string(),
+            },
+        ));
+        return;
+    }
+    errors.push((
+        line,
+        format!("lint directive: unrecognised form '{rest}' (allow(rule) reason=… | mutates-channel-state)"),
+    ));
+}
+
+/// One entry of the scope stack during item building.
+struct Scope {
+    kind: Option<ItemKind>,
+    /// Index into the items vec for item-like scopes.
+    item: Option<usize>,
+    is_test: bool,
+}
+
+fn build_items(lines: &[Line]) -> Vec<Item> {
+    let mut items: Vec<Item> = Vec::new();
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut header = String::new();
+    let mut header_line = 1usize;
+    let mut attrs = String::new();
+    let mut attr_depth = 0i32; // unbalanced `[` inside `#[…]` attrs
+
+    for (i, line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+        let trimmed = line.code.trim();
+        // Attribute lines accumulate separately from the header (an
+        // attribute may span lines via unbalanced brackets).
+        if attr_depth > 0 || trimmed.starts_with("#[") || trimmed.starts_with("#![") {
+            if attr_depth == 0 && trimmed.starts_with("#![") {
+                continue; // inner attributes don't attach to items
+            }
+            attrs.push(' ');
+            attrs.push_str(trimmed);
+            attr_depth += trimmed.matches('[').count() as i32;
+            attr_depth -= trimmed.matches(']').count() as i32;
+            continue;
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if header.trim().is_empty() {
+                        header_line = lineno;
+                    }
+                    let parent_test = scopes.last().is_some_and(|s| s.is_test);
+                    let is_test = parent_test || attrs.contains("cfg(test)");
+                    let (kind, name, is_trait_impl) = classify_header(&header);
+                    let item = kind.map(|k| {
+                        let enclosing_impl = (k == ItemKind::Fn)
+                            .then(|| {
+                                scopes.iter().rev().find_map(|s| {
+                                    s.item.filter(|&ix| items[ix].kind == ItemKind::Impl)
+                                })
+                            })
+                            .flatten();
+                        let impl_type = enclosing_impl.map(|ix| items[ix].name.clone());
+                        let trait_impl = match k {
+                            ItemKind::Impl => is_trait_impl,
+                            ItemKind::Fn => {
+                                enclosing_impl.is_some_and(|ix| items[ix].trait_impl)
+                            }
+                            _ => false,
+                        };
+                        items.push(Item {
+                            kind: k,
+                            name,
+                            impl_type,
+                            trait_impl,
+                            line: header_line,
+                            body_start: lineno,
+                            body_end: lineno,
+                            is_test,
+                            fields: Vec::new(),
+                            derives: parse_derives(&attrs),
+                        });
+                        items.len() - 1
+                    });
+                    scopes.push(Scope { kind, item, is_test });
+                    header.clear();
+                    header_line = lineno + 1;
+                    attrs.clear();
+                }
+                '}' => {
+                    if let Some(s) = scopes.pop() {
+                        if let Some(ix) = s.item {
+                            items[ix].body_end = lineno;
+                        }
+                    }
+                    header.clear();
+                    header_line = lineno + 1;
+                }
+                ';' => {
+                    header.clear();
+                    header_line = lineno + 1;
+                    attrs.clear();
+                }
+                c => {
+                    if header.trim().is_empty() && !c.is_whitespace() {
+                        header_line = lineno;
+                    }
+                    header.push(c);
+                }
+            }
+        }
+        header.push(' ');
+        // Struct fields: a `name: Type,` line directly inside a
+        // struct body (this tree declares one field per line).
+        if let Some(s) = scopes.last() {
+            if s.kind == Some(ItemKind::Struct) {
+                if let Some(ix) = s.item {
+                    if let Some(f) = parse_field(trimmed, lineno) {
+                        items[ix].fields.push(f);
+                    }
+                }
+            }
+        }
+    }
+    items
+}
+
+/// Classify the accumulated text before a `{`. The bool is "this is
+/// a trait impl" (only meaningful for `Impl`).
+fn classify_header(header: &str) -> (Option<ItemKind>, String, bool) {
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    let find = |kw: &str| toks.iter().position(|t| *t == kw);
+    // `match x { … }` headers contain no item keyword; closures and
+    // struct literals likewise fall through to `None`.
+    if let Some(p) = find("fn") {
+        let name = toks
+            .get(p + 1)
+            .map(|t| ident_prefix(t))
+            .unwrap_or_default();
+        return (Some(ItemKind::Fn), name, false);
+    }
+    if let Some(p) = find("struct") {
+        let name = toks.get(p + 1).map(|t| ident_prefix(t)).unwrap_or_default();
+        return (Some(ItemKind::Struct), name, false);
+    }
+    if let Some(p) = find("enum") {
+        let name = toks.get(p + 1).map(|t| ident_prefix(t)).unwrap_or_default();
+        return (Some(ItemKind::Enum), name, false);
+    }
+    if let Some(p) = toks.iter().position(|t| *t == "impl" || t.starts_with("impl<")) {
+        // `impl Type`, `impl<T> Type`, `impl Trait for Type`. The
+        // generic-parameter list may be glued to the keyword
+        // (`impl<T: Clone>`), so skip tokens until the angle brackets
+        // opened by `impl<` balance out, then the next token is the
+        // trait or self type.
+        let rest: Vec<&str> = toks[p..].to_vec();
+        let for_pos = rest.iter().position(|t| *t == "for");
+        let ty = match for_pos {
+            Some(f) => rest.get(f + 1).copied(),
+            None => {
+                let mut depth = angle_delta(rest[0].trim_start_matches("impl"));
+                let mut found = None;
+                for t in rest.iter().skip(1) {
+                    if depth > 0 || t.starts_with('<') {
+                        depth += angle_delta(t);
+                        continue;
+                    }
+                    if *t == "where" {
+                        break;
+                    }
+                    found = Some(*t);
+                    break;
+                }
+                found
+            }
+        };
+        let name = ty
+            .map(|t| {
+                // Last path segment, generics stripped.
+                let base = t.split('<').next().unwrap_or(t);
+                base.rsplit("::").next().unwrap_or(base).to_string()
+            })
+            .unwrap_or_default();
+        return (Some(ItemKind::Impl), name, for_pos.is_some());
+    }
+    if let Some(p) = find("mod") {
+        let name = toks.get(p + 1).map(|t| ident_prefix(t)).unwrap_or_default();
+        return (Some(ItemKind::Mod), name, false);
+    }
+    (None, String::new(), false)
+}
+
+/// Net angle-bracket depth change of one token, ignoring the `>` of a
+/// `->` arrow (return types inside generic bounds).
+fn angle_delta(t: &str) -> i32 {
+    let mut d = 0;
+    let mut prev = ' ';
+    for c in t.chars() {
+        if c == '<' {
+            d += 1;
+        } else if c == '>' && prev != '-' {
+            d -= 1;
+        }
+        prev = c;
+    }
+    d
+}
+
+fn ident_prefix(t: &str) -> String {
+    t.chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect()
+}
+
+fn parse_derives(attrs: &str) -> Vec<String> {
+    let Some(p) = attrs.find("derive(") else { return Vec::new() };
+    let body = &attrs[p + "derive(".len()..];
+    let Some(close) = body.find(')') else { return Vec::new() };
+    body[..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+fn parse_field(trimmed: &str, lineno: usize) -> Option<Field> {
+    let t = trimmed.strip_prefix("pub ").unwrap_or(trimmed).trim();
+    let (name, ty) = t.split_once(':')?;
+    let name = name.trim();
+    if name.is_empty()
+        || !name.chars().next().is_some_and(|c| c.is_lowercase() || c == '_')
+        || !name.chars().all(|c| c.is_alphanumeric() || c == '_')
+    {
+        return None;
+    }
+    let ty = ty.trim().trim_end_matches(',').trim();
+    if ty.is_empty() {
+        return None;
+    }
+    Some(Field { name: name.to_string(), ty: ty.to_string(), line: lineno })
+}
+
+/// Word-boundary containment: `word` appears in `hay` not flanked by
+/// identifier characters.
+pub fn contains_word(hay: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0
+            || !hay[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + word.len();
+        let after_ok = after >= hay.len()
+            || !hay[after..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn scan(text: &str) -> FileScan {
+        FileScan::scan(&PathBuf::from("x.rs"), text)
+    }
+
+    #[test]
+    fn line_comments_and_strings_are_stripped_from_code() {
+        let s = scan("let a = \"fn bogus() {\"; // trailing { brace\nlet b = 2;\n");
+        assert_eq!(s.lines[0].code, "let a = \"\"; ");
+        assert_eq!(s.lines[0].strings, vec!["fn bogus() {".to_string()]);
+        assert_eq!(s.lines[1].code, "let b = 2;");
+        assert!(s.items.is_empty(), "no real items: {:?}", s.items);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = scan("a /* one /* two */ still */ b\n/* open\nstill\n*/ c\n");
+        assert_eq!(s.lines[0].code.split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+        assert_eq!(s.lines[1].code, "");
+        assert_eq!(s.lines[3].code.trim(), "c");
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes_inside() {
+        let s = scan("let x = r#\"quote \" and // not a comment\"# + 1;\n");
+        assert_eq!(s.lines[0].code, "let x = \"\" + 1;");
+        assert_eq!(s.lines[0].strings[0], "quote \" and // not a comment");
+        // A plain raw string and a byte raw string.
+        let s = scan("r\"a\"; br##\"b\"#\"##;\n");
+        assert_eq!(s.lines[0].strings, vec!["a".to_string(), "b\"#".to_string()]);
+    }
+
+    #[test]
+    fn multi_line_strings_split_fragments_per_line() {
+        let s = scan("let x = \"first \\\n  second\";\nlet y = 1;\n");
+        assert_eq!(s.lines[0].strings, vec!["first \\".to_string()]);
+        assert_eq!(s.lines[1].strings, vec!["  second".to_string()]);
+        assert_eq!(s.lines[2].code, "let y = 1;");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) { let c = '{'; let d = '\\n'; }\n");
+        // The brace char literal must not open a scope.
+        assert_eq!(s.items.len(), 1);
+        assert_eq!(s.items[0].name, "f");
+        assert_eq!(s.items[0].body_end, 1);
+    }
+
+    #[test]
+    fn items_nesting_and_cfg_test_scoping() {
+        let text = "\
+pub struct Cfg {
+    pub a: u64,
+    b: Vec<String>, // lint: allow(config-coverage) reason=derived
+}
+impl Cfg {
+    pub fn go(&self) -> u64 {
+        if x { y() } else { z() }
+        self.a
+    }
+}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+    #[test]
+    fn case() { helper().unwrap(); }
+}
+";
+        let s = scan(text);
+        let cfg = s.items.iter().find(|i| i.kind == ItemKind::Struct).unwrap();
+        assert_eq!(cfg.name, "Cfg");
+        assert_eq!(cfg.fields.len(), 2);
+        assert_eq!(cfg.fields[1].name, "b");
+        assert!(s.allows(3, "config-coverage"));
+        assert!(!s.allows(2, "config-coverage"));
+        let go = s.items.iter().find(|i| i.name == "go").unwrap();
+        assert_eq!(go.impl_type.as_deref(), Some("Cfg"));
+        assert!(!go.is_test);
+        // Everything under the #[cfg(test)] mod is test-scoped.
+        for name in ["helper", "case"] {
+            let f = s.items.iter().find(|i| i.name == name).unwrap();
+            assert!(f.is_test, "{name} must inherit cfg(test)");
+        }
+    }
+
+    #[test]
+    fn derives_are_recorded() {
+        let s = scan("#[derive(Debug, Clone, PartialEq)]\npub struct X {\n    a: u8,\n}\n");
+        let x = &s.items[0];
+        assert_eq!(x.derives, ["Debug", "Clone", "PartialEq"]);
+    }
+
+    #[test]
+    fn directive_attachment_same_line_vs_next_line() {
+        let text = "\
+let a = q.pop().unwrap(); // lint: allow(panic) reason=checked above
+// lint: allow(panic) reason=non-empty by construction
+let b = r.pop().unwrap();
+";
+        let s = scan(text);
+        assert!(s.allows(1, "no-panic-hot-path"));
+        assert!(s.allows(3, "no-panic-hot-path"));
+        assert!(!s.allows(2, "no-panic-hot-path"));
+    }
+
+    #[test]
+    fn malformed_directives_are_errors_not_silence() {
+        let s = scan("// lint: allow(panic)\nx();\n");
+        assert_eq!(s.errors.len(), 1, "missing reason must be flagged");
+        let s = scan("// lint: allow(bogus-rule) reason=x\n");
+        assert!(s.errors[0].1.contains("unknown rule"), "{:?}", s.errors);
+        let s = scan("// lint: frobnicate\n");
+        assert!(s.errors[0].1.contains("unrecognised"), "{:?}", s.errors);
+        // Well-formed ones parse without noise.
+        let s = scan("// lint: allow(json-key-drift: a, b) reason=derived keys\n");
+        assert!(s.errors.is_empty(), "{:?}", s.errors);
+        let args = s.allow_args_in(1, 2, "json-key-drift");
+        assert_eq!(args, ["a", "b"]);
+    }
+
+    #[test]
+    fn marker_directive_attaches_to_following_fn() {
+        let text = "\
+impl C {
+    /// Docs.
+    // lint: mutates-channel-state
+    fn push(&mut self) {
+        self.q.push(1);
+    }
+}
+";
+        let s = scan(text);
+        let f = s.items.iter().find(|i| i.name == "push").unwrap();
+        assert!(s.has_marker_in(f.line.saturating_sub(3), f.line));
+    }
+
+    #[test]
+    fn contains_word_respects_identifier_boundaries() {
+        assert!(contains_word("self.seed = seed;", "seed"));
+        assert!(!contains_word("reseed(x)", "seed"));
+        assert!(!contains_word("seeds", "seed"));
+        assert!(contains_word("a.seed,", "seed"));
+        assert!(!contains_word("", "seed"));
+    }
+
+    #[test]
+    fn impl_header_variants_resolve_self_type() {
+        let s = scan("impl<T: Clone> Probe for ring::TraceRing<T> {\n fn record(&mut self) {}\n}\n");
+        let imp = s.items.iter().find(|i| i.kind == ItemKind::Impl).unwrap();
+        assert_eq!(imp.name, "TraceRing");
+        assert!(imp.trait_impl);
+        let f = s.items.iter().find(|i| i.name == "record").unwrap();
+        assert_eq!(f.impl_type.as_deref(), Some("TraceRing"));
+        assert!(f.trait_impl, "fn inherits trait-impl flag");
+        // Inherent impls are not trait impls.
+        let s = scan("impl Controller {\n fn tick(&mut self) {}\n}\n");
+        let f = s.items.iter().find(|i| i.name == "tick").unwrap();
+        assert!(!f.trait_impl);
+    }
+
+    #[test]
+    fn several_strings_on_one_line_stay_distinct_fragments() {
+        let s = scan("f(\"alpha\", \"beta\"); g(\"\");\n");
+        assert_eq!(s.lines[0].strings, vec!["alpha".to_string(), "beta".to_string()]);
+    }
+}

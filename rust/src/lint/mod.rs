@@ -1,0 +1,198 @@
+//! `lisa lint` — a project-invariant static-analysis pass over the
+//! source tree (DESIGN.md §"Static analysis: lisa lint").
+//!
+//! The simulator's correctness rests on cross-file *conventions* the
+//! type system cannot see: every `SimConfig` field folded into the
+//! TOML round trip and the content hash, every channel-state mutation
+//! invalidating the horizon cache, every serialized JSON key read
+//! back by its `from_json` twin, every probe call gated on
+//! `observing()`, and no panics on the hot path. This module checks
+//! those conventions on every commit instead of hoping a property
+//! test draws the broken path.
+//!
+//! Stdlib-only by design (like `minitoml`): a line-lexer plus a
+//! brace-depth scanner, no `syn`. Diagnostics are rustc-style
+//! `file:line: rule: message` lines; `--json` emits a stable document
+//! for CI artifacts and golden files.
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use lexer::FileScan;
+
+/// One lint finding. `rule` is a stable name from the catalog
+/// (`config-coverage`, …) or `lint-directive` for malformed
+/// `// lint:` comments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Path relative to the linted root, forward slashes.
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Collect `**/*.rs` under `dir`, sorted for determinism — the same
+/// walk `build.rs` uses for the build fingerprint, so the lint pass
+/// and the fingerprint agree on what "the source tree" is.
+pub fn collect_rs_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("lint: reading {}", dir.display()))?
+            .collect::<std::io::Result<_>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(dir, &mut out)?;
+    Ok(out)
+}
+
+/// Normalise a rule selector: accepts `L1`…`L5`, canonical names, and
+/// the `panic` alias.
+pub fn resolve_rule(sel: &str) -> Option<&'static str> {
+    match sel {
+        "L1" | "l1" | "config-coverage" => Some(rules::L1),
+        "L2" | "l2" | "horizon-invalidate" => Some(rules::L2),
+        "L3" | "l3" | "json-key-drift" => Some(rules::L3),
+        "L4" | "l4" | "probe-gating" => Some(rules::L4),
+        "L5" | "l5" | "panic" | "no-panic-hot-path" => Some(rules::L5),
+        _ => None,
+    }
+}
+
+/// Lint every `.rs` file under `root`. `only`: restrict to a rule
+/// subset (`None` = all rules). Malformed `// lint:` directives are
+/// always reported — a typo must not silently disable a rule.
+pub fn run_dir(root: &Path, only: Option<&[&'static str]>) -> Result<Vec<Diagnostic>> {
+    let enabled = |rule: &str| only.is_none_or(|set| set.contains(&rule));
+    let mut out = Vec::new();
+    for path in collect_rs_files(root)? {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("lint: reading {}", path.display()))?;
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        let scan = FileScan::scan(rel, &text);
+        for (line, msg) in &scan.errors {
+            out.push(Diagnostic {
+                file: scan.rel.clone(),
+                line: *line,
+                rule: "lint-directive",
+                message: msg.clone(),
+            });
+        }
+        rules::run(&scan, &enabled, &mut out);
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+    Ok(out)
+}
+
+/// Rustc-style text rendering, one line per finding.
+pub fn render_text(diags: &[Diagnostic]) -> String {
+    let mut s = String::new();
+    for d in diags {
+        s.push_str(&d.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+/// Stable JSON document for CI artifacts and golden files. Carries no
+/// volatile fields (no timings, no absolute paths) so a clean tree
+/// always produces the same bytes.
+pub fn render_json(diags: &[Diagnostic]) -> String {
+    use crate::metrics::json::string;
+    let mut s = String::from("{\"lint\":{\"version\":1,\"errors\":[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"file\":{},\"line\":{},\"rule\":{},\"message\":{}}}",
+            string(&d.file),
+            d.line,
+            string(d.rule),
+            string(&d.message)
+        ));
+    }
+    s.push_str("]}}\n");
+    s
+}
+
+/// Resolve the default lint root: the crate's `src/` directory,
+/// whether invoked from `rust/` (cargo's working dir) or the repo
+/// root.
+pub fn default_root() -> Result<PathBuf> {
+    for cand in ["src/lint", "rust/src/lint"] {
+        let p = Path::new(cand);
+        if p.is_dir() {
+            return Ok(p.parent().expect("lint dir has a parent").to_path_buf());
+        }
+    }
+    bail!("lint: cannot find the src/ tree; pass --root DIR")
+}
+
+/// CLI entry: `lisa lint [--root DIR] [--rules L1,L5,…] [--json]
+/// [--out FILE]`. Exits nonzero (via the returned error) when any
+/// diagnostic fires.
+pub fn cmd(args: &crate::cli::Args) -> Result<()> {
+    let root = match args.opt("root") {
+        Some(r) => PathBuf::from(r),
+        None => default_root()?,
+    };
+    let only: Option<Vec<&'static str>> = match args.opt("rules") {
+        None => None,
+        Some(list) => Some(
+            list.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    resolve_rule(s)
+                        .ok_or_else(|| anyhow::anyhow!("lint: unknown rule '{s}'"))
+                })
+                .collect::<Result<_>>()?,
+        ),
+    };
+    let diags = run_dir(&root, only.as_deref())?;
+    if args.has_flag("json") {
+        let doc = render_json(&diags);
+        match args.opt("out") {
+            Some(path) => std::fs::write(path, &doc)
+                .with_context(|| format!("lint: writing {path}"))?,
+            None => print!("{doc}"),
+        }
+        // The human summary goes to stderr so the JSON stream stays
+        // machine-clean.
+        eprintln!("lisa lint: {} file(s), {} error(s)", count_files(&root)?, diags.len());
+    } else {
+        eprint!("{}", render_text(&diags));
+        eprintln!("lisa lint: {} file(s), {} error(s)", count_files(&root)?, diags.len());
+    }
+    if !diags.is_empty() {
+        bail!("lisa lint: {} error(s)", diags.len());
+    }
+    Ok(())
+}
+
+fn count_files(root: &Path) -> Result<usize> {
+    Ok(collect_rs_files(root)?.len())
+}

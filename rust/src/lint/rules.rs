@@ -1,0 +1,513 @@
+//! The five `lisa lint` rules (L1–L5). Each rule is a pure function
+//! over one lexed file (`FileScan`) — every invariant this pass
+//! enforces is local to a file, which keeps the checker trivially
+//! parallel-safe and incremental. See DESIGN.md §"Static analysis:
+//! lisa lint" for the rule catalog and the reasoning behind each.
+
+use super::lexer::{contains_word, FileScan, Item, ItemKind};
+use super::Diagnostic;
+use std::collections::BTreeMap;
+
+pub const L1: &str = "config-coverage";
+pub const L2: &str = "horizon-invalidate";
+pub const L3: &str = "json-key-drift";
+pub const L4: &str = "probe-gating";
+pub const L5: &str = "no-panic-hot-path";
+
+/// Known channel-state mutators in the controller, seeded so the rule
+/// has teeth even before markers exist (ISSUE 10). Scoped to
+/// `controller/mod.rs`; elsewhere only the explicit
+/// `// lint: mutates-channel-state` marker applies.
+const SEEDED_MUTATORS: &[&str] = &[
+    "enqueue",
+    "enqueue_copy",
+    "tick",
+    "tick_channel",
+    "activate_next_copy",
+    "generate_memcpy_reads",
+    "issue_for_request",
+];
+
+/// Run every enabled rule on one file.
+pub fn run(scan: &FileScan, enabled: &dyn Fn(&str) -> bool, out: &mut Vec<Diagnostic>) {
+    if enabled(L1) {
+        config_coverage(scan, out);
+    }
+    if enabled(L2) {
+        horizon_invalidate(scan, out);
+    }
+    if enabled(L3) {
+        json_key_drift(scan, out);
+    }
+    if enabled(L4) {
+        probe_gating(scan, out);
+    }
+    if enabled(L5) {
+        no_panic_hot_path(scan, out);
+    }
+}
+
+fn diag(scan: &FileScan, line: usize, rule: &'static str, message: String) -> Diagnostic {
+    Diagnostic { file: scan.rel.clone(), line, rule, message }
+}
+
+// ---------------------------------------------------------------- L1
+
+/// Every field in the `SimConfig` struct tree must be folded into the
+/// serialization side (`to_toml` + `calibration_toml`), the
+/// deserialization side (`from_toml` + `apply`), and — via the
+/// `to_toml`-chained `content_hash` — the cache key; every struct in
+/// the tree must derive `PartialEq`. Matching is by field *identifier*
+/// (word boundary) inside those fn bodies, not by TOML key, so a field
+/// whose TOML spelling differs (`backend` → `kind`) still counts as
+/// covered as long as the code reads and writes it.
+fn config_coverage(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    let Some(root) = scan
+        .items
+        .iter()
+        .find(|i| i.kind == ItemKind::Struct && i.name == "SimConfig" && !i.is_test)
+    else {
+        return;
+    };
+
+    // Struct map for tree recursion (structs defined in this file).
+    let structs: BTreeMap<&str, &Item> = scan
+        .items
+        .iter()
+        .filter(|i| i.kind == ItemKind::Struct && !i.is_test)
+        .map(|i| (i.name.as_str(), i))
+        .collect();
+
+    let body_of = |names: &[&str]| -> String {
+        scan.items
+            .iter()
+            .filter(|i| {
+                i.kind == ItemKind::Fn
+                    && !i.is_test
+                    && names.contains(&i.name.as_str())
+                    && i.impl_type.as_deref() == Some("SimConfig")
+            })
+            .map(|i| scan.item_text(i))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let ser = body_of(&["to_toml", "calibration_toml"]);
+    let de = body_of(&["from_toml", "apply"]);
+    let hash = body_of(&["content_hash"]);
+
+    if ser.is_empty() {
+        out.push(diag(scan, root.line, L1, "SimConfig has no to_toml serializer".into()));
+        return;
+    }
+    if de.is_empty() {
+        out.push(diag(scan, root.line, L1, "SimConfig has no from_toml/apply deserializer".into()));
+        return;
+    }
+    let hash_chained = contains_word(&hash, "to_toml");
+    if hash.is_empty() || !hash_chained {
+        out.push(diag(
+            scan,
+            root.line,
+            L1,
+            "SimConfig::content_hash must hash the to_toml form (cache/journal key)".into(),
+        ));
+    }
+
+    // Walk the struct tree depth-first, checking each field.
+    let mut stack = vec![(root, String::new())];
+    let mut seen = vec![root.name.clone()];
+    while let Some((st, prefix)) = stack.pop() {
+        if !st.derives.iter().any(|d| d == "PartialEq")
+            && !scan.allows_in(st.line.saturating_sub(2), st.line, L1)
+        {
+            out.push(diag(
+                scan,
+                st.line,
+                L1,
+                format!(
+                    "struct {} is part of the SimConfig tree but does not derive PartialEq \
+                     (config equality gates cache reuse)",
+                    st.name
+                ),
+            ));
+        }
+        for f in &st.fields {
+            let path = if prefix.is_empty() {
+                f.name.clone()
+            } else {
+                format!("{prefix}.{}", f.name)
+            };
+            // Recurse into nested config structs defined in this file.
+            let base = f
+                .ty
+                .trim_start_matches('&')
+                .split(['<', '(', ' ', ','])
+                .next()
+                .unwrap_or("");
+            if let Some(sub) = structs.get(base) {
+                if !seen.contains(&sub.name) {
+                    seen.push(sub.name.clone());
+                    stack.push((sub, path));
+                }
+                continue;
+            }
+            if scan.allows(f.line, L1) {
+                continue;
+            }
+            let mut missing = Vec::new();
+            if !contains_word(&ser, &f.name) {
+                missing.push("to_toml");
+                if hash_chained {
+                    // Hash is to_toml-chained: a field missing from the
+                    // serialized form is missing from the cache key too.
+                    missing.push("content_hash");
+                }
+            }
+            if !contains_word(&de, &f.name) {
+                missing.push("from_toml");
+            }
+            if !missing.is_empty() {
+                out.push(diag(
+                    scan,
+                    f.line,
+                    L1,
+                    format!("SimConfig field `{path}` is missing from {}", missing.join(", ")),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L2
+
+/// Every fn marked `// lint: mutates-channel-state` (anywhere), plus
+/// the seeded mutator list in `controller/mod.rs`, must invalidate
+/// the per-channel horizon cache on some path: either an
+/// `invalidate_horizon(..)` call or a blanket `horizon … .set(None)`
+/// sweep (what `tick` does).
+fn horizon_invalidate(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    let seeded_file = scan.rel == "controller/mod.rs";
+    for it in &scan.items {
+        if it.kind != ItemKind::Fn || it.is_test {
+            continue;
+        }
+        let marked = scan.has_marker_in(it.line, it.body_start);
+        // Seeded names cover inherent methods only: trait impls (the
+        // MemoryModel surface) are one-line delegation shims onto the
+        // inherent mutators, which are the checked sites.
+        let seeded =
+            seeded_file && !it.trait_impl && SEEDED_MUTATORS.contains(&it.name.as_str());
+        if !(marked || seeded) {
+            continue;
+        }
+        let body = scan.item_text(it);
+        let invalidates = contains_word(&body, "invalidate_horizon")
+            || (contains_word(&body, "horizon") && body.contains(".set(None)"));
+        if !invalidates && !scan.allows_in(it.line, it.body_start, L2) {
+            let how = if marked { "is marked mutates-channel-state" } else { "is a seeded channel-state mutator" };
+            out.push(diag(
+                scan,
+                it.line,
+                L2,
+                format!(
+                    "fn `{}` {how} but never invalidates the horizon cache \
+                     (call invalidate_horizon(ch) or sweep horizon[..].set(None))",
+                    it.name
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------- L3
+
+/// For every impl that defines both `to_json` and `from_json`, the
+/// string-literal keys written by the serializer must equal the keys
+/// read back by the deserializer. A written-but-unread key silently
+/// drops state on a journal/cache rehydration round trip; a
+/// read-but-unwritten key can never be satisfied.
+fn json_key_drift(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    // Group (impl type → serializer fns, deserializer fns).
+    let mut pairs: BTreeMap<&str, (Vec<&Item>, Vec<&Item>)> = BTreeMap::new();
+    for it in &scan.items {
+        if it.kind != ItemKind::Fn || it.is_test {
+            continue;
+        }
+        let Some(ty) = it.impl_type.as_deref() else { continue };
+        match it.name.as_str() {
+            "to_json" => pairs.entry(ty).or_default().0.push(it),
+            "from_json" => pairs.entry(ty).or_default().1.push(it),
+            _ => {}
+        }
+    }
+    for (ty, (sers, des)) in pairs {
+        if sers.is_empty() || des.is_empty() {
+            continue; // one-way serializers have no twin to drift from
+        }
+        let mut allowed: Vec<String> = Vec::new();
+        let mut blanket_allow = false;
+        let mut written: BTreeMap<String, usize> = BTreeMap::new();
+        for f in &sers {
+            for (k, line) in written_keys(scan, f) {
+                written.entry(k).or_insert(line);
+            }
+            collect_allows(scan, f, &mut allowed, &mut blanket_allow);
+        }
+        let mut read: BTreeMap<String, usize> = BTreeMap::new();
+        for f in &des {
+            for (k, line) in read_keys(scan, f) {
+                read.entry(k).or_insert(line);
+            }
+            collect_allows(scan, f, &mut allowed, &mut blanket_allow);
+        }
+        if blanket_allow {
+            continue;
+        }
+        for (k, line) in &written {
+            if !read.contains_key(k) && !allowed.contains(k) {
+                out.push(diag(
+                    scan,
+                    *line,
+                    L3,
+                    format!(
+                        "{ty}::to_json writes key \"{k}\" that {ty}::from_json never reads \
+                         (state would be dropped on a round trip)"
+                    ),
+                ));
+            }
+        }
+        for (k, line) in &read {
+            if !written.contains_key(k) && !allowed.contains(k) {
+                out.push(diag(
+                    scan,
+                    *line,
+                    L3,
+                    format!("{ty}::from_json reads key \"{k}\" that {ty}::to_json never writes"),
+                ));
+            }
+        }
+    }
+}
+
+fn collect_allows(scan: &FileScan, f: &Item, allowed: &mut Vec<String>, blanket: &mut bool) {
+    // Suppressions may sit on the fn header or anywhere in its body.
+    let lo = f.line.saturating_sub(2);
+    let args = scan.allow_args_in(lo, f.body_end, L3);
+    if args.is_empty() && scan.allows_in(lo, f.body_end, L3) {
+        *blanket = true;
+    }
+    allowed.extend(args);
+}
+
+/// Keys a serializer writes: `"name":` patterns inside its string
+/// literals, escapes normalised (`\"name\":` in a format string).
+fn written_keys(scan: &FileScan, f: &Item) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for n in f.body_start..=f.body_end.min(scan.lines.len()) {
+        for frag in &scan.lines[n - 1].strings {
+            let norm = frag.replace("\\\"", "\"");
+            let b: Vec<char> = norm.chars().collect();
+            let mut i = 0;
+            while i < b.len() {
+                if b[i] == '"' {
+                    let start = i + 1;
+                    let mut j = start;
+                    while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                        j += 1;
+                    }
+                    if j > start && b.get(j) == Some(&'"') && b.get(j + 1) == Some(&':') {
+                        out.push((b[start..j].iter().collect(), n));
+                        i = j + 2;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Keys a deserializer reads: string literals whose entire content is
+/// one identifier (`v.get("axes")`, `field_u64(v, "reads")`).
+fn read_keys(scan: &FileScan, f: &Item) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for n in f.body_start..=f.body_end.min(scan.lines.len()) {
+        for frag in &scan.lines[n - 1].strings {
+            let is_ident = !frag.is_empty()
+                && frag.chars().all(|c| c.is_alphanumeric() || c == '_')
+                && frag.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_');
+            if is_ident {
+                out.push((frag.clone(), n));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- L4
+
+/// Zero-cost observability: outside `src/obs/`, every `.observe(..)`
+/// / `.observe_cmd(..)` probe call must sit inside a block whose
+/// header tests `observing()` (or destructures `self.obs`), so that
+/// the disabled path never constructs an event.
+fn probe_gating(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    if scan.rel.starts_with("obs/") {
+        return;
+    }
+    for it in &scan.items {
+        if it.kind != ItemKind::Fn || it.is_test {
+            continue;
+        }
+        let mut stack: Vec<bool> = Vec::new();
+        let mut header = String::new();
+        let mut started = false; // seen the fn's opening `{`
+        for n in it.body_start..=it.body_end.min(scan.lines.len()) {
+            let code: Vec<char> = scan.lines[n - 1].code.chars().collect();
+            let mut i = 0;
+            while i < code.len() {
+                let c = code[i];
+                if !started {
+                    if c == '{' {
+                        started = true;
+                        stack.push(false);
+                    }
+                    i += 1;
+                    continue;
+                }
+                match c {
+                    '{' => {
+                        let gated =
+                            stack.last().copied().unwrap_or(false) || header_gates(&header);
+                        stack.push(gated);
+                        header.clear();
+                    }
+                    '}' => {
+                        stack.pop();
+                        header.clear();
+                        if stack.is_empty() {
+                            break; // fn body closed
+                        }
+                    }
+                    ';' => header.clear(),
+                    _ => header.push(c),
+                }
+                for probe in [".observe(", ".observe_cmd("] {
+                    if tail_starts_call(&code, i, probe) {
+                        let gated =
+                            stack.last().copied().unwrap_or(false) || header_gates(&header);
+                        if !gated && !scan.allows(n, L4) {
+                            out.push(diag(
+                                scan,
+                                n,
+                                L4,
+                                format!(
+                                    "probe call `{}..)` in fn `{}` is not gated by observing() \
+                                     (zero-cost observability: the disabled path must not \
+                                     construct events)",
+                                    probe, it.name
+                                ),
+                            ));
+                        }
+                    }
+                }
+                i += 1;
+            }
+            if stack.is_empty() && started {
+                break;
+            }
+            header.push(' ');
+        }
+    }
+}
+
+fn header_gates(header: &str) -> bool {
+    header.contains("observing()")
+        || header.contains(".obs.as_mut()")
+        || header.contains(".obs.as_ref()")
+        || header.contains(".obs.is_some()")
+}
+
+/// `pat` starts at `i` and is not `.observe_cmd(` matching `.observe(`.
+fn tail_starts_call(code: &[char], i: usize, pat: &str) -> bool {
+    let ok = pat.chars().enumerate().all(|(k, c)| code.get(i + k) == Some(&c));
+    if !ok {
+        return false;
+    }
+    // `.observe(` must not fire inside `.observe_cmd(`: the char after
+    // the matched ident prefix is the `(` included in `pat`, so an
+    // exact match is already unambiguous.
+    true
+}
+
+// ---------------------------------------------------------------- L5
+
+/// No panics on the simulation hot path: `unwrap()`, `expect(`,
+/// `panic!`, `unreachable!`, `todo!`, `unimplemented!` are forbidden
+/// in `controller/`, `dram/`, `backend/`, and `trace/reader.rs`
+/// outside `#[cfg(test)]` code. Escape hatch:
+/// `// lint: allow(panic) reason=…` on the same line (or alone on the
+/// line above).
+fn no_panic_hot_path(scan: &FileScan, out: &mut Vec<Diagnostic>) {
+    let in_scope = scan.rel.starts_with("controller/")
+        || scan.rel.starts_with("dram/")
+        || scan.rel.starts_with("backend/")
+        || scan.rel == "trace/reader.rs";
+    if !in_scope {
+        return;
+    }
+    // Lines covered by any #[cfg(test)]-scoped item.
+    let mut test_line = vec![false; scan.lines.len() + 1];
+    for it in &scan.items {
+        if it.is_test {
+            for n in it.line..=it.body_end.min(scan.lines.len()) {
+                test_line[n] = true;
+            }
+        }
+    }
+    const PATTERNS: &[(&str, &str)] = &[
+        (".unwrap()", "unwrap()"),
+        (".expect(", "expect(..)"),
+        ("panic!(", "panic!"),
+        ("unreachable!(", "unreachable!"),
+        ("todo!(", "todo!"),
+        ("unimplemented!(", "unimplemented!"),
+    ];
+    for (n, line) in scan.lines.iter().enumerate().map(|(i, l)| (i + 1, l)) {
+        if test_line[n] || scan.allows(n, L5) {
+            continue;
+        }
+        for (pat, label) in PATTERNS {
+            let mut from = 0;
+            while let Some(p) = line.code[from..].find(pat) {
+                let at = from + p;
+                // `.expect(` must not fire on `.expect_err(`; the `(`
+                // in the pattern already excludes that. `debug_assert!`
+                // does not contain `panic!(`. Skip `.unwrap_or*` via
+                // the exact `()` suffix in the pattern.
+                let misfire = *pat == "panic!(" && {
+                    // `core::panic!(` is a panic; `expect_no_panic!(`
+                    // style idents are not. Require a non-ident char
+                    // (or start) before the match.
+                    line.code[..at]
+                        .chars()
+                        .next_back()
+                        .is_some_and(|c| c.is_alphanumeric() || c == '_')
+                };
+                if !misfire {
+                    out.push(diag(
+                        scan,
+                        n,
+                        L5,
+                        format!(
+                            "{label} on the hot path; return a contextual error, or annotate \
+                             `// lint: allow(panic) reason=…` if provably unreachable"
+                        ),
+                    ));
+                    break; // one diagnostic per pattern per line
+                }
+                from = at + pat.len();
+            }
+        }
+    }
+}

@@ -41,6 +41,12 @@ COMMANDS
   lip         E3: linked precharge latency
   area        E8: die area overhead
   exp         declarative experiment grids — see below
+  lint        [--root DIR] [--rules L1,..,L5] [--json] [--out FILE]
+              project-invariant static analysis over src/**/*.rs
+              (config round-trip coverage, horizon invalidation,
+              JSON key drift, probe gating, hot-path panics);
+              exits nonzero on any finding — part of tier-1 local
+              verification (see DESIGN.md §Static analysis)
   trace       binary op-trace files (record / convert / info / replay):
                 trace record  --workload NAME --out FILE [--report FILE]
                 trace convert IN OUT [--to jsonl|binary]
@@ -90,6 +96,7 @@ const COMMANDS: &[&str] = &[
     "os",
     "salp",
     "exp",
+    "lint",
     "trace",
 ];
 
@@ -176,6 +183,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "exp" => cmd_exp(&args),
+        "lint" => lisa::lint::cmd(&args),
         "trace" => cmd_trace(&args),
         // Legacy experiment subcommands: thin aliases onto the spec
         // registry — same option flags, same pipeline, byte-identical

@@ -487,6 +487,7 @@ impl Record {
     /// [`Self::from_json`] → write round trip is byte-identical, which
     /// is what makes resumed and cached campaigns byte-identical to
     /// fresh ones.
+    // lint: allow(json-key-drift: config) reason=config name rides in report; from_json ignores the duplicate
     pub fn to_json(&self) -> String {
         let axes: Vec<String> = self
             .axes

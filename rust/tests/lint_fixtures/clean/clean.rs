@@ -1,0 +1,70 @@
+//! Clean fixture: exercises the lexer's corner cases — raw strings
+//! holding braces and comment markers, nested block comments, char
+//! literals that look like braces, multi-line strings — and a fully
+//! conventional config/serializer/probe surface. Zero diagnostics
+//! expected. Not compiled — lexed by lint tests only.
+
+/* a block comment /* nested */ still inside the outer one */
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimConfig {
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn to_toml(&self) -> String {
+        // The brace and slashes below live in literals and must not
+        // confuse the scanner.
+        let _tricky = r#"not a { scope " and // not a comment"#;
+        let _ch = '{';
+        format!("seed = {}\n", self.seed)
+    }
+
+    pub fn apply(&mut self, doc: &str) {
+        if let Some(v) = doc.strip_prefix("seed = ") {
+            self.seed = v.trim().parse().unwrap_or(0);
+        }
+    }
+
+    pub fn from_toml(text: &str) -> Self {
+        let mut c = Self::default();
+        c.apply(text);
+        c
+    }
+
+    pub fn content_hash(&self) -> u64 {
+        self.to_toml().len() as u64
+    }
+}
+
+pub struct Stats {
+    pub reads: u64,
+    obs: Option<u32>,
+}
+
+impl Stats {
+    fn observing(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    pub fn to_json(&self) -> String {
+        format!("{{\"reads\":{}}}", self.reads)
+    }
+
+    pub fn from_json(text: &str) -> Stats {
+        let reads = text.contains("reads") as u64;
+        Stats { reads, obs: None }
+    }
+
+    pub fn tick(&mut self) {
+        if self.observing() {
+            self.observe(1);
+        }
+    }
+
+    fn observe(&mut self, ev: u32) {
+        if let Some(o) = self.obs.as_mut() {
+            *o = ev;
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! L1 fixture (config-coverage): `extra_knob` is declared on the
+//! SimConfig tree but never serialized or read back, and `DramConfig`
+//! does not derive PartialEq. Not compiled — lexed by lint tests only.
+
+#[derive(Debug, Clone, Default)]
+pub struct DramConfig {
+    pub channels: usize,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimConfig {
+    pub dram: DramConfig,
+    pub seed: u64,
+    pub extra_knob: u64,
+}
+
+impl SimConfig {
+    pub fn to_toml(&self) -> String {
+        format!("channels = {}\nseed = {}\n", self.dram.channels, self.seed)
+    }
+
+    pub fn apply(&mut self, doc: &str) {
+        if let Some(v) = doc.strip_prefix("seed = ") {
+            self.seed = v.trim().parse().unwrap_or(0);
+        }
+        self.dram.channels = 1;
+    }
+
+    pub fn from_toml(text: &str) -> Self {
+        let mut c = Self::default();
+        c.apply(text);
+        c
+    }
+
+    pub fn content_hash(&self) -> u64 {
+        self.to_toml().len() as u64
+    }
+}

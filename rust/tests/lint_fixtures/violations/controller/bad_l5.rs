@@ -1,0 +1,29 @@
+//! L5 fixture (no-panic-hot-path): this file sits under `controller/`
+//! relative to the fixture root, so the bare `unwrap()` and
+//! `expect(..)` below are violations; the annotated unwrap and the
+//! `#[cfg(test)]` mod must not fire. Not compiled — lexed only.
+
+pub fn pop_head(q: &mut Vec<u64>) -> u64 {
+    q.pop().unwrap()
+}
+
+pub fn tagged(v: Option<u64>) -> u64 {
+    v.expect("tag present")
+}
+
+pub fn checked(q: &mut Vec<u64>) -> u64 {
+    if q.is_empty() {
+        return 0;
+    }
+    q.pop().unwrap() // lint: allow(panic) reason=emptiness checked above
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::pop_head(&mut vec![1]), 1);
+        let x: Option<u64> = Some(2);
+        assert_eq!(x.unwrap(), 2);
+    }
+}

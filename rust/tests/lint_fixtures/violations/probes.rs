@@ -1,0 +1,28 @@
+//! L4 fixture (probe-gating): the first `.observe(..)` call is not
+//! dominated by an `observing()` gate; the second is and must not
+//! fire. Not compiled — lexed by lint tests only.
+
+pub struct Core {
+    obs: Option<u32>,
+    steps: u64,
+}
+
+impl Core {
+    fn observing(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    pub fn step(&mut self) {
+        self.steps += 1;
+        self.observe(self.steps as u32);
+        if self.observing() {
+            self.observe(0);
+        }
+    }
+
+    fn observe(&mut self, ev: u32) {
+        if let Some(o) = self.obs.as_mut() {
+            *o = ev;
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 fixture (json-key-drift): `writes` is serialized but never read
+//! back, and `latency` is read but never written. The symmetric
+//! `reads` key must not fire. Not compiled — lexed by lint tests only.
+
+pub struct Report {
+    pub reads: u64,
+    pub writes: u64,
+    pub latency: u64,
+}
+
+impl Report {
+    pub fn to_json(&self) -> String {
+        format!("{{\"reads\":{},\"writes\":{}}}", self.reads, self.writes)
+    }
+
+    pub fn from_json(text: &str) -> Report {
+        let reads = field(text, "reads");
+        let latency = field(text, "latency");
+        Report { reads, writes: 0, latency }
+    }
+}
+
+fn field(_text: &str, _key: &str) -> u64 {
+    0
+}

@@ -1,0 +1,30 @@
+//! L2 fixture (horizon-invalidate): `push_request` is marked as a
+//! channel-state mutator but never invalidates the horizon cache.
+//! The unmarked `peek` must not fire. Not compiled — lexed only.
+
+pub struct Sched {
+    q: Vec<u64>,
+    horizon: Option<u64>,
+}
+
+impl Sched {
+    // lint: mutates-channel-state
+    pub fn push_request(&mut self, x: u64) {
+        self.q.push(x);
+    }
+
+    pub fn peek(&self) -> Option<&u64> {
+        self.q.first()
+    }
+
+    // lint: mutates-channel-state
+    pub fn clear(&mut self) {
+        self.q.clear();
+        self.horizon = None;
+        self.invalidate_horizon();
+    }
+
+    fn invalidate_horizon(&mut self) {
+        self.horizon = None;
+    }
+}

@@ -1,0 +1,181 @@
+//! `lisa lint` self-checks (ISSUE 10 acceptance): the shipped tree is
+//! clean (pinned by a golden `--json` document), every rule L1–L5
+//! catches its seeded fixture violation, and mutating a scratch copy
+//! of the real tree — dropping a `SimConfig` field's serialization
+//! fold, or an `invalidate_horizon` call — makes the pass fail with a
+//! diagnostic naming the field/site and a nonzero CLI exit.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lisa::lint::{self, rules};
+
+fn manifest(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(sub)
+}
+
+fn render(diags: &[lint::Diagnostic]) -> String {
+    lint::render_text(diags)
+}
+
+#[test]
+fn shipped_tree_is_clean() {
+    let diags = lint::run_dir(&manifest("src"), None).unwrap();
+    assert!(diags.is_empty(), "lint errors on the shipped tree:\n{}", render(&diags));
+}
+
+#[test]
+fn clean_tree_json_matches_golden() {
+    let diags = lint::run_dir(&manifest("src"), None).unwrap();
+    let got = lint::render_json(&diags);
+    let want = fs::read_to_string(manifest("tests/lint_fixtures/lint_clean_golden.json"))
+        .expect("golden file present");
+    assert_eq!(got, want, "lint --json drifted from the golden clean document");
+}
+
+#[test]
+fn each_rule_catches_its_seeded_fixture_violation() {
+    let root = manifest("tests/lint_fixtures/violations");
+    let diags = lint::run_dir(&root, None).unwrap();
+    let all = render(&diags);
+    for rule in [rules::L1, rules::L2, rules::L3, rules::L4, rules::L5] {
+        assert!(
+            diags.iter().any(|d| d.rule == rule),
+            "rule {rule} caught nothing; findings were:\n{all}"
+        );
+    }
+    // The specific seeded claims, by name.
+    assert!(
+        diags.iter().any(|d| d.file == "config.rs"
+            && d.message.contains("extra_knob")
+            && d.message.contains("to_toml")
+            && d.message.contains("content_hash")
+            && d.message.contains("from_toml")),
+        "L1 must name the field and every missing site:\n{all}"
+    );
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.file == "config.rs" && d.message.contains("DramConfig")),
+        "L1 must flag the missing PartialEq derive:\n{all}"
+    );
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.file == "scheduler.rs" && d.message.contains("push_request")),
+        "L2 must name the marked mutator:\n{all}"
+    );
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.file == "report.rs" && d.message.contains("\"writes\"")),
+        "L3 must flag the written-but-unread key:\n{all}"
+    );
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.file == "report.rs" && d.message.contains("\"latency\"")),
+        "L3 must flag the read-but-unwritten key:\n{all}"
+    );
+    assert_eq!(
+        diags.iter().filter(|d| d.rule == rules::L4).count(),
+        1,
+        "exactly the ungated probe call fires:\n{all}"
+    );
+    assert_eq!(
+        diags.iter().filter(|d| d.file == "controller/bad_l5.rs").count(),
+        2,
+        "the allowed unwrap and the test mod must not fire:\n{all}"
+    );
+}
+
+#[test]
+fn rule_filter_restricts_findings() {
+    let root = manifest("tests/lint_fixtures/violations");
+    let diags = lint::run_dir(&root, Some(&[rules::L5])).unwrap();
+    assert!(!diags.is_empty());
+    assert!(
+        diags.iter().all(|d| d.rule == rules::L5),
+        "only L5 was enabled:\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let diags = lint::run_dir(&manifest("tests/lint_fixtures/clean"), None).unwrap();
+    assert!(diags.is_empty(), "clean fixture must lint clean:\n{}", render(&diags));
+}
+
+/// Copy the real `src/` tree (Rust sources only) into a scratch dir.
+fn scratch_copy(tag: &str) -> PathBuf {
+    let src = manifest("src");
+    let dst = std::env::temp_dir().join(format!("lisa_lint_scratch_{tag}_{}", std::process::id()));
+    if dst.exists() {
+        fs::remove_dir_all(&dst).unwrap();
+    }
+    for f in lint::collect_rs_files(&src).unwrap() {
+        let rel = f.strip_prefix(&src).unwrap();
+        let to = dst.join(rel);
+        fs::create_dir_all(to.parent().unwrap()).unwrap();
+        fs::copy(&f, &to).unwrap();
+    }
+    dst
+}
+
+fn mutate(path: &Path, from: &str, to: &str) {
+    let text = fs::read_to_string(path).unwrap();
+    let mutated = text.replacen(from, to, 1);
+    assert_ne!(text, mutated, "mutation anchor {from:?} not found in {}", path.display());
+    fs::write(path, mutated).unwrap();
+}
+
+#[test]
+fn dropping_a_config_fold_fails_naming_the_field() {
+    let root = scratch_copy("l1");
+    // Drop `seed` from the to_toml serialization (and therefore from
+    // the to_toml-chained content_hash).
+    mutate(&root.join("config/mod.rs"), "\n            self.seed,\n", "\n            0,\n");
+    let diags = lint::run_dir(&root, Some(&[rules::L1])).unwrap();
+    let hit = diags.iter().find(|d| {
+        d.file == "config/mod.rs"
+            && d.rule == rules::L1
+            && d.message.contains("`seed`")
+            && d.message.contains("to_toml")
+            && d.message.contains("content_hash")
+    });
+    assert!(hit.is_some(), "expected a diagnostic naming `seed`; got:\n{}", render(&diags));
+
+    // And the CLI exits nonzero on the same scratch tree, with the
+    // field name in the JSON stream.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_lisa"))
+        .args(["lint", "--root", root.to_str().unwrap(), "--json"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "lint must exit nonzero on a dirty tree");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("seed"), "JSON output must name the field: {stdout}");
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn dropping_an_invalidate_horizon_call_fails_naming_the_site() {
+    let root = scratch_copy("l2");
+    mutate(
+        &root.join("controller/mod.rs"),
+        "        self.chans[ch].copy_q.push_back(req);\n        self.invalidate_horizon(ch);\n",
+        "        self.chans[ch].copy_q.push_back(req);\n",
+    );
+    let diags = lint::run_dir(&root, Some(&[rules::L2])).unwrap();
+    let hit = diags.iter().find(|d| {
+        d.file == "controller/mod.rs"
+            && d.rule == rules::L2
+            && d.message.contains("enqueue_copy")
+    });
+    assert!(
+        hit.is_some(),
+        "expected a diagnostic naming enqueue_copy; got:\n{}",
+        render(&diags)
+    );
+    fs::remove_dir_all(&root).unwrap();
+}
